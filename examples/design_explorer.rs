@@ -1,0 +1,65 @@
+//! Design-space exploration: the §VI methodology as a tool — sweep wiring
+//! configurations and cell geometries, find the largest electrically-valid
+//! subarray for each, and print design guidance.
+//!
+//! ```bash
+//! cargo run --release --example design_explorer
+//! ```
+
+use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::util::si::format_pct;
+use xpoint_imc::util::Table;
+
+fn main() {
+    println!("3D XPoint design explorer — maximum subarray sizes by configuration\n");
+
+    let mut t = Table::new("max N_row meeting an NM target (N_col = 128, W = W_min)")
+        .header(&["config", "L/L_min", "NM ≥ 0%", "NM ≥ 20%", "NM ≥ 40%"]);
+    for cfg in LineConfig::all() {
+        for l_scale in [1.0, 4.0, 8.0] {
+            let template = ArrayDesign::new(1, 128, cfg.clone(), l_scale, 1.0);
+            let m0 = max_rows_for_nm(&template, 0.0);
+            let m20 = max_rows_for_nm(&template, 0.20);
+            let m40 = max_rows_for_nm(&template, 0.40);
+            t.row(&[
+                cfg.id.to_string(),
+                format!("{l_scale:.0}"),
+                m0.to_string(),
+                m20.to_string(),
+                m40.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // capacity view: bits per subarray at the NM ≥ 20% boundary
+    let mut t = Table::new("capacity at NM ≥ 20% (2 levels × N_row × 128 cells)")
+        .header(&["config", "L/L_min", "N_row", "capacity (kbit)", "NM at boundary"]);
+    for cfg in LineConfig::all() {
+        for l_scale in [4.0, 8.0] {
+            let template = ArrayDesign::new(1, 128, cfg.clone(), l_scale, 1.0);
+            let n = max_rows_for_nm(&template, 0.20);
+            if n == 0 {
+                continue;
+            }
+            let mut d = template.clone();
+            d.n_row = n;
+            t.row(&[
+                cfg.id.to_string(),
+                format!("{l_scale:.0}"),
+                n.to_string(),
+                format!("{}", d.cell_count() / 1024),
+                format_pct(noise_margin(&d).noise_margin()),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // the paper's own 2 Mb design point
+    let d = ArrayDesign::new(1024, 2048, LineConfig::config3(), 8.0, 1.0).with_span(121);
+    println!(
+        "\npaper's §VI design: 1024×2048 config 3, cell 36×640 nm ⇒ 2 Mb/level, NM = {} (paper: 34.5%)",
+        format_pct(noise_margin(&d).noise_margin())
+    );
+}

@@ -1,0 +1,65 @@
+//! Multi-bit TMVM trade-off study (paper §IV-C / Table III): the
+//! area-efficient (voltage-scaled) vs low-power (cell-replicated) schemes,
+//! with the drive-voltage feasibility cliff.
+//!
+//! ```bash
+//! cargo run --release --example multibit_tradeoffs
+//! ```
+
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::multibit::V_CEILING;
+use xpoint_imc::array::{multibit_tmvm_cost, MultibitScheme};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::report::table3_rows;
+use xpoint_imc::util::si::format_si;
+use xpoint_imc::util::Table;
+
+fn main() {
+    println!("Multi-bit TMVM: area-efficient vs low-power (121-input dot product)\n");
+    let (_, _, table) = table3_rows(0.9);
+    print!("{}", table.render());
+
+    // operating-voltage sensitivity: where does the AE cliff move?
+    let design = ArrayDesign::new(128, 128, LineConfig::config3(), 3.0, 1.0);
+    let mut t = Table::new("area-efficient feasibility vs operating V_DD (ceiling 5 V)")
+        .header(&["V_DD", "max feasible bits", "energy at max", "top drive voltage"]);
+    for v in [0.4, 0.65, 0.9, 1.2] {
+        let mut max_bits = 0;
+        for b in 1..=8 {
+            if multibit_tmvm_cost(&design, MultibitScheme::AreaEfficient, b, 121, v).feasible {
+                max_bits = b;
+            }
+        }
+        let at_max = multibit_tmvm_cost(&design, MultibitScheme::AreaEfficient, max_bits, 121, v);
+        t.row(&[
+            format_si(v, "V"),
+            max_bits.to_string(),
+            format_si(at_max.energy, "J"),
+            format_si(at_max.max_voltage, "V"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("subarray drive ceiling: {} V", V_CEILING);
+
+    // crossover guidance: which scheme wins at each width?
+    let mut t = Table::new("scheme guidance (energy × area product)")
+        .header(&["bits", "AE E·A", "LP E·A", "recommendation"]);
+    for b in 1..=6 {
+        let ae = multibit_tmvm_cost(&design, MultibitScheme::AreaEfficient, b, 121, 0.9);
+        let lp = multibit_tmvm_cost(&design, MultibitScheme::LowPower, b, 121, 0.9);
+        let ae_score = if ae.feasible { ae.energy * ae.area } else { f64::INFINITY };
+        let lp_score = lp.energy * lp.area;
+        let rec = if ae_score < lp_score { "area-efficient" } else { "low-power" };
+        t.row(&[
+            b.to_string(),
+            if ae.feasible {
+                format!("{ae_score:.2e}")
+            } else {
+                ">5V".into()
+            },
+            format!("{lp_score:.2e}"),
+            rec.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}

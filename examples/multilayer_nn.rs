@@ -1,0 +1,104 @@
+//! Multi-layer NN on two linked subarrays (paper §IV-D, Fig. 8): the
+//! BL-to-WLT switch fabric pipelines per-image hidden vectors from
+//! subarray 1 into subarray 2, where the second weight set is applied.
+//!
+//! Requires `make artifacts` (trained MLP weights); falls back to a
+//! template-based MLP otherwise.
+//!
+//! ```bash
+//! cargo run --release --example multilayer_nn
+//! ```
+
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::TmvmMode;
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
+use xpoint_imc::nn::mlp::MlpOnSubarrays;
+use xpoint_imc::nn::{BinaryLayer, BinaryMlp};
+use xpoint_imc::runtime::artifact::artifacts_available;
+use xpoint_imc::runtime::ArtifactStore;
+use xpoint_imc::util::si::{format_duration, format_pct, format_si};
+
+fn load_mlp() -> BinaryMlp {
+    if artifacts_available() {
+        let store = ArtifactStore::open_default().expect("artifacts");
+        let (l1, l2) = store.mlp_layers().expect("mlp weights");
+        println!("using trained MLP weights from artifacts/ (121→{}→{})", l1.n_out(), l2.n_out());
+        BinaryMlp::new(l1, l2)
+    } else {
+        println!("artifacts missing — template detectors + identity readout");
+        let l1 = xpoint_imc::report::table2::template_layer();
+        let eye: Vec<Vec<bool>> = (0..10).map(|r| (0..10).map(|c| r == c).collect()).collect();
+        BinaryMlp::new(l1, BinaryLayer::new(eye, 1))
+    }
+}
+
+fn main() {
+    let mlp = load_mlp();
+    let h = mlp.l1.n_out();
+
+    // Fig. 8 layout: W1 stored in subarray 1; hidden vectors land
+    // transposed in subarray 2's top level; W2 applied as pulses.
+    let batch = 64usize;
+    let d1 = ArrayDesign::new(h.max(batch), 128, LineConfig::config3(), 3.0, 1.0);
+    let d2 = ArrayDesign::new(batch, h.max(16), LineConfig::config3(), 3.0, 1.0);
+    println!(
+        "subarray 1: {}×{} (stores W1), subarray 2: {}×{} (hidden matrix + outputs)",
+        d1.n_row, d1.n_col, d2.n_row, d2.n_col
+    );
+
+    let mut pipe = MlpOnSubarrays::new(mlp.clone(), d1, d2);
+
+    let mut gen = DigitGen::new(TEST_SEED);
+    let n_batches = 8;
+    let mut correct_hw = 0usize;
+    let mut correct_fn = 0usize;
+    let mut total = 0usize;
+    let mut energy = 0.0;
+    let mut time = 0.0;
+    for _ in 0..n_batches {
+        let samples: Vec<_> = (0..batch).map(|_| gen.next_sample()).collect();
+        let images: Vec<Vec<bool>> = samples.iter().map(|s| s.pixels.clone()).collect();
+        let run = pipe.run_batch(&images, TmvmMode::Ideal);
+        assert!(run.clean, "electrically clean");
+        for (s, bits) in samples.iter().zip(&run.outputs) {
+            // hardware decision: unique firing class
+            if let Some(class) = unique_fire(bits) {
+                if class == s.label {
+                    correct_hw += 1;
+                }
+            }
+            if mlp.argmax(&s.pixels) == s.label {
+                correct_fn += 1;
+            }
+            total += 1;
+        }
+        energy += run.energy;
+        time += run.time;
+    }
+    println!("\nimages:                 {total}");
+    println!(
+        "functional accuracy:    {} (count-space argmax)",
+        format_pct(correct_fn as f64 / total as f64)
+    );
+    println!(
+        "hardware one-hot rate:  {} (unique firing class; shared-θ constraint)",
+        format_pct(correct_hw as f64 / total as f64)
+    );
+    println!(
+        "pipeline steps/batch:   {} ({} hidden + {} output)",
+        batch + mlp.l2.n_out(),
+        batch,
+        mlp.l2.n_out()
+    );
+    println!("simulated energy:       {}", format_si(energy, "J"));
+    println!("simulated array time:   {}", format_duration(time));
+}
+
+fn unique_fire(bits: &[bool]) -> Option<usize> {
+    let mut it = bits.iter().enumerate().filter(|(_, &b)| b);
+    match (it.next(), it.next()) {
+        (Some((i, _)), None) => Some(i),
+        _ => None,
+    }
+}

@@ -1,0 +1,94 @@
+//! Quickstart: program a small 3D XPoint subarray, run a thresholded
+//! matrix–vector multiply in-memory, and inspect the result.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use xpoint_imc::analysis::{ideal_window, noise_margin, ArrayDesign};
+use xpoint_imc::array::{Level, Subarray, TmvmMode};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::util::si::{format_pct, format_si};
+
+fn main() {
+    // 1. a subarray design: 8×8, configuration 3 wiring, cell 36×240 nm
+    let design = ArrayDesign::new(8, 8, LineConfig::config3(), 3.0, 1.0);
+    println!(
+        "design: {}×{} cells, config {}, cell {:.0}×{:.0} nm, area {:.3} µm²",
+        design.n_row,
+        design.n_col,
+        design.config.id,
+        design.cell.w_cell * 1e9,
+        design.cell.l_cell * 1e9,
+        design.area() * 1e12
+    );
+
+    // 2. feasibility first: the paper's noise-margin analysis
+    let nm = noise_margin(&design);
+    println!(
+        "noise margin: {} (window [{}, {}])",
+        format_pct(nm.noise_margin()),
+        format_si(nm.v_lo(), "V"),
+        format_si(nm.v_hi(), "V"),
+    );
+
+    // 3. program a binary matrix G into the top PCM level
+    let mut sa = Subarray::new(design);
+    let g: Vec<Vec<bool>> = (0..8)
+        .map(|r| (0..8).map(|c| (r + c) % 3 == 0).collect())
+        .collect();
+    sa.program_level(Level::Top, &g);
+    println!("\nG (top PCM level):");
+    for row in &g {
+        let line: String = row.iter().map(|&b| if b { '#' } else { '.' }).collect();
+        println!("  {line}");
+    }
+
+    // 4. choose an operating voltage realizing firing threshold θ = 2
+    let theta = 2;
+    let v_dd = sa.vdd_for_threshold(theta);
+    println!("\nθ = {theta} ⇒ V_DD = {}", format_si(v_dd, "V"));
+
+    // 5. apply an input vector as word-line pulses; thresholded dot
+    //    products land in bottom-level column 0
+    let x = vec![true, false, true, true, false, false, true, false];
+    let report = sa.tmvm(&x, 0, v_dd, TmvmMode::Ideal);
+    println!(
+        "x = {:?}\ncurrents = [{}]",
+        x.iter().map(|&b| b as u8).collect::<Vec<_>>(),
+        report
+            .currents
+            .iter()
+            .map(|&i| format_si(i, "A"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "O = {:?}   (electrically clean: {})",
+        report.outputs.iter().map(|&b| b as u8).collect::<Vec<_>>(),
+        report.is_clean()
+    );
+
+    // 6. verify against exact integer counts
+    for (r, row) in g.iter().enumerate() {
+        let count = row.iter().zip(&x).filter(|(&w, &xi)| w && xi).count();
+        assert_eq!(report.outputs[r], count >= theta);
+    }
+    println!("\nverified: outputs equal exact count-thresholding ✓");
+
+    // 7. energy/latency ledger
+    println!(
+        "energy booked: {}, busy time: {}",
+        format_si(sa.ledger.energy, "J"),
+        format_si(sa.ledger.time, "s")
+    );
+
+    // 8. the ideal operating window for a 121-input TMVM (Eqs. 4–5)
+    let w = ideal_window(121, &sa.design().device);
+    println!(
+        "\nideal window for 121 inputs: [{}, {}] (NM {})",
+        format_si(w.v_min(), "V"),
+        format_si(w.v_max(), "V"),
+        format_pct(w.noise_margin())
+    );
+}

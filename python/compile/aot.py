@@ -1,0 +1,149 @@
+"""AOT compile path: lower the L2/L1 jax graphs to HLO TEXT and export the
+trained weights + workload metadata for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; python never appears on the request path.
+
+Artifacts produced in --out (default ../artifacts):
+  nn_infer.hlo.txt     batched single-layer inference (B=64)
+  mlp_infer.hlo.txt    batched 3-layer inference (B=64)
+  w_single.txt         121x10 binary weights, rust layout [out][in] = 10x121
+  w_mlp1.txt           64x121, w_mlp2.txt 10x64 (rust layout)
+  meta.txt             thetas, vdds, accuracies (key value lines)
+  dataset_check.txt    first 32 TEST_SEED samples: label + 121 bits per row
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .dataset import TEST_SEED, DigitGen
+from .kernels import ref
+
+BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_single_layer(n_in: int, n_out: int) -> str:
+    spec = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    fn = lambda x, w, a, r, v: model.single_layer_infer(x, w, a, r, v)
+    lowered = jax.jit(fn).lower(
+        spec((BATCH, n_in), f32),
+        spec((n_in, n_out), f32),
+        spec((BATCH, 1), f32),
+        spec((BATCH, 1), f32),
+        spec((1, 1), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_mlp(n_in: int, n_hidden: int, n_out: int) -> str:
+    spec = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    fn = lambda x, w1, w2, v1, v2: model.mlp_infer(x, w1, w2, v1, v2)
+    lowered = jax.jit(fn).lower(
+        spec((BATCH, n_in), f32),
+        spec((n_in, n_hidden), f32),
+        spec((n_hidden, n_out), f32),
+        spec((1, 1), f32),
+        spec((1, 1), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def save_matrix(path: pathlib.Path, m: np.ndarray) -> None:
+    with open(path, "w") as f:
+        for row in np.atleast_2d(m):
+            f.write(" ".join(f"{v:g}" for v in row))
+            f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-size", type=int, default=3000)
+    ap.add_argument("--test-size", type=int, default=1000)
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    # ---- data ----
+    train_x, train_y = DigitGen(seed=0x7121).dataset(args.train_size)
+    test_x, test_y = DigitGen(seed=TEST_SEED).dataset(args.test_size)
+
+    # ---- single layer ----
+    w = model.train_single_layer(train_x, train_y)
+    theta = model.pick_theta(train_x, train_y, w)
+    acc = model.accuracy_argmax(test_x, test_y, w)
+    print(f"single layer: theta={theta} test argmax acc={acc:.3f}")
+
+    # ---- mlp ----
+    theta1 = 14
+    w1, w2 = model.train_mlp(train_x, train_y, theta1=theta1)
+    theta2 = model.pick_theta(
+        ((train_x @ w1) >= theta1).astype(np.float32), train_y, w2
+    )
+    mlp_acc = model.mlp_accuracy(test_x, test_y, w1, theta1, w2)
+    print(f"mlp: theta1={theta1} theta2={theta2} test argmax acc={mlp_acc:.3f}")
+
+    # ---- HLO artifacts ----
+    hlo_single = lower_single_layer(121, 10)
+    (out / "nn_infer.hlo.txt").write_text(hlo_single)
+    hlo_mlp = lower_mlp(121, w1.shape[1], 10)
+    (out / "mlp_infer.hlo.txt").write_text(hlo_mlp)
+    print(f"wrote HLO: nn_infer ({len(hlo_single)} chars), mlp_infer ({len(hlo_mlp)} chars)")
+
+    # ---- weights (rust layout [out][in]) ----
+    save_matrix(out / "w_single.txt", w.T)
+    save_matrix(out / "w_mlp1.txt", w1.T)
+    save_matrix(out / "w_mlp2.txt", w2.T)
+
+    # ---- metadata ----
+    vdd = ref.vdd_for_threshold(theta)
+    meta = {
+        "theta_single": theta,
+        "vdd_single": vdd,
+        "theta_mlp1": theta1,
+        "theta_mlp2": theta2,
+        "vdd_mlp1": ref.vdd_for_threshold(theta1),
+        "vdd_mlp2": ref.vdd_for_threshold(theta2),
+        "acc_single": acc,
+        "acc_mlp": mlp_acc,
+        "batch": BATCH,
+        "n_in": 121,
+        "n_hidden": w1.shape[1],
+        "n_out": 10,
+        "test_seed": TEST_SEED,
+    }
+    with open(out / "meta.txt", "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k} {v}\n")
+
+    # ---- cross-language dataset check ----
+    check_x, check_y = DigitGen(seed=TEST_SEED).dataset(32)
+    rows = np.concatenate([check_y[:, None].astype(np.float32), check_x], axis=1)
+    save_matrix(out / "dataset_check.txt", rows)
+    print(f"artifacts written to {out.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Synthetic 11x11 digit dataset - python twin of rust/src/nn/dataset.rs.
+
+The generator consumes a SplitMix64 stream in a fixed draw order (label,
+dx, dy, then 121 noise draws in row-major pixel order) so that the rust
+simulator and this compile path see BIT-IDENTICAL data for a given seed.
+Keep the glyphs and the draw order in sync with the rust module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+IMAGE_SIDE = 11
+IMAGE_PIXELS = IMAGE_SIDE * IMAGE_SIDE
+N_CLASSES = 10
+
+# The canonical test corpus seed shared with rust (nn::dataset::TEST_SEED).
+TEST_SEED = 0x3D_C0FFEE
+
+MASK64 = (1 << 64) - 1
+
+# Mirrored verbatim from rust/src/nn/dataset.rs::GLYPHS.
+GLYPHS = [
+    [
+        "...#####...",
+        "..##...##..",
+        ".##.....##.",
+        ".##.....##.",
+        ".##.....##.",
+        ".##.....##.",
+        ".##.....##.",
+        ".##.....##.",
+        ".##.....##.",
+        "..##...##..",
+        "...#####...",
+    ],
+    [
+        ".....##....",
+        "....###....",
+        "...####....",
+        ".....##....",
+        ".....##....",
+        ".....##....",
+        ".....##....",
+        ".....##....",
+        ".....##....",
+        "...######..",
+        "...######..",
+    ],
+    [
+        "..######...",
+        ".##....##..",
+        ".......##..",
+        ".......##..",
+        "......##...",
+        ".....##....",
+        "....##.....",
+        "...##......",
+        "..##.......",
+        ".#########.",
+        ".#########.",
+    ],
+    [
+        "..######...",
+        ".##....##..",
+        ".......##..",
+        ".......##..",
+        "...#####...",
+        "...#####...",
+        ".......##..",
+        ".......##..",
+        ".##....##..",
+        "..######...",
+        "...........",
+    ],
+    [
+        ".....###...",
+        "....####...",
+        "...##.##...",
+        "..##..##...",
+        ".##...##...",
+        ".#########.",
+        ".#########.",
+        "......##...",
+        "......##...",
+        "......##...",
+        "...........",
+    ],
+    [
+        ".########..",
+        ".##........",
+        ".##........",
+        ".##........",
+        ".#######...",
+        ".......##..",
+        ".......##..",
+        ".......##..",
+        ".##....##..",
+        "..######...",
+        "...........",
+    ],
+    [
+        "...#####...",
+        "..##.......",
+        ".##........",
+        ".##........",
+        ".#######...",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        "..######...",
+        "...........",
+    ],
+    [
+        ".#########.",
+        ".#########.",
+        ".......##..",
+        "......##...",
+        ".....##....",
+        ".....##....",
+        "....##.....",
+        "....##.....",
+        "...##......",
+        "...##......",
+        "...........",
+    ],
+    [
+        "..######...",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        "..######...",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        "..######...",
+        "...........",
+    ],
+    [
+        "..######...",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        ".##....##..",
+        "..#######..",
+        ".......##..",
+        ".......##..",
+        "......##...",
+        "..#####....",
+        "...........",
+    ],
+]
+
+
+class SplitMix64:
+    """Bit-identical twin of rust/src/util/prng.rs::SplitMix64."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, bound: int) -> int:
+        return (self.next_u64() * bound) >> 64
+
+
+@dataclass
+class Sample:
+    pixels: np.ndarray  # (121,) uint8 in {0,1}, row-major
+    label: int
+
+
+class DigitGen:
+    """Deterministic digit generator (twin of rust nn::dataset::DigitGen)."""
+
+    def __init__(self, seed: int, noise: float = 0.02):
+        self.stream = SplitMix64(seed)
+        self.noise = noise
+
+    @staticmethod
+    def template_pixel(label: int, y: int, x: int) -> bool:
+        return GLYPHS[label][y][x] == "#"
+
+    def next_sample(self) -> Sample:
+        label = self.stream.next_below(N_CLASSES)
+        dx = self.stream.next_below(3) - 1
+        dy = self.stream.next_below(3) - 1
+        pixels = np.zeros(IMAGE_PIXELS, dtype=np.uint8)
+        i = 0
+        for y in range(IMAGE_SIDE):
+            for x in range(IMAGE_SIDE):
+                sy, sx = y - dy, x - dx
+                base = (
+                    0 <= sy < IMAGE_SIDE
+                    and 0 <= sx < IMAGE_SIDE
+                    and self.template_pixel(label, sy, sx)
+                )
+                flip = self.stream.next_f64() < self.noise
+                pixels[i] = 1 if (base ^ flip) else 0
+                i += 1
+        return Sample(pixels=pixels, label=label)
+
+    def dataset(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Return (X, y): X (n, 121) float32 in {0,1}; y (n,) int32."""
+        xs = np.zeros((n, IMAGE_PIXELS), dtype=np.float32)
+        ys = np.zeros(n, dtype=np.int32)
+        for i in range(n):
+            s = self.next_sample()
+            xs[i] = s.pixels
+            ys[i] = s.label
+        return xs, ys

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the thresholded-crossbar TMVM kernel.
+
+This is the CORE correctness reference: the Pallas kernel in tmvm.py must
+agree with these functions exactly (same float32 arithmetic), and the rust
+array simulator's ideal mode implements the same Eq.-3 physics in count
+space.
+
+Device constants mirror rust/src/device/params.rs (paper Table IV).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Paper Table IV / supplementary (SI units).
+G_A = 660e-9
+G_C = 160e-6
+I_SET = 50e-6
+I_RESET = 100e-6
+
+
+def tmvm_currents_ref(x, w, alpha, r_th, v_dd):
+    """Per-(image, neuron) output-cell current, Eq. 3 generalized with the
+    per-row Thevenin attenuation.
+
+    x:     (B, N) float32 in {0,1}  - stored images (one per physical row)
+    w:     (N, P) float32 in {0,1}  - weight pulses (one step per neuron)
+    alpha: (B, 1) float32           - per-row attenuation alpha_th
+    r_th:  (B, 1) float32           - per-row Thevenin resistance [ohm]
+    v_dd:  (1, 1) float32           - applied word-line voltage
+
+    Returns (B, P) float32 currents. A zero conductance sum yields zero
+    current.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    s1 = x @ w  # crystalline products
+    xsum = jnp.sum(x, axis=1, keepdims=True)
+    s0 = xsum - s1  # amorphous (leakage) products
+    gsum = s1 * G_C + s0 * G_A
+    safe = jnp.maximum(gsum, 1e-30)
+    denom = r_th + 1.0 / safe + 1.0 / G_C
+    i_t = alpha * v_dd / denom
+    return jnp.where(gsum > 0.0, i_t, 0.0).astype(jnp.float32)
+
+
+def tmvm_ref(x, w, alpha, r_th, v_dd):
+    """Thresholded TMVM: (bits, currents).
+
+    bits are 1.0 where I_T >= I_SET *and* the accidental-RESET bound
+    I_T < I_RESET holds (a violating cell melts back to 0 - matching the
+    rust simulator's TmvmOutcome::ResetViolation semantics).
+    """
+    i_t = tmvm_currents_ref(x, w, alpha, r_th, v_dd)
+    bits = jnp.logical_and(i_t >= I_SET, i_t < I_RESET)
+    return bits.astype(jnp.float32), i_t
+
+
+def vdd_for_threshold(theta: int) -> float:
+    """Operating voltage realizing integer firing threshold theta
+    (twin of rust Subarray::vdd_for_threshold)."""
+    assert theta >= 1
+    return I_SET * (theta + 1) / (theta * G_C)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: thresholded-crossbar TMVM.
+
+Hardware adaptation (DESIGN.md section 3): the analog crossbar's free
+current summation maps onto an MXU matmul over {0,1} operands; the Eq.-3
+current divider and the I_SET/I_RESET thresholding are elementwise VPU work
+fused behind the matmul. BlockSpec tiles (batch-rows x neuron-columns)
+mirror the physical subarray tiling: one grid step computes one subarray's
+worth of outputs.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is *estimated* in DESIGN.md section 8
+from the VMEM footprint and MXU utilization reported by
+`vmem_report`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import G_A, G_C, I_RESET, I_SET
+
+
+def _tmvm_kernel(x_ref, w_ref, alpha_ref, rth_ref, vdd_ref, bits_ref, i_ref):
+    """One (block_b x block_p) tile of the thresholded crossbar."""
+    x = x_ref[...]
+    w = w_ref[...]
+    # MXU work: crystalline-product counts for this tile.
+    s1 = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # amorphous (leakage) products: row-sum minus crystalline counts
+    xsum = jnp.sum(x, axis=1, keepdims=True)
+    s0 = xsum - s1
+    # Eq. 3 current divider with per-row Thevenin attenuation (VPU work)
+    gsum = s1 * G_C + s0 * G_A
+    safe = jnp.maximum(gsum, 1e-30)
+    denom = rth_ref[...] + 1.0 / safe + 1.0 / G_C
+    i_t = alpha_ref[...] * vdd_ref[0, 0] / denom
+    i_t = jnp.where(gsum > 0.0, i_t, 0.0)
+    i_ref[...] = i_t.astype(jnp.float32)
+    fired = jnp.logical_and(i_t >= I_SET, i_t < I_RESET)
+    bits_ref[...] = fired.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_p"))
+def tmvm_pallas(x, w, alpha, r_th, v_dd, *, block_b: int = 64, block_p: int = 128):
+    """Thresholded TMVM via the Pallas kernel. Shapes as in ref.tmvm_ref.
+
+    The batch and neuron dimensions are tiled by (block_b, block_p); the
+    reduction dimension N stays resident per tile (N <= a few hundred for
+    the paper's workloads, well inside VMEM).
+    """
+    b, n = x.shape
+    n2, p = w.shape
+    assert n == n2, f"shape mismatch: {x.shape} @ {w.shape}"
+    assert alpha.shape == (b, 1) and r_th.shape == (b, 1)
+    assert v_dd.shape == (1, 1)
+    bb = min(block_b, b)
+    bp = min(block_p, p)
+    grid = (pl.cdiv(b, bb), pl.cdiv(p, bp))
+    return pl.pallas_call(
+        _tmvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),  # x tile: rows
+            pl.BlockSpec((n, bp), lambda i, j: (0, j)),  # w tile: cols
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),  # alpha per row
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),  # r_th per row
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),   # v_dd scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bp), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, p), jnp.float32),  # bits
+            jax.ShapeDtypeStruct((b, p), jnp.float32),  # currents
+        ],
+        interpret=True,
+    )(x, w, alpha, r_th, v_dd)
+
+
+def vmem_report(b: int, n: int, p: int, block_b: int = 64, block_p: int = 128) -> dict:
+    """Static VMEM-footprint / MXU-utilization estimate for a tile (the
+    L1 performance model recorded in DESIGN.md section 8 - interpret-mode
+    wallclock is NOT a TPU proxy).
+    """
+    bb, bp = min(block_b, b), min(block_p, p)
+    f32 = 4
+    tile_bytes = (bb * n + n * bp + 2 * bb + 1 + 2 * bb * bp) * f32
+    # MXU does bb x n x bp MACs per tile; useful MACs are the same matmul,
+    # so utilization losses come only from edge padding.
+    full_tiles = (b // bb) * (p // bp)
+    total_tiles = -(-b // bb) * (-(-p) // bp)
+    return {
+        "tile_vmem_bytes": tile_bytes,
+        "tile_macs": bb * n * bp,
+        "edge_utilization": full_tiles / max(total_tiles, 1),
+        "fits_16MiB_vmem": tile_bytes < 16 * 1024 * 1024,
+    }

@@ -1,0 +1,23 @@
+"""AOT lowering tests: HLO text comes out well-formed."""
+
+from compile.aot import lower_mlp, lower_single_layer
+
+
+def test_single_layer_lowers_to_hlo_text():
+    hlo = lower_single_layer(121, 10)
+    assert hlo.startswith("HloModule")
+    assert "f32[64,121]" in hlo, "batch input shape present"
+    assert "f32[64,10]" in hlo, "output shape present"
+    # lowered with return_tuple=True
+    assert "ROOT" in hlo
+
+
+def test_mlp_lowers_to_hlo_text():
+    hlo = lower_mlp(121, 64, 10)
+    assert hlo.startswith("HloModule")
+    assert "f32[64,121]" in hlo
+    assert "f32[121,64]" in hlo and "f32[64,10]" in hlo
+
+
+def test_lowering_is_deterministic():
+    assert lower_single_layer(121, 10) == lower_single_layer(121, 10)

@@ -1,0 +1,57 @@
+"""Dataset generator tests, including the cross-language PRNG contract."""
+
+import numpy as np
+
+from compile.dataset import (
+    GLYPHS,
+    IMAGE_PIXELS,
+    IMAGE_SIDE,
+    N_CLASSES,
+    DigitGen,
+    SplitMix64,
+)
+
+
+def test_splitmix_known_values():
+    # identical reference vector as rust/src/util/prng.rs tests
+    g = SplitMix64(0)
+    assert g.next_u64() == 0xE220A8397B1DCDAF
+    assert g.next_u64() == 0x6E789E6AA1B965F4
+    assert g.next_u64() == 0x06C45D188009454F
+
+
+def test_splitmix_f64_unit_interval():
+    g = SplitMix64(42)
+    for _ in range(1000):
+        assert 0.0 <= g.next_f64() < 1.0
+
+
+def test_glyphs_well_formed():
+    assert len(GLYPHS) == N_CLASSES
+    for g in GLYPHS:
+        assert len(g) == IMAGE_SIDE
+        for row in g:
+            assert len(row) == IMAGE_SIDE
+            assert set(row) <= {"#", "."}
+
+
+def test_generation_deterministic():
+    a = DigitGen(42).dataset(16)
+    b = DigitGen(42).dataset(16)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = DigitGen(43).dataset(16)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_shapes_and_values():
+    xs, ys = DigitGen(7).dataset(64)
+    assert xs.shape == (64, IMAGE_PIXELS)
+    assert set(np.unique(xs)) <= {0.0, 1.0}
+    assert ys.min() >= 0 and ys.max() < N_CLASSES
+
+
+def test_class_coverage():
+    _, ys = DigitGen(1).dataset(500)
+    counts = np.bincount(ys, minlength=N_CLASSES)
+    assert counts.min() > 20

@@ -1,0 +1,119 @@
+"""Kernel vs reference oracle - the CORE L1 correctness signal.
+
+hypothesis sweeps shapes and input distributions; assert_allclose against
+the pure-jnp ref for currents and exact agreement for bits.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.tmvm import tmvm_pallas, vmem_report
+
+
+def run_both(x, w, alpha, r_th, v_dd, **kw):
+    bits_k, i_k = tmvm_pallas(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(alpha), jnp.asarray(r_th), jnp.asarray(v_dd), **kw
+    )
+    bits_r, i_r = ref.tmvm_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(alpha), jnp.asarray(r_th), jnp.asarray(v_dd)
+    )
+    return np.asarray(bits_k), np.asarray(i_k), np.asarray(bits_r), np.asarray(i_r)
+
+
+def make_case(rng, b, n, p, density=0.5, parasitic=False):
+    x = (rng.random((b, n)) < density).astype(np.float32)
+    w = (rng.random((n, p)) < density).astype(np.float32)
+    if parasitic:
+        alpha = rng.uniform(0.3, 1.0, (b, 1)).astype(np.float32)
+        r_th = rng.uniform(0.0, 20e3, (b, 1)).astype(np.float32)
+    else:
+        alpha = np.ones((b, 1), np.float32)
+        r_th = np.zeros((b, 1), np.float32)
+    v_dd = np.array([[ref.vdd_for_threshold(max(1, n // 4))]], np.float32)
+    return x, w, alpha, r_th, v_dd
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 96),
+    n=st.integers(1, 150),
+    p=st.integers(1, 40),
+    density=st.floats(0.05, 0.95),
+    parasitic=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_swept(b, n, p, density, parasitic, seed):
+    rng = np.random.default_rng(seed)
+    x, w, alpha, r_th, v_dd = make_case(rng, b, n, p, density, parasitic)
+    bits_k, i_k, bits_r, i_r = run_both(x, w, alpha, r_th, v_dd)
+    np.testing.assert_allclose(i_k, i_r, rtol=1e-6, atol=1e-12)
+    np.testing.assert_array_equal(bits_k, bits_r)
+
+
+def test_kernel_matches_ref_at_odd_block_edges():
+    rng = np.random.default_rng(7)
+    # force multi-tile grids with ragged edges
+    x, w, alpha, r_th, v_dd = make_case(rng, 130, 121, 37, 0.4, True)
+    bits_k, i_k, bits_r, i_r = run_both(x, w, alpha, r_th, v_dd, block_b=32, block_p=16)
+    np.testing.assert_allclose(i_k, i_r, rtol=1e-6, atol=1e-12)
+    np.testing.assert_array_equal(bits_k, bits_r)
+
+
+def test_zero_input_row_yields_zero_current():
+    x = np.zeros((4, 10), np.float32)
+    w = np.ones((10, 3), np.float32)
+    alpha = np.ones((4, 1), np.float32)
+    r_th = np.zeros((4, 1), np.float32)
+    v_dd = np.array([[0.9]], np.float32)
+    bits, i_t, *_ = run_both(x, w, alpha, r_th, v_dd)
+    assert np.all(i_t == 0.0) and np.all(bits == 0.0)
+
+
+def test_threshold_semantics_integer_counts():
+    # exact count thresholds: theta crystalline products fire, theta-1 don't
+    n, theta = 20, 5
+    x = np.zeros((2, n), np.float32)
+    x[0, :theta] = 1.0
+    x[1, : theta - 1] = 1.0
+    w = np.zeros((n, 1), np.float32)
+    w[:, 0] = 1.0
+    alpha = np.ones((2, 1), np.float32)
+    r_th = np.zeros((2, 1), np.float32)
+    v_dd = np.array([[ref.vdd_for_threshold(theta)]], np.float32)
+    bits, i_t, *_ = run_both(x, w, alpha, r_th, v_dd)
+    assert bits[0, 0] == 1.0, f"theta products must fire ({i_t[0,0]:.3e} A)"
+    assert bits[1, 0] == 0.0, f"theta-1 products must not ({i_t[1,0]:.3e} A)"
+
+
+def test_reset_violation_suppresses_output():
+    # far above the window: I_T >= I_RESET melts the output back to 0
+    x = np.ones((1, 50), np.float32)
+    w = np.ones((50, 1), np.float32)
+    alpha = np.ones((1, 1), np.float32)
+    r_th = np.zeros((1, 1), np.float32)
+    v_dd = np.array([[5.0]], np.float32)
+    bits, i_t, bits_r, _ = run_both(x, w, alpha, r_th, v_dd)
+    assert i_t[0, 0] >= ref.I_RESET
+    assert bits[0, 0] == 0.0 and bits_r[0, 0] == 0.0
+
+
+def test_attenuation_starves_far_rows():
+    # same image at two ladder depths: the attenuated row loses its bit
+    n, theta = 30, 10
+    x = np.tile((np.arange(n) < theta).astype(np.float32), (2, 1))
+    w = np.ones((n, 1), np.float32)
+    alpha = np.array([[1.0], [0.5]], np.float32)
+    r_th = np.array([[0.0], [10e3]], np.float32)
+    v_dd = np.array([[ref.vdd_for_threshold(theta)]], np.float32)
+    bits, *_ = run_both(x, w, alpha, r_th, v_dd)
+    assert bits[0, 0] == 1.0 and bits[1, 0] == 0.0
+
+
+def test_vmem_report_sane():
+    r = vmem_report(1024, 121, 128)
+    assert r["fits_16MiB_vmem"]
+    assert r["tile_macs"] == 64 * 121 * 128
+    assert 0.0 < r["edge_utilization"] <= 1.0

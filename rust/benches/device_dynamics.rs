@@ -1,0 +1,53 @@
+//! Bonus exhibit (paper Fig. 2(a)): PCM SET/RESET transition dynamics from
+//! the behavioural electro-thermal model, plus device-model microbenches.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::device::{DeviceParams, PcmCell};
+use xpoint_imc::util::Table;
+
+fn main() {
+    exhibit_header("Device dynamics — PCM SET/RESET transitions (paper Fig. 2(a))");
+    let p = DeviceParams::default();
+
+    let mut t = Table::new("SET pulse (50 µA, 80 ns) from amorphous — crystalline fraction")
+        .header(&["t/t_SET", "cryst frac", "G (S)"]);
+    let mut c = PcmCell::new();
+    for step in 0..=8 {
+        if step > 0 {
+            c.apply_current_pulse(&p, p.i_set, p.t_set / 8.0, 8);
+        }
+        t.row(&[
+            format!("{:.2}", step as f64 / 8.0),
+            format!("{:.3}", c.cryst_frac()),
+            format!("{:.2e}", c.conductance(&p)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let mut t = Table::new("RESET pulse (100 µA, 15 ns) from crystalline")
+        .header(&["t/t_RESET", "cryst frac", "G (S)"]);
+    let mut c = PcmCell::with_bit(true);
+    for step in 0..=5 {
+        if step > 0 {
+            c.apply_current_pulse(&p, p.i_reset, p.t_reset / 5.0, 8);
+        }
+        t.row(&[
+            format!("{:.2}", step as f64 / 5.0),
+            format!("{:.3}", c.cryst_frac()),
+            format!("{:.2e}", c.conductance(&p)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!();
+    bench("set_pulse (32 substeps)", || {
+        let mut c = PcmCell::new();
+        black_box(c.set_pulse(&p));
+    });
+    bench("conductance (log-interp)", || {
+        let c = PcmCell::with_bit(true);
+        black_box(c.conductance(&p));
+    });
+}

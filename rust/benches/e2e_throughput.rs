@@ -1,0 +1,69 @@
+//! End-to-end coordinator throughput/latency on the digit workload — the
+//! serving-shell performance exhibit (not a paper table; documents the L3
+//! hot path for EXPERIMENTS.md §Perf).
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::exhibit_header;
+use std::time::{Duration, Instant};
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::TmvmMode;
+use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SimBackend};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::dataset::DigitGen;
+use xpoint_imc::report::table2::template_layer;
+use xpoint_imc::util::si::{format_duration, format_si};
+
+fn factories(n: usize, n_row: usize, mode: TmvmMode) -> Vec<BackendFactory> {
+    (0..n)
+        .map(|_| {
+            let layer = template_layer();
+            let design =
+                ArrayDesign::new(n_row, 128, LineConfig::config3(), 3.0, 1.0).with_span(121);
+            Box::new(move || {
+                Ok(Box::new(SimBackend::new(layer, design, mode))
+                    as Box<dyn xpoint_imc::coordinator::Backend>)
+            }) as BackendFactory
+        })
+        .collect()
+}
+
+fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMode) {
+    let mut coord = Coordinator::spawn(
+        factories(workers, batch.max(64), mode),
+        CoordinatorConfig {
+            batch_capacity: batch,
+            linger: Duration::from_micros(100),
+        },
+    );
+    let mut gen = DigitGen::new(1);
+    let images: Vec<_> = (0..n_images).map(|_| gen.next_sample()).collect();
+    let started = Instant::now();
+    let rxs: Vec<_> = images
+        .into_iter()
+        .map(|s| coord.submit(s.pixels, Some(s.label)))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply");
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+    println!(
+        "{label:<42} {:>9.0} img/s  mean-latency {:>10}  sim-E/img {:>8}",
+        n_images as f64 / wall,
+        format_duration(snap.mean_latency),
+        format_si(snap.energy_per_image, "J"),
+    );
+}
+
+fn main() {
+    exhibit_header("End-to-end coordinator throughput (simulator backends)");
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    println!("host parallelism: {cores} core(s)\n");
+
+    run("ideal, 1 worker, batch 64", 1, 64, 8192, TmvmMode::Ideal);
+    run("ideal, 2 workers, batch 64", 2, 64, 8192, TmvmMode::Ideal);
+    run("ideal, 1 worker, batch 8 (latency-biased)", 1, 8, 2048, TmvmMode::Ideal);
+    run("parasitic, 1 worker, batch 64", 1, 64, 2048, TmvmMode::Parasitic);
+    run("parasitic, 2 workers, batch 64", 2, 64, 2048, TmvmMode::Parasitic);
+}

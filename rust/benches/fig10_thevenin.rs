@@ -1,0 +1,54 @@
+//! Paper Fig. 10(b)/(c): R_th and α_th at the last row vs N_row, plus the
+//! driver-resistance and output-loading ablations.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::analysis::{ladder_thevenin, ArrayDesign, OutputLoading};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::report::exhibits::fig10_series_loaded;
+use xpoint_imc::util::si::format_si;
+use xpoint_imc::util::Table;
+
+const N_ROWS: [usize; 8] = [16, 32, 64, 128, 256, 512, 1024, 2048];
+
+fn main() {
+    exhibit_header("Paper Fig. 10 — Thevenin equivalents vs N_row (config 1, N_col=128)");
+
+    for (loading, label) in [
+        (OutputLoading::Preset, "outputs preset (G_O = G_A) — paper's start-of-SET state"),
+        (OutputLoading::Set, "outputs crystalline (G_O = G_C) — worst-case loading"),
+    ] {
+        let mut t = Table::new(label).header(&["N_row", "R_th", "alpha_th"]);
+        for row in fig10_series_loaded(&N_ROWS, 100.0, loading) {
+            t.row(&[
+                row.n_row.to_string(),
+                format_si(row.r_th, "Ω"),
+                format!("{:.4}", row.alpha),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    // driver-resistance ablation (R_D is unpublished; show insensitivity)
+    let mut t = Table::new("ablation: driver resistance R_D (N_row = 1024, preset)")
+        .header(&["R_D", "R_th", "alpha_th"]);
+    for r_d in [10.0, 100.0, 1000.0] {
+        let row = &fig10_series_loaded(&[1024], r_d, OutputLoading::Preset)[0];
+        t.row(&[
+            format_si(r_d, "Ω"),
+            format_si(row.r_th, "Ω"),
+            format!("{:.4}", row.alpha),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!();
+    let d = ArrayDesign::new(2048, 128, LineConfig::config1(), 4.0, 1.0);
+    bench("ladder_thevenin(last row, N=2048)", || {
+        black_box(ladder_thevenin(&d, 2048));
+    });
+    bench("full fig10 series (8 points)", || {
+        black_box(fig10_series_loaded(&N_ROWS, 100.0, OutputLoading::Preset));
+    });
+}

@@ -1,0 +1,58 @@
+//! Paper Fig. 11: (a) first/last-row voltage windows, (b) the acceptable
+//! region boundary in the (α_th, R_th) plane.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::analysis::{noise_margin, ArrayDesign};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::report::fig11_regions;
+use xpoint_imc::util::si::{format_pct, format_si};
+use xpoint_imc::util::Table;
+
+fn main() {
+    exhibit_header("Paper Fig. 11 — voltage windows and acceptable region");
+
+    let mut t = Table::new("Fig. 11(a) — windows per design (config 1, N_col = 128)")
+        .header(&["N_row", "first row", "last row", "overlap", "NM"]);
+    for n_row in [64usize, 256, 1024, 4096] {
+        let d = ArrayDesign::new(n_row, 128, LineConfig::config1(), 4.0, 1.0);
+        let data = fig11_regions(&d, &[]);
+        let window = match data.window {
+            Some((lo, hi)) => format!("[{}, {}]", format_si(lo, "V"), format_si(hi, "V")),
+            None => "∅ (unacceptable)".to_string(),
+        };
+        t.row(&[
+            n_row.to_string(),
+            format!(
+                "[{}, {}]",
+                format_si(data.v_min_first, "V"),
+                format_si(data.v_max_first, "V")
+            ),
+            format!(
+                "[{}, {}]",
+                format_si(data.v_min_last, "V"),
+                format_si(data.v_max_last, "V")
+            ),
+            window,
+            format_pct(data.nm),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let d = ArrayDesign::new(64, 128, LineConfig::config1(), 4.0, 1.0);
+    let samples: Vec<f64> = (0..=10).map(|i| i as f64 * 4e3).collect();
+    let data = fig11_regions(&d, &samples);
+    let mut t = Table::new("Fig. 11(b) — NM = 0 separating line (below = acceptable)")
+        .header(&["R_th", "alpha boundary"]);
+    for (r, a) in &data.boundary {
+        t.row(&[format_si(*r, "Ω"), format!("{a:.3}")]);
+    }
+    print!("{}", t.render());
+
+    println!();
+    bench("noise_margin(1024x128)", || {
+        let d = ArrayDesign::new(1024, 128, LineConfig::config1(), 4.0, 1.0);
+        black_box(noise_margin(&d));
+    });
+}

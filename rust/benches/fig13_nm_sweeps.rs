@@ -1,0 +1,34 @@
+//! Paper Fig. 13: NM sweeps over N_row, L_cell, W_cell, N_column for the
+//! three wiring configurations.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::report::exhibits::{fig13_sweeps, fig13_table};
+
+fn main() {
+    exhibit_header("Paper Fig. 13 — noise-margin sweeps (3 configurations)");
+    print!("{}", fig13_table('a', "N_row").render());
+    print!("{}", fig13_table('b', "L_cell/L_min").render());
+    print!("{}", fig13_table('c', "W_cell/W_min").render());
+    print!("{}", fig13_table('d', "N_column").render());
+
+    println!("\nshape checks vs paper:");
+    let a = fig13_sweeps('a');
+    let c3_at_2048 = a[2].points.last().unwrap().1;
+    println!(
+        "  NM decreases with N_row; config 3 best; NM at N_row=2048: {:.1}% {}",
+        c3_at_2048 * 100.0,
+        if c3_at_2048 < 0.35 { "(degraded, as in paper)" } else { "" }
+    );
+
+    println!();
+    bench("fig13 panel (a) full sweep", || {
+        black_box(fig13_sweeps('a'));
+    });
+    bench("fig13 all four panels", || {
+        for p in ['a', 'b', 'c', 'd'] {
+            black_box(fig13_sweeps(p));
+        }
+    });
+}

@@ -1,0 +1,77 @@
+//! Micro-benchmark harness (offline criterion replacement).
+//!
+//! Each `cargo bench` target regenerates one paper exhibit (printing the
+//! same rows/series the paper reports) and times its hot path with
+//! warmup + repeated measurement.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12} /iter (min {:>12}, {} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.min_s),
+            self.iters
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with auto-scaled iteration counts (~0.5 s budget per case).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.5 / once) as u32).clamp(1, 10_000);
+    let mut min_s = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        min_s = min_s.min(dt);
+        total += dt;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: total / iters as f64,
+        min_s,
+    };
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header for an exhibit bench.
+pub fn exhibit_header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}

@@ -1,0 +1,35 @@
+//! Paper Table I: metal-line configurations and derived minimum cells.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::interconnect::config::SegmentConductances;
+use xpoint_imc::interconnect::{CellGeometry, LineConfig};
+use xpoint_imc::report::table1_rows;
+
+fn main() {
+    exhibit_header("Paper Table I — metal-line configurations (ASAP7)");
+    print!("{}", table1_rows().render());
+
+    // segment conductances at the Fig. 13 geometry, for reference
+    println!("\nderived per-segment conductances at L=4·L_min, W=W_min:");
+    for cfg in LineConfig::all() {
+        let cell = CellGeometry::scaled(&cfg, 1.0, 4.0);
+        let s = SegmentConductances::of(&cfg, &cell);
+        println!(
+            "  config {}: G_y = {:.3} S (R_step {:.3} Ω), G_x = {:.3} S, R_via {:.1} Ω",
+            cfg.id,
+            s.g_y(),
+            s.r_wl_step(),
+            s.g_x,
+            s.r_via
+        );
+    }
+
+    println!();
+    bench("segment_conductances(config3)", || {
+        let cfg = LineConfig::config3();
+        let cell = CellGeometry::scaled(&cfg, 1.0, 4.0);
+        black_box(SegmentConductances::of(&cfg, &cell));
+    });
+}

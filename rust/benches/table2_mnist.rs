@@ -1,0 +1,32 @@
+//! Paper Table II: digit recognition across subarray sizes — images/step,
+//! energy/image, area, execution time, NM.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::report::table2::{table2_rows, table2_table, template_layer};
+use xpoint_imc::runtime::artifact::artifacts_available;
+use xpoint_imc::runtime::ArtifactStore;
+
+fn main() {
+    exhibit_header("Paper Table II — digit recognition evaluation (config 3, 10K images)");
+    let layer = if artifacts_available() {
+        ArtifactStore::open_default()
+            .and_then(|s| s.single_layer())
+            .unwrap_or_else(|_| template_layer())
+    } else {
+        println!("(artifacts missing — template weights; run `make artifacts` for trained ones)");
+        template_layer()
+    };
+    let rows = table2_rows(&layer);
+    print!("{}", table2_table(&rows).render());
+    println!(
+        "speedup largest vs smallest: {:.1}× (paper: ~17×)",
+        rows[0].exec_time / rows[4].exec_time
+    );
+
+    println!();
+    bench("table2 full evaluation (5 designs)", || {
+        black_box(table2_rows(&layer));
+    });
+}

@@ -1,0 +1,38 @@
+//! Paper Table III: multi-bit TMVM energy/area for the area-efficient and
+//! low-power schemes, 1–6 bits.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::report::table3_rows;
+
+fn main() {
+    exhibit_header("Paper Table III — multi-bit TMVM energy and area");
+    let (ae, lp, table) = table3_rows(0.9);
+    print!("{}", table.render());
+
+    println!("\nshape checks vs paper:");
+    println!(
+        "  AE energy growth 1→3 bits: {:.1}× (paper: 2.0→13.1 pJ ≈ 6.6×)",
+        ae[2].energy / ae[0].energy
+    );
+    println!(
+        "  LP energy growth 1→6 bits: {:.2}× (paper: 2.0→2.6 pJ ≈ 1.3×)",
+        lp[5].energy / lp[0].energy
+    );
+    println!(
+        "  AE area linear: {:.1}× at 6 bits; LP area exponential: {:.1}× at 6 bits (paper: 3×, 58×)",
+        ae[5].area / ae[0].area,
+        lp[5].area / lp[0].area
+    );
+    println!(
+        "  AE infeasible beyond 3 bits: {} (max drive voltage at 4 bits: {:.1} V)",
+        !ae[3].feasible,
+        ae[3].max_voltage
+    );
+
+    println!();
+    bench("table3 both schemes, 6 widths", || {
+        black_box(table3_rows(0.9));
+    });
+}

@@ -1,0 +1,180 @@
+//! Full netlist of the worst-case corner circuit (paper Fig. 9 / Fig. 15)
+//! for numeric validation of the analytic recursion.
+//!
+//! Physical picture: in the corner case a single word line `WLT_0` is
+//! driven, all its input cells are crystalline, and the engaged outputs sit
+//! in one column whose shared return line `WLB_k` is grounded at the
+//! periphery. Both lines cross all rows, so each row adds one WLT and one
+//! WLB segment; each row's branch is input cell → `span_cols` bit-line
+//! segments → output cell.
+
+use super::design::ArrayDesign;
+use crate::circuit::{Netlist, NodeId, TheveninEquivalent, GROUND};
+
+/// The corner-case netlist plus the victim-row terminal nodes.
+pub struct CornerCircuit {
+    pub netlist: Netlist,
+    /// Victim row's WLT-side terminal (after the BL path): where the victim
+    /// branch would attach on the driven side.
+    pub victim_wlt: NodeId,
+    /// Victim row's WLB-side terminal.
+    pub victim_wlb: NodeId,
+    /// Midpoint node between the victim's bit-line path and its output
+    /// cell (present only when the victim branch is included).
+    pub victim_mid: Option<NodeId>,
+    /// Applied source voltage.
+    pub v_dd: f64,
+}
+
+/// Build the corner circuit with the victim row's branch **removed** (for
+/// Thevenin observation), or kept (for operating-point checks).
+pub fn build_corner_circuit(
+    design: &ArrayDesign,
+    victim_row: usize,
+    v_dd: f64,
+    include_victim_branch: bool,
+) -> CornerCircuit {
+    assert!((1..=design.n_row).contains(&victim_row));
+    let seg = design.segments();
+    let r_wlt = 1.0 / seg.g_wlt;
+    let r_wlb = 1.0 / seg.g_wlb;
+    let r_bl = design.span_cols as f64 / seg.g_x;
+    let r_in = 1.0 / design.device.g_c;
+    let r_out = 1.0 / design.output_conductance();
+    // Split the lumped strap-via resistance evenly between the two rails'
+    // driver ends (it enters the analytic model as part of R_0).
+    let r_d_wlt = design.r_driver + 0.5 * seg.r_via;
+    let r_d_wlb = design.r_driver + 0.5 * seg.r_via;
+
+    let mut nl = Netlist::new();
+    let src = nl.labelled_node("vdd");
+    nl.voltage_source(src, GROUND, v_dd);
+
+    // driver ends of the two rails
+    let wlt0 = nl.labelled_node("wlt_drv");
+    nl.resistor(src, wlt0, r_d_wlt);
+    let wlb0 = nl.labelled_node("wlb_drv");
+    nl.resistor(wlb0, GROUND, r_d_wlb);
+
+    let mut prev_t = wlt0;
+    let mut prev_b = wlb0;
+    let mut victim = (GROUND, GROUND);
+    let mut victim_mid = None;
+    for row in 1..=design.n_row {
+        let t = nl.node();
+        let b = nl.node();
+        nl.resistor(prev_t, t, r_wlt);
+        nl.resistor(prev_b, b, r_wlb);
+        if row == victim_row {
+            victim = (t, b);
+            if include_victim_branch {
+                let mid = nl.node();
+                nl.resistor(t, mid, r_in + r_bl);
+                nl.resistor(mid, b, r_out);
+                victim_mid = Some(mid);
+            }
+        } else {
+            // aggregated branch: input cell + BL span + output cell
+            nl.resistor(t, b, r_in + r_bl + r_out);
+        }
+        prev_t = t;
+        prev_b = b;
+    }
+
+    CornerCircuit {
+        netlist: nl,
+        victim_wlt: victim.0,
+        victim_wlb: victim.1,
+        victim_mid,
+        v_dd,
+    }
+}
+
+impl CornerCircuit {
+    /// Numeric Thevenin equivalent seen between the victim terminals
+    /// (requires the circuit built with `include_victim_branch = false`).
+    pub fn thevenin(&self) -> crate::Result<TheveninEquivalent> {
+        self.netlist.thevenin(self.victim_wlt, self.victim_wlb)
+    }
+
+    /// Numeric α_th.
+    pub fn alpha(&self) -> crate::Result<f64> {
+        Ok(self.thevenin()?.v_th / self.v_dd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::thevenin::ladder_thevenin;
+    use crate::interconnect::LineConfig;
+
+    /// The analytic recursion must match full MNA simulation. (The broader
+    /// randomized sweep lives in `rust/tests/prop_analysis.rs`.)
+    #[test]
+    fn analytic_matches_numeric_small() {
+        for n_row in [1usize, 2, 3, 8, 33] {
+            let d = ArrayDesign::new(n_row, 16, LineConfig::config1(), 2.0, 1.0);
+            let cc = build_corner_circuit(&d, n_row, 1.0, false);
+            let num = cc.thevenin().unwrap();
+            let ana = ladder_thevenin(&d, n_row);
+            let seg = d.segments();
+            let r_bl = d.span_cols as f64 / seg.g_x;
+            let num_r_th = num.r_th + r_bl; // analytic includes victim BL
+            assert!(
+                (ana.r_th - num_r_th).abs() / num_r_th < 1e-9,
+                "n={n_row}: r_th {} vs {}",
+                ana.r_th,
+                num_r_th
+            );
+            let num_alpha = num.v_th / 1.0;
+            assert!(
+                (ana.alpha - num_alpha).abs() < 1e-9,
+                "n={n_row}: alpha {} vs {num_alpha}",
+                ana.alpha
+            );
+        }
+    }
+
+    #[test]
+    fn victim_in_the_middle_matches_numeric() {
+        let d = ArrayDesign::new(21, 8, LineConfig::config2(), 1.5, 1.0);
+        for victim in [1usize, 5, 11, 20, 21] {
+            let cc = build_corner_circuit(&d, victim, 1.0, false);
+            let num = cc.thevenin().unwrap();
+            let ana = ladder_thevenin(&d, victim);
+            let seg = d.segments();
+            let num_r_th = num.r_th + d.span_cols as f64 / seg.g_x;
+            assert!(
+                (ana.r_th - num_r_th).abs() / num_r_th < 1e-9,
+                "victim={victim}: {} vs {num_r_th}",
+                ana.r_th
+            );
+            assert!(
+                (ana.alpha - num.v_th).abs() < 1e-9,
+                "victim={victim}: {} vs {}",
+                ana.alpha,
+                num.v_th
+            );
+        }
+    }
+
+    #[test]
+    fn loaded_victim_current_matches_thevenin_prediction() {
+        let d = ArrayDesign::new(12, 8, LineConfig::config1(), 2.0, 1.0);
+        let v_dd = 1.0;
+        let ana = ladder_thevenin(&d, 12);
+        let r_cells = 1.0 / d.device.g_c + 1.0 / d.output_conductance();
+        let i_pred = ana.cell_current(v_dd, r_cells);
+
+        let cc = build_corner_circuit(&d, 12, v_dd, true);
+        let sol = cc.netlist.solve().unwrap();
+        // current through the victim output cell = vdiff across it * G_O
+        let mid = cc.victim_mid.unwrap();
+        let i_num = sol.vdiff(mid, cc.victim_wlb) * d.output_conductance();
+        assert!(
+            (i_pred - i_num).abs() / i_num.abs() < 1e-9,
+            "{i_pred} vs {i_num}"
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! A complete subarray design point: dimensions, wiring, geometry, devices
+//! — the input to every analysis routine and to the array simulator.
+
+use crate::device::DeviceParams;
+use crate::interconnect::config::SegmentConductances;
+use crate::interconnect::{CellGeometry, LineConfig};
+
+/// Conductance state assumed for the *output* PCM cells loading the word
+/// lines in the worst-case ladder (Appendix A keeps `G_{O_i}` symbolic;
+/// physically the outputs are preset amorphous and approach crystalline as
+/// the SET completes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputLoading {
+    /// Outputs still in the preset (amorphous) state — light loading,
+    /// start-of-computation.
+    Preset,
+    /// Outputs fully crystalline — heavy loading, end-of-computation.
+    /// This is the conservative worst case and the default.
+    Set,
+}
+
+/// A subarray design point.
+#[derive(Clone, Debug)]
+pub struct ArrayDesign {
+    /// Number of rows (outputs per column / ladder length).
+    pub n_row: usize,
+    /// Number of columns (inputs / word-line count).
+    pub n_col: usize,
+    /// Metal-line configuration (Table I).
+    pub config: LineConfig,
+    /// Cell footprint.
+    pub cell: CellGeometry,
+    /// Device parameters.
+    pub device: DeviceParams,
+    /// Word-line driver resistance \[Ω\]. Not published in the paper; the
+    /// default (100 Ω) is swept in `bench fig10` to show conclusions are
+    /// insensitive over 10 Ω – 1 kΩ.
+    pub r_driver: f64,
+    /// Bit-line column span between the corner-case input and output cells.
+    /// Defaults to `n_col` (the paper's "farthest possible distance");
+    /// workload-aware analyses (Table II) use the engaged span instead.
+    pub span_cols: usize,
+    /// Worst-case output loading assumption.
+    pub loading: OutputLoading,
+}
+
+impl ArrayDesign {
+    /// Design with cell geometry expressed as multiples of the
+    /// configuration minimum (`l_scale · L_min`, `w_scale · W_min`).
+    pub fn new(n_row: usize, n_col: usize, config: LineConfig, l_scale: f64, w_scale: f64) -> Self {
+        let cell = CellGeometry::scaled(&config, w_scale, l_scale);
+        Self {
+            n_row,
+            n_col,
+            config,
+            cell,
+            device: DeviceParams::default(),
+            r_driver: 100.0,
+            span_cols: n_col,
+            loading: OutputLoading::Set,
+        }
+    }
+
+    /// Override the corner-case column span (workload-aware analysis).
+    pub fn with_span(mut self, span_cols: usize) -> Self {
+        assert!(span_cols >= 1 && span_cols <= self.n_col);
+        self.span_cols = span_cols;
+        self
+    }
+
+    /// Override driver resistance.
+    pub fn with_driver(mut self, r_driver: f64) -> Self {
+        self.r_driver = r_driver;
+        self
+    }
+
+    /// Override the output-loading assumption.
+    pub fn with_loading(mut self, loading: OutputLoading) -> Self {
+        self.loading = loading;
+        self
+    }
+
+    /// Wire segment conductances for this design.
+    pub fn segments(&self) -> SegmentConductances {
+        SegmentConductances::of(&self.config, &self.cell)
+    }
+
+    /// Conductance assumed for output cells in the worst-case ladder.
+    pub fn output_conductance(&self) -> f64 {
+        match self.loading {
+            OutputLoading::Preset => self.device.g_a,
+            OutputLoading::Set => self.device.g_c,
+        }
+    }
+
+    /// Resistance of one ladder row branch: the bit-line path across
+    /// `span_cols` columns plus the input (crystalline) and output PCM
+    /// cells in series (Appendix A, Eq. 8).
+    pub fn branch_resistance(&self) -> f64 {
+        let seg = self.segments();
+        self.span_cols as f64 / seg.g_x + 1.0 / self.device.g_c + 1.0 / self.output_conductance()
+    }
+
+    /// Subarray footprint area \[m²\]: `N_col·L_cell × N_row·W_cell`
+    /// (the CMOS periphery sits underneath and adds no footprint, §II).
+    pub fn area(&self) -> f64 {
+        (self.n_col as f64 * self.cell.l_cell) * (self.n_row as f64 * self.cell.w_cell)
+    }
+
+    /// Total PCM cell count: two stacked levels (paper §II).
+    pub fn cell_count(&self) -> usize {
+        2 * self.n_row * self.n_col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_smallest_design() {
+        // 64×128, config 3, cell 36×240 nm (L = 3·L_min, W = W_min)
+        let d = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0);
+        assert!((d.cell.w_cell - 36e-9).abs() < 1e-15);
+        assert!((d.cell.l_cell - 240e-9).abs() < 1e-15);
+        assert_eq!(d.cell_count(), 2 * 64 * 128);
+        // area ~ 128·240nm × 64·36nm = 30.7µm × 2.3µm ≈ 70.8 µm²
+        let area_um2 = d.area() * 1e12;
+        assert!(area_um2 > 50.0 && area_um2 < 90.0, "area {area_um2} µm²");
+    }
+
+    #[test]
+    fn branch_is_pcm_dominated_at_small_span() {
+        let d = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0).with_span(1);
+        let r = d.branch_resistance();
+        let r_pcm = 2.0 / d.device.g_c;
+        assert!((r - r_pcm).abs() / r_pcm < 0.01, "r = {r}, pcm = {r_pcm}");
+    }
+
+    #[test]
+    fn preset_loading_is_much_lighter() {
+        let d = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0);
+        let set = d.branch_resistance();
+        let preset = d.with_loading(OutputLoading::Preset).branch_resistance();
+        assert!(preset > 100.0 * set);
+    }
+
+    #[test]
+    #[should_panic]
+    fn span_cannot_exceed_columns() {
+        let _ = ArrayDesign::new(4, 4, LineConfig::config1(), 1.0, 1.0).with_span(5);
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's feasibility analysis: ideal voltage windows (§III, Eqs. 4–5),
+//! the recursive Thevenin parasitic model (§V + Appendix A), noise margin
+//! (Eq. 7), the acceptable design region (Fig. 11(b)) and maximum-subarray
+//! search (§VI).
+//!
+//! The analytic ladder recursion here is validated against full MNA circuit
+//! simulation (see [`corner_circuit`] and `rust/tests/prop_analysis.rs`).
+
+pub mod design;
+pub mod voltage;
+pub mod thevenin;
+pub mod corner_circuit;
+pub mod noise_margin;
+
+pub use design::{ArrayDesign, OutputLoading};
+pub use noise_margin::{max_rows_for_nm, noise_margin, region_boundary_alpha, NmAnalysis};
+pub use thevenin::{ladder_thevenin, LadderThevenin};
+pub use voltage::{ideal_window, IdealWindow};

@@ -1,0 +1,236 @@
+//! Noise-margin analysis (paper §V, Eq. 7; §VI Figs. 11/13) built on the
+//! corner-case Thevenin model.
+//!
+//! The corner-case windows: the victim row's output must SET
+//! (`I ≥ I_SET`) when the single driven input is crystalline, and must stay
+//! clear of an accidental RESET (`I < I_RESET`). The first row (negligible
+//! parasitics) gives the upper edge `V_max`; the last row (worst drop)
+//! gives the lower edge `V'_min`:
+//!
+//! ```text
+//! V'_min = I_SET   · (R_th(last)  + 2/G_C) / α_th(last)
+//! V_max  = I_RESET · (R_th(first) + 2/G_C) / α_th(first)
+//! NM     = (V_max − V'_min) / V_mid ,  V_mid = (V_max + V'_min)/2
+//! ```
+//!
+//! With `I_RESET = 2·I_SET` the parasitic-free NM tends to 2/3 (≈66%),
+//! matching the best entries of the paper's Table II.
+
+use super::design::ArrayDesign;
+use super::thevenin::{ladder_thevenin, LadderThevenin};
+
+/// Complete NM analysis of a design point.
+#[derive(Clone, Copy, Debug)]
+pub struct NmAnalysis {
+    /// Thevenin equivalent at the first row.
+    pub first: LadderThevenin,
+    /// Thevenin equivalent at the last row.
+    pub last: LadderThevenin,
+    /// First-row window \[V\].
+    pub v_min_first: f64,
+    pub v_max_first: f64,
+    /// Last-row window \[V\].
+    pub v_min_last: f64,
+    pub v_max_last: f64,
+}
+
+impl NmAnalysis {
+    /// Lower edge of the combined window `V'_min` (binding: last row).
+    pub fn v_lo(&self) -> f64 {
+        self.v_min_first.max(self.v_min_last)
+    }
+
+    /// Upper edge of the combined window `V_max` (binding: first row).
+    pub fn v_hi(&self) -> f64 {
+        self.v_max_first.min(self.v_max_last)
+    }
+
+    /// Midpoint operating voltage.
+    pub fn v_mid(&self) -> f64 {
+        0.5 * (self.v_lo() + self.v_hi())
+    }
+
+    /// Noise margin (Eq. 7); negative when the window is empty.
+    pub fn noise_margin(&self) -> f64 {
+        (self.v_hi() - self.v_lo()) / self.v_mid()
+    }
+
+    /// Is the design electrically valid?
+    pub fn is_acceptable(&self) -> bool {
+        self.noise_margin() >= 0.0
+    }
+}
+
+/// Series resistance of the victim cells at the flip evaluation point
+/// (input crystalline + output at its crystalline endpoint): `2/G_C`.
+fn victim_load(design: &ArrayDesign) -> f64 {
+    2.0 / design.device.g_c
+}
+
+/// Run the corner-case NM analysis for a design.
+pub fn noise_margin(design: &ArrayDesign) -> NmAnalysis {
+    let first = ladder_thevenin(design, 1);
+    let last = ladder_thevenin(design, design.n_row);
+    let load = victim_load(design);
+    let p = &design.device;
+    NmAnalysis {
+        first,
+        last,
+        v_min_first: first.required_vdd(p.i_set, load),
+        v_max_first: first.required_vdd(p.i_reset, load),
+        v_min_last: last.required_vdd(p.i_set, load),
+        v_max_last: last.required_vdd(p.i_reset, load),
+    }
+}
+
+/// Fig. 11(b): the NM = 0 separating line in the `(α_th, R_th)` plane.
+/// For a given `R_th`, returns the minimum α that keeps the design
+/// acceptable (assuming a near-ideal first row with Thevenin `(1, r0)`).
+pub fn region_boundary_alpha(design: &ArrayDesign, r_th: f64) -> f64 {
+    let load = victim_load(design);
+    let p = &design.device;
+    let first = ladder_thevenin(design, 1);
+    let v_max = first.required_vdd(p.i_reset, load);
+    // NM = 0 ⇔ V'_min = V_max ⇔ α = I_SET (R_th + load) / V_max
+    p.i_set * (r_th + load) / v_max
+}
+
+/// Largest `N_row` (power-of-two search then binary refinement) whose NM
+/// stays ≥ `nm_target` with everything else in the design fixed.
+pub fn max_rows_for_nm(template: &ArrayDesign, nm_target: f64) -> usize {
+    let eval = |n_row: usize| -> f64 {
+        let mut d = template.clone();
+        d.n_row = n_row;
+        noise_margin(&d).noise_margin()
+    };
+    if eval(1) < nm_target {
+        return 0;
+    }
+    // exponential growth to bracket
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while eval(hi) >= nm_target {
+        lo = hi;
+        hi *= 2;
+        if hi > (1 << 24) {
+            return lo; // practically unbounded
+        }
+    }
+    // binary search in (lo, hi)
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if eval(mid) >= nm_target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+
+    #[test]
+    fn small_array_nm_near_two_thirds() {
+        // 64×128 config 3 at Table II geometry (L = 3·L_min): parasitics
+        // are negligible, NM ≈ 2/3 (paper: 65.1%).
+        let d = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0).with_span(121);
+        let nm = noise_margin(&d).noise_margin();
+        assert!(nm > 0.55 && nm < 0.6667, "nm = {nm}");
+    }
+
+    #[test]
+    fn nm_decreases_with_rows() {
+        let mut prev = f64::INFINITY;
+        for n in [64, 128, 256, 512, 1024, 2048] {
+            let d = ArrayDesign::new(n, 128, LineConfig::config1(), 4.0, 1.0);
+            let nm = noise_margin(&d).noise_margin();
+            assert!(nm < prev, "NM must fall with N_row (n={n}, nm={nm})");
+            prev = nm;
+        }
+    }
+
+    #[test]
+    fn nm_becomes_negative_for_huge_arrays() {
+        let d = ArrayDesign::new(1 << 14, 128, LineConfig::config1(), 4.0, 1.0);
+        assert!(noise_margin(&d).noise_margin() < 0.0);
+    }
+
+    #[test]
+    fn config3_gives_best_nm() {
+        let nm = |cfg: LineConfig| {
+            let d = ArrayDesign::new(1024, 128, cfg, 4.0, 1.0);
+            noise_margin(&d).noise_margin()
+        };
+        let (n1, n2, n3) = (
+            nm(LineConfig::config1()),
+            nm(LineConfig::config2()),
+            nm(LineConfig::config3()),
+        );
+        assert!(n3 > n1, "config3 {n3} vs config1 {n1}");
+        assert!(n2 > n1, "config2 {n2} vs config1 {n1}");
+    }
+
+    #[test]
+    fn nm_improves_with_l_cell() {
+        let nm_at = |l_scale: f64| {
+            let d = ArrayDesign::new(128, 128, LineConfig::config1(), l_scale, 1.0);
+            noise_margin(&d).noise_margin()
+        };
+        assert!(nm_at(4.0) > nm_at(1.0));
+        assert!(nm_at(8.0) > nm_at(4.0));
+    }
+
+    #[test]
+    fn nm_degrades_with_w_cell() {
+        let nm_at = |w_scale: f64| {
+            let d = ArrayDesign::new(64, 128, LineConfig::config1(), 4.0, w_scale);
+            noise_margin(&d).noise_margin()
+        };
+        assert!(nm_at(1.0) > nm_at(2.0));
+        assert!(nm_at(2.0) > nm_at(4.0));
+    }
+
+    #[test]
+    fn nm_flat_in_n_col_at_fixed_span() {
+        // Fig. 13(d): with the engaged span fixed, total column count does
+        // not matter.
+        let nm_at = |n_col: usize| {
+            let d =
+                ArrayDesign::new(256, n_col, LineConfig::config1(), 4.0, 1.0).with_span(121);
+            noise_margin(&d).noise_margin()
+        };
+        let base = nm_at(128);
+        for n_col in [256, 512, 1024, 2048] {
+            assert!((nm_at(n_col) - base).abs() < 1e-6, "flat in N_column");
+        }
+    }
+
+    #[test]
+    fn boundary_alpha_is_linear_in_r_th() {
+        let d = ArrayDesign::new(64, 128, LineConfig::config1(), 4.0, 1.0);
+        let a1 = region_boundary_alpha(&d, 0.0);
+        let a2 = region_boundary_alpha(&d, 10e3);
+        let a3 = region_boundary_alpha(&d, 20e3);
+        assert!((a3 - a2 - (a2 - a1)).abs() < 1e-9, "linear boundary");
+        assert!(a1 > 0.0 && a3 < 2.0);
+    }
+
+    #[test]
+    fn max_rows_search_brackets_correctly() {
+        let t = ArrayDesign::new(1, 128, LineConfig::config1(), 4.0, 1.0);
+        let max_pos = max_rows_for_nm(&t, 0.0);
+        assert!(max_pos > 64, "config1 should allow >64 rows, got {max_pos}");
+        // NM at the boundary is ≥ 0, one past it is < 0
+        let mut d = t.clone();
+        d.n_row = max_pos;
+        assert!(noise_margin(&d).is_acceptable());
+        d.n_row = max_pos + 1;
+        assert!(!noise_margin(&d).is_acceptable());
+        // demanding a higher margin shrinks the allowed size
+        assert!(max_rows_for_nm(&t, 0.3) < max_pos);
+    }
+}

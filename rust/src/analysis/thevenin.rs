@@ -1,0 +1,194 @@
+//! Analytic Thevenin model of the worst-case corner circuit — paper §V and
+//! Appendix A (Eqs. 8–13), generalized to an arbitrary victim row.
+//!
+//! Topology (single-rail fold of the symmetric WLT/WLB pair, Fig. 14): the
+//! driver (source `V_DD`, series `2R_D` plus the lumped strap-via
+//! resistance) feeds a ladder of `N_row` nodes separated by one word-line
+//! step `r_step = 1/G_wlt + 1/G_wlb` (the paper's `2/G_y`). Every row hangs
+//! a branch to ground: `span_cols` bit-line segments + input cell (`G_C`) +
+//! output cell (`G_O`). The Thevenin equivalent is observed by the victim
+//! row's own branch (which is removed from the network while observing).
+
+use super::design::ArrayDesign;
+
+/// Thevenin equivalent seen by the victim row's cells.
+#[derive(Clone, Copy, Debug)]
+pub struct LadderThevenin {
+    /// Source resistance, *including* the victim row's bit-line path \[Ω\].
+    pub r_th: f64,
+    /// `α_th = V_th / V_DD` ∈ (0, 1].
+    pub alpha: f64,
+}
+
+impl LadderThevenin {
+    /// Current driven through the victim cells (load `r_load`, Ω) at a given
+    /// applied `v_dd`.
+    pub fn cell_current(&self, v_dd: f64, r_load: f64) -> f64 {
+        self.alpha * v_dd / (self.r_th + r_load)
+    }
+
+    /// Voltage that must be applied at the driver for the victim cell
+    /// current to reach `i_target` through `r_load`.
+    pub fn required_vdd(&self, i_target: f64, r_load: f64) -> f64 {
+        i_target * (self.r_th + r_load) / self.alpha
+    }
+}
+
+/// Compute the analytic Thevenin equivalent at `victim_row`
+/// (1-based; `victim_row == n_row` reproduces Appendix A exactly).
+pub fn ladder_thevenin(design: &ArrayDesign, victim_row: usize) -> LadderThevenin {
+    assert!(
+        (1..=design.n_row).contains(&victim_row),
+        "victim row {victim_row} out of 1..={}",
+        design.n_row
+    );
+    let seg = design.segments();
+    let r_step = seg.r_wl_step(); // 2/G_y
+    let r_branch = design.branch_resistance(); // Eq. 8
+    let r_bl = design.span_cols as f64 / seg.g_x;
+    let r_drv = 2.0 * design.r_driver + seg.r_via; // R_0 = 2R_D (+ straps)
+    let n = design.n_row;
+    let v = victim_row;
+
+    // --- upstream resistance: R_i = branch ‖ (R_{i-1} + r_step), R_0 = 2R_D
+    // (Appendix A, Eqs. 9–10) ---
+    let mut r_up = r_drv;
+    for _ in 1..v {
+        r_up = parallel(r_branch, r_up + r_step);
+    }
+    // Looking back from the victim node: one more WL step.
+    let r_up_at_victim = r_up + r_step;
+
+    // --- downstream resistance: rows v+1..n load the victim node too
+    // (vanishes for the paper's victim = last row) ---
+    let r_down_at_victim = if v == n {
+        f64::INFINITY
+    } else {
+        let mut d = r_branch; // row n
+        for _ in (v + 1..n).rev() {
+            d = parallel(r_branch, d + r_step);
+        }
+        d + r_step
+    };
+
+    let r_node = parallel_maybe_inf(r_up_at_victim, r_down_at_victim);
+
+    // --- open-circuit attenuation: per-step divider product from the
+    // driver to the victim (Eqs. 11–13). Z_j = impedance to ground looking
+    // into node j away from the driver, with the victim branch removed:
+    //   Z_v = r_down_at_victim            (∞ when victim = last row)
+    //   Z_j = branch ‖ (r_step + Z_{j+1}) for j < v
+    //   α   = Z_1/(Z_1 + r_drv + r_step) · Π_{j=2..v} Z_j/(Z_j + r_step)
+    let mut alpha = 1.0;
+    let mut z = r_down_at_victim; // Z_v before branch fold
+    for j in (1..=v).rev() {
+        if j < v {
+            // node j's own branch loads the line (the victim's is removed)
+            z = parallel_maybe_inf(r_branch, z);
+        }
+        let series = if j == 1 { r_drv + r_step } else { r_step };
+        let stage = if z.is_infinite() {
+            1.0 // no current flows past this node: no drop across the step
+        } else {
+            z / (z + series)
+        };
+        alpha *= stage;
+        if j > 1 {
+            z += r_step; // step toward node j-1
+        }
+    }
+
+    LadderThevenin {
+        r_th: r_node + r_bl,
+        alpha: alpha.clamp(0.0, 1.0),
+    }
+}
+
+fn parallel(a: f64, b: f64) -> f64 {
+    a * b / (a + b)
+}
+
+fn parallel_maybe_inf(a: f64, b: f64) -> f64 {
+    if a.is_infinite() {
+        b
+    } else if b.is_infinite() {
+        a
+    } else {
+        parallel(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+
+    fn design(n_row: usize) -> ArrayDesign {
+        ArrayDesign::new(n_row, 128, LineConfig::config1(), 4.0, 1.0)
+    }
+
+    #[test]
+    fn single_row_ladder_is_driver_plus_step_plus_bl() {
+        let d = design(1);
+        let seg = d.segments();
+        let th = ladder_thevenin(&d, 1);
+        let expect = 2.0 * d.r_driver + seg.r_via + seg.r_wl_step() + d.span_cols as f64 / seg.g_x;
+        assert!((th.r_th - expect).abs() / expect < 1e-12);
+        assert!((th.alpha - 1.0).abs() < 1e-12, "open ladder: no drop");
+    }
+
+    #[test]
+    fn alpha_decreases_with_rows() {
+        let mut prev = 1.0;
+        for n in [16, 64, 256, 1024] {
+            let th = ladder_thevenin(&design(n), n);
+            assert!(th.alpha < prev, "alpha must fall with N_row");
+            assert!(th.alpha > 0.0);
+            prev = th.alpha;
+        }
+    }
+
+    #[test]
+    fn first_row_beats_last_row() {
+        // Under the worst-case loading (all rows conducting) even the first
+        // row sees a driver-resistance drop, but it is always better off
+        // than the last row — the NM window edges are ordered.
+        let d = design(512);
+        let first = ladder_thevenin(&d, 1);
+        let last = ladder_thevenin(&d, 512);
+        assert!(first.alpha > last.alpha);
+        assert!(first.r_th < last.r_th);
+        // with a stiff driver the first row approaches the ideal α = 1
+        let stiff = design(512).with_driver(0.01);
+        let first_stiff = ladder_thevenin(&stiff, 1);
+        assert!(first_stiff.alpha > 0.95, "alpha = {}", first_stiff.alpha);
+    }
+
+    #[test]
+    fn config3_beats_config1() {
+        let d1 = ArrayDesign::new(512, 128, LineConfig::config1(), 4.0, 1.0);
+        let d3 = ArrayDesign::new(512, 128, LineConfig::config3(), 4.0, 1.0);
+        let t1 = ladder_thevenin(&d1, 512);
+        let t3 = ladder_thevenin(&d3, 512);
+        assert!(t3.alpha > t1.alpha, "{} vs {}", t3.alpha, t1.alpha);
+    }
+
+    #[test]
+    fn required_vdd_roundtrips_cell_current() {
+        let d = design(128);
+        let th = ladder_thevenin(&d, 128);
+        let r_load = 2.0 / d.device.g_c;
+        let v = th.required_vdd(d.device.i_set, r_load);
+        let i = th.cell_current(v, r_load);
+        assert!((i - d.device.i_set).abs() / d.device.i_set < 1e-12);
+    }
+
+    #[test]
+    fn downstream_loading_lowers_first_row_alpha() {
+        // With many rows downstream, even the first row sees some drop
+        // across the driver resistance.
+        let th_short = ladder_thevenin(&design(1), 1);
+        let th_long = ladder_thevenin(&design(2048), 1);
+        assert!(th_long.alpha < th_short.alpha);
+    }
+}

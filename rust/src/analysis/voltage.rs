@@ -1,0 +1,126 @@
+//! Ideal (parasitic-free) operating-voltage windows — paper §III-A,
+//! Eqs. (4) and (5).
+
+use crate::device::DeviceParams;
+
+/// The ideal acceptable `V_DD` window `R1 ∩ R2` for a TMVM over
+/// `n_inputs = N_x + 1` engaged inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct IdealWindow {
+    /// `min(R1)` — lowest voltage that still completes a SET when all
+    /// inputs/weights are 1.
+    pub r1_min: f64,
+    /// `max(R1)` — highest voltage that avoids an accidental RESET.
+    pub r1_max: f64,
+    /// `max(R2)` — highest voltage that cannot flip a logic-0 result.
+    pub r2_max: f64,
+}
+
+impl IdealWindow {
+    /// Lower edge of the acceptable window `V_min = min(R1)`.
+    pub fn v_min(&self) -> f64 {
+        self.r1_min
+    }
+
+    /// Upper edge `V_max = min(max(R1), max(R2))`.
+    pub fn v_max(&self) -> f64 {
+        self.r1_max.min(self.r2_max)
+    }
+
+    /// Is the window non-empty?
+    pub fn is_valid(&self) -> bool {
+        self.v_min() <= self.v_max()
+    }
+
+    /// Window midpoint — the natural operating voltage.
+    pub fn v_mid(&self) -> f64 {
+        0.5 * (self.v_min() + self.v_max())
+    }
+
+    /// Ideal noise margin of the window (Eq. 7 with no parasitic shift).
+    pub fn noise_margin(&self) -> f64 {
+        (self.v_max() - self.v_min()) / self.v_mid()
+    }
+}
+
+/// Compute the ideal window for `n_inputs` engaged inputs (paper's
+/// `N_x + 1`).
+///
+/// Eq. (4): `R1 = [(Nx+2)/(Nx+1) · I_SET/G_C, (Nx+2)/(Nx+1) · I_RESET/G_C]`
+/// — all inputs and weights at logic 1; the output-cell current must reach
+/// `I_SET` but stay below `I_RESET`.
+///
+/// Eq. (5): `R2 = [0, ((Nx+1)·G_A + G_C)/((Nx+1)·G_A·G_C) · I_SET]` — all
+/// weights at logic 0; the output must *not* flip.
+pub fn ideal_window(n_inputs: usize, p: &DeviceParams) -> IdealWindow {
+    assert!(n_inputs >= 1);
+    let n1 = n_inputs as f64; // N_x + 1
+    let n2 = n1 + 1.0; // N_x + 2
+    let factor = n2 / n1;
+    IdealWindow {
+        r1_min: factor * p.i_set / p.g_c,
+        r1_max: factor * p.i_reset / p.g_c,
+        r2_max: (n1 * p.g_a + p.g_c) / (n1 * p.g_a * p.g_c) * p.i_set,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default()
+    }
+
+    #[test]
+    fn hand_computed_values_121_inputs() {
+        // Nx+1 = 121 (an 11×11 image): factor = 122/121,
+        // r1_min = 122/121 · 50µA/160µS ≈ 0.3151 V
+        // r2_max = (121·660n + 160µ)/(121·660n·160µ) · 50µA ≈ 0.9384 V
+        let w = ideal_window(121, &p());
+        assert!((w.r1_min - 0.3151).abs() < 1e-3, "r1_min {}", w.r1_min);
+        assert!((w.r1_max - 0.6302).abs() < 1e-3, "r1_max {}", w.r1_max);
+        assert!((w.r2_max - 0.9384).abs() < 1e-3, "r2_max {}", w.r2_max);
+        assert!(w.is_valid());
+        // upper edge governed by R1 (avoid accidental RESET), not R2
+        assert!((w.v_max() - w.r1_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_input_window() {
+        // Nx+1 = 1: factor = 2 ⇒ v_min = 2·I_SET/G_C = 0.625 V,
+        // r1_max = 1.25 V; r2_max = I_SET·(1/G_C + 1/G_A) ≈ 76 V (huge).
+        let w = ideal_window(1, &p());
+        assert!((w.v_min() - 0.625).abs() < 1e-9);
+        assert!((w.v_max() - 1.25).abs() < 1e-9);
+        assert!(w.r2_max > 50.0);
+        // ideal NM of the corner case = (1.25-0.625)/0.9375 = 2/3
+        assert!((w.noise_margin() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_tightens_then_saturates_with_inputs() {
+        // v_min decreases toward I_SET/G_C as more inputs share the load;
+        // r2_max decreases with inputs (more amorphous leakage paths).
+        let w8 = ideal_window(8, &p());
+        let w1024 = ideal_window(1024, &p());
+        assert!(w1024.v_min() < w8.v_min());
+        assert!(w1024.r2_max < w8.r2_max);
+        assert!(w1024.is_valid());
+    }
+
+    #[test]
+    fn noise_margin_vanishes_for_huge_fanin() {
+        // For n ≫ G_C/G_A the upper edge is R2-governed and the window
+        // width shrinks like 1/n: the ideal NM tends to zero even before
+        // parasitics enter. (r1_min stays strictly below r2_max for the
+        // paper's parameters, so the window never fully inverts.)
+        let nm_small = ideal_window(121, &p()).noise_margin();
+        let nm_big = ideal_window(1 << 20, &p()).noise_margin();
+        assert!(nm_big < nm_small / 100.0, "nm_big = {nm_big}");
+        assert!(ideal_window(1 << 20, &p()).is_valid());
+        // beyond the conductance ratio the upper edge switches to R2
+        let w = ideal_window(1024, &p());
+        assert!((w.v_max() - w.r2_max).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,108 @@
+//! Energy and latency accounting for subarray operations.
+//!
+//! Model (documented in DESIGN.md §7): every computational step applies
+//! `V_DD` across the engaged rows for `t_SET`; the energy booked per output
+//! is `V_DD · I_row · t_SET` (the full current path: input cells, bit line,
+//! output cell). Presets book a RESET pulse per output cell; reads book the
+//! small read pulse. Wall-clock advances by the pulse durations, with
+//! presets pipelined against the previous step when requested.
+
+/// Running energy/latency ledger for a subarray (or a whole system).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    /// Total energy \[J\].
+    pub energy: f64,
+    /// Total busy time \[s\].
+    pub time: f64,
+    /// Number of computational (TMVM) steps executed.
+    pub steps: u64,
+    /// Number of write pulses (SET + RESET).
+    pub writes: u64,
+    /// Number of read pulses.
+    pub reads: u64,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book one TMVM step: per-row path energies at the applied voltage.
+    pub fn book_step(&mut self, v_dd: f64, row_currents_sum: f64, t_set: f64) {
+        self.energy += v_dd * row_currents_sum * t_set;
+        self.time += t_set;
+        self.steps += 1;
+    }
+
+    /// Book `n` preset (RESET) pulses; `pipelined` presets overlap the
+    /// previous step and cost no extra wall-clock.
+    pub fn book_preset(&mut self, n: u64, v: f64, i_reset: f64, t_reset: f64, pipelined: bool) {
+        self.energy += n as f64 * v * i_reset * t_reset;
+        if !pipelined {
+            self.time += t_reset;
+        }
+        self.writes += n;
+    }
+
+    /// Book a single write pulse (program a weight).
+    pub fn book_write(&mut self, v: f64, i: f64, t: f64) {
+        self.energy += v * i * t;
+        self.time += t;
+        self.writes += 1;
+    }
+
+    /// Book `n` parallel read pulses (one wall-clock read slot).
+    pub fn book_read(&mut self, n: u64, v: f64, i_read: f64, t_read: f64) {
+        self.energy += n as f64 * v * i_read * t_read;
+        self.time += t_read;
+        self.reads += n;
+    }
+
+    /// Merge another ledger (e.g. per-worker ledgers into a system total).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.energy += other.energy;
+        self.time = self.time.max(other.time); // parallel workers
+        self.steps += other.steps;
+        self.writes += other.writes;
+        self.reads += other.reads;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_energy_is_vit() {
+        let mut l = EnergyLedger::new();
+        l.book_step(1.0, 500e-6, 80e-9);
+        assert!((l.energy - 4e-11).abs() < 1e-20); // 40 pJ
+        assert!((l.time - 80e-9).abs() < 1e-18);
+        assert_eq!(l.steps, 1);
+    }
+
+    #[test]
+    fn pipelined_preset_is_free_in_time() {
+        let mut l = EnergyLedger::new();
+        l.book_preset(10, 1.0, 100e-6, 15e-9, true);
+        assert_eq!(l.time, 0.0);
+        assert!(l.energy > 0.0);
+        let mut l2 = EnergyLedger::new();
+        l2.book_preset(10, 1.0, 100e-6, 15e-9, false);
+        assert!(l2.time > 0.0);
+        assert!((l2.energy - l.energy).abs() < 1e-20);
+    }
+
+    #[test]
+    fn merge_takes_parallel_max_time() {
+        let mut a = EnergyLedger::new();
+        a.book_step(1.0, 1e-3, 80e-9);
+        let mut b = EnergyLedger::new();
+        b.book_step(1.0, 1e-3, 80e-9);
+        b.book_step(1.0, 1e-3, 80e-9);
+        a.merge(&b);
+        assert_eq!(a.steps, 3);
+        assert!((a.time - 160e-9).abs() < 1e-18, "max, not sum");
+        assert!((a.energy - 3.0 * 8e-11).abs() < 1e-20);
+    }
+}

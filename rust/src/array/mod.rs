@@ -1,0 +1,13 @@
+//! The 3D XPoint subarray simulator: two stacked PCM levels, memory
+//! operations, and the in-memory TMVM engine (paper §III), with
+//! energy/latency accounting and the multi-bit schemes of §IV-C.
+
+pub mod subarray;
+pub mod tmvm;
+pub mod energy;
+pub mod multibit;
+
+pub use energy::EnergyLedger;
+pub use multibit::{multibit_tmvm_cost, MultibitCost, MultibitScheme};
+pub use subarray::{Level, Subarray};
+pub use tmvm::{TmvmMode, TmvmOutcome, TmvmReport};

@@ -1,0 +1,190 @@
+//! Multi-bit TMVM implementation schemes (paper §IV-C, Fig. 7, Table III).
+//!
+//! * **Area-efficient** (Fig. 7(a)): one cell per weight bit; the word line
+//!   of bit `k` is driven at `2^k · V_DD`, so the bit-k cell current is
+//!   weighted by its significance. Needs `b` multi-level drivers; the top
+//!   voltage `2^(b−1)·V_DD` becomes infeasible (> 5 V inside the subarray)
+//!   past a few bits — exactly the paper's cutoff at 3 bits.
+//! * **Low-power** (Fig. 7(b)): bit `k` is *replicated* in `2^k` adjacent
+//!   cells, all driven at the plain `V_DD`: significance is realized by
+//!   copy count. Area grows as `2^b − 1` cells per weight, but no voltage
+//!   scaling is needed.
+//!
+//! Cost model (per dot-product column of `n_inputs` weights, documented in
+//! DESIGN.md §7): the output-cell current is pinned near `I_SET` at the
+//! operating point; input-side dissipation follows the effective input
+//! resistance of each scheme, and each engaged word line books a drive
+//! overhead.
+
+use crate::analysis::ArrayDesign;
+
+/// The two multi-bit schemes of Fig. 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultibitScheme {
+    AreaEfficient,
+    LowPower,
+}
+
+/// Cost estimate for one multi-bit TMVM dot product.
+#[derive(Clone, Copy, Debug)]
+pub struct MultibitCost {
+    pub scheme: MultibitScheme,
+    pub bits: usize,
+    /// Energy per TMVM dot product \[J\].
+    pub energy: f64,
+    /// Array area consumed by the weights \[m²\].
+    pub area: f64,
+    /// Cells used per weight element.
+    pub cells_per_weight: usize,
+    /// Highest word-line voltage required \[V\].
+    pub max_voltage: f64,
+    /// Feasible within the subarray voltage ceiling (5 V)?
+    pub feasible: bool,
+}
+
+/// Maximum voltage deliverable inside the subarray (paper §VI-B: the
+/// area-efficient scheme beyond 3 bits "requires applying a large voltage
+/// level (>5V) within the subarray, making the implementation infeasible").
+pub const V_CEILING: f64 = 5.0;
+
+/// Estimate energy and area of a `bits`-bit TMVM dot product over
+/// `n_inputs` weights (paper Table III uses `n_inputs = 121`).
+pub fn multibit_tmvm_cost(
+    design: &ArrayDesign,
+    scheme: MultibitScheme,
+    bits: usize,
+    n_inputs: usize,
+    v_dd: f64,
+) -> MultibitCost {
+    assert!(bits >= 1 && n_inputs >= 1);
+    let p = design.device;
+    let cell_area = design.cell.area();
+    let t = p.t_set;
+    // Output current pinned at the SET threshold at the operating point;
+    // base drive energy of a binary (1-bit) dot product.
+    let i_out = p.i_set;
+    let e_base = v_dd * i_out * t;
+    // Per-word-line drive overhead (charging the line through the driver).
+    let e_line = 0.08 * e_base;
+
+    match scheme {
+        MultibitScheme::AreaEfficient => {
+            // bit k driven at 2^k·V_DD; its share of the output current is
+            // ∝ 2^k. Energy = Σ_k (2^k·V_DD)·(i_out·2^k/(2^b−1))·t plus one
+            // line drive per bit plane.
+            let total_weight = (1u64 << bits) as f64 - 1.0;
+            let mut e = 0.0;
+            for k in 0..bits {
+                let w_k = (1u64 << k) as f64;
+                e += (w_k * v_dd) * (i_out * w_k / total_weight) * t;
+            }
+            e += bits as f64 * e_line;
+            let max_voltage = v_dd * (1u64 << (bits - 1)) as f64;
+            MultibitCost {
+                scheme,
+                bits,
+                energy: e,
+                area: bits as f64 * n_inputs as f64 * cell_area,
+                cells_per_weight: bits,
+                max_voltage,
+                feasible: max_voltage <= V_CEILING,
+            }
+        }
+        MultibitScheme::LowPower => {
+            // bit k replicated 2^k times at plain V_DD: cells per weight =
+            // 2^b − 1. Output current unchanged; line-drive overhead grows
+            // with the (log₂-many) engaged word-line groups, saturating.
+            let copies = (1u64 << bits) as f64 - 1.0;
+            // drive overhead saturates: 2 − 2^{1−b} engaged line groups
+            let e = e_base + e_line * (2.0 - (2.0f64).powi(1 - (bits as i32)));
+            MultibitCost {
+                scheme,
+                bits,
+                energy: e,
+                area: copies * n_inputs as f64 * cell_area,
+                cells_per_weight: copies as usize,
+                max_voltage: v_dd,
+                feasible: v_dd <= V_CEILING,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+
+    fn design() -> ArrayDesign {
+        ArrayDesign::new(128, 128, LineConfig::config3(), 3.0, 1.0)
+    }
+
+    fn cost(scheme: MultibitScheme, bits: usize) -> MultibitCost {
+        multibit_tmvm_cost(&design(), scheme, bits, 121, 0.9)
+    }
+
+    #[test]
+    fn one_bit_schemes_coincide() {
+        let ae = cost(MultibitScheme::AreaEfficient, 1);
+        let lp = cost(MultibitScheme::LowPower, 1);
+        assert_eq!(ae.cells_per_weight, 1);
+        assert_eq!(lp.cells_per_weight, 1);
+        assert!((ae.area - lp.area).abs() / lp.area < 1e-12);
+        assert!((ae.energy - lp.energy).abs() / lp.energy < 0.05);
+    }
+
+    #[test]
+    fn area_efficient_area_is_linear_in_bits() {
+        let a1 = cost(MultibitScheme::AreaEfficient, 1).area;
+        for b in 2..=6 {
+            let ab = cost(MultibitScheme::AreaEfficient, b).area;
+            assert!((ab / a1 - b as f64).abs() < 1e-9, "b={b}");
+        }
+    }
+
+    #[test]
+    fn low_power_area_is_exponential_in_bits() {
+        let a1 = cost(MultibitScheme::LowPower, 1).area;
+        for b in 2..=6 {
+            let ab = cost(MultibitScheme::LowPower, b).area;
+            let expect = ((1u64 << b) - 1) as f64;
+            assert!((ab / a1 - expect).abs() < 1e-9, "b={b}");
+        }
+    }
+
+    #[test]
+    fn area_efficient_energy_grows_fast_low_power_stays_flat() {
+        let ae2 = cost(MultibitScheme::AreaEfficient, 2).energy;
+        let ae3 = cost(MultibitScheme::AreaEfficient, 3).energy;
+        let ae1 = cost(MultibitScheme::AreaEfficient, 1).energy;
+        assert!(ae2 > 1.5 * ae1, "AE energy superlinear: {ae2} vs {ae1}");
+        assert!(ae3 > 1.5 * ae2);
+        assert!(ae3 > 2.5 * ae1, "cumulative growth");
+        let lp1 = cost(MultibitScheme::LowPower, 1).energy;
+        let lp6 = cost(MultibitScheme::LowPower, 6).energy;
+        assert!(lp6 < 1.5 * lp1, "LP energy ~flat: {lp6} vs {lp1}");
+        assert!(lp6 >= lp1, "LP energy non-decreasing");
+    }
+
+    #[test]
+    fn area_efficient_infeasible_past_three_bits() {
+        // paper §VI-B: > 5 V needed beyond 3 bits at the Table II operating
+        // point (~0.9 V): 0.9·2^3 = 7.2 V > 5 V at 4 bits.
+        assert!(cost(MultibitScheme::AreaEfficient, 1).feasible);
+        assert!(cost(MultibitScheme::AreaEfficient, 2).feasible);
+        assert!(cost(MultibitScheme::AreaEfficient, 3).feasible);
+        assert!(!cost(MultibitScheme::AreaEfficient, 4).feasible);
+        // the low-power scheme never needs voltage scaling
+        for b in 1..=6 {
+            assert!(cost(MultibitScheme::LowPower, b).feasible);
+        }
+    }
+
+    #[test]
+    fn energies_in_picojoule_regime() {
+        for b in 1..=3 {
+            let e = cost(MultibitScheme::AreaEfficient, b).energy;
+            assert!(e > 0.1e-12 && e < 100e-12, "E = {e}");
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Subarray state machine: `2 × N_row × N_column` PCM cells in two stacked
+//! levels (paper Fig. 1), with write/read/preset memory operations.
+
+use super::energy::EnergyLedger;
+use crate::analysis::ArrayDesign;
+use crate::device::PcmCell;
+
+/// The two PCM levels of a (two-deck) 3D XPoint subarray.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Top level — holds operands/weights during computation.
+    Top,
+    /// Bottom level — holds thresholded outputs.
+    Bottom,
+}
+
+/// A 3D XPoint subarray.
+///
+/// Cell indexing is `(row, col)` with `row < n_row`, `col < n_col`; the top
+/// and bottom levels each hold a full `n_row × n_col` grid.
+#[derive(Clone, Debug)]
+pub struct Subarray {
+    design: ArrayDesign,
+    top: Vec<PcmCell>,
+    bottom: Vec<PcmCell>,
+    /// Energy/latency ledger for all operations on this subarray.
+    pub ledger: EnergyLedger,
+    /// Per-row `(α_th, R_th)` cache for parasitic-mode TMVM — the design
+    /// geometry is immutable, so the ladder Thevenin sweep is computed once
+    /// and reused by every step (§Perf in EXPERIMENTS.md).
+    pub(crate) thevenin_cache: Option<Vec<crate::analysis::LadderThevenin>>,
+}
+
+impl Subarray {
+    /// Fresh subarray; all cells amorphous (logic 0).
+    pub fn new(design: ArrayDesign) -> Self {
+        let n = design.n_row * design.n_col;
+        Self {
+            design,
+            top: vec![PcmCell::new(); n],
+            bottom: vec![PcmCell::new(); n],
+            ledger: EnergyLedger::new(),
+            thevenin_cache: None,
+        }
+    }
+
+    pub fn design(&self) -> &ArrayDesign {
+        &self.design
+    }
+
+    pub fn n_row(&self) -> usize {
+        self.design.n_row
+    }
+
+    pub fn n_col(&self) -> usize {
+        self.design.n_col
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.n_row() && col < self.n_col());
+        row * self.design.n_col + col
+    }
+
+    fn level(&self, level: Level) -> &[PcmCell] {
+        match level {
+            Level::Top => &self.top,
+            Level::Bottom => &self.bottom,
+        }
+    }
+
+    fn level_mut(&mut self, level: Level) -> &mut Vec<PcmCell> {
+        match level {
+            Level::Top => &mut self.top,
+            Level::Bottom => &mut self.bottom,
+        }
+    }
+
+    /// Read one cell (non-destructive; books a read pulse).
+    pub fn read(&mut self, level: Level, row: usize, col: usize) -> bool {
+        let p = self.design.device;
+        let i = self.idx(row, col);
+        self.ledger.book_read(1, 0.2, p.i_read, p.t_read);
+        self.level(level)[i].bit()
+    }
+
+    /// Peek a cell without booking energy (debug/verification path).
+    pub fn peek(&self, level: Level, row: usize, col: usize) -> bool {
+        self.level(level)[self.idx(row, col)].bit()
+    }
+
+    /// Write one cell with a SET or RESET pulse.
+    pub fn write(&mut self, level: Level, row: usize, col: usize, bit: bool) {
+        let p = self.design.device;
+        let i = self.idx(row, col);
+        let (amp, dur) = if bit {
+            (p.i_set, p.t_set)
+        } else {
+            (p.i_reset, p.t_reset)
+        };
+        // programming voltage ~ the threshold-switched cell drop
+        self.ledger.book_write(p.v_switch, amp, dur);
+        self.level_mut(level)[i].write_bit(bit);
+    }
+
+    /// Program a whole level from a row-major bit matrix
+    /// (`bits[row][col]`). Rows are written in parallel per word line: one
+    /// write slot per row.
+    pub fn program_level(&mut self, level: Level, bits: &[Vec<bool>]) {
+        assert_eq!(bits.len(), self.n_row(), "row count mismatch");
+        let p = self.design.device;
+        for (r, row_bits) in bits.iter().enumerate() {
+            assert_eq!(row_bits.len(), self.n_col(), "col count mismatch");
+            for (c, &b) in row_bits.iter().enumerate() {
+                let i = self.idx(r, c);
+                self.level_mut(level)[i].write_bit(b);
+            }
+            // one parallel write pulse per row (worst-case RESET timing)
+            self.ledger
+                .book_preset(self.design.n_col as u64, p.v_switch, p.i_reset, p.t_reset, false);
+        }
+    }
+
+    /// Preset an output column at the bottom level to logic 0 (paper
+    /// §III-A first bullet). `pipelined = true` overlaps the preset with
+    /// the previous computational step.
+    pub fn preset_output_column(&mut self, col: usize, pipelined: bool) {
+        let p = self.design.device;
+        for r in 0..self.n_row() {
+            let i = self.idx(r, col);
+            self.level_mut(Level::Bottom)[i].write_bit(false);
+        }
+        self.ledger
+            .book_preset(self.n_row() as u64, p.v_switch, p.i_reset, p.t_reset, pipelined);
+    }
+
+    /// Read a whole bottom column (one parallel read slot).
+    pub fn read_bottom_column(&mut self, col: usize) -> Vec<bool> {
+        let p = self.design.device;
+        self.ledger
+            .book_read(self.n_row() as u64, 0.2, p.i_read, p.t_read);
+        (0..self.n_row())
+            .map(|r| self.bottom[self.idx(r, col)].bit())
+            .collect()
+    }
+
+    /// Top-level conductance of cell `(row, col)` \[S\].
+    pub fn top_conductance(&self, row: usize, col: usize) -> f64 {
+        self.top[self.idx(row, col)].conductance(&self.design.device)
+    }
+
+    /// Direct (write-free) bottom-cell update used by the TMVM engine.
+    pub(crate) fn force_bottom(&mut self, row: usize, col: usize, bit: bool) {
+        let i = self.idx(row, col);
+        self.bottom[i].write_bit(bit);
+    }
+
+    /// Direct (write-free) top-cell update used by inter-subarray links
+    /// (the programming energy rides the source computation pulse).
+    pub(crate) fn force_top(&mut self, row: usize, col: usize, bit: bool) {
+        let i = self.idx(row, col);
+        self.top[i].write_bit(bit);
+    }
+
+    /// Borrow the top level bits of one row as booleans (no energy).
+    pub fn top_row_bits(&self, row: usize) -> Vec<bool> {
+        (0..self.n_col())
+            .map(|c| self.top[self.idx(row, c)].bit())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+
+    fn small() -> Subarray {
+        Subarray::new(ArrayDesign::new(4, 6, LineConfig::config1(), 1.0, 1.0))
+    }
+
+    #[test]
+    fn fresh_array_is_all_zero() {
+        let sa = small();
+        for r in 0..4 {
+            for c in 0..6 {
+                assert!(!sa.peek(Level::Top, r, c));
+                assert!(!sa.peek(Level::Bottom, r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut sa = small();
+        sa.write(Level::Top, 2, 3, true);
+        assert!(sa.read(Level::Top, 2, 3));
+        assert!(!sa.read(Level::Top, 2, 2));
+        sa.write(Level::Top, 2, 3, false);
+        assert!(!sa.read(Level::Top, 2, 3));
+        assert!(sa.ledger.writes >= 2 && sa.ledger.reads >= 3);
+    }
+
+    #[test]
+    fn program_level_sets_pattern() {
+        let mut sa = small();
+        let bits: Vec<Vec<bool>> = (0..4)
+            .map(|r| (0..6).map(|c| (r + c) % 2 == 0).collect())
+            .collect();
+        sa.program_level(Level::Top, &bits);
+        for r in 0..4 {
+            assert_eq!(sa.top_row_bits(r), bits[r]);
+        }
+    }
+
+    #[test]
+    fn preset_clears_column_only() {
+        let mut sa = small();
+        for r in 0..4 {
+            sa.write(Level::Bottom, r, 1, true);
+            sa.write(Level::Bottom, r, 2, true);
+        }
+        sa.preset_output_column(1, true);
+        for r in 0..4 {
+            assert!(!sa.peek(Level::Bottom, r, 1));
+            assert!(sa.peek(Level::Bottom, r, 2), "other columns untouched");
+        }
+    }
+
+    #[test]
+    fn conductance_tracks_bits() {
+        let mut sa = small();
+        let p = sa.design().device;
+        assert!((sa.top_conductance(0, 0) - p.g_a).abs() / p.g_a < 1e-9);
+        sa.write(Level::Top, 0, 0, true);
+        assert!((sa.top_conductance(0, 0) - p.g_c).abs() / p.g_c < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn program_wrong_shape_panics() {
+        let mut sa = small();
+        sa.program_level(Level::Top, &vec![vec![true; 6]; 3]);
+    }
+}

@@ -1,0 +1,344 @@
+//! The in-memory TMVM engine (paper §III-A).
+//!
+//! Semantics: binary matrix `G` lives in the top PCM level (`G[row][col]`),
+//! the binary input vector `V` is applied on the word lines (one entry per
+//! column; logic 0 = floated line), and each row's thresholded dot product
+//! lands in the bottom-level output column:
+//!
+//! ```text
+//! I_T(row) = G_C · V_DD · Σ_i(V_i·G[row][i]) / (Σ_{V_i=1} G[row][i] + G_C)   (Eq. 3, at the
+//! O(row)   = I_T(row) ≥ I_SET                                 crystalline endpoint)
+//! ```
+//!
+//! An execution is *electrically erroneous* if any output current reaches
+//! `I_RESET` (accidental RESET, §III-A) — the engine reports violations
+//! instead of silently clamping. In [`TmvmMode::Parasitic`] the per-row
+//! Thevenin attenuation of the word-line ladder divides the delivered
+//! voltage and adds the wire resistance into the current path.
+
+use super::subarray::Subarray;
+use crate::analysis::thevenin::ladder_thevenin;
+
+/// Electrical fidelity of a TMVM execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TmvmMode {
+    /// Eq. 3 exactly — no wire parasitics.
+    Ideal,
+    /// Per-row Thevenin attenuation + series wire resistance from the
+    /// Appendix-A ladder model.
+    Parasitic,
+}
+
+/// Per-row electrical outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TmvmOutcome {
+    /// Output SET to logic 1.
+    Set,
+    /// Output stayed at logic 0.
+    Held,
+    /// Current reached I_RESET — electrically erroneous.
+    ResetViolation,
+}
+
+/// Report of one TMVM step.
+#[derive(Clone, Debug)]
+pub struct TmvmReport {
+    /// Thresholded output bits (one per row).
+    pub outputs: Vec<bool>,
+    /// Final output-cell current per row \[A\].
+    pub currents: Vec<f64>,
+    /// Per-row outcome classification.
+    pub outcomes: Vec<TmvmOutcome>,
+    /// Applied voltage.
+    pub v_dd: f64,
+    /// Energy booked for this step \[J\].
+    pub energy: f64,
+}
+
+impl TmvmReport {
+    /// Any electrical violations?
+    pub fn is_clean(&self) -> bool {
+        !self
+            .outcomes
+            .iter()
+            .any(|o| matches!(o, TmvmOutcome::ResetViolation))
+    }
+}
+
+impl Subarray {
+    /// Execute one TMVM step: inputs (one bit per column) against the top
+    /// level, thresholded results written to bottom-level column
+    /// `out_col`. The output column is preset first (pipelined).
+    pub fn tmvm(&mut self, inputs: &[bool], out_col: usize, v_dd: f64, mode: TmvmMode) -> TmvmReport {
+        let n_row = self.n_row();
+        self.tmvm_rows(inputs, out_col, v_dd, mode, n_row)
+    }
+
+    /// [`Subarray::tmvm`] restricted to the first `active_rows` rows: the
+    /// WLBs of the remaining rows are floated (paper Fig. 4(b), cells "not
+    /// engaged in the computation"), so they carry no current and burn no
+    /// energy. The coordinator uses this when a batch only fills part of
+    /// the subarray.
+    pub fn tmvm_rows(
+        &mut self,
+        inputs: &[bool],
+        out_col: usize,
+        v_dd: f64,
+        mode: TmvmMode,
+        active_rows: usize,
+    ) -> TmvmReport {
+        assert_eq!(inputs.len(), self.n_col(), "one input bit per column");
+        assert!(out_col < self.n_col());
+        assert!(v_dd > 0.0);
+        assert!(active_rows <= self.n_row());
+        let design = self.design().clone();
+        let p = design.device;
+
+        self.preset_output_column(out_col, true);
+
+        // Parasitic mode: per-row Thevenin (α, R_th), computed once per
+        // subarray and cached (the geometry never changes). The ladder
+        // model's r_th already contains the victim bit-line span; α
+        // multiplies the delivered voltage.
+        if matches!(mode, TmvmMode::Parasitic) && self.thevenin_cache.is_none() {
+            self.thevenin_cache = Some(
+                (1..=design.n_row)
+                    .map(|row| ladder_thevenin(&design, row))
+                    .collect(),
+            );
+        }
+        let n_row = design.n_row;
+        let mut outputs = Vec::with_capacity(n_row);
+        let mut currents = Vec::with_capacity(n_row);
+        let mut outcomes = Vec::with_capacity(n_row);
+        let mut current_sum = 0.0;
+
+        for row in 0..n_row {
+            if row >= active_rows {
+                // floated WLB: no current path through this row
+                self.force_bottom(row, out_col, false);
+                outputs.push(false);
+                currents.push(0.0);
+                outcomes.push(TmvmOutcome::Held);
+                continue;
+            }
+            // conductance sum over engaged inputs (floated lines drop out)
+            let mut g_sum = 0.0;
+            for (col, &x) in inputs.iter().enumerate() {
+                if x {
+                    g_sum += self.top_conductance(row, col);
+                }
+            }
+            let i_t = if g_sum == 0.0 {
+                0.0
+            } else {
+                match mode {
+                    TmvmMode::Ideal => {
+                        // Eq. 3 at the crystalline endpoint (G_O = G_C)
+                        p.g_c * v_dd * g_sum / (g_sum + p.g_c)
+                    }
+                    TmvmMode::Parasitic => {
+                        let th = self.thevenin_cache.as_ref().expect("cache primed")[row];
+                        // wire Thevenin drives input network + output cell
+                        let r_path = th.r_th + 1.0 / g_sum + 1.0 / p.g_c;
+                        th.alpha * v_dd / r_path
+                    }
+                }
+            };
+            let (bit, outcome) = if i_t >= p.i_reset {
+                // accidental RESET: the cell melts back to amorphous
+                (false, TmvmOutcome::ResetViolation)
+            } else if i_t >= p.i_set {
+                (true, TmvmOutcome::Set)
+            } else {
+                (false, TmvmOutcome::Held)
+            };
+            self.force_bottom(row, out_col, bit);
+            outputs.push(bit);
+            currents.push(i_t);
+            outcomes.push(outcome);
+            current_sum += i_t;
+        }
+
+        let e_before = self.ledger.energy;
+        self.ledger.book_step(v_dd, current_sum, p.t_set);
+        TmvmReport {
+            outputs,
+            currents,
+            outcomes,
+            v_dd,
+            energy: self.ledger.energy - e_before,
+        }
+    }
+
+    /// The operating voltage that realizes an integer firing threshold
+    /// `theta` ("fire when ≥ θ crystalline products"): from Eq. 3,
+    /// `I_T(θ·G_C) = I_SET` at `V = I_SET·(θ+1)/(θ·G_C)`.
+    pub fn vdd_for_threshold(&self, theta: usize) -> f64 {
+        assert!(theta >= 1);
+        let p = self.design().device;
+        let t = theta as f64;
+        p.i_set * (t + 1.0) / (t * p.g_c)
+    }
+
+    /// The integer firing threshold realized by `v_dd` (ideal mode):
+    /// smallest count n₁ of crystalline products with `I_T ≥ I_SET`.
+    pub fn threshold_for_vdd(&self, v_dd: f64) -> Option<usize> {
+        let p = self.design().device;
+        if v_dd * p.g_c <= p.i_set {
+            return None; // can never fire
+        }
+        // n·G_C/(n·G_C + G_C)·V·G_C ≥ I_SET  ⇔  n ≥ I_SET/(V·G_C − I_SET)
+        // (tiny slack keeps the exact boundary on the firing side despite
+        // floating-point rounding, matching the ≥ comparison in `tmvm`)
+        let n = p.i_set / (v_dd * p.g_c - p.i_set);
+        Some((n - 1e-9).ceil().max(1.0) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ArrayDesign;
+    use crate::array::Level;
+    use crate::interconnect::LineConfig;
+
+    fn array(n_row: usize, n_col: usize) -> Subarray {
+        Subarray::new(ArrayDesign::new(n_row, n_col, LineConfig::config3(), 3.0, 1.0))
+    }
+
+    /// Program an identity-ish pattern and verify single-input selection.
+    #[test]
+    fn identity_matrix_selects_inputs() {
+        let n = 6;
+        let mut sa = array(n, n);
+        let eye: Vec<Vec<bool>> = (0..n).map(|r| (0..n).map(|c| r == c).collect()).collect();
+        sa.program_level(Level::Top, &eye);
+        // θ = 1: fire on a single crystalline product
+        let v = sa.vdd_for_threshold(1);
+        for active in 0..n {
+            let mut x = vec![false; n];
+            x[active] = true;
+            let rep = sa.tmvm(&x, 0, v, TmvmMode::Ideal);
+            assert!(rep.is_clean());
+            for r in 0..n {
+                assert_eq!(rep.outputs[r], r == active, "row {r}, active {active}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_voltage_roundtrip() {
+        let sa = array(4, 8);
+        for theta in 1..=8 {
+            let v = sa.vdd_for_threshold(theta);
+            assert_eq!(sa.threshold_for_vdd(v), Some(theta), "theta {theta}");
+            // marginally above the boundary still realizes θ; marginally
+            // below demands one more active product
+            assert_eq!(sa.threshold_for_vdd(v * 1.001), Some(theta));
+            assert_eq!(sa.threshold_for_vdd(v * 0.999), Some(theta + 1));
+        }
+        assert_eq!(sa.threshold_for_vdd(1e-6), None);
+    }
+
+    #[test]
+    fn counts_threshold_semantics() {
+        let n_col = 12;
+        let mut sa = array(3, n_col);
+        // row 0: 3 ones, row 1: 5 ones, row 2: 8 ones
+        let mut bits = vec![vec![false; n_col]; 3];
+        for c in 0..3 {
+            bits[0][c] = true;
+        }
+        for c in 0..5 {
+            bits[1][c] = true;
+        }
+        for c in 0..8 {
+            bits[2][c] = true;
+        }
+        sa.program_level(Level::Top, &bits);
+        let x = vec![true; n_col]; // all inputs active
+        let v = sa.vdd_for_threshold(5);
+        let rep = sa.tmvm(&x, 1, v, TmvmMode::Ideal);
+        assert_eq!(rep.outputs, vec![false, true, true]);
+        // outputs are stored in the requested bottom column
+        assert!(!sa.peek(Level::Bottom, 0, 1));
+        assert!(sa.peek(Level::Bottom, 1, 1));
+        assert!(sa.peek(Level::Bottom, 2, 1));
+    }
+
+    #[test]
+    fn excessive_voltage_flags_reset_violation() {
+        let n_col = 8;
+        let mut sa = array(2, n_col);
+        sa.program_level(Level::Top, &vec![vec![true; n_col]; 2]);
+        // far above the ideal window: I_T > I_RESET
+        let rep = sa.tmvm(&vec![true; n_col], 0, 5.0, TmvmMode::Ideal);
+        assert!(!rep.is_clean());
+        assert!(rep
+            .outcomes
+            .iter()
+            .all(|o| matches!(o, TmvmOutcome::ResetViolation)));
+    }
+
+    #[test]
+    fn parasitic_mode_weakens_far_rows() {
+        // A tall skinny array at marginal voltage: the ideal mode fires all
+        // rows; the parasitic mode loses the far rows first.
+        let n_row = 2048;
+        let mut sa = Subarray::new(
+            ArrayDesign::new(n_row, 8, LineConfig::config1(), 1.0, 1.0).with_driver(1.0),
+        );
+        sa.program_level(Level::Top, &vec![vec![true; 8]; n_row]);
+        let x = vec![true; 8];
+        let v = sa.vdd_for_threshold(8) * 1.10; // modest margin
+        let ideal = sa.tmvm(&x, 0, v, TmvmMode::Ideal);
+        assert!(ideal.outputs.iter().all(|&b| b), "ideal fires everywhere");
+        let para = sa.tmvm(&x, 0, v, TmvmMode::Parasitic);
+        assert!(para.outputs[0], "first row still fires");
+        assert!(
+            !para.outputs[n_row - 1],
+            "last row starved by the wire drop"
+        );
+        // currents must be monotonically non-increasing with row depth
+        for w in para.currents.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn floated_inputs_draw_no_current() {
+        let mut sa = array(3, 4);
+        sa.program_level(Level::Top, &vec![vec![true; 4]; 3]);
+        let rep = sa.tmvm(&vec![false; 4], 0, 0.9, TmvmMode::Ideal);
+        assert!(rep.currents.iter().all(|&i| i == 0.0));
+        assert!(rep.outputs.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn amorphous_weights_leak_negligibly() {
+        // all inputs driven, all weights 0: currents ≪ I_SET (this is the
+        // R2 condition of Eq. 5)
+        let mut sa = array(2, 121);
+        let p = sa.design().device;
+        let rep = sa.tmvm(&vec![true; 121], 0, 0.9, TmvmMode::Ideal);
+        assert!(rep.outputs.iter().all(|&b| !b));
+        assert!(rep.currents.iter().all(|&i| i < p.i_set));
+        assert!(rep.currents[0] > 0.0, "leakage is nonzero");
+    }
+
+    #[test]
+    fn step_energy_in_picojoule_regime() {
+        let mut sa = array(10, 121);
+        sa.program_level(Level::Top, &vec![vec![true; 121]; 10]);
+        let v = sa.vdd_for_threshold(60);
+        let rep = sa.tmvm(&vec![true; 121], 0, v, TmvmMode::Ideal);
+        // 10 output rows ≈ tens of pJ total (Table II: ~21.5 pJ/image for
+        // P = 10 outputs)
+        assert!(
+            rep.energy > 1e-12 && rep.energy < 100e-12,
+            "E = {} J",
+            rep.energy
+        );
+    }
+}

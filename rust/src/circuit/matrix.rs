@@ -1,0 +1,329 @@
+//! Dense row-major matrix with LU decomposition (partial pivoting) — the
+//! linear-algebra kernel under the MNA solver. Also provides a banded
+//! factorization fast path used for ladder-structured crosspoint netlists,
+//! where the MNA matrix has small bandwidth under natural node ordering.
+
+use anyhow::bail;
+
+/// Dense row-major `n × n` matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] += v;
+    }
+
+    /// Solve `A x = b` by LU with partial pivoting. Consumes a copy of the
+    /// matrix; `b.len()` must equal `n`.
+    pub fn solve(&self, b: &[f64]) -> crate::Result<Vec<f64>> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let mut a = self.data.clone();
+        let mut x = b.to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut pmax = a[perm[k] * n + k].abs();
+            for r in (k + 1)..n {
+                let v = a[perm[r] * n + k].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = r;
+                }
+            }
+            if pmax == 0.0 || !pmax.is_finite() {
+                bail!("singular or non-finite matrix at column {k} (pivot {pmax})");
+            }
+            perm.swap(k, p);
+            let prow = perm[k] * n;
+            let pivot = a[prow + k];
+            for r in (k + 1)..n {
+                let row = perm[r] * n;
+                let factor = a[row + k] / pivot;
+                if factor == 0.0 {
+                    continue;
+                }
+                a[row + k] = factor; // store L
+                for c in (k + 1)..n {
+                    a[row + c] -= factor * a[prow + c];
+                }
+            }
+        }
+        // forward substitution (apply L, permuted)
+        let mut y = vec![0.0; n];
+        for r in 0..n {
+            let row = perm[r] * n;
+            let mut s = x[perm[r]];
+            for c in 0..r {
+                s -= a[row + c] * y[c];
+            }
+            y[r] = s;
+        }
+        // back substitution (U)
+        for r in (0..n).rev() {
+            let row = perm[r] * n;
+            let mut s = y[r];
+            for c in (r + 1)..n {
+                s -= a[row + c] * x[c];
+            }
+            x[r] = s / a[row + r];
+        }
+        Ok(x)
+    }
+
+    /// Multiply `A · x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for r in 0..self.n {
+            let row = r * self.n;
+            let mut s = 0.0;
+            for c in 0..self.n {
+                s += self.data[row + c] * x[c];
+            }
+            y[r] = s;
+        }
+        y
+    }
+
+    /// Half-bandwidth of the matrix (max |r-c| with a non-zero entry).
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0;
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if self.data[r * self.n + c] != 0.0 {
+                    bw = bw.max(r.abs_diff(c));
+                }
+            }
+        }
+        bw
+    }
+}
+
+/// Banded LU solver without pivoting (valid for the diagonally-dominant MNA
+/// conductance matrices produced by resistive networks with every node tied
+/// to ground through some path). Stores only the band.
+///
+/// For an `n`-unknown system with half-bandwidth `k`, factorization is
+/// `O(n·k²)` instead of `O(n³)` — this is what makes full-circuit validation
+/// of 1024-row arrays tractable.
+#[derive(Clone, Debug)]
+pub struct BandedMatrix {
+    n: usize,
+    k: usize,              // half bandwidth
+    data: Vec<f64>,        // (2k+1) diagonals, row-major: data[r*(2k+1) + (c - r + k)]
+}
+
+impl BandedMatrix {
+    pub fn zeros(n: usize, half_bandwidth: usize) -> Self {
+        let k = half_bandwidth;
+        Self {
+            n,
+            k,
+            data: vec![0.0; n * (2 * k + 1)],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn half_bandwidth(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> Option<usize> {
+        let k = self.k as isize;
+        let off = c as isize - r as isize + k;
+        if off < 0 || off > 2 * k {
+            None
+        } else {
+            Some(r * (2 * self.k + 1) + off as usize)
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.idx(r, c).map(|i| self.data[i]).unwrap_or(0.0)
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: f64) {
+        match self.idx(r, c) {
+            Some(i) => self.data[i] += v,
+            None => panic!("entry ({r},{c}) outside band k={}", self.k),
+        }
+    }
+
+    /// In-place LU (no pivoting) + solve.
+    pub fn solve(&self, b: &[f64]) -> crate::Result<Vec<f64>> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let k = self.k;
+        let mut a = self.data.clone();
+        let w = 2 * k + 1;
+        let mut x = b.to_vec();
+        let at = |a: &Vec<f64>, r: usize, c: usize| -> f64 {
+            let off = c as isize - r as isize + k as isize;
+            a[r * w + off as usize]
+        };
+        let set = |a: &mut Vec<f64>, r: usize, c: usize, v: f64| {
+            let off = c as isize - r as isize + k as isize;
+            a[r * w + off as usize] = v;
+        };
+        for p in 0..n {
+            let pivot = at(&a, p, p);
+            if pivot.abs() < 1e-300 || !pivot.is_finite() {
+                bail!("banded LU: zero/non-finite pivot at {p}");
+            }
+            let rmax = (p + k).min(n - 1);
+            for r in (p + 1)..=rmax {
+                let factor = at(&a, r, p) / pivot;
+                if factor == 0.0 {
+                    continue;
+                }
+                set(&mut a, r, p, factor);
+                let cmax = (p + k).min(n - 1);
+                for c in (p + 1)..=cmax {
+                    let v = at(&a, r, c) - factor * at(&a, p, c);
+                    set(&mut a, r, c, v);
+                }
+                x[r] -= factor * x[p];
+            }
+        }
+        for r in (0..n).rev() {
+            let cmax = (r + k).min(n - 1);
+            let mut s = x[r];
+            for c in (r + 1)..=cmax {
+                s -= at(&a, r, c) * x[c];
+            }
+            x[r] = s / at(&a, r, r);
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [3; 5] -> x = [4/5, 7/5]
+        let mut a = Matrix::zeros(2);
+        a.set(0, 0, 2.0);
+        a.set(0, 1, 1.0);
+        a.set(1, 0, 1.0);
+        a.set(1, 1, 3.0);
+        let x = a.solve(&[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detects_singular() {
+        let mut a = Matrix::zeros(2);
+        a.set(0, 0, 1.0);
+        a.set(0, 1, 2.0);
+        a.set(1, 0, 2.0);
+        a.set(1, 1, 4.0);
+        assert!(a.solve(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn random_solve_residual_small() {
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..20 {
+            let n = rng.range(2, 30);
+            let mut a = Matrix::zeros(n);
+            for r in 0..n {
+                for c in 0..n {
+                    a.set(r, c, rng.range_f64(-1.0, 1.0));
+                }
+                // diagonally dominate to stay well-conditioned
+                a.add(r, r, 4.0 * n as f64 * if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let x = a.solve(&b).unwrap();
+            let r = a.matvec(&x);
+            for i in 0..n {
+                assert!((r[i] - b[i]).abs() < 1e-8, "residual too large");
+            }
+        }
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // [0 1; 1 0] x = [2; 3] -> x = [3, 2]
+        let mut a = Matrix::zeros(2);
+        a.set(0, 1, 1.0);
+        a.set(1, 0, 1.0);
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn banded_matches_dense() {
+        let mut rng = Pcg32::seeded(21);
+        for _ in 0..10 {
+            let n = rng.range(3, 40);
+            let k = rng.range(1, 4.min(n));
+            let mut dense = Matrix::zeros(n);
+            let mut band = BandedMatrix::zeros(n, k);
+            for r in 0..n {
+                for c in r.saturating_sub(k)..(r + k + 1).min(n) {
+                    let v = rng.range_f64(-1.0, 1.0);
+                    dense.set(r, c, v);
+                    band.add(r, c, v);
+                }
+                let boost = 10.0 * (k as f64 + 1.0);
+                dense.add(r, r, boost);
+                band.add(r, r, boost);
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let xd = dense.solve(&b).unwrap();
+            let xb = band.solve(&b).unwrap();
+            for i in 0..n {
+                assert!((xd[i] - xb[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_reports_band() {
+        let mut a = Matrix::zeros(4);
+        a.set(0, 0, 1.0);
+        a.set(3, 1, 2.0);
+        assert_eq!(a.bandwidth(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Generic resistive-network substrate: netlist construction, modified
+//! nodal analysis (MNA), and numeric Thevenin extraction.
+//!
+//! This is the validation backbone for the paper's analytic parasitic model
+//! (Appendix A): the same crosspoint ladder is built as a full netlist and
+//! solved exactly, and the analytic recursion must agree (see
+//! `rust/tests/prop_analysis.rs`).
+
+pub mod matrix;
+pub mod netlist;
+pub mod solve;
+pub mod thevenin;
+
+pub use matrix::Matrix;
+pub use netlist::{Netlist, NodeId, GROUND};
+pub use solve::Solution;
+pub use thevenin::TheveninEquivalent;

@@ -1,0 +1,177 @@
+//! Netlist builder: nodes, conductances, independent sources.
+
+/// Node identifier. Node 0 is ground.
+pub type NodeId = usize;
+
+/// The ground node.
+pub const GROUND: NodeId = 0;
+
+/// A two-terminal conductance element.
+#[derive(Clone, Copy, Debug)]
+pub struct Conductance {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub g: f64,
+}
+
+/// An independent current source pushing `i` amps from `from` into `to`.
+#[derive(Clone, Copy, Debug)]
+pub struct CurrentSource {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub i: f64,
+}
+
+/// An independent voltage source fixing `v(pos) - v(neg) = v`.
+#[derive(Clone, Copy, Debug)]
+pub struct VoltageSource {
+    pub pos: NodeId,
+    pub neg: NodeId,
+    pub v: f64,
+}
+
+/// A resistive network with independent sources, solved by MNA.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    n_nodes: usize,
+    pub(crate) conductances: Vec<Conductance>,
+    pub(crate) isources: Vec<CurrentSource>,
+    pub(crate) vsources: Vec<VoltageSource>,
+    labels: Vec<(String, NodeId)>,
+}
+
+impl Netlist {
+    /// New netlist containing only the ground node.
+    pub fn new() -> Self {
+        Self {
+            n_nodes: 1,
+            ..Default::default()
+        }
+    }
+
+    /// Allocate a fresh node.
+    pub fn node(&mut self) -> NodeId {
+        let id = self.n_nodes;
+        self.n_nodes += 1;
+        id
+    }
+
+    /// Allocate a fresh labelled node (debugging aid).
+    pub fn labelled_node(&mut self, label: &str) -> NodeId {
+        let id = self.node();
+        self.labels.push((label.to_string(), id));
+        id
+    }
+
+    /// Look up a node by label.
+    pub fn find(&self, label: &str) -> Option<NodeId> {
+        self.labels
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|&(_, id)| id)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_vsources(&self) -> usize {
+        self.vsources.len()
+    }
+
+    /// All conductance elements (inspection / KCL checks in tests).
+    pub fn conductance_elements(&self) -> &[Conductance] {
+        &self.conductances
+    }
+
+    /// Add a conductance `g` (siemens) between nodes `a` and `b`.
+    /// Zero conductances are dropped (open circuit).
+    pub fn conductance(&mut self, a: NodeId, b: NodeId, g: f64) {
+        assert!(a < self.n_nodes && b < self.n_nodes, "unknown node");
+        assert!(g.is_finite() && g >= 0.0, "conductance must be >= 0, got {g}");
+        if g > 0.0 && a != b {
+            self.conductances.push(Conductance { a, b, g });
+        }
+    }
+
+    /// Add a resistor by resistance value (ohms).
+    pub fn resistor(&mut self, a: NodeId, b: NodeId, r: f64) {
+        assert!(r > 0.0, "resistance must be positive, got {r}");
+        self.conductance(a, b, 1.0 / r);
+    }
+
+    /// Add an independent current source (`i` amps flowing `from` → `to`).
+    pub fn current_source(&mut self, from: NodeId, to: NodeId, i: f64) {
+        assert!(from < self.n_nodes && to < self.n_nodes);
+        self.isources.push(CurrentSource { from, to, i });
+    }
+
+    /// Add an independent voltage source `v(pos) − v(neg) = v`. Returns the
+    /// source index (its branch current appears in the solution).
+    pub fn voltage_source(&mut self, pos: NodeId, neg: NodeId, v: f64) -> usize {
+        assert!(pos < self.n_nodes && neg < self.n_nodes);
+        self.vsources.push(VoltageSource { pos, neg, v });
+        self.vsources.len() - 1
+    }
+
+    /// A copy of this netlist with all independent sources zeroed (voltage
+    /// sources → shorts via 0 V, current sources → removed). Used for
+    /// Thevenin resistance extraction.
+    pub fn dead_network(&self) -> Netlist {
+        let mut out = self.clone();
+        out.isources.clear();
+        for vs in &mut out.vsources {
+            vs.v = 0.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_allocation_monotone() {
+        let mut n = Netlist::new();
+        let a = n.node();
+        let b = n.node();
+        assert_eq!((a, b), (1, 2));
+        assert_eq!(n.n_nodes(), 3);
+    }
+
+    #[test]
+    fn zero_conductance_dropped() {
+        let mut n = Netlist::new();
+        let a = n.node();
+        n.conductance(GROUND, a, 0.0);
+        assert!(n.conductances.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 0")]
+    fn negative_conductance_rejected() {
+        let mut n = Netlist::new();
+        let a = n.node();
+        n.conductance(GROUND, a, -1.0);
+    }
+
+    #[test]
+    fn labels_resolve() {
+        let mut n = Netlist::new();
+        let a = n.labelled_node("driver");
+        assert_eq!(n.find("driver"), Some(a));
+        assert_eq!(n.find("nope"), None);
+    }
+
+    #[test]
+    fn dead_network_zeroes_sources() {
+        let mut n = Netlist::new();
+        let a = n.node();
+        n.voltage_source(a, GROUND, 5.0);
+        n.current_source(GROUND, a, 1e-3);
+        let dead = n.dead_network();
+        assert!(dead.isources.is_empty());
+        assert_eq!(dead.vsources[0].v, 0.0);
+    }
+}

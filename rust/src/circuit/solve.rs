@@ -1,0 +1,231 @@
+//! Modified nodal analysis: stamp the netlist into an MNA system and solve.
+//!
+//! Unknowns: node voltages 1..n−1 (ground eliminated) followed by the branch
+//! currents of voltage sources. The conductance part is symmetric positive
+//! (semi-)definite; voltage sources add the usual ±1 border rows.
+
+use super::matrix::{BandedMatrix, Matrix};
+use super::netlist::{Netlist, NodeId, GROUND};
+
+/// Solved operating point of a netlist.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Node voltages (index = NodeId; `v[GROUND] == 0`).
+    pub v: Vec<f64>,
+    /// Branch current through each voltage source (positive = flowing out
+    /// of the `pos` terminal through the external circuit).
+    pub vsource_i: Vec<f64>,
+}
+
+impl Solution {
+    /// Voltage difference `v(a) − v(b)`.
+    pub fn vdiff(&self, a: NodeId, b: NodeId) -> f64 {
+        self.v[a] - self.v[b]
+    }
+
+    /// Current through a conductance `g` placed between `a` and `b`,
+    /// flowing a → b.
+    pub fn branch_current(&self, a: NodeId, b: NodeId, g: f64) -> f64 {
+        self.vdiff(a, b) * g
+    }
+}
+
+impl Netlist {
+    /// Solve the network with a dense LU factorization.
+    pub fn solve(&self) -> crate::Result<Solution> {
+        let n = self.n_nodes() - 1; // ground eliminated
+        let m = self.n_vsources();
+        let dim = n + m;
+        anyhow::ensure!(dim > 0, "nothing to solve");
+        let mut a = Matrix::zeros(dim);
+        let mut b = vec![0.0; dim];
+        self.stamp(
+            |r, c, v| a.add(r, c, v),
+            |r, v| b[r] += v,
+        );
+        let x = a.solve(&b)?;
+        Ok(self.unpack(&x))
+    }
+
+    /// Solve using the banded fast path. Correct whenever the MNA matrix's
+    /// bandwidth under natural ordering is ≤ `half_bandwidth`; the crosspoint
+    /// ladder builders guarantee this by allocating nodes row-major.
+    pub fn solve_banded(&self, half_bandwidth: usize) -> crate::Result<Solution> {
+        let n = self.n_nodes() - 1;
+        let m = self.n_vsources();
+        let dim = n + m;
+        anyhow::ensure!(dim > 0, "nothing to solve");
+        let mut a = BandedMatrix::zeros(dim, half_bandwidth);
+        let mut b = vec![0.0; dim];
+        self.stamp(
+            |r, c, v| a.add(r, c, v),
+            |r, v| b[r] += v,
+        );
+        let x = a.solve(&b)?;
+        Ok(self.unpack(&x))
+    }
+
+    /// Stamp MNA entries through callbacks (shared by dense/banded paths).
+    fn stamp(&self, mut mat: impl FnMut(usize, usize, f64), mut rhs: impl FnMut(usize, f64)) {
+        let n = self.n_nodes() - 1;
+        let idx = |node: NodeId| -> Option<usize> {
+            if node == GROUND {
+                None
+            } else {
+                Some(node - 1)
+            }
+        };
+        for c in &self.conductances {
+            let (ia, ib) = (idx(c.a), idx(c.b));
+            if let Some(i) = ia {
+                mat(i, i, c.g);
+            }
+            if let Some(j) = ib {
+                mat(j, j, c.g);
+            }
+            if let (Some(i), Some(j)) = (ia, ib) {
+                mat(i, j, -c.g);
+                mat(j, i, -c.g);
+            }
+        }
+        for s in &self.isources {
+            if let Some(i) = idx(s.from) {
+                rhs(i, -s.i);
+            }
+            if let Some(j) = idx(s.to) {
+                rhs(j, s.i);
+            }
+        }
+        for (k, vs) in self.vsources.iter().enumerate() {
+            let row = n + k;
+            if let Some(i) = idx(vs.pos) {
+                mat(i, row, 1.0);
+                mat(row, i, 1.0);
+            }
+            if let Some(j) = idx(vs.neg) {
+                mat(j, row, -1.0);
+                mat(row, j, -1.0);
+            }
+            rhs(row, vs.v);
+        }
+    }
+
+    fn unpack(&self, x: &[f64]) -> Solution {
+        let n = self.n_nodes() - 1;
+        let mut v = vec![0.0; self.n_nodes()];
+        v[1..].copy_from_slice(&x[..n]);
+        // MNA convention: the extra unknown is the current flowing INTO the
+        // pos terminal from the source; negate so positive = source driving
+        // current out of pos into the external circuit.
+        let vsource_i = x[n..].iter().map(|&i| -i).collect();
+        Solution { v, vsource_i }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Voltage divider: 1 V across two equal 1 kΩ resistors.
+    #[test]
+    fn voltage_divider() {
+        let mut nl = Netlist::new();
+        let top = nl.node();
+        let mid = nl.node();
+        nl.voltage_source(top, GROUND, 1.0);
+        nl.resistor(top, mid, 1e3);
+        nl.resistor(mid, GROUND, 1e3);
+        let sol = nl.solve().unwrap();
+        assert!((sol.v[mid] - 0.5).abs() < 1e-12);
+        // source current = 1 V / 2 kΩ = 0.5 mA
+        assert!((sol.vsource_i[0] - 0.5e-3).abs() < 1e-12);
+    }
+
+    /// Current source into parallel resistors.
+    #[test]
+    fn current_into_parallel() {
+        let mut nl = Netlist::new();
+        let a = nl.node();
+        nl.current_source(GROUND, a, 2e-3);
+        nl.resistor(a, GROUND, 1e3);
+        nl.resistor(a, GROUND, 1e3);
+        let sol = nl.solve().unwrap();
+        assert!((sol.v[a] - 1.0).abs() < 1e-12); // 2mA * 500Ω
+    }
+
+    /// Wheatstone bridge balance: zero volts across the detector.
+    #[test]
+    fn wheatstone_balanced() {
+        let mut nl = Netlist::new();
+        let top = nl.node();
+        let l = nl.node();
+        let r = nl.node();
+        nl.voltage_source(top, GROUND, 1.0);
+        nl.resistor(top, l, 1e3);
+        nl.resistor(l, GROUND, 2e3);
+        nl.resistor(top, r, 2e3);
+        nl.resistor(r, GROUND, 4e3);
+        nl.resistor(l, r, 5e3); // detector
+        let sol = nl.solve().unwrap();
+        assert!(sol.vdiff(l, r).abs() < 1e-12, "balanced bridge");
+    }
+
+    /// KCL at every internal node of a random ladder.
+    #[test]
+    fn kcl_holds() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(4);
+        let mut nl = Netlist::new();
+        let mut prev = GROUND;
+        let mut nodes = vec![];
+        for _ in 0..20 {
+            let n = nl.node();
+            nl.resistor(prev, n, rng.range_f64(10.0, 1e4));
+            nl.resistor(n, GROUND, rng.range_f64(1e3, 1e6));
+            nodes.push(n);
+            prev = n;
+        }
+        let drive = nodes[0];
+        nl.voltage_source(drive, GROUND, 1.0);
+        let sol = nl.solve().unwrap();
+        for &n in &nodes[1..] {
+            let mut sum = 0.0;
+            for c in &nl.conductances {
+                if c.a == n {
+                    sum -= sol.branch_current(c.a, c.b, c.g);
+                } else if c.b == n {
+                    sum += sol.branch_current(c.a, c.b, c.g);
+                }
+            }
+            assert!(sum.abs() < 1e-12, "KCL violated at node {n}: {sum}");
+        }
+    }
+
+    #[test]
+    fn banded_agrees_with_dense_on_ladder() {
+        let mut nl = Netlist::new();
+        let mut prev = GROUND;
+        for i in 0..50 {
+            let n = nl.node();
+            nl.resistor(prev, n, 100.0 + i as f64);
+            nl.resistor(n, GROUND, 1e4);
+            prev = n;
+        }
+        nl.current_source(GROUND, 1, 1e-3);
+        let dense = nl.solve().unwrap();
+        let banded = nl.solve_banded(2).unwrap();
+        for (a, b) in dense.v.iter().zip(banded.v.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn floating_node_is_singular() {
+        let mut nl = Netlist::new();
+        let a = nl.node();
+        let _floating = nl.node();
+        nl.resistor(a, GROUND, 1e3);
+        nl.current_source(GROUND, a, 1e-3);
+        assert!(nl.solve().is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Numeric Thevenin extraction from a solved netlist — the ground truth the
+//! paper's analytic recursion (Appendix A) is validated against.
+
+use super::netlist::{Netlist, NodeId};
+
+/// Thevenin equivalent seen between two terminals.
+#[derive(Clone, Copy, Debug)]
+pub struct TheveninEquivalent {
+    /// Open-circuit voltage `v(a) − v(b)` \[V\].
+    pub v_th: f64,
+    /// Equivalent source resistance \[Ω\].
+    pub r_th: f64,
+}
+
+impl TheveninEquivalent {
+    /// Current delivered into an external load conductance `g_load`.
+    pub fn load_current(&self, g_load: f64) -> f64 {
+        self.v_th / (self.r_th + 1.0 / g_load)
+    }
+
+    /// Attenuation coefficient α = V_th / V_src (paper §V).
+    pub fn alpha(&self, v_src: f64) -> f64 {
+        self.v_th / v_src
+    }
+}
+
+impl Netlist {
+    /// Extract the Thevenin equivalent seen from terminals `(a, b)`.
+    ///
+    /// `v_th` is the open-circuit voltage of the live network; `r_th` is
+    /// measured on the dead network (independent sources zeroed) by
+    /// injecting a 1 A test current and reading the terminal voltage.
+    pub fn thevenin(&self, a: NodeId, b: NodeId) -> crate::Result<TheveninEquivalent> {
+        let open = self.solve()?;
+        let v_th = open.vdiff(a, b);
+        let mut dead = self.dead_network();
+        dead.current_source(b, a, 1.0);
+        let probe = dead.solve()?;
+        let r_th = probe.vdiff(a, b); // V/1A
+        Ok(TheveninEquivalent { v_th, r_th })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::GROUND;
+
+    /// Textbook: 10 V source, 6 Ω series, 3 Ω shunt; Thevenin at the shunt
+    /// node = (10·3/9 V, 2 Ω).
+    #[test]
+    fn textbook_divider() {
+        let mut nl = Netlist::new();
+        let top = nl.node();
+        let out = nl.node();
+        nl.voltage_source(top, GROUND, 10.0);
+        nl.resistor(top, out, 6.0);
+        nl.resistor(out, GROUND, 3.0);
+        let th = nl.thevenin(out, GROUND).unwrap();
+        assert!((th.v_th - 10.0 / 3.0).abs() < 1e-9, "v_th = {}", th.v_th);
+        assert!((th.r_th - 2.0).abs() < 1e-9, "r_th = {}", th.r_th);
+    }
+
+    /// Loading the Thevenin equivalent must reproduce the full-circuit
+    /// current for any load.
+    #[test]
+    fn load_current_matches_full_solve() {
+        let mut nl = Netlist::new();
+        let top = nl.node();
+        let out = nl.node();
+        nl.voltage_source(top, GROUND, 2.0);
+        nl.resistor(top, out, 50.0);
+        nl.resistor(out, GROUND, 200.0);
+        let th = nl.thevenin(out, GROUND).unwrap();
+        for r_load in [10.0, 100.0, 1e4] {
+            let mut loaded = nl.clone();
+            loaded.resistor(out, GROUND, r_load);
+            let sol = loaded.solve().unwrap();
+            let i_full = sol.v[out] / r_load;
+            let i_th = th.load_current(1.0 / r_load);
+            assert!(
+                (i_full - i_th).abs() < 1e-12,
+                "r_load={r_load}: {i_full} vs {i_th}"
+            );
+        }
+    }
+
+    /// A current source behind a resistor: Norton → Thevenin conversion.
+    #[test]
+    fn norton_to_thevenin() {
+        let mut nl = Netlist::new();
+        let a = nl.node();
+        nl.current_source(GROUND, a, 1e-3);
+        nl.resistor(a, GROUND, 1e3);
+        let th = nl.thevenin(a, GROUND).unwrap();
+        assert!((th.v_th - 1.0).abs() < 1e-12);
+        assert!((th.r_th - 1e3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_is_vth_over_vsrc() {
+        let th = TheveninEquivalent { v_th: 0.8, r_th: 10.0 };
+        assert!((th.alpha(1.0) - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (offline build: no `clap`).
+
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand, positional args, `--key value` options
+/// and `--flag` booleans.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                match iter.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        // note: a bare flag followed by a non-dashed token would swallow it
+        // as a value — flags go last or before another `--` option
+        let a = parse("nm extra --rows 1024 --config 3 --verbose");
+        assert_eq!(a.command.as_deref(), Some("nm"));
+        assert_eq!(a.get("rows"), Some("1024"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 1024);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("nm");
+        assert_eq!(a.get_usize("rows", 64).unwrap(), 64);
+        assert_eq!(a.get_or("config", "1"), "1");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("nm --rows abc");
+        assert!(a.get_usize("rows", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("serve --demo");
+        assert!(a.has_flag("demo"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Pluggable inference backends for the coordinator: the circuit-level
+//! subarray simulator (request path) and the AOT-compiled XLA golden model
+//! (functional verification / fast path).
+
+use crate::analysis::ArrayDesign;
+use crate::array::{Subarray, TmvmMode};
+use crate::nn::BinaryLayer;
+use crate::runtime::{Executable, Runtime, TensorF32};
+
+/// Output of a batched inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    /// Hardware thresholded bits, `[image][neuron]`.
+    pub bits: Vec<Vec<bool>>,
+    /// Functional class prediction per image (count-space argmax, realized
+    /// on hardware by a θ-sweep of `V_DD`).
+    pub classes: Vec<usize>,
+    /// Simulated array busy time for the batch \[s\] (0 for XLA).
+    pub sim_time: f64,
+    /// Simulated energy for the batch \[J\] (0 for XLA).
+    pub energy: f64,
+    /// Computational steps consumed.
+    pub steps: u64,
+}
+
+/// A batched binary-NN inference backend.
+///
+/// Not `Send`: PJRT handles are thread-affine, so the coordinator
+/// constructs each backend *inside* its worker thread via a
+/// [`BackendFactory`].
+pub trait Backend {
+    /// Infer a batch of images (each `n_in` bits).
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult>;
+    /// Largest batch the backend can take at once.
+    fn max_batch(&self) -> usize;
+}
+
+/// Constructs a backend on the worker thread that will own it.
+pub type BackendFactory =
+    Box<dyn FnOnce() -> crate::Result<Box<dyn Backend>> + Send + 'static>;
+
+// ------------------------------------------------------------- simulator
+
+/// Circuit-level backend: one subarray running the single-layer network.
+pub struct SimBackend {
+    layer: BinaryLayer,
+    subarray: Subarray,
+    mode: TmvmMode,
+}
+
+impl SimBackend {
+    pub fn new(layer: BinaryLayer, design: ArrayDesign, mode: TmvmMode) -> Self {
+        assert!(layer.n_in() <= design.n_col && layer.n_out() <= design.n_col);
+        Self {
+            layer,
+            subarray: Subarray::new(design),
+            mode,
+        }
+    }
+
+    pub fn layer(&self) -> &BinaryLayer {
+        &self.layer
+    }
+}
+
+impl Backend for SimBackend {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        let run = self.layer.run_batch(&mut self.subarray, images, self.mode);
+        let classes = images.iter().map(|img| self.layer.argmax(img)).collect();
+        // Table II accounting: compute (TMVM step) energy only — image
+        // programming is the array's storage role, shared with memory use.
+        let compute_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        Ok(InferenceResult {
+            bits: run.outputs,
+            classes,
+            sim_time: run.time,
+            energy: compute_energy,
+            steps: self.layer.n_out() as u64,
+        })
+    }
+
+    fn max_batch(&self) -> usize {
+        self.subarray.n_row()
+    }
+}
+
+// ------------------------------------------------------------------ XLA
+
+/// XLA golden-model backend: executes the AOT-lowered JAX graph (which
+/// itself wraps the Pallas kernel) on the PJRT CPU client.
+pub struct XlaBackend {
+    exe: Executable,
+    weights: TensorF32, // (n_in, n_out), column-major classes
+    layer: BinaryLayer, // for functional argmax + shapes
+    batch: usize,
+    v_dd: f32,
+}
+
+impl XlaBackend {
+    /// Load from the artifact store outputs.
+    pub fn new(
+        runtime: &Runtime,
+        hlo_path: &std::path::Path,
+        layer: BinaryLayer,
+        batch: usize,
+        v_dd: f64,
+    ) -> crate::Result<Self> {
+        let exe = runtime.load_hlo_text(hlo_path)?;
+        // rust layout [out][in] -> graph layout (n_in, n_out)
+        let n_in = layer.n_in();
+        let n_out = layer.n_out();
+        let mut w = vec![0.0f32; n_in * n_out];
+        for (o, row) in layer.weights.iter().enumerate() {
+            for (i, &bit) in row.iter().enumerate() {
+                w[i * n_out + o] = bit as u8 as f32;
+            }
+        }
+        Ok(Self {
+            exe,
+            weights: TensorF32::new(vec![n_in, n_out], w),
+            layer,
+            batch,
+            v_dd: v_dd as f32,
+        })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        anyhow::ensure!(images.len() <= self.batch, "batch too large for graph");
+        let n_in = self.layer.n_in();
+        // zero-pad the batch to the graph's fixed shape
+        let mut x = vec![0.0f32; self.batch * n_in];
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(img.len() == n_in, "image {i} size");
+            for (j, &b) in img.iter().enumerate() {
+                x[i * n_in + j] = b as u8 as f32;
+            }
+        }
+        let alpha = TensorF32::new(vec![self.batch, 1], vec![1.0; self.batch]);
+        let r_th = TensorF32::new(vec![self.batch, 1], vec![0.0; self.batch]);
+        let out = self.exe.run(&[
+            TensorF32::new(vec![self.batch, n_in], x),
+            self.weights.clone(),
+            alpha,
+            r_th,
+            TensorF32::scalar(self.v_dd),
+        ])?;
+        let bits_t = &out[0];
+        let n_out = self.layer.n_out();
+        let bits = (0..images.len())
+            .map(|i| {
+                (0..n_out)
+                    .map(|o| bits_t.data[i * n_out + o] >= 0.5)
+                    .collect()
+            })
+            .collect();
+        let classes = images.iter().map(|img| self.layer.argmax(img)).collect();
+        Ok(InferenceResult {
+            bits,
+            classes,
+            sim_time: 0.0,
+            energy: 0.0,
+            steps: n_out as u64,
+        })
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn sim_backend_matches_functional_layer() {
+        let mut rng = Pcg32::seeded(77);
+        let layer = BinaryLayer::new(
+            (0..10)
+                .map(|_| (0..20).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            4,
+        );
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let mut be = SimBackend::new(layer.clone(), design, TmvmMode::Ideal);
+        let images: Vec<Vec<bool>> = (0..8)
+            .map(|_| (0..20).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let res = be.infer_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(res.bits[i], layer.forward(img));
+            assert_eq!(res.classes[i], layer.argmax(img));
+        }
+        assert!(res.energy > 0.0 && res.sim_time > 0.0);
+        assert_eq!(res.steps, 10);
+        assert_eq!(be.max_batch(), 32);
+    }
+}

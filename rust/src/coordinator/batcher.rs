@@ -1,0 +1,114 @@
+//! Dynamic batching: group incoming requests into subarray-sized batches.
+//!
+//! A batch holds up to `M = N_row` images (the subarray processes the whole
+//! batch in `P` steps — `⌊N_row/P⌋` images per step in the paper's
+//! accounting). The batcher drains greedily: a full batch ships
+//! immediately; a partial batch ships when `linger` expires, trading
+//! latency for step efficiency exactly like a serving-system batcher.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued inference request.
+#[derive(Clone, Debug)]
+pub struct Request<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Greedy size+deadline batcher.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Request<T>>,
+    capacity: usize,
+    linger: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(capacity: usize, linger: Duration) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            queue: VecDeque::new(),
+            capacity,
+            linger,
+        }
+    }
+
+    pub fn push(&mut self, id: u64, payload: T) {
+        self.queue.push_back(Request {
+            id,
+            payload,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Take the next batch if ready: either a full batch, or whatever is
+    /// queued once the oldest request has lingered past the deadline.
+    pub fn take_batch(&mut self, now: Instant) -> Option<Vec<Request<T>>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now.duration_since(self.queue[0].enqueued);
+        if self.queue.len() >= self.capacity || oldest_wait >= self.linger {
+            let n = self.queue.len().min(self.capacity);
+            return Some(self.queue.drain(..n).collect());
+        }
+        None
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Request<T>> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batch_ships_immediately() {
+        let mut b = Batcher::new(3, Duration::from_secs(60));
+        for i in 0..5 {
+            b.push(i, i);
+        }
+        let batch = b.take_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_linger() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        b.push(1, ());
+        assert!(b.take_batch(Instant::now()).is_none(), "must linger");
+        let later = Instant::now() + Duration::from_millis(6);
+        let batch = b.take_batch(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut b: Batcher<()> = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.take_batch(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(4, Duration::from_secs(1));
+        b.push(1, 'a');
+        b.push(2, 'b');
+        assert_eq!(b.drain_all().len(), 2);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,307 @@
+//! The coordinator engine: a leader thread batches incoming requests and
+//! dispatches them to worker threads, each owning one inference backend
+//! (= one simulated subarray). std-thread based — the build is offline and
+//! the workload is CPU-bound simulation, so a thread-per-worker design
+//! outperforms an async reactor here.
+
+use super::backend::BackendFactory;
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsSnapshot};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Max images per batch (≤ backend max batch).
+    pub batch_capacity: usize,
+    /// How long a partial batch may wait before shipping.
+    pub linger: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            batch_capacity: 64,
+            linger: Duration::from_micros(200),
+        }
+    }
+}
+
+/// A classification response.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub id: u64,
+    /// Hardware thresholded output bits.
+    pub bits: Vec<bool>,
+    /// Functional class prediction.
+    pub class: usize,
+}
+
+struct Job {
+    id: u64,
+    image: Vec<bool>,
+    label: Option<usize>,
+    reply: mpsc::Sender<Prediction>,
+}
+
+enum Message {
+    Job(Job),
+    Shutdown,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Message>,
+    leader: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: u64,
+}
+
+impl Coordinator {
+    /// Spawn the leader and one worker per backend factory. Each factory
+    /// runs on its worker thread (PJRT handles are thread-affine).
+    pub fn spawn(backends: Vec<BackendFactory>, config: CoordinatorConfig) -> Self {
+        assert!(!backends.is_empty());
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Message>();
+
+        // worker channels
+        let mut worker_txs = Vec::new();
+        let mut worker_handles = Vec::new();
+        for (wid, factory) in backends.into_iter().enumerate() {
+            let (wtx, wrx) = mpsc::channel::<Vec<Job>>();
+            let m = Arc::clone(&metrics);
+            worker_txs.push(wtx);
+            worker_handles.push(std::thread::spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("worker {wid}: backend construction failed: {e:#}");
+                        return;
+                    }
+                };
+                while let Ok(jobs) = wrx.recv() {
+                    let started = Instant::now();
+                    let images: Vec<Vec<bool>> =
+                        jobs.iter().map(|j| j.image.clone()).collect();
+                    match backend.infer_batch(&images) {
+                        Ok(res) => {
+                            let latency =
+                                started.elapsed().as_secs_f64() / jobs.len() as f64;
+                            let mut correct = 0u64;
+                            let mut labelled = 0u64;
+                            for (j, job) in jobs.iter().enumerate() {
+                                if let Some(label) = job.label {
+                                    labelled += 1;
+                                    if res.classes[j] == label {
+                                        correct += 1;
+                                    }
+                                }
+                                let _ = job.reply.send(Prediction {
+                                    id: job.id,
+                                    bits: res.bits[j].clone(),
+                                    class: res.classes[j],
+                                });
+                            }
+                            m.record_batch(
+                                jobs.len() as u64,
+                                res.steps,
+                                latency,
+                                res.sim_time,
+                                res.energy,
+                                correct,
+                                labelled,
+                            );
+                        }
+                        Err(e) => {
+                            eprintln!("worker {wid}: batch failed: {e:#}");
+                        }
+                    }
+                }
+            }));
+        }
+
+        // leader: batch + round-robin dispatch
+        let cfg = config.clone();
+        let leader = std::thread::spawn(move || {
+            let mut batcher: Batcher<Job> = Batcher::new(cfg.batch_capacity, cfg.linger);
+            let mut next_worker = 0usize;
+            let dispatch = |batch: Vec<super::batcher::Request<Job>>,
+                                next_worker: &mut usize| {
+                let jobs: Vec<Job> = batch.into_iter().map(|r| r.payload).collect();
+                let _ = worker_txs[*next_worker % worker_txs.len()].send(jobs);
+                *next_worker += 1;
+            };
+            loop {
+                // wait for work, but wake up to honour the linger deadline
+                match rx.recv_timeout(cfg.linger.max(Duration::from_micros(50))) {
+                    Ok(Message::Job(job)) => {
+                        let id = job.id;
+                        batcher.push(id, job);
+                    }
+                    Ok(Message::Shutdown) => break,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                while let Some(batch) = batcher.take_batch(Instant::now()) {
+                    dispatch(batch, &mut next_worker);
+                }
+            }
+            // drain on shutdown
+            let rest = batcher.drain_all();
+            if !rest.is_empty() {
+                dispatch(rest, &mut next_worker);
+            }
+            drop(worker_txs);
+            for h in worker_handles {
+                let _ = h.join();
+            }
+        });
+
+        Self {
+            tx,
+            leader: Some(leader),
+            metrics,
+            next_id: 0,
+        }
+    }
+
+    /// Submit an image; returns a receiver for the prediction.
+    pub fn submit(
+        &mut self,
+        image: Vec<bool>,
+        label: Option<usize>,
+    ) -> mpsc::Receiver<Prediction> {
+        let (reply, rx) = mpsc::channel();
+        self.next_id += 1;
+        let job = Job {
+            id: self.next_id,
+            image,
+            label,
+            reply,
+        };
+        self.tx.send(Message::Job(job)).expect("coordinator down");
+        rx
+    }
+
+    /// Graceful shutdown: flush queues, join workers, return final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ArrayDesign;
+    use crate::array::TmvmMode;
+    use crate::coordinator::backend::SimBackend;
+    use crate::interconnect::LineConfig;
+    use crate::nn::BinaryLayer;
+    use crate::util::Pcg32;
+
+    fn make_backend(seed: u64) -> (BinaryLayer, BackendFactory) {
+        let mut rng = Pcg32::seeded(seed);
+        let layer = BinaryLayer::new(
+            (0..10)
+                .map(|_| (0..25).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            4,
+        );
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let l = layer.clone();
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(SimBackend::new(l, design, TmvmMode::Ideal)) as Box<dyn super::super::Backend>)
+        });
+        (layer, factory)
+    }
+
+    #[test]
+    fn coordinator_roundtrip_matches_functional() {
+        let (layer, be) = make_backend(5);
+        let mut coord = Coordinator::spawn(
+            vec![be],
+            CoordinatorConfig {
+                batch_capacity: 8,
+                linger: Duration::from_micros(100),
+            },
+        );
+        let mut rng = Pcg32::seeded(9);
+        let images: Vec<Vec<bool>> = (0..40)
+            .map(|_| (0..25).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let receivers: Vec<_> = images
+            .iter()
+            .map(|img| coord.submit(img.clone(), None))
+            .collect();
+        for (img, rx) in images.iter().zip(receivers) {
+            let pred = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+            assert_eq!(pred.bits, layer.forward(img));
+            assert_eq!(pred.class, layer.argmax(img));
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.images, 40);
+        assert!(snap.energy > 0.0);
+        assert!(snap.batches >= 5, "batched into ≥5 batches of ≤8");
+    }
+
+    #[test]
+    fn multiple_workers_share_load() {
+        let (_, b1) = make_backend(5);
+        let (_, b2) = make_backend(5);
+        let mut coord = Coordinator::spawn(
+            vec![b1, b2],
+            CoordinatorConfig {
+                batch_capacity: 4,
+                linger: Duration::from_micros(50),
+            },
+        );
+        let mut rng = Pcg32::seeded(10);
+        let rxs: Vec<_> = (0..32)
+            .map(|_| {
+                let img: Vec<bool> = (0..25).map(|_| rng.bernoulli(0.5)).collect();
+                coord.submit(img, Some(3))
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.images, 32);
+        assert!(snap.accuracy.is_some());
+    }
+
+    #[test]
+    fn shutdown_flushes_partial_batches() {
+        let (_, be) = make_backend(6);
+        let mut coord = Coordinator::spawn(
+            vec![be],
+            CoordinatorConfig {
+                batch_capacity: 1000,
+                linger: Duration::from_secs(60), // never ships on its own
+            },
+        );
+        let mut rng = Pcg32::seeded(11);
+        let img: Vec<bool> = (0..25).map(|_| rng.bernoulli(0.5)).collect();
+        let rx = coord.submit(img, None);
+        let snap = coord.shutdown();
+        assert_eq!(snap.images, 1);
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+    }
+}

@@ -1,0 +1,120 @@
+//! Lock-cheap metrics aggregation for the coordinator.
+
+use crate::util::stats::Welford;
+use std::sync::Mutex;
+
+/// Shared metrics sink (one per coordinator; workers push batch results).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency: Welford,       // per-image host latency [s]
+    sim_time: f64,          // accumulated simulated array time [s]
+    energy: f64,            // accumulated simulated energy [J]
+    images: u64,
+    batches: u64,
+    steps: u64,
+    correct: u64,
+    labelled: u64,
+}
+
+/// A point-in-time copy of the aggregated metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub images: u64,
+    pub batches: u64,
+    pub steps: u64,
+    pub mean_latency: f64,
+    pub max_latency: f64,
+    pub sim_time: f64,
+    pub energy: f64,
+    /// Energy per image [J].
+    pub energy_per_image: f64,
+    /// Functional accuracy over labelled requests (if any).
+    pub accuracy: Option<f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        images: u64,
+        steps: u64,
+        per_image_latency: f64,
+        sim_time: f64,
+        energy: f64,
+        correct: u64,
+        labelled: u64,
+    ) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        for _ in 0..images {
+            m.latency.push(per_image_latency);
+        }
+        m.sim_time += sim_time;
+        m.energy += energy;
+        m.images += images;
+        m.batches += 1;
+        m.steps += steps;
+        m.correct += correct;
+        m.labelled += labelled;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().expect("metrics poisoned");
+        MetricsSnapshot {
+            images: m.images,
+            batches: m.batches,
+            steps: m.steps,
+            mean_latency: m.latency.mean(),
+            max_latency: if m.images > 0 { m.latency.max() } else { 0.0 },
+            sim_time: m.sim_time,
+            energy: m.energy,
+            energy_per_image: if m.images > 0 {
+                m.energy / m.images as f64
+            } else {
+                0.0
+            },
+            accuracy: if m.labelled > 0 {
+                Some(m.correct as f64 / m.labelled as f64)
+            } else {
+                None
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(10, 10, 1e-3, 800e-9, 215e-12, 9, 10);
+        m.record_batch(6, 10, 2e-3, 800e-9, 130e-12, 6, 6);
+        let s = m.snapshot();
+        assert_eq!(s.images, 16);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.steps, 20);
+        assert!((s.energy - 345e-12).abs() < 1e-18);
+        assert!((s.energy_per_image - 345e-12 / 16.0).abs() < 1e-18);
+        assert!((s.accuracy.unwrap() - 15.0 / 16.0).abs() < 1e-12);
+        assert!(s.mean_latency > 1e-3 && s.mean_latency < 2e-3);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.images, 0);
+        assert_eq!(s.energy_per_image, 0.0);
+        assert!(s.accuracy.is_none());
+    }
+}

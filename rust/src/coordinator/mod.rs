@@ -1,0 +1,18 @@
+//! L3 coordinator: the serving shell around the simulated accelerator —
+//! request batching, subarray scheduling, worker threads and metrics.
+//!
+//! The paper's contribution is the in-memory compute substrate itself, so
+//! the coordinator is deliberately thin: it owns process topology and the
+//! batching policy (`⌊N_row/P⌋` images per computational step, Table II)
+//! and treats the inference backend as pluggable — either the circuit-level
+//! rust simulator or the AOT-compiled XLA golden model.
+
+pub mod backend;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+
+pub use backend::{Backend, BackendFactory, InferenceResult, SimBackend, XlaBackend};
+pub use batcher::Batcher;
+pub use engine::{Coordinator, CoordinatorConfig, Prediction};
+pub use metrics::{Metrics, MetricsSnapshot};

@@ -1,0 +1,112 @@
+//! Composite crosspoint cell: PCM storage element in series with an OTS
+//! selector (paper Fig. 2(b)).
+
+use super::ots::Ots;
+use super::params::DeviceParams;
+use super::pcm::PcmCell;
+
+/// One crosspoint: PCM + OTS in series between a word line and a bit line.
+#[derive(Clone, Debug, Default)]
+pub struct XPointCell {
+    pub pcm: PcmCell,
+    pub ots: Ots,
+}
+
+impl XPointCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_bit(bit: bool) -> Self {
+        Self {
+            pcm: PcmCell::with_bit(bit),
+            ots: Ots,
+        }
+    }
+
+    /// Series conductance of the selected (OTS on) cell at small signal.
+    ///
+    /// With `G_on = 10 S`, the OTS contributes ~0.1 Ω — negligible against
+    /// the PCM's kΩ–MΩ, so the selected-cell conductance is effectively the
+    /// PCM conductance (this is why the paper's Eq. 3 uses `G_{i,j}`
+    /// directly).
+    pub fn selected_conductance(&self, p: &DeviceParams) -> f64 {
+        series(self.pcm.conductance(p), p.ots_g_on)
+    }
+
+    /// Series conductance of an unselected (OTS off) cell — the sneak-path
+    /// leak.
+    pub fn unselected_conductance(&self, p: &DeviceParams) -> f64 {
+        series(self.pcm.conductance(p), p.ots_g_off)
+    }
+
+    /// Effective conductance at a given bias across the whole cell.
+    pub fn conductance_at(&self, p: &DeviceParams, v_across: f64) -> f64 {
+        // Voltage divides across OTS and PCM; approximate the OTS decision
+        // with the full cell bias (the OTS takes nearly all of it when OFF).
+        let g_ots = self.ots.conductance(p, v_across);
+        series(self.pcm.dynamic_conductance(p, v_across), g_ots)
+    }
+
+    /// Stored logic bit.
+    pub fn bit(&self) -> bool {
+        self.pcm.bit()
+    }
+
+    /// Ideal write.
+    pub fn write_bit(&mut self, bit: bool) {
+        self.pcm.write_bit(bit);
+    }
+}
+
+/// Series combination of two conductances.
+pub fn series(g1: f64, g2: f64) -> f64 {
+    if g1 == 0.0 || g2 == 0.0 {
+        0.0
+    } else {
+        g1 * g2 / (g1 + g2)
+    }
+}
+
+/// Parallel combination of two conductances.
+pub fn parallel(g1: f64, g2: f64) -> f64 {
+    g1 + g2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_cell_is_pcm_dominated() {
+        let p = DeviceParams::default();
+        let c = XPointCell::with_bit(true);
+        let g = c.selected_conductance(&p);
+        assert!((g - p.g_c).abs() / p.g_c < 1e-4, "OTS-on ~ transparent");
+    }
+
+    #[test]
+    fn unselected_cell_is_ots_dominated() {
+        let p = DeviceParams::default();
+        let c = XPointCell::with_bit(true);
+        let g = c.unselected_conductance(&p);
+        assert!((g - p.ots_g_off).abs() / p.ots_g_off < 1e-2);
+        assert!(g < 1e-3 * c.selected_conductance(&p));
+    }
+
+    #[test]
+    fn series_parallel_identities() {
+        assert_eq!(series(0.0, 5.0), 0.0);
+        assert!((series(2.0, 2.0) - 1.0).abs() < 1e-12);
+        assert!((parallel(2.0, 3.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_gates_conduction() {
+        let p = DeviceParams::default();
+        let c = XPointCell::with_bit(true);
+        let g_off = c.conductance_at(&p, 0.1);
+        let g_on = c.conductance_at(&p, 0.5);
+        assert!(g_on / g_off > 1e3, "selector gating");
+    }
+}

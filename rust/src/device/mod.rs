@@ -1,0 +1,15 @@
+//! Compact device models for the 3D XPoint stack (paper §II, Fig. 2,
+//! supplementary Table IV): phase-change memory (PCM) storage elements and
+//! ovonic threshold switch (OTS) selectors.
+
+pub mod params;
+pub mod pcm;
+pub mod ots;
+pub mod pulse;
+pub mod cell;
+
+pub use cell::XPointCell;
+pub use ots::Ots;
+pub use params::{DeviceParams, PCM_LOGIC0, PCM_LOGIC1};
+pub use pcm::{PcmCell, PcmState};
+pub use pulse::{Pulse, PulseKind};

@@ -1,0 +1,68 @@
+//! Ovonic threshold switch (OTS) selector model.
+//!
+//! The OTS sits in series with every PCM element (paper Fig. 1); its sharp
+//! voltage threshold is what suppresses sneak paths in the crosspoint array
+//! (§II: the OFF conductance is up to 1e8× smaller than ON).
+
+use super::params::DeviceParams;
+
+/// OTS selector: a voltage-controlled switch with hysteresis-free threshold
+/// behaviour (the S1 switch of Fig. 2(b) / Table IV).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ots;
+
+impl Ots {
+    /// Conductance at a given voltage across the selector.
+    pub fn conductance(&self, p: &DeviceParams, v_across: f64) -> f64 {
+        if v_across.abs() >= p.ots_v_th {
+            p.ots_g_on
+        } else {
+            p.ots_g_off
+        }
+    }
+
+    /// Is the selector conducting at this bias?
+    pub fn is_on(&self, p: &DeviceParams, v_across: f64) -> bool {
+        v_across.abs() >= p.ots_v_th
+    }
+
+    /// Worst-case sneak current through an unselected (half-biased OFF)
+    /// cell: `G_off · v`.
+    pub fn sneak_current(&self, p: &DeviceParams, v_half: f64) -> f64 {
+        p.ots_g_off * v_half
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_behaviour() {
+        let p = DeviceParams::default();
+        let ots = Ots;
+        assert_eq!(ots.conductance(&p, 0.1), p.ots_g_off);
+        assert_eq!(ots.conductance(&p, 0.5), p.ots_g_on);
+        assert_eq!(ots.conductance(&p, -0.5), p.ots_g_on, "bipolar");
+        assert!(!ots.is_on(&p, 0.0));
+        assert!(ots.is_on(&p, p.ots_v_th));
+    }
+
+    #[test]
+    fn on_off_ratio_is_large() {
+        let p = DeviceParams::default();
+        let ots = Ots;
+        let ratio = ots.conductance(&p, 1.0) / ots.conductance(&p, 0.0);
+        assert!(ratio >= 1e6);
+    }
+
+    #[test]
+    fn sneak_current_is_negligible_vs_signal() {
+        // A floated line sits near half-bias; the sneak current through an
+        // OFF selector must be orders of magnitude below I_SET for the
+        // thresholded computation to be trustworthy.
+        let p = DeviceParams::default();
+        let sneak = Ots.sneak_current(&p, 0.15);
+        assert!(sneak < 1e-3 * p.i_set, "sneak {sneak} vs I_SET {}", p.i_set);
+    }
+}

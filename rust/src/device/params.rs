@@ -1,0 +1,163 @@
+//! Device parameters from the paper's supplementary material (Table IV) and
+//! §II. All quantities are SI (siemens, amps, seconds, kelvin-ish °C).
+
+/// Logic values stored in a PCM cell (paper §II: crystalline = 1,
+/// amorphous = 0).
+pub const PCM_LOGIC1: bool = true;
+/// See [`PCM_LOGIC1`].
+pub const PCM_LOGIC0: bool = false;
+
+/// PCM + OTS + programming parameters.
+///
+/// Defaults reproduce the paper exactly:
+/// `G_A = 660 nS`, `G_C = 160 µS`, `I_RESET = 100 µA` (15 ns),
+/// `I_SET = 50 µA` (80 ns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceParams {
+    /// PCM conductance, amorphous state (logic 0) \[S\].
+    pub g_a: f64,
+    /// PCM conductance, crystalline state (logic 1) \[S\].
+    pub g_c: f64,
+    /// SET programming current threshold \[A\].
+    pub i_set: f64,
+    /// RESET programming current threshold \[A\].
+    pub i_reset: f64,
+    /// SET pulse duration \[s\].
+    pub t_set: f64,
+    /// RESET pulse duration \[s\].
+    pub t_reset: f64,
+    /// Read pulse amplitude \[A\] — small enough to not disturb state.
+    pub i_read: f64,
+    /// Read pulse duration \[s\].
+    pub t_read: f64,
+
+    // --- thermal behavioural model (device-level dynamics only; the
+    // array-level TMVM decision uses the published I_SET/I_RESET threshold
+    // comparison, not the thermal model) ---
+    /// Ambient temperature \[°C\].
+    pub t_ambient: f64,
+    /// Crystallization temperature T_cryst \[°C\] (~400 °C, §II).
+    pub t_cryst: f64,
+    /// Melting temperature T_melt \[°C\] (~600 °C, §II).
+    pub t_melt: f64,
+    /// Effective thermal resistance \[°C/W\] coupling Joule power to cell
+    /// temperature. Calibrated so a sustained I_SET through a crystalline
+    /// cell sits midway between T_cryst and T_melt.
+    pub r_thermal: f64,
+    /// Crystallization time constant \[s\] (fraction of t_set so a full SET
+    /// pulse completes the transition).
+    pub tau_cryst: f64,
+    /// Amorphization (melt-quench) time constant \[s\].
+    pub tau_melt: f64,
+    /// Electronic threshold-switching voltage of amorphous GST \[V\]: above
+    /// it the amorphous region snaps to a conductive ON state (this is what
+    /// makes SET possible at all).
+    pub v_switch: f64,
+
+    // --- OTS selector (Table IV voltage-controlled switches) ---
+    /// OTS conductance when OFF \[S\] (S1 below threshold: 100 nS).
+    pub ots_g_off: f64,
+    /// OTS conductance when ON \[S\] (S1 above threshold: 10 S).
+    pub ots_g_on: f64,
+    /// OTS threshold voltage \[V\] (S1: 0.3 V).
+    pub ots_v_th: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        let g_c = 160e-6;
+        let i_set = 50e-6;
+        let t_set = 80e-9;
+        let t_reset = 15e-9;
+        let t_ambient = 25.0;
+        let t_cryst = 400.0;
+        let t_melt = 600.0;
+        // Midpoint calibration: T(I_SET, G_C) = (T_cryst + T_melt)/2.
+        let target = (t_cryst + t_melt) / 2.0 - t_ambient;
+        let r_thermal = target * g_c / (i_set * i_set);
+        Self {
+            g_a: 660e-9,
+            g_c,
+            i_set,
+            i_reset: 100e-6,
+            t_set,
+            t_reset,
+            i_read: 2e-6,
+            t_read: 10e-9,
+            t_ambient,
+            t_cryst,
+            t_melt,
+            r_thermal,
+            tau_cryst: t_set / 3.0,
+            tau_melt: t_reset / 3.0,
+            v_switch: 1.0,
+            ots_g_off: 100e-9,
+            ots_g_on: 10.0,
+            ots_v_th: 0.3,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Sanity-check invariants the rest of the stack relies on.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.g_a > 0.0 && self.g_c > self.g_a, "G_C > G_A > 0");
+        anyhow::ensure!(
+            self.i_reset > self.i_set && self.i_set > 0.0,
+            "I_RESET > I_SET > 0"
+        );
+        anyhow::ensure!(self.t_set > self.t_reset, "SET is the slow pulse");
+        anyhow::ensure!(self.t_melt > self.t_cryst, "T_melt > T_cryst");
+        anyhow::ensure!(
+            self.ots_g_on / self.ots_g_off >= 1e6,
+            "OTS on/off ratio should be large (paper: up to 1e8)"
+        );
+        Ok(())
+    }
+
+    /// On/off conductance ratio of the storage element.
+    pub fn pcm_ratio(&self) -> f64 {
+        self.g_c / self.g_a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_table_iv() {
+        let p = DeviceParams::default();
+        assert_eq!(p.g_a, 660e-9);
+        assert_eq!(p.g_c, 160e-6);
+        assert_eq!(p.i_set, 50e-6);
+        assert_eq!(p.i_reset, 100e-6);
+        assert_eq!(p.t_set, 80e-9);
+        assert_eq!(p.t_reset, 15e-9);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn i_set_is_half_i_reset() {
+        // supplementary: I_SET = I_RESET / 2
+        let p = DeviceParams::default();
+        assert!((p.i_set - p.i_reset / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thermal_calibration_midpoint() {
+        let p = DeviceParams::default();
+        let t = p.t_ambient + p.r_thermal * p.i_set * p.i_set / p.g_c;
+        assert!((t - 500.0).abs() < 1e-6, "T = {t}");
+        // RESET current through a crystalline cell must exceed T_melt.
+        let t_reset = p.t_ambient + p.r_thermal * p.i_reset * p.i_reset / p.g_c;
+        assert!(t_reset > p.t_melt);
+    }
+
+    #[test]
+    fn validate_catches_bad_params() {
+        let mut p = DeviceParams::default();
+        p.g_a = p.g_c * 2.0;
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,284 @@
+//! Phase-change memory element: state, conductance, and SET/RESET pulse
+//! dynamics (paper Fig. 2(a)).
+//!
+//! The model keeps a continuous crystalline fraction `x ∈ [0, 1]` and
+//! integrates a behavioural electro-thermal transition: Joule power raises
+//! the cell temperature; above `T_cryst` the amorphous region crystallizes
+//! with time constant `tau_cryst`; above `T_melt` it melt-quenches back to
+//! amorphous with `tau_melt`. Amorphous GST under sufficient bias undergoes
+//! electronic threshold switching to a conductive ON state — that is what
+//! allows a SET pulse to heat an amorphous (high-resistance) cell at all.
+
+use super::params::DeviceParams;
+
+/// Discrete logic state of a PCM cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PcmState {
+    /// Low conductance `G_A` — logic 0.
+    Amorphous,
+    /// High conductance `G_C` — logic 1.
+    Crystalline,
+}
+
+impl PcmState {
+    pub fn to_bit(self) -> bool {
+        matches!(self, PcmState::Crystalline)
+    }
+
+    pub fn from_bit(bit: bool) -> Self {
+        if bit {
+            PcmState::Crystalline
+        } else {
+            PcmState::Amorphous
+        }
+    }
+}
+
+/// A single PCM storage element.
+#[derive(Clone, Debug)]
+pub struct PcmCell {
+    /// Crystalline fraction `x ∈ [0, 1]`.
+    cryst_frac: f64,
+    /// Cumulative SET+RESET cycles (endurance accounting; the paper cites
+    /// 1e12-cycle endurance for state-of-the-art devices).
+    cycles: u64,
+}
+
+impl PcmCell {
+    /// New cell in the amorphous (logic 0) state.
+    pub fn new() -> Self {
+        Self {
+            cryst_frac: 0.0,
+            cycles: 0,
+        }
+    }
+
+    /// New cell holding `bit`.
+    pub fn with_bit(bit: bool) -> Self {
+        Self {
+            cryst_frac: if bit { 1.0 } else { 0.0 },
+            cycles: 0,
+        }
+    }
+
+    /// Crystalline fraction (continuous state).
+    pub fn cryst_frac(&self) -> f64 {
+        self.cryst_frac
+    }
+
+    /// Programming cycle count.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Discretized state: crystalline iff the crystalline fraction is past
+    /// the percolation midpoint.
+    pub fn state(&self) -> PcmState {
+        if self.cryst_frac >= 0.5 {
+            PcmState::Crystalline
+        } else {
+            PcmState::Amorphous
+        }
+    }
+
+    /// Stored logic bit.
+    pub fn bit(&self) -> bool {
+        self.state().to_bit()
+    }
+
+    /// Static (small-signal) conductance: log-space interpolation between
+    /// `G_A` and `G_C` — resistance of GST mixtures is dominated by the
+    /// amorphous series fraction, which log-interpolation captures.
+    ///
+    /// Fully-written cells (the overwhelmingly common case on the TMVM hot
+    /// path) skip the transcendental interpolation.
+    #[inline]
+    pub fn conductance(&self, p: &DeviceParams) -> f64 {
+        if self.cryst_frac == 0.0 {
+            return p.g_a;
+        }
+        if self.cryst_frac == 1.0 {
+            return p.g_c;
+        }
+        let ln = (1.0 - self.cryst_frac) * p.g_a.ln() + self.cryst_frac * p.g_c.ln();
+        ln.exp()
+    }
+
+    /// Conductance seen by a programming pulse: if the voltage across the
+    /// cell exceeds the electronic threshold-switching voltage, the
+    /// amorphous region snaps ON and conducts like the crystalline phase.
+    pub fn dynamic_conductance(&self, p: &DeviceParams, v_across: f64) -> f64 {
+        if v_across.abs() >= p.v_switch {
+            p.g_c
+        } else {
+            self.conductance(p)
+        }
+    }
+
+    /// Force the cell to a logic state (ideal write, no dynamics). Counts a
+    /// cycle when the state flips.
+    pub fn write_bit(&mut self, bit: bool) {
+        let target = if bit { 1.0 } else { 0.0 };
+        if self.bit() != bit {
+            self.cycles += 1;
+        }
+        self.cryst_frac = target;
+    }
+
+    /// Cell temperature under a forced current `i` with effective
+    /// conductance `g_eff` (°C).
+    pub fn temperature(&self, p: &DeviceParams, i: f64, g_eff: f64) -> f64 {
+        p.t_ambient + p.r_thermal * i * i / g_eff
+    }
+
+    /// Apply a current pulse of amplitude `i` for duration `dt`, integrating
+    /// the electro-thermal transition in `steps` sub-steps. Returns the peak
+    /// temperature reached (°C).
+    ///
+    /// The pulse is treated as a current source through the cell, with
+    /// threshold switching active (the cell is being driven hard enough that
+    /// the amorphous phase is ON whenever meaningful current flows).
+    pub fn apply_current_pulse(&mut self, p: &DeviceParams, i: f64, dt: f64, steps: usize) -> f64 {
+        let steps = steps.max(1);
+        let h = dt / steps as f64;
+        let before = self.bit();
+        let mut peak_t = p.t_ambient;
+        for _ in 0..steps {
+            // Meaningful programming currents imply the device was biased
+            // past threshold switching, so Joule power is computed against
+            // the ON conductance; sub-threshold currents heat the static
+            // phase instead.
+            let g_eff = if i >= 0.5 * p.i_set {
+                p.g_c
+            } else {
+                self.conductance(p)
+            };
+            let t = self.temperature(p, i, g_eff);
+            peak_t = peak_t.max(t);
+            if t >= p.t_melt {
+                // melt + quench: crystalline fraction decays fast
+                self.cryst_frac -= self.cryst_frac * (h / p.tau_melt).min(1.0);
+            } else if t >= p.t_cryst {
+                // anneal: amorphous fraction crystallizes
+                self.cryst_frac += (1.0 - self.cryst_frac) * (h / p.tau_cryst).min(1.0);
+            }
+            self.cryst_frac = self.cryst_frac.clamp(0.0, 1.0);
+        }
+        if self.bit() != before {
+            self.cycles += 1;
+        }
+        peak_t
+    }
+
+    /// Standard SET pulse (I_SET for t_SET). Returns peak temperature.
+    pub fn set_pulse(&mut self, p: &DeviceParams) -> f64 {
+        self.apply_current_pulse(p, p.i_set, p.t_set, 32)
+    }
+
+    /// Standard RESET pulse (I_RESET for t_RESET). Returns peak temperature.
+    pub fn reset_pulse(&mut self, p: &DeviceParams) -> f64 {
+        self.apply_current_pulse(p, p.i_reset, p.t_reset, 32)
+    }
+
+    /// Non-destructive read: returns the stored bit; asserts the read
+    /// current is in the safe window.
+    pub fn read(&self, p: &DeviceParams) -> bool {
+        debug_assert!(p.i_read < 0.5 * p.i_set, "read must not disturb state");
+        self.bit()
+    }
+}
+
+impl Default for PcmCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default()
+    }
+
+    #[test]
+    fn fresh_cell_is_logic0() {
+        let c = PcmCell::new();
+        assert_eq!(c.state(), PcmState::Amorphous);
+        assert!(!c.bit());
+        assert!((c.conductance(&p()) - p().g_a).abs() / p().g_a < 1e-12);
+    }
+
+    #[test]
+    fn set_pulse_crystallizes() {
+        let mut c = PcmCell::new();
+        let peak = c.set_pulse(&p());
+        assert!(c.bit(), "SET should flip 0 -> 1 (frac={})", c.cryst_frac());
+        assert!(peak >= p().t_cryst && peak < p().t_melt, "peak {peak}");
+        assert!(c.cryst_frac() > 0.9);
+    }
+
+    #[test]
+    fn reset_pulse_amorphizes() {
+        let mut c = PcmCell::with_bit(true);
+        let peak = c.reset_pulse(&p());
+        assert!(!c.bit(), "RESET should flip 1 -> 0");
+        assert!(peak >= p().t_melt, "peak {peak} must reach melt");
+        assert!(c.cryst_frac() < 0.1);
+    }
+
+    #[test]
+    fn sub_threshold_current_is_nondestructive() {
+        let params = p();
+        for bit in [false, true] {
+            let mut c = PcmCell::with_bit(bit);
+            // a read-magnitude pulse, much longer than t_set
+            c.apply_current_pulse(&params, params.i_read, 10.0 * params.t_set, 64);
+            assert_eq!(c.bit(), bit, "read disturbed the cell");
+        }
+    }
+
+    #[test]
+    fn set_reset_cycling_counts_cycles() {
+        let params = p();
+        let mut c = PcmCell::new();
+        for _ in 0..5 {
+            c.set_pulse(&params);
+            c.reset_pulse(&params);
+        }
+        assert_eq!(c.cycles(), 10);
+        assert!(!c.bit());
+    }
+
+    #[test]
+    fn conductance_is_monotone_in_cryst_frac() {
+        let params = p();
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let mut c = PcmCell::new();
+            c.cryst_frac = i as f64 / 10.0;
+            let g = c.conductance(&params);
+            assert!(g > prev);
+            prev = g;
+        }
+        assert!((prev - params.g_c).abs() / params.g_c < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_conductance_threshold_switches() {
+        let params = p();
+        let c = PcmCell::new(); // amorphous
+        let g_low = c.dynamic_conductance(&params, 0.2);
+        assert!((g_low - params.g_a).abs() / params.g_a < 1e-12);
+        assert_eq!(c.dynamic_conductance(&params, 1.2), params.g_c);
+    }
+
+    #[test]
+    fn half_set_pulse_leaves_partial_state() {
+        let params = p();
+        let mut c = PcmCell::new();
+        c.apply_current_pulse(&params, params.i_set, params.t_set / 8.0, 8);
+        assert!(c.cryst_frac() > 0.0 && c.cryst_frac() < 0.9);
+    }
+}

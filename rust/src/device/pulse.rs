@@ -1,0 +1,102 @@
+//! Programming waveforms (paper Fig. 2(a)): SET, RESET, READ pulses.
+
+use super::params::DeviceParams;
+
+/// The three memory operations available in 3D XPoint (§II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PulseKind {
+    /// Fast, high-amplitude — write logic 0.
+    Reset,
+    /// Slow, low-amplitude — write logic 1.
+    Set,
+    /// Very small amplitude — non-destructive read.
+    Read,
+}
+
+/// A rectangular current pulse.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pulse {
+    pub kind: PulseKind,
+    /// Amplitude \[A\].
+    pub amplitude: f64,
+    /// Duration \[s\].
+    pub duration: f64,
+}
+
+impl Pulse {
+    pub fn set(p: &DeviceParams) -> Self {
+        Self {
+            kind: PulseKind::Set,
+            amplitude: p.i_set,
+            duration: p.t_set,
+        }
+    }
+
+    pub fn reset(p: &DeviceParams) -> Self {
+        Self {
+            kind: PulseKind::Reset,
+            amplitude: p.i_reset,
+            duration: p.t_reset,
+        }
+    }
+
+    pub fn read(p: &DeviceParams) -> Self {
+        Self {
+            kind: PulseKind::Read,
+            amplitude: p.i_read,
+            duration: p.t_read,
+        }
+    }
+
+    /// Charge delivered \[C\].
+    pub fn charge(&self) -> f64 {
+        self.amplitude * self.duration
+    }
+
+    /// Energy dissipated across an element of conductance `g` \[J\]
+    /// (`E = I²/G · t`).
+    pub fn energy(&self, g: f64) -> f64 {
+        self.amplitude * self.amplitude / g * self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_pulses_match_params() {
+        let p = DeviceParams::default();
+        let s = Pulse::set(&p);
+        assert_eq!(s.amplitude, 50e-6);
+        assert_eq!(s.duration, 80e-9);
+        let r = Pulse::reset(&p);
+        assert_eq!(r.amplitude, 100e-6);
+        assert_eq!(r.duration, 15e-9);
+        assert!(Pulse::read(&p).amplitude < s.amplitude / 10.0);
+    }
+
+    #[test]
+    fn reset_is_fast_and_high_set_is_slow_and_low() {
+        let p = DeviceParams::default();
+        let s = Pulse::set(&p);
+        let r = Pulse::reset(&p);
+        assert!(r.amplitude > s.amplitude);
+        assert!(r.duration < s.duration);
+    }
+
+    #[test]
+    fn energy_scales_with_duration_and_square_current() {
+        let p = DeviceParams::default();
+        let s = Pulse::set(&p);
+        let e1 = s.energy(p.g_c);
+        // doubling current at equal duration quadruples energy
+        let double = Pulse {
+            amplitude: 2.0 * s.amplitude,
+            ..s
+        };
+        assert!((double.energy(p.g_c) / e1 - 4.0).abs() < 1e-12);
+        // SET through a crystalline cell ~ pJ scale (sanity for Table II)
+        assert!(e1 > 0.1e-12 && e1 < 100e-12, "E_set = {e1}");
+    }
+}

@@ -1,0 +1,138 @@
+//! ASAP7 7-nm predictive PDK interconnect data (supplementary Tables V and
+//! VI; Clark et al. [25], [26]). All lengths in meters, resistivity in Ω·m.
+
+/// One ASAP7 metal layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetalLayer {
+    /// 1-based layer index (M1..M9).
+    pub index: usize,
+    /// Preferred routing direction alternates V/H; `vertical == true` for
+    /// M1, M3, M5, M7, M9.
+    pub vertical: bool,
+    /// Metal thickness t_M \[m\].
+    pub thickness: f64,
+    /// Minimum line spacing S_min \[m\].
+    pub s_min: f64,
+    /// Minimum line width W_min \[m\].
+    pub w_min: f64,
+    /// Resistivity ρ_M \[Ω·m\].
+    pub rho: f64,
+}
+
+impl MetalLayer {
+    /// Minimum routing pitch (width + spacing) \[m\].
+    pub fn pitch_min(&self) -> f64 {
+        self.w_min + self.s_min
+    }
+
+    /// Sheet-style segment resistance for a wire of `length` and `width`
+    /// on this layer \[Ω\]: `ρ·L / (t·W)`.
+    pub fn wire_resistance(&self, length: f64, width: f64) -> f64 {
+        assert!(length > 0.0 && width > 0.0);
+        self.rho * length / (self.thickness * width)
+    }
+}
+
+const NM: f64 = 1e-9;
+
+/// Supplementary Table V. `ρ` is given in Ω·nm in the paper; stored here in
+/// Ω·m (1 Ω·nm = 1e-9 Ω·m).
+pub const ASAP7_METALS: [MetalLayer; 9] = [
+    MetalLayer { index: 1, vertical: true,  thickness: 36.0 * NM, s_min: 18.0 * NM, w_min: 18.0 * NM, rho: 43.2 * NM },
+    MetalLayer { index: 2, vertical: false, thickness: 36.0 * NM, s_min: 18.0 * NM, w_min: 18.0 * NM, rho: 43.2 * NM },
+    MetalLayer { index: 3, vertical: true,  thickness: 36.0 * NM, s_min: 18.0 * NM, w_min: 18.0 * NM, rho: 43.2 * NM },
+    MetalLayer { index: 4, vertical: false, thickness: 48.0 * NM, s_min: 24.0 * NM, w_min: 24.0 * NM, rho: 36.9 * NM },
+    MetalLayer { index: 5, vertical: true,  thickness: 48.0 * NM, s_min: 24.0 * NM, w_min: 24.0 * NM, rho: 36.9 * NM },
+    MetalLayer { index: 6, vertical: false, thickness: 64.0 * NM, s_min: 32.0 * NM, w_min: 32.0 * NM, rho: 32.0 * NM },
+    MetalLayer { index: 7, vertical: true,  thickness: 64.0 * NM, s_min: 32.0 * NM, w_min: 32.0 * NM, rho: 32.0 * NM },
+    MetalLayer { index: 8, vertical: false, thickness: 80.0 * NM, s_min: 40.0 * NM, w_min: 40.0 * NM, rho: 28.8 * NM },
+    MetalLayer { index: 9, vertical: true,  thickness: 80.0 * NM, s_min: 40.0 * NM, w_min: 40.0 * NM, rho: 28.8 * NM },
+];
+
+/// A via between adjacent metal layers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Via {
+    /// Connects M\[lower\] and M\[lower+1\].
+    pub lower: usize,
+    /// Via resistance \[Ω\].
+    pub r: f64,
+    /// Via edge size \[m\] (square).
+    pub size: f64,
+    /// Minimum spacing \[m\].
+    pub s_min: f64,
+}
+
+/// Supplementary Table VI.
+pub const ASAP7_VIAS: [Via; 8] = [
+    Via { lower: 1, r: 17.0, size: 18.0 * NM, s_min: 18.0 * NM },
+    Via { lower: 2, r: 17.0, size: 18.0 * NM, s_min: 18.0 * NM },
+    Via { lower: 3, r: 17.0, size: 18.0 * NM, s_min: 18.0 * NM },
+    Via { lower: 4, r: 12.0, size: 24.0 * NM, s_min: 33.0 * NM },
+    Via { lower: 5, r: 12.0, size: 24.0 * NM, s_min: 33.0 * NM },
+    Via { lower: 6, r: 8.0,  size: 32.0 * NM, s_min: 45.0 * NM },
+    Via { lower: 7, r: 8.0,  size: 32.0 * NM, s_min: 45.0 * NM },
+    Via { lower: 8, r: 6.0,  size: 40.0 * NM, s_min: 57.0 * NM },
+];
+
+/// Look up a metal layer by 1-based index.
+pub fn metal(index: usize) -> &'static MetalLayer {
+    &ASAP7_METALS[index - 1]
+}
+
+/// Resistance of a stacked via chain connecting layer `from` to layer `to`
+/// (sum of all intermediate vias) \[Ω\].
+pub fn via_chain_resistance(from: usize, to: usize) -> f64 {
+    let (lo, hi) = if from <= to { (from, to) } else { (to, from) };
+    ASAP7_VIAS
+        .iter()
+        .filter(|v| v.lower >= lo && v.lower < hi)
+        .map(|v| v.r)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * b.abs()
+    }
+
+    #[test]
+    fn table_v_values() {
+        assert!(close(metal(1).thickness, 36e-9));
+        assert!(close(metal(4).w_min, 24e-9));
+        assert!(close(metal(9).rho, 28.8e-9));
+        assert!(metal(1).vertical && !metal(2).vertical);
+    }
+
+    #[test]
+    fn pitch_is_width_plus_space() {
+        assert!((metal(1).pitch_min() - 36e-9).abs() < 1e-18);
+        assert!((metal(8).pitch_min() - 80e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn wire_resistance_m1_cell_segment() {
+        // ρL/(tW) with L = 36nm, W = 18nm, t = 36nm, ρ = 43.2 Ω·nm -> 2.4 Ω
+        let r = metal(1).wire_resistance(36e-9, 18e-9);
+        assert!((r - 2.4).abs() < 1e-9, "r = {r}");
+    }
+
+    #[test]
+    fn upper_layers_are_better_conductors() {
+        // per unit length at min width, higher layers have lower resistance
+        let r1 = metal(1).wire_resistance(1e-6, metal(1).w_min);
+        let r9 = metal(9).wire_resistance(1e-6, metal(9).w_min);
+        assert!(r9 < r1 / 3.0);
+    }
+
+    #[test]
+    fn via_chain_sums() {
+        assert_eq!(via_chain_resistance(1, 2), 17.0);
+        assert_eq!(via_chain_resistance(2, 5), 17.0 + 17.0 + 12.0);
+        assert_eq!(via_chain_resistance(5, 2), 17.0 + 17.0 + 12.0);
+        assert_eq!(via_chain_resistance(3, 3), 0.0);
+        assert_eq!(via_chain_resistance(1, 9), 17.0 * 3.0 + 12.0 * 2.0 + 8.0 * 2.0 + 6.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Metal-line configurations (paper Table I) and cell geometry, yielding
+//! the per-segment conductances `G_x` / `G_y` consumed by the parasitic
+//! analysis.
+
+use super::asap7::{metal, via_chain_resistance};
+use super::wire::segment_conductance;
+
+/// Allocation of ASAP7 metal layers to the three 3D XPoint line groups
+/// (paper Table I).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LineConfig {
+    /// Human-readable id (1, 2, 3 for the paper's configurations).
+    pub id: u8,
+    /// Layers strapped together for top word lines.
+    pub wlt: Vec<usize>,
+    /// Layers for bottom word lines.
+    pub wlb: Vec<usize>,
+    /// Layers for bit lines.
+    pub bl: Vec<usize>,
+}
+
+impl LineConfig {
+    /// Configuration 1: M3 / M1 / M2 only.
+    pub fn config1() -> Self {
+        Self {
+            id: 1,
+            wlt: vec![3],
+            wlb: vec![1],
+            bl: vec![2],
+        }
+    }
+
+    /// Configuration 2: WLT = M3+M6+M8, WLB = M1+M7+M9, BL = M2+M4+M5.
+    pub fn config2() -> Self {
+        Self {
+            id: 2,
+            wlt: vec![3, 6, 8],
+            wlb: vec![1, 7, 9],
+            bl: vec![2, 4, 5],
+        }
+    }
+
+    /// Configuration 3: WLT = M3+M5+M6+M8, WLB = M1+M4+M7+M9, BL = M2.
+    pub fn config3() -> Self {
+        Self {
+            id: 3,
+            wlt: vec![3, 5, 6, 8],
+            wlb: vec![1, 4, 7, 9],
+            bl: vec![2],
+        }
+    }
+
+    /// All three paper configurations.
+    pub fn all() -> Vec<Self> {
+        vec![Self::config1(), Self::config2(), Self::config3()]
+    }
+
+    /// Minimum cell footprint `(W_min, L_min)` \[m\]: the row pitch `W_cell`
+    /// must fit the widest BL layer's minimum pitch, the column pitch
+    /// `L_cell` the widest WL layer's (paper Table I last column).
+    pub fn min_cell(&self) -> (f64, f64) {
+        let w_min = self
+            .bl
+            .iter()
+            .map(|&k| metal(k).pitch_min())
+            .fold(0.0, f64::max);
+        let l_min = self
+            .wlt
+            .iter()
+            .chain(self.wlb.iter())
+            .map(|&k| metal(k).pitch_min())
+            .fold(0.0, f64::max);
+        (w_min, l_min)
+    }
+
+    /// Lumped via-chain resistance from the base WL layers to the strap
+    /// layers \[Ω\]. For long lines the strap current enters/leaves through
+    /// via chains at the line ends, so this is charged once per line (added
+    /// to the driver resistance), not per segment.
+    pub fn wl_via_resistance(&self) -> f64 {
+        let wlt_base = 3; // WLT base layer (top of the PCM stack)
+        let wlb_base = 1;
+        let chain = |base: usize, layers: &[usize]| -> f64 {
+            layers
+                .iter()
+                .filter(|&&k| k != base)
+                .map(|&k| via_chain_resistance(base, k))
+                .fold(0.0, f64::max)
+        };
+        chain(wlt_base, &self.wlt) + chain(wlb_base, &self.wlb)
+    }
+}
+
+/// Physical cell geometry: footprint pitches in meters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellGeometry {
+    /// Row pitch (distance between adjacent cells along a word line) \[m\].
+    pub w_cell: f64,
+    /// Column pitch (distance between adjacent cells along a bit line) \[m\].
+    pub l_cell: f64,
+}
+
+impl CellGeometry {
+    /// Geometry at scale multiples of the configuration's minimum cell:
+    /// `W_cell = w_scale · W_min`, `L_cell = l_scale · L_min`.
+    pub fn scaled(config: &LineConfig, w_scale: f64, l_scale: f64) -> Self {
+        assert!(w_scale >= 1.0 && l_scale >= 1.0, "cannot go below min cell");
+        let (w_min, l_min) = config.min_cell();
+        Self {
+            w_cell: w_scale * w_min,
+            l_cell: l_scale * l_min,
+        }
+    }
+
+    /// Cell footprint area \[m²\].
+    pub fn area(&self) -> f64 {
+        self.w_cell * self.l_cell
+    }
+}
+
+/// Per-cell-footprint segment conductances for a (configuration, geometry)
+/// pair — the `G_x` / `G_y` of the paper's Appendix A.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentConductances {
+    /// Bit-line segment conductance `G_x` \[S\].
+    pub g_x: f64,
+    /// Top word-line segment conductance \[S\].
+    pub g_wlt: f64,
+    /// Bottom word-line segment conductance \[S\].
+    pub g_wlb: f64,
+    /// Lumped WL via-chain resistance, charged at the driver \[Ω\].
+    pub r_via: f64,
+}
+
+impl SegmentConductances {
+    /// Compute segment conductances: strapped layers add in parallel
+    /// (conductances sum); each WL segment has length `W_cell` and width
+    /// bounded by `L_cell`; each BL segment has length `L_cell` and width
+    /// bounded by `W_cell`.
+    pub fn of(config: &LineConfig, cell: &CellGeometry) -> Self {
+        let wl = |layers: &[usize]| -> f64 {
+            layers
+                .iter()
+                .map(|&k| segment_conductance(metal(k), cell.w_cell, cell.l_cell))
+                .sum()
+        };
+        let g_x = config
+            .bl
+            .iter()
+            .map(|&k| segment_conductance(metal(k), cell.l_cell, cell.w_cell))
+            .sum();
+        Self {
+            g_x,
+            g_wlt: wl(&config.wlt),
+            g_wlb: wl(&config.wlb),
+            r_via: config.wl_via_resistance(),
+        }
+    }
+
+    /// The paper's single symmetric `G_y`, defined so that
+    /// `2/G_y = 1/G_wlt + 1/G_wlb` (exact for symmetric allocations).
+    pub fn g_y(&self) -> f64 {
+        2.0 / (1.0 / self.g_wlt + 1.0 / self.g_wlb)
+    }
+
+    /// Series WL resistance of one row step (one WLT + one WLB segment) \[Ω\].
+    pub fn r_wl_step(&self) -> f64 {
+        1.0 / self.g_wlt + 1.0 / self.g_wlb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_min_cells() {
+        // Paper Table I last column: 36×36, 48×80, 36×80 (nm).
+        let cases = [
+            (LineConfig::config1(), 36e-9, 36e-9),
+            (LineConfig::config2(), 48e-9, 80e-9),
+            (LineConfig::config3(), 36e-9, 80e-9),
+        ];
+        for (cfg, w, l) in cases {
+            let (wm, lm) = cfg.min_cell();
+            assert!((wm - w).abs() < 1e-15, "config {} W_min {wm}", cfg.id);
+            assert!((lm - l).abs() < 1e-15, "config {} L_min {lm}", cfg.id);
+        }
+    }
+
+    #[test]
+    fn config3_has_best_wordlines() {
+        // more WL metal ⇒ larger G_y at comparable geometry
+        let geo = |c: &LineConfig| CellGeometry::scaled(c, 1.0, 4.0);
+        let g1 = SegmentConductances::of(&LineConfig::config1(), &geo(&LineConfig::config1()));
+        let g3 = SegmentConductances::of(&LineConfig::config3(), &geo(&LineConfig::config3()));
+        assert!(
+            g3.g_y() > g1.g_y(),
+            "config3 {} vs config1 {}",
+            g3.g_y(),
+            g1.g_y()
+        );
+    }
+
+    #[test]
+    fn config1_segment_values_hand_checked() {
+        // Config 1 at minimum cell (36×36): WLT = M3 segment, length 36 nm,
+        // width = 36−18 = 18 nm ⇒ R = 43.2·36/(36·18) = 2.4 Ω.
+        let cfg = LineConfig::config1();
+        let cell = CellGeometry::scaled(&cfg, 1.0, 1.0);
+        let s = SegmentConductances::of(&cfg, &cell);
+        assert!((1.0 / s.g_wlt - 2.4).abs() < 1e-9);
+        assert!((1.0 / s.g_wlb - 2.4).abs() < 1e-9);
+        assert!((1.0 / s.g_x - 2.4).abs() < 1e-9);
+        assert_eq!(s.r_via, 0.0, "single-layer lines need no straps");
+    }
+
+    #[test]
+    fn l_cell_scaling_helps_wordlines() {
+        let cfg = LineConfig::config1();
+        let near = SegmentConductances::of(&cfg, &CellGeometry::scaled(&cfg, 1.0, 1.0));
+        let far = SegmentConductances::of(&cfg, &CellGeometry::scaled(&cfg, 1.0, 4.0));
+        assert!(far.g_y() > 3.0 * near.g_y(), "wider WL at larger L_cell");
+        // while BL gets slightly worse (longer segments)
+        assert!(far.g_x < near.g_x);
+    }
+
+    #[test]
+    fn w_cell_scaling_hurts_wordlines() {
+        let cfg = LineConfig::config3();
+        let small = SegmentConductances::of(&cfg, &CellGeometry::scaled(&cfg, 1.0, 4.0));
+        let big = SegmentConductances::of(&cfg, &CellGeometry::scaled(&cfg, 4.0, 4.0));
+        assert!(big.g_y() < small.g_y());
+    }
+
+    #[test]
+    fn via_chain_counted_for_strapped_configs() {
+        assert!(LineConfig::config2().wl_via_resistance() > 0.0);
+        assert!(LineConfig::config3().wl_via_resistance() > 0.0);
+        assert_eq!(LineConfig::config1().wl_via_resistance(), 0.0);
+    }
+
+    #[test]
+    fn cell_area() {
+        let cell = CellGeometry {
+            w_cell: 36e-9,
+            l_cell: 240e-9,
+        };
+        assert!((cell.area() - 36e-9 * 240e-9).abs() < 1e-30);
+    }
+}

@@ -1,0 +1,11 @@
+//! Interconnect models: the ASAP7 metal stack (supplementary Tables V–VI)
+//! and the three metal-line configurations of Table I, producing the
+//! per-cell-footprint segment conductances `G_x` (bit line) and `G_y`
+//! (word lines) used by the parasitic analysis.
+
+pub mod asap7;
+pub mod config;
+pub mod wire;
+
+pub use asap7::{metal, via_chain_resistance, MetalLayer, Via, ASAP7_METALS, ASAP7_VIAS};
+pub use config::{CellGeometry, LineConfig};

@@ -1,0 +1,68 @@
+//! Wire-segment conductance calculation from cell geometry.
+//!
+//! Orientation conventions (matching the paper's §V/§VI observations):
+//!
+//! * Word lines (WLT above the top PCM level, WLB below the bottom one) run
+//!   across **rows**: one WL per input column, each crossing all `N_row`
+//!   rows. A WL segment within one cell footprint has **length `W_cell`**
+//!   and its width is limited by the row pitch: **width ≤ `L_cell` − S_min**.
+//!   This is why NM improves with `L_cell` (wider WLs) and degrades with
+//!   `W_cell` (longer WL segments) — Fig. 13(b)/(c).
+//! * Bit lines run across **columns** in the middle of the stack: a BL
+//!   segment has **length `L_cell`** and **width ≤ `W_cell` − S_min`**.
+//!   BL resistance is in series with the (much larger) PCM resistance, which
+//!   is why NM is flat in `N_column` — Fig. 13(d).
+
+use super::asap7::MetalLayer;
+
+/// Conductance of one wire segment on `layer` \[S\].
+///
+/// `length` is the cell pitch along the wire; `pitch_across` is the cell
+/// pitch perpendicular to the wire, which bounds the drawn wire width to
+/// `pitch_across − S_min` (never below the layer's `W_min` — a layout that
+/// cannot fit even a minimum-width wire is rejected by
+/// [`crate::interconnect::LineConfig::min_cell`] constraints upstream).
+pub fn segment_conductance(layer: &MetalLayer, length: f64, pitch_across: f64) -> f64 {
+    let width = wire_width(layer, pitch_across);
+    1.0 / layer.wire_resistance(length, width)
+}
+
+/// Drawn wire width on `layer` given the perpendicular cell pitch.
+pub fn wire_width(layer: &MetalLayer, pitch_across: f64) -> f64 {
+    (pitch_across - layer.s_min).max(layer.w_min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::asap7::metal;
+
+    #[test]
+    fn min_pitch_gives_min_width() {
+        let m1 = metal(1);
+        assert_eq!(wire_width(m1, m1.pitch_min()), m1.w_min);
+    }
+
+    #[test]
+    fn wider_pitch_gives_wider_wire() {
+        let m3 = metal(3);
+        let w = wire_width(m3, 4.0 * m3.pitch_min());
+        assert!((w - (144e-9 - 18e-9)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn conductance_scales_inverse_with_length() {
+        let m2 = metal(2);
+        let g1 = segment_conductance(m2, 36e-9, 36e-9);
+        let g2 = segment_conductance(m2, 72e-9, 36e-9);
+        assert!((g1 / g2 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conductance_grows_with_pitch_across() {
+        let m3 = metal(3);
+        let narrow = segment_conductance(m3, 36e-9, m3.pitch_min());
+        let wide = segment_conductance(m3, 36e-9, 4.0 * m3.pitch_min());
+        assert!(wide > 3.0 * narrow);
+    }
+}

@@ -1,0 +1,60 @@
+//! # xpoint-imc — 3D XPoint as an in-memory computing accelerator
+//!
+//! A device/circuit/architecture simulator stack reproducing
+//! *"Exploring the Feasibility of Using 3D XPoint as an In-Memory Computing
+//! Accelerator"* (Zabihi et al., 2021).
+//!
+//! The library is organized bottom-up:
+//!
+//! * [`util`] / [`testing`] — self-contained substrates (PRNG, stats, table
+//!   rendering, CSV/JSON output, a mini property-testing framework). The
+//!   build is fully offline, so these replace `rand`, `criterion` and
+//!   `proptest`.
+//! * [`device`] — PCM + OTS compact models (paper Fig. 2, Table IV): state,
+//!   partial crystallization, SET/RESET pulse dynamics.
+//! * [`circuit`] — a generic resistive-network substrate: netlist builder,
+//!   modified-nodal-analysis solver (dense LU with a banded fast path), and
+//!   numeric Thevenin extraction. Used to *validate* the paper's analytic
+//!   parasitic model against full circuit simulation.
+//! * [`interconnect`] — ASAP7 metal/via tables (Tables V–VI) and the three
+//!   wire configurations of Table I.
+//! * [`analysis`] — the paper's core contribution: the recursive
+//!   `R_th`/`α_th` Thevenin model (Appendix A), the ideal voltage windows
+//!   (Eqs. 4–5), the noise margin (Eq. 7), acceptable-region geometry and
+//!   maximum-subarray-size search.
+//! * [`array`] — the 3D XPoint subarray state machine and the TMVM
+//!   (thresholded matrix–vector multiply) engine, in both ideal (Eq. 3) and
+//!   parasitic-aware modes, with energy/latency/area accounting and the two
+//!   multi-bit schemes of Table III.
+//! * [`scaling`] — inter-subarray links (BL-to-BL and BL-to-WLT, Fig. 6) and
+//!   matrix tiling across subarrays.
+//! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
+//!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
+//! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
+//!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and serves as
+//!   the functional golden model on the rust side.
+//! * [`coordinator`] — the L3 serving shell: request batching, subarray
+//!   scheduling (`⌊N_row/P⌋` images per computational step), worker threads
+//!   and metrics.
+//! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III) as a
+//!   library function returning structured rows, shared by benches, examples
+//!   and the CLI.
+//!
+//! See `examples/quickstart.rs` for a runnable end-to-end tour.
+
+pub mod util;
+pub mod testing;
+pub mod device;
+pub mod circuit;
+pub mod interconnect;
+pub mod analysis;
+pub mod array;
+pub mod scaling;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,262 @@
+//! `xpoint` — CLI entry point for the 3D XPoint in-memory-computing stack.
+//!
+//! Subcommands regenerate the paper's exhibits from the same library code
+//! used by `cargo bench`, and `serve` runs the L3 coordinator on the
+//! synthetic digit workload (simulator or XLA backend).
+
+use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
+use xpoint_imc::array::TmvmMode;
+use xpoint_imc::cli::Args;
+use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig, SimBackend, XlaBackend};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
+use xpoint_imc::report;
+use xpoint_imc::runtime::{ArtifactStore, Runtime};
+use xpoint_imc::util::si::{format_duration, format_pct, format_si};
+
+const USAGE: &str = "\
+xpoint — 3D XPoint in-memory computing accelerator (Zabihi et al., 2021)
+
+USAGE: xpoint <command> [options]
+
+COMMANDS:
+  nm        noise-margin analysis of one design
+            --rows N --cols N --config 1|2|3 --lscale X --wscale X --span N
+  maxsize   largest N_row meeting an NM target
+            --config 1|2|3 --lscale X --target PCT
+  table1    metal-line configurations (paper Table I)
+  fig10     R_th / alpha_th vs N_row (paper Fig. 10)
+  fig11     voltage windows + acceptable region (paper Fig. 11)
+  fig13     NM sweeps, all four panels (paper Fig. 13)
+  table2    digit-recognition evaluation (paper Table II)
+  table3    multi-bit TMVM costs (paper Table III)
+  serve     run the coordinator on synthetic digits
+            --images N --workers N --batch N [--xla] [--parasitic]
+  help      this text
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn design_from_args(args: &Args) -> xpoint_imc::Result<ArrayDesign> {
+    let rows = args.get_usize("rows", 64)?;
+    let cols = args.get_usize("cols", 128)?;
+    let config = match args.get_or("config", "3").as_str() {
+        "1" => LineConfig::config1(),
+        "2" => LineConfig::config2(),
+        "3" => LineConfig::config3(),
+        other => anyhow::bail!("unknown config {other}"),
+    };
+    let l = args.get_f64("lscale", 4.0)?;
+    let w = args.get_f64("wscale", 1.0)?;
+    let mut d = ArrayDesign::new(rows, cols, config, l, w);
+    if let Some(span) = args.get("span") {
+        d = d.with_span(span.parse()?);
+    }
+    Ok(d)
+}
+
+fn run(args: &Args) -> xpoint_imc::Result<()> {
+    match args.command.as_deref() {
+        Some("nm") => {
+            let d = design_from_args(args)?;
+            let nm = noise_margin(&d);
+            println!(
+                "design: config {} {}×{} cell {:.0}×{:.0} nm span {}",
+                d.config.id,
+                d.n_row,
+                d.n_col,
+                d.cell.w_cell * 1e9,
+                d.cell.l_cell * 1e9,
+                d.span_cols
+            );
+            println!(
+                "first row: [{}, {}]",
+                format_si(nm.v_min_first, "V"),
+                format_si(nm.v_max_first, "V")
+            );
+            println!(
+                "last row:  [{}, {}]",
+                format_si(nm.v_min_last, "V"),
+                format_si(nm.v_max_last, "V")
+            );
+            println!(
+                "window:    [{}, {}]  NM = {}",
+                format_si(nm.v_lo(), "V"),
+                format_si(nm.v_hi(), "V"),
+                format_pct(nm.noise_margin())
+            );
+            Ok(())
+        }
+        Some("maxsize") => {
+            let d = design_from_args(args)?;
+            let target = args.get_f64("target", 0.0)? / 100.0;
+            let max = max_rows_for_nm(&d, target);
+            println!(
+                "config {} at L={:.0}nm: max N_row with NM ≥ {} is {}",
+                d.config.id,
+                d.cell.l_cell * 1e9,
+                format_pct(target),
+                max
+            );
+            Ok(())
+        }
+        Some("table1") => {
+            print!("{}", report::table1_rows().render());
+            Ok(())
+        }
+        Some("fig10") => {
+            let rows = report::fig10_series(&[16, 32, 64, 128, 256, 512, 1024, 2048], 100.0);
+            let mut t = xpoint_imc::util::Table::new("Fig. 10 — Thevenin vs N_row (config 1)")
+                .header(&["N_row", "R_th", "alpha_th"]);
+            for r in &rows {
+                t.row(&[
+                    r.n_row.to_string(),
+                    format_si(r.r_th, "Ω"),
+                    format!("{:.4}", r.alpha),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        Some("fig11") => {
+            let d = design_from_args(args)?;
+            let data = report::fig11_regions(&d, &[0.0, 2e3, 5e3, 10e3, 20e3]);
+            println!("design: {}", data.design);
+            println!(
+                "first-row window [{}, {}], last-row window [{}, {}]",
+                format_si(data.v_min_first, "V"),
+                format_si(data.v_max_first, "V"),
+                format_si(data.v_min_last, "V"),
+                format_si(data.v_max_last, "V")
+            );
+            println!("NM = {}", format_pct(data.nm));
+            println!("NM=0 boundary (alpha_min at R_th):");
+            for (r, a) in &data.boundary {
+                println!("  R_th = {:>8}: alpha ≥ {a:.3}", format_si(*r, "Ω"));
+            }
+            Ok(())
+        }
+        Some("fig13") => {
+            print!("{}", report::exhibits::fig13_table('a', "N_row").render());
+            print!("{}", report::exhibits::fig13_table('b', "L_cell/L_min").render());
+            print!("{}", report::exhibits::fig13_table('c', "W_cell/W_min").render());
+            print!("{}", report::exhibits::fig13_table('d', "N_column").render());
+            Ok(())
+        }
+        Some("table2") => {
+            let layer = match ArtifactStore::open_default() {
+                Ok(store) => store.single_layer()?,
+                Err(_) => {
+                    eprintln!("(artifacts missing — using template weights)");
+                    report::table2::template_layer()
+                }
+            };
+            let rows = report::table2_rows(&layer);
+            print!("{}", report::table2::table2_table(&rows).render());
+            Ok(())
+        }
+        Some("table3") => {
+            let (_, _, t) = report::table3_rows(0.9);
+            print!("{}", t.render());
+            Ok(())
+        }
+        Some("serve") => serve(args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command {other} (try `xpoint help`)"),
+    }
+}
+
+fn serve(args: &Args) -> xpoint_imc::Result<()> {
+    let n_images = args.get_usize("images", 1000)?;
+    let n_workers = args.get_usize("workers", 2)?;
+    let batch = args.get_usize("batch", 64)?;
+    let use_xla = args.has_flag("xla");
+    let mode = if args.has_flag("parasitic") {
+        TmvmMode::Parasitic
+    } else {
+        TmvmMode::Ideal
+    };
+
+    let store = ArtifactStore::open_default()?;
+    let layer = store.single_layer()?;
+    let design = ArrayDesign::new(batch.max(64), 128, LineConfig::config3(), 3.0, 1.0)
+        .with_span(layer.n_in());
+
+    let backends: Vec<xpoint_imc::coordinator::BackendFactory> = if use_xla {
+        println!("backend: XLA golden model (PJRT CPU, one client per worker)");
+        let v_dd = store.meta_f64("vdd_single")?;
+        (0..n_workers)
+            .map(|_| {
+                let layer = layer.clone();
+                let hlo = store.nn_infer_hlo();
+                Box::new(move || {
+                    let runtime = Runtime::cpu()?;
+                    Ok(Box::new(XlaBackend::new(&runtime, &hlo, layer, 64, v_dd)?)
+                        as Box<dyn xpoint_imc::coordinator::Backend>)
+                }) as xpoint_imc::coordinator::BackendFactory
+            })
+            .collect()
+    } else {
+        println!("backend: circuit-level simulator ({mode:?})");
+        (0..n_workers)
+            .map(|_| {
+                let layer = layer.clone();
+                let design = design.clone();
+                Box::new(move || {
+                    Ok(Box::new(SimBackend::new(layer, design, mode))
+                        as Box<dyn xpoint_imc::coordinator::Backend>)
+                }) as xpoint_imc::coordinator::BackendFactory
+            })
+            .collect()
+    };
+
+    let mut coord = Coordinator::spawn(
+        backends,
+        CoordinatorConfig {
+            batch_capacity: batch.min(64),
+            linger: std::time::Duration::from_micros(200),
+        },
+    );
+
+    let mut gen = DigitGen::new(TEST_SEED);
+    let started = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n_images);
+    for _ in 0..n_images {
+        let s = gen.next_sample();
+        receivers.push(coord.submit(s.pixels, Some(s.label)));
+    }
+    for rx in receivers {
+        rx.recv().expect("prediction");
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+
+    println!("images:          {}", snap.images);
+    println!("batches:         {}", snap.batches);
+    println!(
+        "host wall:       {} ({:.0} img/s)",
+        format_duration(wall),
+        n_images as f64 / wall
+    );
+    println!("host p(mean):    {}", format_duration(snap.mean_latency));
+    println!("simulated time:  {}", format_duration(snap.sim_time));
+    println!("sim energy:      {}", format_si(snap.energy, "J"));
+    println!("energy/image:    {}", format_si(snap.energy_per_image, "J"));
+    if let Some(acc) = snap.accuracy {
+        println!("accuracy:        {}", format_pct(acc));
+    }
+    Ok(())
+}

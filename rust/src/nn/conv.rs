@@ -1,0 +1,157 @@
+//! 2-D convolution lowered to TMVM (the paper's conclusion lists 2D
+//! convolution among the implemented kernels): an im2col unroll turns each
+//! output position's receptive field into a TMVM input vector, and each
+//! binary filter into a stored weight row.
+
+use super::layer::BinaryLayer;
+
+/// A binary 2-D convolution layer (single input channel, valid padding,
+/// stride 1).
+#[derive(Clone, Debug)]
+pub struct BinaryConv2d {
+    /// `filters[f][ky*kw + kx]` ∈ {0,1}.
+    pub filters: Vec<Vec<bool>>,
+    pub kh: usize,
+    pub kw: usize,
+    /// Shared firing threshold.
+    pub theta: usize,
+}
+
+impl BinaryConv2d {
+    pub fn new(filters: Vec<Vec<bool>>, kh: usize, kw: usize, theta: usize) -> Self {
+        assert!(!filters.is_empty());
+        assert!(filters.iter().all(|f| f.len() == kh * kw));
+        Self {
+            filters,
+            kh,
+            kw,
+            theta,
+        }
+    }
+
+    /// Output spatial dimensions for an `h×w` input.
+    pub fn out_shape(&self, h: usize, w: usize) -> (usize, usize) {
+        assert!(h >= self.kh && w >= self.kw);
+        (h - self.kh + 1, w - self.kw + 1)
+    }
+
+    /// im2col: unroll each output position's receptive field into a row of
+    /// the patch matrix (`patches[pos][kidx]`).
+    pub fn im2col(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
+        assert_eq!(image.len(), h * w);
+        let (oh, ow) = self.out_shape(h, w);
+        let mut patches = Vec::with_capacity(oh * ow);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut patch = Vec::with_capacity(self.kh * self.kw);
+                for ky in 0..self.kh {
+                    for kx in 0..self.kw {
+                        patch.push(image[(oy + ky) * w + (ox + kx)]);
+                    }
+                }
+                patches.push(patch);
+            }
+        }
+        patches
+    }
+
+    /// As a [`BinaryLayer`] over patch vectors — this is exactly what gets
+    /// mapped onto the subarray (patches stored as rows, filters applied as
+    /// word-line pulses).
+    pub fn as_layer(&self) -> BinaryLayer {
+        BinaryLayer::new(self.filters.clone(), self.theta)
+    }
+
+    /// Direct (reference) convolution: thresholded popcount per filter and
+    /// output position. `out[f][pos]`.
+    pub fn forward_direct(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
+        let (oh, ow) = self.out_shape(h, w);
+        let mut out = vec![vec![false; oh * ow]; self.filters.len()];
+        for (f, filt) in self.filters.iter().enumerate() {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0usize;
+                    for ky in 0..self.kh {
+                        for kx in 0..self.kw {
+                            if filt[ky * self.kw + kx] && image[(oy + ky) * w + (ox + kx)] {
+                                acc += 1;
+                            }
+                        }
+                    }
+                    out[f][oy * ow + ox] = acc >= self.theta;
+                }
+            }
+        }
+        out
+    }
+
+    /// Convolution through the im2col + TMVM path (functional).
+    pub fn forward_im2col(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
+        let patches = self.im2col(image, h, w);
+        let layer = self.as_layer();
+        let mut out = vec![vec![false; patches.len()]; self.filters.len()];
+        for (pos, patch) in patches.iter().enumerate() {
+            for (f, &bit) in layer.forward(patch).iter().enumerate() {
+                out[f][pos] = bit;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn im2col_matches_direct_convolution() {
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..25 {
+            let h = rng.range(3, 12);
+            let w = rng.range(3, 12);
+            let kh = rng.range(1, h.min(4) + 1);
+            let kw = rng.range(1, w.min(4) + 1);
+            let n_f = rng.range(1, 5);
+            let theta = rng.range(1, kh * kw + 1);
+            let filters: Vec<Vec<bool>> = (0..n_f)
+                .map(|_| (0..kh * kw).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+            let conv = BinaryConv2d::new(filters, kh, kw, theta);
+            let image: Vec<bool> = (0..h * w).map(|_| rng.bernoulli(0.5)).collect();
+            assert_eq!(
+                conv.forward_direct(&image, h, w),
+                conv.forward_im2col(&image, h, w),
+                "h={h} w={w} kh={kh} kw={kw} theta={theta}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_detector_fires_on_edges() {
+        // 3×1 vertical edge filter on an image with a vertical stripe
+        let conv = BinaryConv2d::new(vec![vec![true, true, true]], 3, 1, 3);
+        let (h, w) = (5usize, 4usize);
+        let mut image = vec![false; h * w];
+        for y in 0..h {
+            image[y * w + 2] = true; // stripe at x = 2
+        }
+        let out = conv.forward_direct(&image, h, w);
+        let (oh, ow) = conv.out_shape(h, w);
+        assert_eq!((oh, ow), (3, 4));
+        for oy in 0..oh {
+            for ox in 0..ow {
+                assert_eq!(out[0][oy * ow + ox], ox == 2, "({oy},{ox})");
+            }
+        }
+    }
+
+    #[test]
+    fn patch_count_matches_output_shape() {
+        let conv = BinaryConv2d::new(vec![vec![true; 9]], 3, 3, 1);
+        let image = vec![true; 11 * 11];
+        let patches = conv.im2col(&image, 11, 11);
+        assert_eq!(patches.len(), 9 * 9);
+        assert!(patches.iter().all(|p| p.len() == 9));
+    }
+}

@@ -1,0 +1,219 @@
+//! A binary fully-connected layer and its subarray execution (paper §III-B).
+//!
+//! **Execution scheme** (derived from the paper's Table II arithmetic and
+//! the Fig. 8 pipeline): the *images* are stored in the top PCM level (one
+//! image per row, `N` pixel columns) and the *weights* are applied as
+//! word-line voltage pulses — one computational step per output neuron,
+//! storing that neuron's thresholded dot products for **all stored images
+//! at once** in one bottom column. A batch of `M = N_row` images therefore
+//! finishes in `P` steps, i.e. `N_row / P` images per step — exactly the
+//! paper's "⌊N_row/P⌋ images per step" accounting.
+
+use crate::array::{Level, Subarray, TmvmMode, TmvmReport};
+
+/// A binary (0/1-weight) fully-connected layer with a shared integer
+/// firing threshold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BinaryLayer {
+    /// `weights[out][in]` ∈ {0, 1}.
+    pub weights: Vec<Vec<bool>>,
+    /// Shared firing threshold θ: neuron fires iff `Σ xᵢ·wᵢ ≥ θ`.
+    pub theta: usize,
+}
+
+impl BinaryLayer {
+    pub fn new(weights: Vec<Vec<bool>>, theta: usize) -> Self {
+        assert!(!weights.is_empty());
+        let n_in = weights[0].len();
+        assert!(weights.iter().all(|w| w.len() == n_in));
+        assert!(theta >= 1);
+        Self { weights, theta }
+    }
+
+    /// Build from a 0/1 float matrix (artifact interchange format).
+    pub fn from_matrix(m: &[Vec<f64>], theta: usize) -> Self {
+        let weights = m
+            .iter()
+            .map(|row| row.iter().map(|&v| v >= 0.5).collect())
+            .collect();
+        Self::new(weights, theta)
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.weights[0].len()
+    }
+
+    /// Functional dot-product counts (the golden model).
+    pub fn counts(&self, x: &[bool]) -> Vec<u32> {
+        assert_eq!(x.len(), self.n_in());
+        self.weights
+            .iter()
+            .map(|w| w.iter().zip(x).filter(|(&wi, &xi)| wi && xi).count() as u32)
+            .collect()
+    }
+
+    /// Functional thresholded forward pass.
+    pub fn forward(&self, x: &[bool]) -> Vec<bool> {
+        self.counts(x)
+            .into_iter()
+            .map(|c| c as usize >= self.theta)
+            .collect()
+    }
+
+    /// Functional classification: argmax of counts (first max wins).
+    pub fn argmax(&self, x: &[bool]) -> usize {
+        let counts = self.counts(x);
+        let mut best = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > counts[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Result of running a batch of images through a layer on a subarray.
+#[derive(Clone, Debug)]
+pub struct BatchRun {
+    /// `outputs[image][neuron]` — hardware thresholded bits.
+    pub outputs: Vec<Vec<bool>>,
+    /// Reports of the per-neuron computational steps.
+    pub steps: Vec<TmvmReport>,
+    /// Wall-clock of the batch \[s\].
+    pub time: f64,
+    /// Energy of the batch \[J\].
+    pub energy: f64,
+}
+
+impl BinaryLayer {
+    /// Run a batch of images (`images[i]` = pixel bits) through this layer
+    /// on `sa`: images are programmed into the top level (one per row) and
+    /// each neuron's weight vector is applied as a step of word-line
+    /// pulses; neuron `p`'s results land in bottom column `p`.
+    ///
+    /// Requires `images.len() ≤ sa.n_row()`, `n_in ≤ sa.n_col()`,
+    /// `n_out ≤ sa.n_col()`.
+    pub fn run_batch(&self, sa: &mut Subarray, images: &[Vec<bool>], mode: TmvmMode) -> BatchRun {
+        assert!(images.len() <= sa.n_row(), "batch exceeds rows");
+        assert!(self.n_in() <= sa.n_col(), "image exceeds columns");
+        assert!(self.n_out() <= sa.n_col(), "outputs exceed columns");
+        let t0 = sa.ledger.time;
+        let e0 = sa.ledger.energy;
+
+        // program images into the top level (zero-padded)
+        let mut grid = vec![vec![false; sa.n_col()]; sa.n_row()];
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(img.len(), self.n_in(), "image {i} size");
+            grid[i][..self.n_in()].copy_from_slice(img);
+        }
+        sa.program_level(Level::Top, &grid);
+
+        // one step per output neuron: weights as word-line voltages; rows
+        // beyond the batch are floated (no leakage, Fig. 4(b))
+        let v_dd = sa.vdd_for_threshold(self.theta);
+        let mut steps = Vec::with_capacity(self.n_out());
+        for (p, w) in self.weights.iter().enumerate() {
+            let mut inputs = vec![false; sa.n_col()];
+            inputs[..self.n_in()].copy_from_slice(w);
+            steps.push(sa.tmvm_rows(&inputs, p, v_dd, mode, images.len()));
+        }
+
+        let outputs = (0..images.len())
+            .map(|i| (0..self.n_out()).map(|p| steps[p].outputs[i]).collect())
+            .collect();
+        BatchRun {
+            outputs,
+            steps,
+            time: sa.ledger.time - t0,
+            energy: sa.ledger.energy - e0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ArrayDesign;
+    use crate::interconnect::LineConfig;
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            theta,
+        )
+    }
+
+    #[test]
+    fn counts_and_forward_agree() {
+        let mut rng = Pcg32::seeded(3);
+        let layer = random_layer(&mut rng, 5, 20, 4);
+        let x: Vec<bool> = (0..20).map(|_| rng.bernoulli(0.5)).collect();
+        let counts = layer.counts(&x);
+        let fwd = layer.forward(&x);
+        for (c, f) in counts.iter().zip(&fwd) {
+            assert_eq!(*f, *c >= 4);
+        }
+    }
+
+    #[test]
+    fn hardware_batch_matches_functional_ideal() {
+        let mut rng = Pcg32::seeded(8);
+        let layer = random_layer(&mut rng, 10, 25, 5);
+        let images: Vec<Vec<bool>> = (0..16)
+            .map(|_| (0..25).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let design = ArrayDesign::new(16, 32, LineConfig::config3(), 3.0, 1.0);
+        let mut sa = Subarray::new(design);
+        let run = layer.run_batch(&mut sa, &images, TmvmMode::Ideal);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], layer.forward(img), "image {i}");
+        }
+        assert!(run.steps.iter().all(|s| s.is_clean()));
+        // P steps of t_SET each (plus pipelined presets)
+        let t_set = sa.design().device.t_set;
+        assert!(
+            run.time >= 10.0 * t_set && run.time < 10.0 * t_set + 16.0 * 1e-6,
+            "time {}",
+            run.time
+        );
+    }
+
+    #[test]
+    fn from_matrix_roundtrip() {
+        let m = vec![vec![1.0, 0.0, 1.0], vec![0.0, 0.0, 1.0]];
+        let l = BinaryLayer::from_matrix(&m, 1);
+        assert_eq!(l.weights[0], vec![true, false, true]);
+        assert_eq!(l.weights[1], vec![false, false, true]);
+    }
+
+    #[test]
+    fn argmax_picks_strongest_neuron() {
+        let l = BinaryLayer::new(
+            vec![
+                vec![true, false, false, false],
+                vec![true, true, true, false],
+                vec![true, true, false, false],
+            ],
+            1,
+        );
+        assert_eq!(l.argmax(&[true, true, true, true]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch exceeds rows")]
+    fn oversize_batch_rejected() {
+        let layer = BinaryLayer::new(vec![vec![true; 4]; 2], 1);
+        let design = ArrayDesign::new(2, 8, LineConfig::config1(), 1.0, 1.0);
+        let mut sa = Subarray::new(design);
+        let images = vec![vec![true; 4]; 3];
+        layer.run_batch(&mut sa, &images, TmvmMode::Ideal);
+    }
+}

@@ -1,0 +1,197 @@
+//! Multi-layer binary NN on two linked subarrays (paper §IV-D, Fig. 8).
+//!
+//! Layer 1 runs weights-stored / image-applied: `W1` (H×N) lives in the top
+//! level of subarray 1; each image is applied as word-line pulses, its H
+//! hidden bits are computed in one step and deposited — through the
+//! BL-to-WLT link, which transposes — into one **row** of subarray 2's top
+//! level. After `M` steps, subarray 2 holds the M×H hidden matrix, and
+//! layer 2 runs in the weights-applied scheme (`P` steps for all M images).
+
+use super::layer::BinaryLayer;
+use crate::analysis::ArrayDesign;
+use crate::array::{Level, Subarray, TmvmMode};
+use crate::scaling::interlink::{LinkConfig, LinkedPair};
+
+/// A functional binary MLP (one hidden layer).
+#[derive(Clone, Debug)]
+pub struct BinaryMlp {
+    pub l1: BinaryLayer,
+    pub l2: BinaryLayer,
+}
+
+impl BinaryMlp {
+    pub fn new(l1: BinaryLayer, l2: BinaryLayer) -> Self {
+        assert_eq!(l2.n_in(), l1.n_out(), "layer shape mismatch");
+        Self { l1, l2 }
+    }
+
+    /// Functional forward pass (golden model).
+    pub fn forward(&self, x: &[bool]) -> Vec<bool> {
+        self.l2.forward(&self.l1.forward(x))
+    }
+
+    /// Functional classification through the hidden layer.
+    pub fn argmax(&self, x: &[bool]) -> usize {
+        self.l2.argmax(&self.l1.forward(x))
+    }
+}
+
+/// The Fig. 8 two-subarray pipeline execution.
+pub struct MlpOnSubarrays {
+    pub pair: LinkedPair,
+    pub mlp: BinaryMlp,
+}
+
+/// Result of a pipelined MLP batch.
+#[derive(Clone, Debug)]
+pub struct MlpBatchRun {
+    /// `outputs[image][class]` hardware bits.
+    pub outputs: Vec<Vec<bool>>,
+    /// Total steps executed (M hidden steps + P output steps).
+    pub steps: usize,
+    /// Batch energy \[J\] across both subarrays.
+    pub energy: f64,
+    /// Batch wall-clock \[s\].
+    pub time: f64,
+    /// Any electrical violations?
+    pub clean: bool,
+}
+
+impl MlpOnSubarrays {
+    /// Build the pipeline: `W1` is programmed into subarray 1's top level.
+    pub fn new(mlp: BinaryMlp, d1: ArrayDesign, d2: ArrayDesign) -> Self {
+        assert!(mlp.l1.n_out() <= d1.n_row, "hidden units exceed sub1 rows");
+        assert!(mlp.l1.n_in() <= d1.n_col, "inputs exceed sub1 columns");
+        assert!(mlp.l1.n_out() <= d2.n_col, "hidden units exceed sub2 columns");
+        assert!(mlp.l2.n_out() <= d2.n_col, "outputs exceed sub2 columns");
+        let mut src = Subarray::new(d1);
+        let dst = Subarray::new(d2);
+        // program W1 (zero-padded) into subarray 1
+        let mut grid = vec![vec![false; src.n_col()]; src.n_row()];
+        for (h, w) in mlp.l1.weights.iter().enumerate() {
+            grid[h][..w.len()].copy_from_slice(w);
+        }
+        src.program_level(Level::Top, &grid);
+        Self {
+            pair: LinkedPair::new(src, dst, LinkConfig::BlToWlt),
+            mlp,
+        }
+    }
+
+    /// Run a batch of `M ≤ sub2.n_row` images through the pipeline.
+    pub fn run_batch(&mut self, images: &[Vec<bool>], mode: TmvmMode) -> MlpBatchRun {
+        let m = images.len();
+        assert!(m <= self.pair.dst.n_row(), "batch exceeds sub2 rows");
+        let e0 = self.pair.src.ledger.energy + self.pair.dst.ledger.energy;
+        let t0 = self.pair.src.ledger.time + self.pair.dst.ledger.time;
+        let mut clean = true;
+
+        // --- stage 1: M steps, one per image ---
+        let v1 = self.pair.src.vdd_for_threshold(self.mlp.l1.theta);
+        for (i, img) in images.iter().enumerate() {
+            let mut inputs = vec![false; self.pair.src.n_col()];
+            inputs[..img.len()].copy_from_slice(img);
+            let rep = self.pair.tmvm_into(&inputs, i, v1, mode);
+            clean &= rep.is_clean();
+        }
+
+        // --- stage 2: P steps, weights-applied over the hidden matrix ---
+        let v2 = self.pair.dst.vdd_for_threshold(self.mlp.l2.theta);
+        let p_out = self.mlp.l2.n_out();
+        let mut step_reports = Vec::with_capacity(p_out);
+        for (p, w) in self.mlp.l2.weights.iter().enumerate() {
+            let mut inputs = vec![false; self.pair.dst.n_col()];
+            inputs[..w.len()].copy_from_slice(w);
+            let rep = self.pair.dst.tmvm(&inputs, p, v2, mode);
+            clean &= rep.is_clean();
+            step_reports.push(rep);
+        }
+
+        let outputs: Vec<Vec<bool>> = (0..m)
+            .map(|i| (0..p_out).map(|p| step_reports[p].outputs[i]).collect())
+            .collect();
+        let e1 = self.pair.src.ledger.energy + self.pair.dst.ledger.energy;
+        let t1 = self.pair.src.ledger.time + self.pair.dst.ledger.time;
+        MlpBatchRun {
+            outputs,
+            steps: m + p_out,
+            energy: e1 - e0,
+            time: t1 - t0,
+            clean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+    use crate::util::Pcg32;
+
+    fn random_mlp(rng: &mut Pcg32, n_in: usize, n_hidden: usize, n_out: usize) -> BinaryMlp {
+        let l1 = BinaryLayer::new(
+            (0..n_hidden)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            3,
+        );
+        let l2 = BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_hidden).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            2,
+        );
+        BinaryMlp::new(l1, l2)
+    }
+
+    #[test]
+    fn pipeline_matches_functional_forward() {
+        let mut rng = Pcg32::seeded(15);
+        let mlp = random_mlp(&mut rng, 20, 12, 5);
+        let images: Vec<Vec<bool>> = (0..8)
+            .map(|_| (0..20).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let d1 = ArrayDesign::new(16, 32, LineConfig::config3(), 3.0, 1.0);
+        let d2 = ArrayDesign::new(8, 16, LineConfig::config3(), 3.0, 1.0);
+        let mut pipe = MlpOnSubarrays::new(mlp.clone(), d1, d2);
+        let run = pipe.run_batch(&images, TmvmMode::Ideal);
+        assert!(run.clean);
+        assert_eq!(run.steps, 8 + 5);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], mlp.forward(img), "image {i}");
+        }
+        assert!(run.energy > 0.0 && run.time > 0.0);
+    }
+
+    #[test]
+    fn hidden_matrix_lands_transposed_in_sub2() {
+        let mut rng = Pcg32::seeded(25);
+        let mlp = random_mlp(&mut rng, 10, 6, 3);
+        let images: Vec<Vec<bool>> = (0..4)
+            .map(|_| (0..10).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let d1 = ArrayDesign::new(8, 16, LineConfig::config3(), 3.0, 1.0);
+        let d2 = ArrayDesign::new(4, 8, LineConfig::config3(), 3.0, 1.0);
+        let mlp2 = mlp.clone();
+        let mut pipe = MlpOnSubarrays::new(mlp, d1, d2);
+        pipe.run_batch(&images, TmvmMode::Ideal);
+        for (i, img) in images.iter().enumerate() {
+            let hidden = mlp2.l1.forward(img);
+            for (h, &bit) in hidden.iter().enumerate() {
+                assert_eq!(
+                    pipe.pair.dst.peek(Level::Top, i, h),
+                    bit,
+                    "hidden[{i}][{h}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_layers_rejected() {
+        let l1 = BinaryLayer::new(vec![vec![true; 4]; 3], 1);
+        let l2 = BinaryLayer::new(vec![vec![true; 5]; 2], 1);
+        let _ = BinaryMlp::new(l1, l2);
+    }
+}

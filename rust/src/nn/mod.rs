@@ -1,0 +1,11 @@
+//! Binary neural-network mapping onto 3D XPoint subarrays (paper §III-B,
+//! §IV-D) and the synthetic digit workload driving the Table II evaluation.
+
+pub mod dataset;
+pub mod layer;
+pub mod mlp;
+pub mod conv;
+
+pub use dataset::{Dataset, DigitGen, IMAGE_PIXELS, IMAGE_SIDE, N_CLASSES};
+pub use layer::BinaryLayer;
+pub use mlp::{BinaryMlp, MlpOnSubarrays};

@@ -1,0 +1,12 @@
+//! Every paper exhibit as a library function returning structured rows —
+//! shared by `cargo bench`, the examples and the CLI so the numbers are
+//! generated from exactly one code path.
+
+pub mod exhibits;
+pub mod table2;
+
+pub use exhibits::{
+    fig10_series, fig11_regions, fig13_sweeps, table1_rows, table3_rows, Fig10Row, Fig11Data,
+    Fig13Series,
+};
+pub use table2::{table2_rows, Table2Row, TABLE2_DESIGNS};

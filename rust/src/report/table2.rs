@@ -1,0 +1,161 @@
+//! Table II: digit-recognition evaluation across subarray sizes.
+//!
+//! Each design processes the 10K-image synthetic corpus: `M = N_row` images
+//! per batch, `P = 10` steps per batch ⇒ `⌊N_row/P⌋` images per step in the
+//! paper's accounting. Energy per image is measured by actually running a
+//! batch through the circuit-level simulator; NM comes from the
+//! workload-aware corner analysis (`span = 121` engaged columns).
+
+use crate::analysis::{noise_margin, ArrayDesign};
+use crate::array::{Subarray, TmvmMode};
+use crate::interconnect::LineConfig;
+use crate::nn::dataset::{DigitGen, TEST_SEED};
+use crate::nn::BinaryLayer;
+use crate::util::si::{format_duration, format_pct, format_si};
+use crate::util::Table;
+
+/// The paper's five design points: `(n_row, n_col, l_scale)` with
+/// `W = W_min = 36 nm` and `L = l_scale · L_min` (config 3, L_min = 80 nm):
+/// cell sizes 36×240 … 36×640 nm as in Table II.
+pub const TABLE2_DESIGNS: [(usize, usize, f64); 5] = [
+    (64, 128, 3.0),
+    (128, 256, 4.0),
+    (256, 512, 5.0),
+    (512, 1024, 6.0),
+    (1024, 2048, 8.0),
+];
+
+/// Number of classes (P) and corpus size from the paper.
+pub const P_OUT: usize = 10;
+pub const CORPUS: usize = 10_000;
+
+/// One evaluated row of Table II.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub n_row: usize,
+    pub n_col: usize,
+    pub cell_w_nm: f64,
+    pub cell_l_nm: f64,
+    pub images_per_step: usize,
+    pub energy_per_image: f64,
+    pub area_um2: f64,
+    pub exec_time: f64,
+    pub nm: f64,
+}
+
+/// Evaluate Table II with the given layer (trained artifact weights, or a
+/// self-contained fallback for artifact-free runs).
+pub fn table2_rows(layer: &BinaryLayer) -> Vec<Table2Row> {
+    assert_eq!(layer.n_out(), P_OUT);
+    let mut rows = Vec::new();
+    for &(n_row, n_col, l_scale) in &TABLE2_DESIGNS {
+        let design = ArrayDesign::new(n_row, n_col, LineConfig::config3(), l_scale, 1.0)
+            .with_span(layer.n_in());
+        let nm = noise_margin(&design).noise_margin();
+
+        // measure energy on one real batch (cap the batch for the big
+        // arrays — energy per image is size-independent, Table II)
+        let m = n_row.min(256);
+        let mut gen = DigitGen::new(TEST_SEED);
+        let images: Vec<Vec<bool>> = (0..m).map(|_| gen.next_sample().pixels).collect();
+        let mut sa = Subarray::new(design.clone());
+        let run = layer.run_batch(&mut sa, &images, TmvmMode::Ideal);
+        // per-image compute energy: the TMVM steps only (programming the
+        // images is a memory write shared with the storage role)
+        let step_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        let energy_per_image = step_energy / m as f64;
+
+        let images_per_step = n_row / P_OUT;
+        let steps = CORPUS.div_ceil(images_per_step);
+        let exec_time = steps as f64 * design.device.t_set;
+
+        rows.push(Table2Row {
+            n_row,
+            n_col,
+            cell_w_nm: design.cell.w_cell * 1e9,
+            cell_l_nm: design.cell.l_cell * 1e9,
+            images_per_step,
+            energy_per_image,
+            area_um2: design.area() * 1e12,
+            exec_time,
+            nm,
+        });
+    }
+    rows
+}
+
+/// Render Table II.
+pub fn table2_table(rows: &[Table2Row]) -> Table {
+    let mut t = Table::new("Table II — digit recognition across subarray sizes (config 3)")
+        .header(&[
+            "Subarray",
+            "Cell (nm×nm)",
+            "#Img/Step",
+            "Energy/Image",
+            "Area (µm²)",
+            "Exec Time",
+            "NM",
+        ]);
+    for r in rows {
+        t.row(&[
+            format!("{}×{}", r.n_row, r.n_col),
+            format!("{:.0}×{:.0}", r.cell_w_nm, r.cell_l_nm),
+            r.images_per_step.to_string(),
+            format_si(r.energy_per_image, "J"),
+            format!("{:.1}", r.area_um2),
+            format_duration(r.exec_time),
+            format_pct(r.nm),
+        ]);
+    }
+    t
+}
+
+/// Self-contained fallback layer (glyph templates as weights) for runs
+/// without artifacts. The trained artifact layer is preferred.
+pub fn template_layer() -> BinaryLayer {
+    use crate::nn::dataset::{DigitGen as G, IMAGE_SIDE, N_CLASSES};
+    let weights = (0..N_CLASSES)
+        .map(|c| {
+            (0..IMAGE_SIDE * IMAGE_SIDE)
+                .map(|i| G::template_pixel(c, i / IMAGE_SIDE, i % IMAGE_SIDE))
+                .collect()
+        })
+        .collect();
+    BinaryLayer::new(weights, 20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_reproduces_paper_shapes() {
+        let rows = table2_rows(&template_layer());
+        assert_eq!(rows.len(), 5);
+        // images/step: 6, 12, 25, 51, 102 (Table II)
+        let ips: Vec<usize> = rows.iter().map(|r| r.images_per_step).collect();
+        assert_eq!(ips, vec![6, 12, 25, 51, 102]);
+        // exec time: 133.3µs down to ~7.8µs, ≈17× speedup
+        assert!((rows[0].exec_time - 133.4e-6).abs() < 1e-6, "{}", rows[0].exec_time);
+        assert!((rows[4].exec_time - 7.9e-6).abs() < 2e-7, "{}", rows[4].exec_time);
+        let speedup = rows[0].exec_time / rows[4].exec_time;
+        assert!(speedup > 15.0 && speedup < 19.0, "speedup {speedup}");
+        // energy/image ~constant (tens of pJ), size-independent
+        let e0 = rows[0].energy_per_image;
+        assert!(e0 > 1e-12 && e0 < 100e-12, "E {e0}");
+        for r in &rows[1..] {
+            let ratio = r.energy_per_image / e0;
+            assert!(ratio > 0.8 && ratio < 1.25, "energy drift {ratio}");
+        }
+        // NM decreases with size but stays positive
+        assert!(rows.windows(2).all(|w| w[1].nm <= w[0].nm + 1e-9));
+        assert!(rows[4].nm > 0.0, "largest design still acceptable");
+        // cell sizes match the paper column
+        assert_eq!(
+            rows.iter()
+                .map(|r| format!("{:.0}x{:.0}", r.cell_w_nm, r.cell_l_nm))
+                .collect::<Vec<_>>(),
+            vec!["36x240", "36x320", "36x400", "36x480", "36x640"]
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Artifact store: discovery and typed loading of `make artifacts` outputs.
+
+use anyhow::Context;
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+
+use crate::nn::BinaryLayer;
+use crate::util::io;
+
+/// Typed access to the artifacts directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open the default artifacts directory (repo `artifacts/`).
+    pub fn open_default() -> crate::Result<Self> {
+        Self::open(io::artifacts_dir())
+    }
+
+    /// Open a specific directory.
+    pub fn open(dir: PathBuf) -> crate::Result<Self> {
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifacts directory {} missing — run `make artifacts`",
+            dir.display()
+        );
+        Ok(Self { dir })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Path to the single-layer inference HLO.
+    pub fn nn_infer_hlo(&self) -> PathBuf {
+        self.path("nn_infer.hlo.txt")
+    }
+
+    /// Path to the MLP inference HLO.
+    pub fn mlp_infer_hlo(&self) -> PathBuf {
+        self.path("mlp_infer.hlo.txt")
+    }
+
+    /// Load the `meta.txt` key-value metadata.
+    pub fn meta(&self) -> crate::Result<HashMap<String, String>> {
+        let path = self.path("meta.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts`", path.display()))?;
+        Ok(parse_meta(&text))
+    }
+
+    /// Typed metadata lookup.
+    pub fn meta_f64(&self, key: &str) -> crate::Result<f64> {
+        let meta = self.meta()?;
+        let v = meta
+            .get(key)
+            .with_context(|| format!("meta key {key} missing"))?;
+        v.parse().with_context(|| format!("meta {key}={v} not a number"))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> crate::Result<usize> {
+        Ok(self.meta_f64(key)? as usize)
+    }
+
+    /// Load a binary weight matrix in rust layout (`[out][in]`).
+    pub fn weights(&self, name: &str) -> crate::Result<Vec<Vec<f64>>> {
+        io::load_matrix(&self.path(name))
+    }
+
+    /// The trained single-layer network, threshold included.
+    pub fn single_layer(&self) -> crate::Result<BinaryLayer> {
+        let w = self.weights("w_single.txt")?;
+        let theta = self.meta_usize("theta_single")?;
+        Ok(BinaryLayer::from_matrix(&w, theta))
+    }
+
+    /// The trained MLP layers `(l1, l2)`.
+    pub fn mlp_layers(&self) -> crate::Result<(BinaryLayer, BinaryLayer)> {
+        let w1 = self.weights("w_mlp1.txt")?;
+        let w2 = self.weights("w_mlp2.txt")?;
+        let t1 = self.meta_usize("theta_mlp1")?;
+        let t2 = self.meta_usize("theta_mlp2")?;
+        Ok((
+            BinaryLayer::from_matrix(&w1, t1),
+            BinaryLayer::from_matrix(&w2, t2),
+        ))
+    }
+
+    /// The cross-language dataset check samples: `(labels, images)`.
+    pub fn dataset_check(&self) -> crate::Result<(Vec<usize>, Vec<Vec<bool>>)> {
+        let m = io::load_matrix(&self.path("dataset_check.txt"))?;
+        let labels = m.iter().map(|row| row[0] as usize).collect();
+        let images = m
+            .iter()
+            .map(|row| row[1..].iter().map(|&v| v >= 0.5).collect())
+            .collect();
+        Ok((labels, images))
+    }
+}
+
+/// Parse `key value` lines.
+pub fn parse_meta(text: &str) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        if let Some((k, v)) = line.trim().split_once(' ') {
+            out.insert(k.to_string(), v.trim().to_string());
+        }
+    }
+    out
+}
+
+/// Does the default artifacts directory look populated? (Used by tests to
+/// skip gracefully with a pointer to `make artifacts`.)
+pub fn artifacts_available() -> bool {
+    let dir = io::artifacts_dir();
+    dir.join("meta.txt").exists() && dir.join("nn_infer.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_lines() {
+        let m = parse_meta("theta_single 27\nvdd_single 0.324\n# junk\n");
+        assert_eq!(m.get("theta_single").unwrap(), "27");
+        assert_eq!(m.get("vdd_single").unwrap(), "0.324");
+    }
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let err = ArtifactStore::open(PathBuf::from("/nonexistent/xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute them
+//! from rust. Python never runs on this path.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::ArtifactStore;
+pub use pjrt::{Executable, Runtime, TensorF32};

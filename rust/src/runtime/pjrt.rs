@@ -1,0 +1,132 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::Context;
+use std::path::Path;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data");
+        Self { dims, data }
+    }
+
+    /// 2-D constructor from nested rows.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Self::new(vec![r, c], rows.iter().flatten().copied().collect())
+    }
+
+    /// Scalar as a (1,1) tensor (the AOT graphs take scalars this way).
+    pub fn scalar(v: f32) -> Self {
+        Self::new(vec![1, 1], vec![v])
+    }
+
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+/// PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Construct the CPU PJRT client.
+    pub fn cpu() -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (once; execution is cheap).
+    pub fn load_hlo_text(&self, path: &Path) -> crate::Result<Executable> {
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened tuple outputs as
+    /// host tensors (jax graphs are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[TensorF32]) -> crate::Result<Vec<TensorF32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(TensorF32::to_literal)
+            .collect::<crate::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let elems = result.to_tuple().context("untupling result")?;
+        elems
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().context("result shape")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().context("result data")?;
+                Ok(TensorF32::new(dims, data))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data")]
+    fn tensor_shape_mismatch_panics() {
+        let _ = TensorF32::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn from_rows_flattens_row_major() {
+        let t = TensorF32::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    // PJRT execution is covered by rust/tests/integration_runtime.rs
+    // (needs artifacts on disk).
+}

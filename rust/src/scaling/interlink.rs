@@ -1,0 +1,232 @@
+//! Inter-subarray links (paper Fig. 6): switches connect the bit lines of
+//! subarray 1 to either the bit lines (BL-to-BL) or the top word lines
+//! (BL-to-WLT) of subarray 2, so a TMVM computed in subarray 1 deposits its
+//! thresholded results directly into a PCM level of subarray 2.
+//!
+//! The line-state tables here reproduce supplementary Table VII.
+
+use crate::array::{Level, Subarray, TmvmMode, TmvmReport};
+
+/// The two switch configurations of Fig. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkConfig {
+    /// Fig. 6(a): BLs of subarray 1 → BLs of subarray 2; results land in
+    /// the **bottom** PCM level of subarray 2.
+    BlToBl,
+    /// Fig. 6(b): BLs of subarray 1 → WLTs of subarray 2; results land in
+    /// the **top** PCM level of subarray 2.
+    BlToWlt,
+}
+
+/// Line groups of a subarray.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineGroup {
+    Wlt,
+    Bl,
+    Wlb,
+}
+
+/// Electrical state of a line group during a linked computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineState {
+    /// Input voltages applied.
+    Driven,
+    /// Carrying computation current.
+    Active,
+    /// High-impedance.
+    Floated,
+    /// Floated except the output row/column, which is grounded.
+    FloatedExceptOutputGrounded,
+}
+
+impl LinkConfig {
+    /// Supplementary Table VII: the state of each line group in each
+    /// subarray during the linked computation.
+    pub fn line_state(&self, subarray: u8, group: LineGroup) -> LineState {
+        use LineGroup::*;
+        use LineState::*;
+        match (self, subarray, group) {
+            (LinkConfig::BlToBl, 1, Wlt) => Driven,
+            (LinkConfig::BlToBl, 2, Wlt) => Floated,
+            (LinkConfig::BlToBl, 1, Bl) => Active,
+            (LinkConfig::BlToBl, 2, Bl) => Active,
+            (LinkConfig::BlToBl, 1, Wlb) => Floated,
+            (LinkConfig::BlToBl, 2, Wlb) => FloatedExceptOutputGrounded,
+            (LinkConfig::BlToWlt, 1, Wlt) => Driven,
+            (LinkConfig::BlToWlt, 2, Wlt) => Active,
+            (LinkConfig::BlToWlt, 1, Bl) => Active,
+            (LinkConfig::BlToWlt, 2, Bl) => FloatedExceptOutputGrounded,
+            (LinkConfig::BlToWlt, 1, Wlb) => Floated,
+            (LinkConfig::BlToWlt, 2, Wlb) => Floated,
+            _ => panic!("subarray must be 1 or 2"),
+        }
+    }
+
+    /// PCM level of subarray 2 receiving the results.
+    pub fn destination_level(&self) -> Level {
+        match self {
+            LinkConfig::BlToBl => Level::Bottom,
+            LinkConfig::BlToWlt => Level::Top,
+        }
+    }
+}
+
+/// Two subarrays joined by a switch fabric.
+pub struct LinkedPair {
+    pub src: Subarray,
+    pub dst: Subarray,
+    pub link: LinkConfig,
+    /// Per-switch series resistance \[Ω\] (adds a small drop to the linked
+    /// path; kept for energy accounting).
+    pub r_switch: f64,
+}
+
+impl LinkedPair {
+    pub fn new(src: Subarray, dst: Subarray, link: LinkConfig) -> Self {
+        match link {
+            // BL-to-BL: src bit lines continue into dst bit lines — rows
+            // align, results land in a dst *column*.
+            LinkConfig::BlToBl => assert!(
+                dst.n_row() >= src.n_row(),
+                "BL-to-BL: dst must have at least src's rows"
+            ),
+            // BL-to-WLT: src bit line j drives dst word line j — the link
+            // *transposes*: src row j lands in dst column j of one dst row.
+            LinkConfig::BlToWlt => assert!(
+                dst.n_col() >= src.n_row(),
+                "BL-to-WLT: dst must have at least src's rows as columns"
+            ),
+        }
+        Self {
+            src,
+            dst,
+            link,
+            r_switch: 50.0,
+        }
+    }
+
+    /// Run a TMVM in the source subarray and deposit the thresholded
+    /// results into the destination subarray (Fig. 6):
+    ///
+    /// * `BlToBl` — results land in bottom-level **column** `dst_idx`
+    ///   (row-aligned).
+    /// * `BlToWlt` — results land in top-level **row** `dst_idx` (the link
+    ///   transposes: src row `j` → dst column `j`). This is what makes the
+    ///   Fig. 8 multi-layer pipeline work: per-image hidden vectors arrive
+    ///   as rows of subarray 2, ready for weights-applied layer-2 TMVM.
+    ///
+    /// Returns the TMVM report of the source computation.
+    pub fn tmvm_into(
+        &mut self,
+        inputs: &[bool],
+        dst_idx: usize,
+        v_dd: f64,
+        mode: TmvmMode,
+    ) -> TmvmReport {
+        // The physical current path crosses the switches into subarray 2;
+        // electrically the destination cells act as the output cells. The
+        // simulator computes the thresholded currents in the source array
+        // (scratch column 0) and programs the destination level.
+        let report = self.src.tmvm(inputs, 0, v_dd, mode);
+        let level = self.link.destination_level();
+        for (j, &bit) in report.outputs.iter().enumerate() {
+            // destination writes ride the same computation pulse: book only
+            // the (tiny) switch losses, not an extra write slot.
+            match self.link {
+                LinkConfig::BlToBl => self.dst.force_level_bit(level, j, dst_idx, bit),
+                LinkConfig::BlToWlt => self.dst.force_level_bit(level, dst_idx, j, bit),
+            }
+        }
+        let i_total: f64 = report.currents.iter().sum();
+        self.dst.ledger.energy += i_total * i_total * self.r_switch * self.src.design().device.t_set;
+        report
+    }
+}
+
+impl Subarray {
+    /// Directly set a destination cell during a linked computation (the
+    /// programming energy is carried by the source pulse).
+    pub(crate) fn force_level_bit(&mut self, level: Level, row: usize, col: usize, bit: bool) {
+        match level {
+            Level::Bottom => self.force_bottom(row, col, bit),
+            Level::Top => self.force_top(row, col, bit),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ArrayDesign;
+    use crate::interconnect::LineConfig;
+
+    fn sa(n_row: usize, n_col: usize) -> Subarray {
+        Subarray::new(ArrayDesign::new(n_row, n_col, LineConfig::config3(), 3.0, 1.0))
+    }
+
+    #[test]
+    fn table_vii_line_states() {
+        use LineGroup::*;
+        use LineState::*;
+        let a = LinkConfig::BlToBl;
+        assert_eq!(a.line_state(1, Wlt), Driven);
+        assert_eq!(a.line_state(2, Wlt), Floated);
+        assert_eq!(a.line_state(2, Wlb), FloatedExceptOutputGrounded);
+        let b = LinkConfig::BlToWlt;
+        assert_eq!(b.line_state(2, Wlt), Active);
+        assert_eq!(b.line_state(2, Bl), FloatedExceptOutputGrounded);
+        assert_eq!(b.line_state(2, Wlb), Floated);
+    }
+
+    #[test]
+    fn destination_levels_match_fig6() {
+        assert_eq!(LinkConfig::BlToBl.destination_level(), Level::Bottom);
+        assert_eq!(LinkConfig::BlToWlt.destination_level(), Level::Top);
+    }
+
+    #[test]
+    fn linked_tmvm_lands_in_destination() {
+        let n = 4;
+        let mut src = sa(n, n);
+        let eye: Vec<Vec<bool>> = (0..n).map(|r| (0..n).map(|c| r == c).collect()).collect();
+        src.program_level(Level::Top, &eye);
+        let v = src.vdd_for_threshold(1);
+        let dst = sa(3, n);
+        let mut pair = LinkedPair::new(src, dst, LinkConfig::BlToWlt);
+        let mut x = vec![false; n];
+        x[2] = true;
+        let rep = pair.tmvm_into(&x, 1, v, TmvmMode::Ideal);
+        assert!(rep.is_clean());
+        // transposed landing: src row j → dst (row 1, col j)
+        for j in 0..n {
+            assert_eq!(pair.dst.peek(Level::Top, 1, j), j == 2);
+            assert!(!pair.dst.peek(Level::Bottom, 1, j), "top-level landing");
+        }
+    }
+
+    #[test]
+    fn bl_to_bl_lands_in_bottom() {
+        let n = 3;
+        let mut src = sa(n, n);
+        src.program_level(Level::Top, &vec![vec![true; n]; n]);
+        let v = src.vdd_for_threshold(n);
+        let dst = sa(n, 2);
+        let mut pair = LinkedPair::new(src, dst, LinkConfig::BlToBl);
+        pair.tmvm_into(&vec![true; n], 0, v, TmvmMode::Ideal);
+        for r in 0..n {
+            assert!(pair.dst.peek(Level::Bottom, r, 0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "BL-to-BL")]
+    fn undersized_destination_rejected() {
+        let _ = LinkedPair::new(sa(8, 4), sa(4, 4), LinkConfig::BlToBl);
+    }
+
+    #[test]
+    #[should_panic(expected = "BL-to-WLT")]
+    fn undersized_transposed_destination_rejected() {
+        let _ = LinkedPair::new(sa(8, 4), sa(8, 4), LinkConfig::BlToWlt);
+    }
+}

@@ -1,0 +1,8 @@
+//! Multi-subarray scaling (paper §IV-B, Fig. 6, supplementary Table VII):
+//! switch fabrics connecting subarrays and tiling of large operands.
+
+pub mod interlink;
+pub mod tiling;
+
+pub use interlink::{LineGroup, LineState, LinkConfig, LinkedPair};
+pub use tiling::{TileAssignment, Tiling};

@@ -1,0 +1,126 @@
+//! Mini property-based testing framework (offline replacement for
+//! `proptest`).
+//!
+//! Usage:
+//!
+//! ```
+//! use xpoint_imc::testing::{forall, Config};
+//! use xpoint_imc::util::Pcg32;
+//!
+//! forall(Config::default().cases(200), "addition commutes", |rng: &mut Pcg32| {
+//!     let a = rng.range_f64(-1e3, 1e3);
+//!     let b = rng.range_f64(-1e3, 1e3);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! On failure the harness panics with the failing seed and case index so the
+//! exact case can be replayed with `Config::default().seed(...)`.
+
+use crate::util::Pcg32;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            // Allow external seed override for replay:
+            // XPOINT_PROP_SEED=1234 cargo test
+            seed: match std::env::var("XPOINT_PROP_SEED") {
+                Ok(s) => s.parse().unwrap_or(0x5eed_0001),
+                Err(_) => 0x5eed_0001,
+            },
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` for `config.cases` generated cases. `prop` receives a PRNG
+/// seeded per-case and returns `Err(description)` on violation.
+pub fn forall<F>(config: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::new(case_seed, 0x70_70);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' falsified at case {case}/{} \
+                 (replay: Config::default().seed({case_seed}).cases(1)): {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to relative tolerance, with a labelled message.
+pub fn check_close(label: &str, got: f64, want: f64, tol: f64) -> Result<(), String> {
+    if crate::util::stats::approx_eq(got, want, tol) {
+        Ok(())
+    } else {
+        Err(format!(
+            "{label}: got {got:.9e}, want {want:.9e} (rel err {:.3e} > tol {tol:.1e})",
+            crate::util::stats::rel_err(got, want)
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::default().cases(37), "count", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 37);
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_panics_with_seed() {
+        forall(Config::default().cases(10), "always-fails", |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn check_close_reports_error() {
+        assert!(check_close("x", 1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        let e = check_close("x", 1.0, 2.0, 1e-9).unwrap_err();
+        assert!(e.contains("rel err"));
+    }
+
+    #[test]
+    fn cases_are_distinct() {
+        let mut firsts = Vec::new();
+        forall(Config::default().cases(20), "distinct", |rng| {
+            firsts.push(rng.next_u32());
+            Ok(())
+        });
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert!(firsts.len() > 15, "case seeds should differ");
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal text I/O: results CSV emission and the whitespace matrix format
+//! shared with the python compile path (`artifacts/*.txt`).
+//!
+//! Matrix text format (python `numpy.savetxt`-compatible subset):
+//! one row per line, whitespace-separated decimal floats; `#`-prefixed
+//! comment lines ignored.
+
+use anyhow::{bail, Context};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Write `contents` to `results/<name>`, creating the directory.
+pub fn write_result(name: &str, contents: &str) -> crate::Result<PathBuf> {
+    let dir = results_dir();
+    fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    fs::write(&path, contents).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Directory for generated result files (CSV series for figures, etc.).
+pub fn results_dir() -> PathBuf {
+    repo_root().join("results")
+}
+
+/// Directory holding AOT artifacts produced by `make artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    repo_root().join("artifacts")
+}
+
+/// Best-effort repo root: honour `XPOINT_REPO_ROOT`, else the cargo
+/// manifest directory at build time, else the current directory.
+pub fn repo_root() -> PathBuf {
+    if let Ok(root) = std::env::var("XPOINT_REPO_ROOT") {
+        return PathBuf::from(root);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Load a whitespace-separated float matrix. All rows must have equal
+/// length.
+pub fn load_matrix(path: &Path) -> crate::Result<Vec<Vec<f64>>> {
+    let text = fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_matrix(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse the matrix text format.
+pub fn parse_matrix(text: &str) -> crate::Result<Vec<Vec<f64>>> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> = line.split_whitespace().map(str::parse::<f64>).collect();
+        let row = row.with_context(|| format!("line {}", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if first.len() != row.len() {
+                bail!(
+                    "ragged matrix: line {} has {} cols, expected {}",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                );
+            }
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Serialize a matrix in the shared text format.
+pub fn format_matrix(rows: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Save a matrix to a file.
+pub fn save_matrix(path: &Path, rows: &[Vec<f64>]) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, format_matrix(rows)).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = vec![vec![1.0, 2.5, -3.0], vec![0.0, 1e-9, 4.0]];
+        let parsed = parse_matrix(&format_matrix(&m)).unwrap();
+        assert_eq!(parsed, m);
+    }
+
+    #[test]
+    fn matrix_skips_comments_and_blanks() {
+        let parsed = parse_matrix("# header\n\n1 2\n3 4\n").unwrap();
+        assert_eq!(parsed, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn matrix_rejects_ragged() {
+        assert!(parse_matrix("1 2\n3\n").is_err());
+    }
+
+    #[test]
+    fn matrix_rejects_garbage() {
+        assert!(parse_matrix("1 x\n").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained utility substrates (offline build: no `rand`, no `serde`).
+
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod si;
+pub mod io;
+
+pub use prng::{Pcg32, SplitMix64};
+pub use stats::Summary;
+pub use table::Table;

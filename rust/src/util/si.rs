@@ -1,0 +1,75 @@
+//! SI-unit formatting for human-readable reports: `1.5e-5 A` → `"15.0µA"`.
+
+const PREFIXES: &[(f64, &str)] = &[
+    (1e12, "T"),
+    (1e9, "G"),
+    (1e6, "M"),
+    (1e3, "k"),
+    (1.0, ""),
+    (1e-3, "m"),
+    (1e-6, "µ"),
+    (1e-9, "n"),
+    (1e-12, "p"),
+    (1e-15, "f"),
+];
+
+/// Format `value` with an SI prefix and the given unit, 3 significant-ish
+/// digits (`format_si(2.15e-11, "J") == "21.5pJ"`).
+pub fn format_si(value: f64, unit: &str) -> String {
+    if value == 0.0 {
+        return format!("0{unit}");
+    }
+    if !value.is_finite() {
+        return format!("{value}{unit}");
+    }
+    let mag = value.abs();
+    for &(scale, prefix) in PREFIXES {
+        if mag >= scale {
+            let scaled = value / scale;
+            return if scaled.abs() >= 100.0 {
+                format!("{scaled:.0}{prefix}{unit}")
+            } else if scaled.abs() >= 10.0 {
+                format!("{scaled:.1}{prefix}{unit}")
+            } else {
+                format!("{scaled:.2}{prefix}{unit}")
+            };
+        }
+    }
+    format!("{value:.3e}{unit}")
+}
+
+/// Format seconds as an adaptive duration (`80e-9` → `"80.0ns"`).
+pub fn format_duration(seconds: f64) -> String {
+    format_si(seconds, "s")
+}
+
+/// Format a ratio as a percentage with one decimal (`0.651` → `"65.1%"`).
+pub fn format_pct(ratio: f64) -> String {
+    format!("{:.1}%", ratio * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_currents() {
+        assert_eq!(format_si(50e-6, "A"), "50.0µA");
+        assert_eq!(format_si(100e-6, "A"), "100µA");
+        assert_eq!(format_si(1.5e-3, "A"), "1.50mA");
+    }
+
+    #[test]
+    fn formats_energy_and_time() {
+        assert_eq!(format_si(21.5e-12, "J"), "21.5pJ");
+        assert_eq!(format_duration(80e-9), "80.0ns");
+        assert_eq!(format_duration(133.3e-6), "133µs");
+    }
+
+    #[test]
+    fn formats_edge_cases() {
+        assert_eq!(format_si(0.0, "V"), "0V");
+        assert_eq!(format_pct(0.345), "34.5%");
+        assert_eq!(format_si(-0.31, "V"), "-310mV");
+    }
+}

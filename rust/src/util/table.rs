@@ -1,0 +1,138 @@
+//! Aligned ASCII table rendering for report/bench output.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header<S: AsRef<str>>(mut self, cols: &[S]) -> Self {
+        self.header = cols.iter().map(|c| c.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> &mut Self {
+        self.rows
+            .push(cells.iter().map(|c| c.as_ref().to_string()).collect());
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a string with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(display_width(h));
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(display_width(c));
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+\n";
+        if !self.header.is_empty() {
+            out.push_str(&sep);
+            out.push_str(&render_row(&self.header, &widths));
+        }
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths));
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    /// Render as CSV (no quoting of separators inside cells — callers keep
+    /// cells simple).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            out.push_str(&self.header.join(","));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+fn render_row(cells: &[String], widths: &[usize]) -> String {
+    let mut line = String::new();
+    for (i, w) in widths.iter().enumerate() {
+        let cell = cells.get(i).map(String::as_str).unwrap_or("");
+        let pad = w - display_width(cell);
+        line.push_str(&format!("| {}{} ", cell, " ".repeat(pad)));
+    }
+    line.push_str("|\n");
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["a", "long-col"]);
+        t.row(&["1", "2"]);
+        t.row(&["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        // all data lines have equal length
+        let lens: Vec<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x").header(&["c1", "c2"]);
+        t.row(&["1", "2"]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "c1,c2\n1,2\n");
+    }
+
+    #[test]
+    fn unicode_cells_align() {
+        let mut t = Table::new("u").header(&["val"]);
+        t.row(&["21.5µJ"]);
+        t.row(&["1J"]);
+        let s = t.render();
+        let lens: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+}

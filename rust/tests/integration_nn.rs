@@ -1,0 +1,113 @@
+//! Integration: NN layers on subarrays against their functional golden
+//! models, and classification quality on the synthetic digit corpus.
+
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::{Subarray, TmvmMode};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::conv::BinaryConv2d;
+use xpoint_imc::nn::dataset::{DigitGen, IMAGE_SIDE, TEST_SEED};
+use xpoint_imc::nn::mlp::MlpOnSubarrays;
+use xpoint_imc::nn::{BinaryLayer, BinaryMlp};
+use xpoint_imc::report::table2::template_layer;
+
+#[test]
+fn template_layer_beats_chance_comfortably() {
+    let layer = template_layer();
+    let ds = DigitGen::new(TEST_SEED).dataset(500);
+    let correct = ds
+        .samples
+        .iter()
+        .filter(|s| layer.argmax(&s.pixels) == s.label)
+        .count();
+    let acc = correct as f64 / ds.len() as f64;
+    assert!(acc > 0.5, "template accuracy {acc} (chance = 0.1)");
+}
+
+#[test]
+fn hardware_batches_match_functional_on_digits() {
+    let layer = template_layer();
+    let ds = DigitGen::new(7).dataset(128);
+    let design = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0).with_span(121);
+    let mut sa = Subarray::new(design);
+    for chunk in ds.samples.chunks(64) {
+        let images: Vec<Vec<bool>> = chunk.iter().map(|s| s.pixels.clone()).collect();
+        let run = layer.run_batch(&mut sa, &images, TmvmMode::Ideal);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], layer.forward(img));
+        }
+        assert!(run.steps.iter().all(|s| s.is_clean()));
+    }
+    // Table II accounting: 64-row batch finishes its 10 neuron steps in
+    // 10·t_SET of array busy time
+    let t_set = 80e-9;
+    assert!(sa.ledger.steps == 20, "2 batches × 10 steps");
+    assert!(sa.ledger.time > 20.0 * t_set * 0.9);
+}
+
+#[test]
+fn mlp_pipeline_on_two_subarrays_matches_functional() {
+    let mut gen = DigitGen::new(42);
+    let images: Vec<Vec<bool>> = (0..16).map(|_| gen.next_sample().pixels).collect();
+
+    // small trained-ish MLP: class templates as detectors + readout
+    let l1 = template_layer(); // 10 detectors, theta 20
+    let eye: Vec<Vec<bool>> = (0..10).map(|r| (0..10).map(|c| r == c).collect()).collect();
+    let l2 = BinaryLayer::new(eye, 1);
+    let mlp = BinaryMlp::new(l1, l2);
+
+    let d1 = ArrayDesign::new(16, 128, LineConfig::config3(), 3.0, 1.0);
+    let d2 = ArrayDesign::new(16, 16, LineConfig::config3(), 3.0, 1.0);
+    let mut pipe = MlpOnSubarrays::new(mlp.clone(), d1, d2);
+    let run = pipe.run_batch(&images, TmvmMode::Ideal);
+    assert!(run.clean);
+    assert_eq!(run.steps, 16 + 10);
+    for (i, img) in images.iter().enumerate() {
+        assert_eq!(run.outputs[i], mlp.forward(img), "image {i}");
+    }
+}
+
+#[test]
+fn conv_as_tmvm_runs_on_subarray() {
+    // 3×3 binary edge filters over a digit image, through the im2col +
+    // subarray path, against the direct convolution
+    let mut gen = DigitGen::new(3);
+    let img = gen.next_sample().pixels;
+    let filters = vec![
+        vec![true, true, true, false, false, false, false, false, false], // top bar
+        vec![true, false, false, true, false, false, true, false, false], // left bar
+    ];
+    let conv = BinaryConv2d::new(filters, 3, 3, 2);
+    let direct = conv.forward_direct(&img, IMAGE_SIDE, IMAGE_SIDE);
+
+    let patches = conv.im2col(&img, IMAGE_SIDE, IMAGE_SIDE);
+    let layer = conv.as_layer();
+    let design = ArrayDesign::new(128, 16, LineConfig::config3(), 3.0, 1.0);
+    let mut sa = Subarray::new(design);
+    let run = layer.run_batch(&mut sa, &patches, TmvmMode::Ideal);
+    for (pos, out) in run.outputs.iter().enumerate() {
+        for (f, &bit) in out.iter().enumerate() {
+            assert_eq!(bit, direct[f][pos], "filter {f} pos {pos}");
+        }
+    }
+}
+
+#[test]
+fn batch_energy_scales_with_batch_not_array() {
+    // energy per image is batch-size and array-size independent (Table II)
+    let layer = template_layer();
+    let mut gen = DigitGen::new(5);
+    let images: Vec<Vec<bool>> = (0..32).map(|_| gen.next_sample().pixels).collect();
+    let mut energies = vec![];
+    for n_row in [64usize, 256] {
+        let design = ArrayDesign::new(n_row, 128, LineConfig::config3(), 3.0, 1.0);
+        let mut sa = Subarray::new(design);
+        let run = layer.run_batch(&mut sa, &images, TmvmMode::Ideal);
+        let step_e: f64 = run.steps.iter().map(|s| s.energy).sum();
+        energies.push(step_e / images.len() as f64);
+    }
+    let ratio = energies[1] / energies[0];
+    assert!(
+        (0.99..1.01).contains(&ratio),
+        "energy/image must not depend on array size: {ratio}"
+    );
+}

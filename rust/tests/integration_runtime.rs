@@ -1,0 +1,168 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, checked
+//! against the rust functional golden model AND the cross-language
+//! dataset contract. Requires `make artifacts`; tests skip (with a
+//! message) when artifacts are absent.
+
+use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
+use xpoint_imc::runtime::artifact::artifacts_available;
+use xpoint_imc::runtime::{ArtifactStore, Runtime, TensorF32};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+/// The python-generated dataset_check must equal the rust generator's
+/// stream bit-for-bit: this pins the SplitMix64 + draw-order contract.
+#[test]
+fn dataset_contract_rust_equals_python() {
+    require_artifacts!();
+    let store = ArtifactStore::open_default().unwrap();
+    let (labels, images) = store.dataset_check().unwrap();
+    let mut gen = DigitGen::new(TEST_SEED);
+    for (i, (label, image)) in labels.iter().zip(&images).enumerate() {
+        let s = gen.next_sample();
+        assert_eq!(s.label, *label, "sample {i} label");
+        assert_eq!(&s.pixels, image, "sample {i} pixels");
+    }
+    assert_eq!(labels.len(), 32);
+}
+
+/// Load + compile + execute the single-layer HLO; outputs must equal the
+/// rust count-threshold semantics for every image.
+#[test]
+fn xla_single_layer_matches_rust_functional() {
+    require_artifacts!();
+    let store = ArtifactStore::open_default().unwrap();
+    let layer = store.single_layer().unwrap();
+    let v_dd = store.meta_f64("vdd_single").unwrap();
+    let batch = store.meta_usize("batch").unwrap();
+    assert_eq!(batch, 64);
+
+    let runtime = Runtime::cpu().unwrap();
+    let exe = runtime.load_hlo_text(&store.nn_infer_hlo()).unwrap();
+
+    // batch of synthetic digits
+    let mut gen = DigitGen::new(TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..batch).map(|_| gen.next_sample().pixels).collect();
+    let n_in = layer.n_in();
+    let n_out = layer.n_out();
+
+    let mut x = vec![0.0f32; batch * n_in];
+    for (i, img) in images.iter().enumerate() {
+        for (j, &b) in img.iter().enumerate() {
+            x[i * n_in + j] = b as u8 as f32;
+        }
+    }
+    let mut w = vec![0.0f32; n_in * n_out];
+    for (o, row) in layer.weights.iter().enumerate() {
+        for (i, &bit) in row.iter().enumerate() {
+            w[i * n_out + o] = bit as u8 as f32;
+        }
+    }
+    let out = exe
+        .run(&[
+            TensorF32::new(vec![batch, n_in], x),
+            TensorF32::new(vec![n_in, n_out], w),
+            TensorF32::new(vec![batch, 1], vec![1.0; batch]),
+            TensorF32::new(vec![batch, 1], vec![0.0; batch]),
+            TensorF32::scalar(v_dd as f32),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2, "bits + currents");
+    let bits = &out[0];
+    assert_eq!(bits.dims, vec![batch, n_out]);
+
+    for (i, img) in images.iter().enumerate() {
+        let expect = layer.forward(img);
+        for o in 0..n_out {
+            let got = bits.data[i * n_out + o] >= 0.5;
+            assert_eq!(
+                got, expect[o],
+                "image {i} neuron {o}: XLA vs rust functional"
+            );
+        }
+    }
+    // currents are physical: all within (0, I_RESET)
+    let currents = &out[1];
+    assert!(currents.data.iter().all(|&c| (0.0..100e-6).contains(&c)));
+}
+
+/// The trained artifact weights must classify the held-out corpus well.
+#[test]
+fn trained_weights_classify_digits() {
+    require_artifacts!();
+    let store = ArtifactStore::open_default().unwrap();
+    let layer = store.single_layer().unwrap();
+    let reported = store.meta_f64("acc_single").unwrap();
+    let ds = DigitGen::new(TEST_SEED).dataset(1000);
+    let correct = ds
+        .samples
+        .iter()
+        .filter(|s| layer.argmax(&s.pixels) == s.label)
+        .count();
+    let acc = correct as f64 / ds.len() as f64;
+    assert!(acc > 0.9, "trained accuracy {acc}");
+    // and it must agree with what the python trainer measured (same data!)
+    assert!(
+        (acc - reported).abs() < 0.02,
+        "rust-measured {acc} vs python-reported {reported}"
+    );
+}
+
+/// MLP HLO loads and runs with the trained weights.
+#[test]
+fn xla_mlp_executes() {
+    require_artifacts!();
+    let store = ArtifactStore::open_default().unwrap();
+    let (l1, l2) = store.mlp_layers().unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let exe = runtime.load_hlo_text(&store.mlp_infer_hlo()).unwrap();
+    let batch = 64usize;
+    let (n_in, n_h, n_out) = (l1.n_in(), l1.n_out(), l2.n_out());
+
+    let mut gen = DigitGen::new(TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..batch).map(|_| gen.next_sample().pixels).collect();
+    let mut x = vec![0.0f32; batch * n_in];
+    for (i, img) in images.iter().enumerate() {
+        for (j, &b) in img.iter().enumerate() {
+            x[i * n_in + j] = b as u8 as f32;
+        }
+    }
+    let to_graph = |layer: &xpoint_imc::nn::BinaryLayer| {
+        let (ni, no) = (layer.n_in(), layer.n_out());
+        let mut w = vec![0.0f32; ni * no];
+        for (o, row) in layer.weights.iter().enumerate() {
+            for (i, &bit) in row.iter().enumerate() {
+                w[i * no + o] = bit as u8 as f32;
+            }
+        }
+        TensorF32::new(vec![ni, no], w)
+    };
+    let v1 = store.meta_f64("vdd_mlp1").unwrap() as f32;
+    let v2 = store.meta_f64("vdd_mlp2").unwrap() as f32;
+    let out = exe
+        .run(&[
+            TensorF32::new(vec![batch, n_in], x),
+            to_graph(&l1),
+            to_graph(&l2),
+            TensorF32::scalar(v1),
+            TensorF32::scalar(v2),
+        ])
+        .unwrap();
+    let bits = &out[0];
+    assert_eq!(bits.dims, vec![batch, n_out]);
+    assert_eq!(n_h, 64);
+    // golden check against the rust functional MLP
+    let mlp = xpoint_imc::nn::BinaryMlp::new(l1, l2);
+    for (i, img) in images.iter().enumerate() {
+        let expect = mlp.forward(img);
+        for o in 0..n_out {
+            assert_eq!(bits.data[i * n_out + o] >= 0.5, expect[o], "img {i} out {o}");
+        }
+    }
+}

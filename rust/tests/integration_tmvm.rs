@@ -1,0 +1,145 @@
+//! Integration: the TMVM engine against the analysis layer — operating
+//! points chosen from the ideal window must compute correctly; voltages
+//! outside it must fail in the predicted direction.
+
+use xpoint_imc::analysis::{ideal_window, noise_margin, ArrayDesign};
+use xpoint_imc::array::{Level, Subarray, TmvmMode, TmvmOutcome};
+use xpoint_imc::interconnect::LineConfig;
+
+fn full_ones_array(n_row: usize, n_col: usize) -> Subarray {
+    let design = ArrayDesign::new(n_row, n_col, LineConfig::config3(), 3.0, 1.0);
+    let mut sa = Subarray::new(design);
+    sa.program_level(Level::Top, &vec![vec![true; n_col]; n_row]);
+    sa
+}
+
+/// Inside the Eq.-4/5 window, the all-ones TMVM must SET every output and
+/// the all-zeros TMVM must hold every output — at both window edges.
+#[test]
+fn ideal_window_edges_compute_correctly() {
+    let n_col = 121;
+    let p = xpoint_imc::device::DeviceParams::default();
+    let w = ideal_window(n_col, &p);
+    assert!(w.is_valid());
+    for v in [w.v_min() * 1.001, w.v_mid(), w.v_max() * 0.999] {
+        // all weights 1: every row fires
+        let mut sa = full_ones_array(8, n_col);
+        let rep = sa.tmvm(&vec![true; n_col], 0, v, TmvmMode::Ideal);
+        assert!(rep.is_clean(), "v={v}: {:?}", rep.outcomes[0]);
+        assert!(rep.outputs.iter().all(|&b| b), "v={v} must fire all rows");
+
+        // all weights 0: no row may fire (R2 condition)
+        let design = ArrayDesign::new(8, n_col, LineConfig::config3(), 3.0, 1.0);
+        let mut sa0 = Subarray::new(design);
+        let rep0 = sa0.tmvm(&vec![true; n_col], 0, v, TmvmMode::Ideal);
+        assert!(rep0.outputs.iter().all(|&b| !b), "v={v} must hold zeros");
+    }
+}
+
+/// Above max(R1) the engine must flag accidental-RESET violations.
+#[test]
+fn overdrive_flags_violations() {
+    let n_col = 121;
+    let p = xpoint_imc::device::DeviceParams::default();
+    let w = ideal_window(n_col, &p);
+    let mut sa = full_ones_array(4, n_col);
+    let rep = sa.tmvm(&vec![true; n_col], 0, w.r1_max * 1.1, TmvmMode::Ideal);
+    assert!(!rep.is_clean());
+    assert!(rep
+        .outcomes
+        .iter()
+        .all(|o| matches!(o, TmvmOutcome::ResetViolation)));
+}
+
+/// The NM analysis predicts parasitic behaviour: operating at the window
+/// midpoint of an acceptable design, the corner pattern (single input)
+/// computes correctly in parasitic mode on first AND last row.
+#[test]
+fn nm_window_midpoint_works_in_parasitic_mode() {
+    let design = ArrayDesign::new(256, 128, LineConfig::config3(), 4.0, 1.0).with_span(121);
+    let nm = noise_margin(&design);
+    assert!(nm.is_acceptable(), "design must be acceptable");
+    let v = nm.v_mid();
+
+    let n_row = design.n_row;
+    let n_col = design.n_col;
+    let mut sa = Subarray::new(design);
+    // single crystalline input column (the corner case): all rows store a
+    // 1 in column 0
+    let bits: Vec<Vec<bool>> = (0..n_row)
+        .map(|_| {
+            let mut row = vec![false; n_col];
+            row[0] = true;
+            row
+        })
+        .collect();
+    sa.program_level(Level::Top, &bits);
+    let mut x = vec![false; n_col];
+    x[0] = true;
+    let rep = sa.tmvm(&x, 0, v, TmvmMode::Parasitic);
+    assert!(rep.is_clean());
+    assert!(rep.outputs[0], "first row fires at v_mid");
+    assert!(rep.outputs[n_row - 1], "last row fires at v_mid");
+}
+
+/// Below the last-row window edge, the last row starves while the first
+/// row still computes — exactly the failure mode NM guards against.
+#[test]
+fn below_window_last_row_starves_first() {
+    let design = ArrayDesign::new(1024, 128, LineConfig::config1(), 1.0, 1.0).with_span(121);
+    let nm = noise_margin(&design);
+    let n_row = design.n_row;
+    let n_col = design.n_col;
+    // pick a voltage above the first-row minimum (but below its RESET
+    // bound at 2×) and below the last-row minimum
+    assert!(nm.v_min_last > nm.v_min_first);
+    let v = 1.4 * nm.v_min_first;
+    assert!(v < nm.v_min_last, "design must have a real gap");
+
+    let mut sa = Subarray::new(design);
+    let bits: Vec<Vec<bool>> = (0..n_row)
+        .map(|_| {
+            let mut row = vec![false; n_col];
+            row[0] = true;
+            row
+        })
+        .collect();
+    sa.program_level(Level::Top, &bits);
+    let mut x = vec![false; n_col];
+    x[0] = true;
+    let rep = sa.tmvm(&x, 0, v, TmvmMode::Parasitic);
+    assert!(rep.outputs[0], "first row fires below the combined window");
+    assert!(!rep.outputs[n_row - 1], "last row starves");
+}
+
+/// Linked subarrays: a computation in subarray 1 deposits correct results
+/// in subarray 2 through both Fig. 6 configurations.
+#[test]
+fn linked_pair_respects_both_configurations() {
+    use xpoint_imc::scaling::interlink::{LinkConfig, LinkedPair};
+    let n = 6;
+    for link in [LinkConfig::BlToBl, LinkConfig::BlToWlt] {
+        let design = ArrayDesign::new(n, n, LineConfig::config3(), 3.0, 1.0);
+        let mut src = Subarray::new(design.clone());
+        let eye: Vec<Vec<bool>> = (0..n).map(|r| (0..n).map(|c| r == c).collect()).collect();
+        src.program_level(Level::Top, &eye);
+        let v = src.vdd_for_threshold(1);
+        let dst = Subarray::new(design);
+        let mut pair = LinkedPair::new(src, dst, link);
+        let mut x = vec![false; n];
+        x[3] = true;
+        pair.tmvm_into(&x, 2, v, TmvmMode::Ideal);
+        match link {
+            LinkConfig::BlToBl => {
+                for r in 0..n {
+                    assert_eq!(pair.dst.peek(Level::Bottom, r, 2), r == 3);
+                }
+            }
+            LinkConfig::BlToWlt => {
+                for c in 0..n {
+                    assert_eq!(pair.dst.peek(Level::Top, 2, c), c == 3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! The paper's analytic parasitic model vs exact circuit simulation, over
+//! randomized designs — the strongest correctness evidence in the repo:
+//! the Appendix-A recursion must agree with full MNA nodal analysis to
+//! ~1e-9 relative error on every randomized design.
+
+use xpoint_imc::analysis::corner_circuit::build_corner_circuit;
+use xpoint_imc::analysis::{
+    ladder_thevenin, max_rows_for_nm, noise_margin, ArrayDesign, OutputLoading,
+};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_design(rng: &mut Pcg32) -> ArrayDesign {
+    let config = match rng.range(0, 3) {
+        0 => LineConfig::config1(),
+        1 => LineConfig::config2(),
+        _ => LineConfig::config3(),
+    };
+    let n_row = rng.range(1, 48);
+    let n_col = rng.range(1, 256);
+    let span = rng.range(1, n_col + 1);
+    let d = ArrayDesign::new(
+        n_row,
+        n_col,
+        config,
+        rng.range_f64(1.0, 8.0),
+        rng.range_f64(1.0, 4.0),
+    )
+    .with_driver(rng.range_f64(1.0, 2e3))
+    .with_span(span);
+    if rng.bernoulli(0.5) {
+        d.with_loading(OutputLoading::Preset)
+    } else {
+        d
+    }
+}
+
+#[test]
+fn analytic_thevenin_equals_mna() {
+    forall(Config::default().cases(80), "recursion == MNA", |rng| {
+        let d = random_design(rng);
+        let victim = rng.range(1, d.n_row + 1);
+        let ana = ladder_thevenin(&d, victim);
+        let cc = build_corner_circuit(&d, victim, 1.0, false);
+        let num = cc.thevenin().map_err(|e| e.to_string())?;
+        let seg = d.segments();
+        let num_r = num.r_th + d.span_cols as f64 / seg.g_x;
+        let r_err = (ana.r_th - num_r).abs() / num_r.abs().max(1e-9);
+        if r_err > 1e-8 {
+            return Err(format!(
+                "R_th mismatch {:.6e} vs {:.6e} (err {r_err:e}, victim {victim}/{})",
+                ana.r_th, num_r, d.n_row
+            ));
+        }
+        let a_err = (ana.alpha - num.v_th).abs();
+        if a_err > 1e-8 {
+            return Err(format!(
+                "alpha mismatch {:.9} vs {:.9} (victim {victim}/{})",
+                ana.alpha, num.v_th, d.n_row
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn loaded_victim_current_matches_prediction() {
+    forall(Config::default().cases(40), "loaded current", |rng| {
+        let d = random_design(rng);
+        let victim = rng.range(1, d.n_row + 1);
+        let v_dd = rng.range_f64(0.2, 1.5);
+        let ana = ladder_thevenin(&d, victim);
+        let r_cells = 1.0 / d.device.g_c + 1.0 / d.output_conductance();
+        let i_pred = ana.cell_current(v_dd, r_cells);
+        let cc = build_corner_circuit(&d, victim, v_dd, true);
+        let sol = cc.netlist.solve().map_err(|e| e.to_string())?;
+        let mid = cc.victim_mid.expect("victim branch included");
+        let i_num = sol.vdiff(mid, cc.victim_wlb) * d.output_conductance();
+        let err = (i_pred - i_num).abs() / i_num.abs().max(1e-15);
+        if err > 1e-8 {
+            return Err(format!("current mismatch: {i_pred:e} vs {i_num:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alpha_is_monotone_in_victim_depth() {
+    forall(Config::default().cases(30), "alpha monotone", |rng| {
+        let mut d = random_design(rng);
+        d.n_row = rng.range(4, 40);
+        let mut prev = f64::INFINITY;
+        for v in 1..=d.n_row {
+            let th = ladder_thevenin(&d, v);
+            if th.alpha > prev + 1e-12 {
+                return Err(format!("alpha increased at victim {v}"));
+            }
+            prev = th.alpha;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nm_is_monotone_decreasing_in_rows() {
+    forall(Config::default().cases(20), "NM monotone", |rng| {
+        let template = random_design(rng);
+        let mut prev = f64::INFINITY;
+        for n in [4usize, 16, 64, 256, 1024] {
+            let mut d = template.clone();
+            d.n_row = n;
+            let nm = noise_margin(&d).noise_margin();
+            if nm > prev + 1e-9 {
+                return Err(format!("NM increased at N_row={n}"));
+            }
+            prev = nm;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn max_rows_search_is_tight() {
+    forall(Config::default().cases(15), "maxsize tight", |rng| {
+        let mut template = random_design(rng);
+        template.n_row = 1;
+        let target = rng.range_f64(0.0, 0.5);
+        let max = max_rows_for_nm(&template, target);
+        if max == 0 {
+            return Ok(()); // even one row misses the target
+        }
+        let mut d = template.clone();
+        d.n_row = max;
+        if noise_margin(&d).noise_margin() < target {
+            return Err(format!("NM below target at reported max {max}"));
+        }
+        if max < (1 << 24) {
+            d.n_row = max + 1;
+            if noise_margin(&d).noise_margin() >= target {
+                return Err(format!("max {max} not tight"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,172 @@
+//! Property tests on the subarray TMVM engine and the multi-bit schemes.
+
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::{
+    multibit_tmvm_cost, Level, MultibitScheme, Subarray, TmvmMode,
+};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_subarray(rng: &mut Pcg32) -> (Subarray, Vec<Vec<bool>>) {
+    let n_row = rng.range(1, 24);
+    let n_col = rng.range(1, 40);
+    let config = match rng.range(0, 3) {
+        0 => LineConfig::config1(),
+        1 => LineConfig::config2(),
+        _ => LineConfig::config3(),
+    };
+    let design = ArrayDesign::new(n_row, n_col, config, rng.range_f64(1.0, 6.0), 1.0);
+    let mut sa = Subarray::new(design);
+    let bits: Vec<Vec<bool>> = (0..n_row)
+        .map(|_| (0..n_col).map(|_| rng.bernoulli(0.5)).collect())
+        .collect();
+    sa.program_level(Level::Top, &bits);
+    (sa, bits)
+}
+
+/// Ideal-mode TMVM must implement exact integer-count thresholding
+/// (the amorphous leakage never promotes a sub-threshold count for the
+/// paper's G_C/G_A ratio and realistic fan-ins).
+#[test]
+fn ideal_tmvm_is_count_thresholding() {
+    forall(Config::default().cases(60), "tmvm == counts", |rng| {
+        let (mut sa, bits) = random_subarray(rng);
+        let n_col = sa.n_col();
+        let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.5)).collect();
+        let theta = rng.range(1, n_col + 2);
+        let v = sa.vdd_for_threshold(theta);
+        let rep = sa.tmvm(&x, 0, v, TmvmMode::Ideal);
+        for (row, row_bits) in bits.iter().enumerate() {
+            let count = row_bits
+                .iter()
+                .zip(&x)
+                .filter(|(&w, &xi)| w && xi)
+                .count();
+            let expect = count >= theta;
+            if rep.outputs[row] != expect {
+                return Err(format!(
+                    "row {row}: count {count}, theta {theta}, got {}",
+                    rep.outputs[row]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Parasitic currents can never exceed ideal currents, and outputs can
+/// only be lost, never gained.
+#[test]
+fn parasitics_only_weaken() {
+    forall(Config::default().cases(40), "parasitic ⊆ ideal", |rng| {
+        let (mut sa, _) = random_subarray(rng);
+        let n_col = sa.n_col();
+        let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.6)).collect();
+        let theta = rng.range(1, n_col + 1);
+        let v = sa.vdd_for_threshold(theta) * rng.range_f64(1.0, 1.5);
+        let ideal = sa.tmvm(&x, 0, v, TmvmMode::Ideal);
+        let para = sa.tmvm(&x, 0, v, TmvmMode::Parasitic);
+        for row in 0..sa.n_row() {
+            if para.currents[row] > ideal.currents[row] * (1.0 + 1e-9) {
+                return Err(format!(
+                    "row {row}: parasitic current {} > ideal {}",
+                    para.currents[row], ideal.currents[row]
+                ));
+            }
+            if para.outputs[row] && !ideal.outputs[row] && ideal.is_clean() {
+                return Err(format!("row {row}: parasitic gained a bit"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The bottom level holds exactly the TMVM outputs afterwards; other
+/// columns are untouched.
+#[test]
+fn outputs_land_only_in_target_column() {
+    forall(Config::default().cases(30), "column isolation", |rng| {
+        let (mut sa, _) = random_subarray(rng);
+        if sa.n_col() < 2 {
+            return Ok(());
+        }
+        let n_col = sa.n_col();
+        let out_col = rng.range(0, n_col);
+        let other = (out_col + 1) % n_col;
+        // pre-mark the other column
+        for r in 0..sa.n_row() {
+            sa.write(Level::Bottom, r, other, true);
+        }
+        let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.5)).collect();
+        let v = sa.vdd_for_threshold(2);
+        let rep = sa.tmvm(&x, out_col, v, TmvmMode::Ideal);
+        for r in 0..sa.n_row() {
+            if sa.peek(Level::Bottom, r, out_col) != rep.outputs[r] {
+                return Err(format!("row {r}: stored bit disagrees with report"));
+            }
+            if !sa.peek(Level::Bottom, r, other) {
+                return Err(format!("row {r}: neighbouring column clobbered"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Energy/time ledgers are non-negative, additive, and scale with work.
+#[test]
+fn ledger_accounting_is_sane() {
+    forall(Config::default().cases(30), "ledger", |rng| {
+        let (mut sa, _) = random_subarray(rng);
+        let n_col = sa.n_col();
+        let e0 = sa.ledger.energy;
+        let t0 = sa.ledger.time;
+        let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.5)).collect();
+        let v = sa.vdd_for_threshold(1);
+        let rep = sa.tmvm(&x, 0, v, TmvmMode::Ideal);
+        if rep.energy < 0.0 {
+            return Err("negative step energy".into());
+        }
+        if sa.ledger.energy < e0 || sa.ledger.time < t0 {
+            return Err("ledger went backwards".into());
+        }
+        if sa.ledger.time - t0 < sa.design().device.t_set * 0.99 {
+            return Err("step must take at least t_SET".into());
+        }
+        Ok(())
+    });
+}
+
+/// Multi-bit invariants across all bit widths.
+#[test]
+fn multibit_invariants() {
+    forall(Config::default().cases(30), "multibit", |rng| {
+        let design = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0);
+        let v = rng.range_f64(0.4, 1.2);
+        let n_inputs = rng.range(1, 256);
+        let mut prev_ae_area = 0.0;
+        let mut prev_lp_area = 0.0;
+        for bits in 1..=6 {
+            let ae = multibit_tmvm_cost(&design, MultibitScheme::AreaEfficient, bits, n_inputs, v);
+            let lp = multibit_tmvm_cost(&design, MultibitScheme::LowPower, bits, n_inputs, v);
+            if !(ae.area > prev_ae_area && lp.area > prev_lp_area) {
+                return Err(format!("area must grow with bits ({bits})"));
+            }
+            if bits > 1 && lp.area <= ae.area {
+                return Err(format!("LP must cost more area than AE at {bits} bits"));
+            }
+            if ae.energy <= 0.0 || lp.energy <= 0.0 {
+                return Err("energies must be positive".into());
+            }
+            if lp.max_voltage > ae.max_voltage + 1e-12 && bits > 1 {
+                return Err("AE needs the higher drive voltage".into());
+            }
+            if ae.cells_per_weight != bits || lp.cells_per_weight != (1 << bits) - 1 {
+                return Err("cell counts wrong".into());
+            }
+            prev_ae_area = ae.area;
+            prev_lp_area = lp.area;
+        }
+        Ok(())
+    });
+}

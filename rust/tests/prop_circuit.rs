@@ -1,0 +1,155 @@
+//! Property tests for the circuit substrate: the MNA solver is checked
+//! against physical invariants on randomized networks.
+
+use xpoint_imc::circuit::{Netlist, GROUND};
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+/// Build a random connected ladder-ish network; returns (netlist, nodes).
+fn random_network(rng: &mut Pcg32) -> (Netlist, Vec<usize>) {
+    let mut nl = Netlist::new();
+    let n = rng.range(2, 25);
+    let mut nodes = vec![];
+    let mut prev = GROUND;
+    for _ in 0..n {
+        let node = nl.node();
+        nl.resistor(prev, node, rng.range_f64(1.0, 1e5));
+        if rng.bernoulli(0.6) {
+            nl.resistor(node, GROUND, rng.range_f64(10.0, 1e6));
+        }
+        // occasional cross-link for mesh-ness
+        if !nodes.is_empty() && rng.bernoulli(0.3) {
+            let other = *rng.choose(&nodes);
+            nl.resistor(node, other, rng.range_f64(10.0, 1e6));
+        }
+        nodes.push(node);
+        prev = node;
+    }
+    (nl, nodes)
+}
+
+#[test]
+fn kcl_holds_at_every_node() {
+    forall(Config::default().cases(60), "KCL", |rng| {
+        let (mut nl, nodes) = random_network(rng);
+        let drive = *rng.choose(&nodes);
+        nl.current_source(GROUND, drive, rng.range_f64(1e-6, 1e-2));
+        let sol = nl.solve().map_err(|e| e.to_string())?;
+        for &node in &nodes {
+            if node == drive {
+                continue;
+            }
+            let mut sum = 0.0;
+            for c in nl.conductance_elements() {
+                if c.a == node {
+                    sum -= sol.branch_current(c.a, c.b, c.g);
+                } else if c.b == node {
+                    sum += sol.branch_current(c.a, c.b, c.g);
+                }
+            }
+            if sum.abs() > 1e-9 {
+                return Err(format!("KCL violated at {node}: {sum:e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn superposition_of_current_sources() {
+    forall(Config::default().cases(40), "superposition", |rng| {
+        let (nl, nodes) = random_network(rng);
+        let a = *rng.choose(&nodes);
+        let b = *rng.choose(&nodes);
+        let (i1, i2) = (rng.range_f64(1e-6, 1e-3), rng.range_f64(1e-6, 1e-3));
+        let probe = *rng.choose(&nodes);
+
+        let mut nl1 = nl.clone();
+        nl1.current_source(GROUND, a, i1);
+        let v1 = nl1.solve().map_err(|e| e.to_string())?.v[probe];
+
+        let mut nl2 = nl.clone();
+        nl2.current_source(GROUND, b, i2);
+        let v2 = nl2.solve().map_err(|e| e.to_string())?.v[probe];
+
+        let mut nl12 = nl.clone();
+        nl12.current_source(GROUND, a, i1);
+        nl12.current_source(GROUND, b, i2);
+        let v12 = nl12.solve().map_err(|e| e.to_string())?.v[probe];
+
+        let err = (v12 - v1 - v2).abs() / v12.abs().max(1e-12);
+        if err > 1e-9 {
+            return Err(format!("superposition error {err:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reciprocity_of_resistive_networks() {
+    // transfer resistance v(b)/i(a) must equal v(a)/i(b)
+    forall(Config::default().cases(40), "reciprocity", |rng| {
+        let (nl, nodes) = random_network(rng);
+        let a = *rng.choose(&nodes);
+        let b = *rng.choose(&nodes);
+        let mut nl1 = nl.clone();
+        nl1.current_source(GROUND, a, 1e-3);
+        let vb = nl1.solve().map_err(|e| e.to_string())?.v[b];
+        let mut nl2 = nl.clone();
+        nl2.current_source(GROUND, b, 1e-3);
+        let va = nl2.solve().map_err(|e| e.to_string())?.v[a];
+        if (vb - va).abs() > 1e-9 * vb.abs().max(1e-9) {
+            return Err(format!("reciprocity broken: {vb} vs {va}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn thevenin_predicts_any_load() {
+    forall(Config::default().cases(40), "thevenin-load", |rng| {
+        let (mut nl, nodes) = random_network(rng);
+        let src = *rng.choose(&nodes);
+        nl.voltage_source(src, GROUND, rng.range_f64(0.1, 5.0));
+        let port = *rng.choose(&nodes);
+        if port == src {
+            return Ok(());
+        }
+        let th = nl.thevenin(port, GROUND).map_err(|e| e.to_string())?;
+        let r_load = rng.range_f64(1.0, 1e6);
+        let mut loaded = nl.clone();
+        loaded.resistor(port, GROUND, r_load);
+        let sol = loaded.solve().map_err(|e| e.to_string())?;
+        let i_full = sol.v[port] / r_load;
+        let i_pred = th.load_current(1.0 / r_load);
+        let err = (i_full - i_pred).abs() / i_full.abs().max(1e-15);
+        if err > 1e-8 {
+            return Err(format!("thevenin load error {err:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn banded_solver_agrees_with_dense_on_ladders() {
+    forall(Config::default().cases(30), "banded=dense", |rng| {
+        let mut nl = Netlist::new();
+        let n = rng.range(3, 60);
+        let mut prev = GROUND;
+        for _ in 0..n {
+            let node = nl.node();
+            nl.resistor(prev, node, rng.range_f64(1.0, 1e3));
+            nl.resistor(node, GROUND, rng.range_f64(1e2, 1e6));
+            prev = node;
+        }
+        nl.current_source(GROUND, 1, 1e-3);
+        let dense = nl.solve().map_err(|e| e.to_string())?;
+        let banded = nl.solve_banded(2).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in dense.v.iter().zip(banded.v.iter()).enumerate() {
+            if (a - b).abs() > 1e-9 * a.abs().max(1e-9) {
+                return Err(format!("node {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
