@@ -102,7 +102,7 @@ fn main() -> xpoint_imc::Result<()> {
     let rxs: Vec<_> = (0..n_images)
         .map(|_| {
             let s = gen.next_sample();
-            coord.submit(s.pixels, Some(s.label))
+            coord.submit(s.pixels, Some(s.label)).expect("submit")
         })
         .collect();
     for rx in rxs {

@@ -41,7 +41,7 @@ fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMod
     let started = Instant::now();
     let rxs: Vec<_> = images
         .into_iter()
-        .map(|s| coord.submit(s.pixels, Some(s.label)))
+        .map(|s| coord.submit(s.pixels, Some(s.label)).expect("submit"))
         .collect();
     for rx in rxs {
         rx.recv().expect("reply");

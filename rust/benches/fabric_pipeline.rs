@@ -1,0 +1,41 @@
+//! Fabric pipeline exhibit + hot-path timing: pipelined multi-layer
+//! inference throughput as a function of fabric size (the §IV scalability
+//! story as a throughput claim), and the host-side cost of the
+//! discrete-event simulation itself.
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, exhibit_header};
+use xpoint_imc::fabric::{FabricConfig, FabricExecutor};
+use xpoint_imc::report::fabric::{
+    fabric_scaling_rows, fabric_scaling_table, fabric_workload, FABRIC_GRIDS,
+};
+use xpoint_imc::util::Pcg32;
+
+fn main() {
+    exhibit_header("Fabric scaling — pipelined tiled inference vs fabric size");
+    let rows = fabric_scaling_rows(&FABRIC_GRIDS, 32).expect("fabric exhibit");
+    print!("{}", fabric_scaling_table(&rows).render());
+    let t1 = rows.first().expect("rows").throughput;
+    let tn = rows.last().expect("rows").throughput;
+    println!(
+        "simulated speedup {:.1}× from 1 to {} subarrays\n",
+        tn / t1,
+        rows.last().expect("rows").nodes
+    );
+
+    // host-side hot path: the event-driven simulation itself
+    let layers = fabric_workload();
+    let mut rng = Pcg32::seeded(7);
+    let images: Vec<Vec<bool>> = (0..64)
+        .map(|_| (0..layers[0].n_in()).map(|_| rng.bernoulli(0.4)).collect())
+        .collect();
+    for (gr, gc) in [(1usize, 1usize), (2, 2), (4, 4)] {
+        let exec = FabricExecutor::new(layers.clone(), FabricConfig::new(gr, gc, 32, 32))
+            .expect("placement");
+        bench(&format!("run_batch 64 images, {gr}×{gc} fabric"), || {
+            let run = exec.run_batch(black_box(&images)).expect("run");
+            black_box(run.makespan);
+        });
+    }
+}

@@ -172,13 +172,11 @@ impl Subarray {
     }
 
     /// The operating voltage that realizes an integer firing threshold
-    /// `theta` ("fire when ≥ θ crystalline products"): from Eq. 3,
-    /// `I_T(θ·G_C) = I_SET` at `V = I_SET·(θ+1)/(θ·G_C)`.
+    /// `theta` (delegates to [`DeviceParams::vdd_for_threshold`]).
+    ///
+    /// [`DeviceParams::vdd_for_threshold`]: crate::device::DeviceParams::vdd_for_threshold
     pub fn vdd_for_threshold(&self, theta: usize) -> f64 {
-        assert!(theta >= 1);
-        let p = self.design().device;
-        let t = theta as f64;
-        p.i_set * (t + 1.0) / (t * p.g_c)
+        self.design().device.vdd_for_threshold(theta)
     }
 
     /// The integer firing threshold realized by `v_dd` (ideal mode):

@@ -169,12 +169,14 @@ impl Coordinator {
         }
     }
 
-    /// Submit an image; returns a receiver for the prediction.
+    /// Submit an image; returns a receiver for the prediction, or an
+    /// error if the leader has already exited (instead of panicking —
+    /// serving shells must be able to drain gracefully).
     pub fn submit(
         &mut self,
         image: Vec<bool>,
         label: Option<usize>,
-    ) -> mpsc::Receiver<Prediction> {
+    ) -> crate::Result<mpsc::Receiver<Prediction>> {
         let (reply, rx) = mpsc::channel();
         self.next_id += 1;
         let job = Job {
@@ -183,8 +185,10 @@ impl Coordinator {
             label,
             reply,
         };
-        self.tx.send(Message::Job(job)).expect("coordinator down");
-        rx
+        self.tx
+            .send(Message::Job(job))
+            .map_err(|_| anyhow::anyhow!("coordinator is down: leader exited, not accepting jobs"))?;
+        Ok(rx)
     }
 
     /// Graceful shutdown: flush queues, join workers, return final metrics.
@@ -248,7 +252,7 @@ mod tests {
             .collect();
         let receivers: Vec<_> = images
             .iter()
-            .map(|img| coord.submit(img.clone(), None))
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
             .collect();
         for (img, rx) in images.iter().zip(receivers) {
             let pred = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
@@ -276,7 +280,7 @@ mod tests {
         let rxs: Vec<_> = (0..32)
             .map(|_| {
                 let img: Vec<bool> = (0..25).map(|_| rng.bernoulli(0.5)).collect();
-                coord.submit(img, Some(3))
+                coord.submit(img, Some(3)).expect("submit")
             })
             .collect();
         for rx in rxs {
@@ -285,6 +289,21 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.images, 32);
         assert!(snap.accuracy.is_some());
+    }
+
+    #[test]
+    fn submit_after_leader_exit_errors_instead_of_panicking() {
+        let (_, be) = make_backend(7);
+        let mut coord = Coordinator::spawn(vec![be], CoordinatorConfig::default());
+        let mut rng = Pcg32::seeded(12);
+        let img: Vec<bool> = (0..25).map(|_| rng.bernoulli(0.5)).collect();
+        assert!(coord.submit(img.clone(), None).is_ok());
+        // force the leader down without consuming the coordinator (the
+        // failure mode a serving shell sees when the leader dies under it)
+        coord.tx.send(Message::Shutdown).unwrap();
+        coord.leader.take().unwrap().join().unwrap();
+        let err = coord.submit(img, None).unwrap_err();
+        assert!(err.to_string().contains("coordinator is down"), "{err}");
     }
 
     #[test]
@@ -299,7 +318,7 @@ mod tests {
         );
         let mut rng = Pcg32::seeded(11);
         let img: Vec<bool> = (0..25).map(|_| rng.bernoulli(0.5)).collect();
-        let rx = coord.submit(img, None);
+        let rx = coord.submit(img, None).expect("submit");
         let snap = coord.shutdown();
         assert_eq!(snap.images, 1);
         assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());

@@ -119,6 +119,17 @@ impl DeviceParams {
     pub fn pcm_ratio(&self) -> f64 {
         self.g_c / self.g_a
     }
+
+    /// The operating voltage that realizes an integer firing threshold
+    /// `theta` ("fire when ≥ θ crystalline products"): from Eq. 3,
+    /// `I_T(θ·G_C) = I_SET` at `V = I_SET·(θ+1)/(θ·G_C)`. Shared by the
+    /// cell-level TMVM engine and the fabric simulator so their operating
+    /// points can never drift apart.
+    pub fn vdd_for_threshold(&self, theta: usize) -> f64 {
+        assert!(theta >= 1);
+        let t = theta as f64;
+        self.i_set * (t + 1.0) / (t * self.g_c)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,165 @@
+//! Discrete-event core of the fabric simulator: an integer-time event
+//! queue with deterministic FIFO tie-breaking and **no wall-clock
+//! dependence** — simulated time is `u64` picoseconds, so runs are
+//! bit-reproducible across hosts and repetitions.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in picoseconds.
+pub type Time = u64;
+
+/// Picoseconds per second.
+pub const PS_PER_SEC: f64 = 1e12;
+
+/// Convert seconds to simulator ticks (rounded to the nearest ps).
+pub fn secs_to_ticks(s: f64) -> Time {
+    debug_assert!(s >= 0.0 && s.is_finite());
+    (s * PS_PER_SEC).round() as Time
+}
+
+/// Convert simulator ticks back to seconds.
+pub fn ticks_to_secs(t: Time) -> f64 {
+    t as f64 / PS_PER_SEC
+}
+
+struct Scheduled<T> {
+    at: Time,
+    seq: u64,
+    payload: T,
+}
+
+// BinaryHeap is a max-heap; invert the (time, seq) ordering so the
+// earliest event (FIFO within a tick) pops first.
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+
+impl<T> Eq for Scheduled<T> {}
+
+/// Event queue + clock. The clock only moves forward, to the timestamp of
+/// the event being popped.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    seq: u64,
+    now: Time,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+        }
+    }
+
+    /// Current simulated time (timestamp of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at` (must not be in the past).
+    pub fn schedule(&mut self, at: Time, payload: T) {
+        assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, T)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        Some((ev.at, ev.payload))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, 'c');
+        q.schedule(10, 'a');
+        q.schedule(20, 'b');
+        let order: Vec<char> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!['a', 'b', 'c']);
+        assert_eq!(q.now(), 30);
+    }
+
+    #[test]
+    fn same_tick_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.schedule(42, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clock_is_monotonic_and_schedulable_mid_run() {
+        let mut q = EventQueue::new();
+        q.schedule(5, "first");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 5);
+        q.schedule(5, "same-time ok");
+        q.schedule(9, "later");
+        assert_eq!(q.pop().unwrap().1, "same-time ok");
+        assert_eq!(q.pop().unwrap().1, "later");
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(10, ());
+        q.pop();
+        q.schedule(9, ());
+    }
+
+    #[test]
+    fn tick_conversions_roundtrip() {
+        assert_eq!(secs_to_ticks(80e-9), 80_000);
+        assert_eq!(secs_to_ticks(0.0), 0);
+        let s = 1.25e-6;
+        assert!((ticks_to_secs(secs_to_ticks(s)) - s).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,525 @@
+//! The pipelined fabric executor: drives a batch of images through a
+//! multi-layer binary network placed across the subarray grid, as a
+//! discrete-event simulation.
+//!
+//! Dataflow per image and layer (paper §IV, Figs. 6/8 generalized):
+//!
+//! 1. input bits arrive at every tile of the layer (host spine for layer
+//!    0, interlink transfers from the previous layer's head nodes after);
+//! 2. each tile runs **one computational step** on its node (occupancy
+//!    serializes tiles sharing a subarray) producing partial counts for
+//!    its row range;
+//! 3. partials travel over the interlinks to the row group's *head* node
+//!    (the `tile_col == 0` subarray) where they **sum on the linked bit
+//!    lines** — count-space accumulation, thresholded once per row group;
+//! 4. thresholded bits fan out to the next layer's tiles as soon as their
+//!    row group completes — image *i+1* can occupy layer *k−1* while
+//!    image *i* is in layer *k*, which is where pipeline overlap comes
+//!    from.
+//!
+//! The executor is **bit-exact** with the functional model: final bits
+//! equal `BinaryLayer::forward` chained over the layers, and final counts
+//! equal [`tiled_tmvm_counts`](crate::scaling::tiling::tiled_tmvm_counts)
+//! of the last layer — while additionally reporting makespan/cycles, per-node
+//! utilization, interlink traffic and energy.
+
+use super::event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
+use super::link::{LinkFabric, LinkTraffic};
+use super::node::{tile_step, vdd_for_theta, SubarrayNode, TileStep};
+use super::placement::{place_layers, FabricConfig, Placement};
+use crate::nn::BinaryLayer;
+use std::ops::Range;
+
+/// Events of the fabric simulation.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// One input piece arrived at `tiles[tile]`'s node for `image`.
+    Piece { image: usize, tile: usize },
+    /// `tiles[tile]`'s step finished; its partials start crossing the
+    /// interlinks now. (A separate event so link channels are reserved at
+    /// the moment the transfer is actually ready — reserving them early,
+    /// while the sending node is still busy, would let a later-ready
+    /// transfer block an earlier one across an idle link.)
+    Send { image: usize, tile: usize },
+    /// `tiles[tile]`'s partial counts arrived at its head node.
+    Partial { image: usize, tile: usize },
+}
+
+/// Result of one pipelined batch.
+#[derive(Clone, Debug)]
+pub struct FabricRun {
+    /// Final-layer thresholded bits, `[image][neuron]`.
+    pub outputs: Vec<Vec<bool>>,
+    /// Final-layer pre-threshold counts (as accumulated through the
+    /// linked bit lines), `[image][neuron]`.
+    pub final_counts: Vec<Vec<u32>>,
+    /// Simulated end-to-end time of the batch \[s\].
+    pub makespan: f64,
+    /// Makespan in computational-step quanta (`⌈makespan / t_SET⌉`).
+    pub cycles: u64,
+    /// TMVM steps executed across all subarrays.
+    pub steps: u64,
+    /// Energy of the computational steps \[J\].
+    pub compute_energy: f64,
+    /// Switch losses of interlink + host-spine transfers \[J\].
+    pub link_energy: f64,
+    /// Total batch energy \[J\].
+    pub energy: f64,
+    /// Per-subarray busy fraction of the makespan.
+    pub utilization: Vec<f64>,
+    /// Interlink traffic counters.
+    pub traffic: LinkTraffic,
+    /// Per-image completion time \[s\].
+    pub per_image_done: Vec<f64>,
+}
+
+impl FabricRun {
+    /// Mean subarray utilization.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.utilization.is_empty() {
+            0.0
+        } else {
+            self.utilization.iter().sum::<f64>() / self.utilization.len() as f64
+        }
+    }
+
+    /// Simulated throughput \[images/s\].
+    pub fn throughput(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.outputs.len() as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A multi-layer binary network placed on a fabric, ready to execute
+/// batches. Construction validates shapes and precomputes placement and
+/// per-layer operating voltages; `run_batch` is pure simulation (no
+/// wall-clock, bit-reproducible).
+#[derive(Clone, Debug)]
+pub struct FabricExecutor {
+    cfg: FabricConfig,
+    layers: Vec<BinaryLayer>,
+    placement: Placement,
+    /// Per-layer operating voltage realizing the layer's θ.
+    v_dd: Vec<f64>,
+    /// One computational step in ticks.
+    t_step: Time,
+    /// Row range of each global row group.
+    group_rows: Vec<Range<usize>>,
+    /// Column tiles feeding each global row group.
+    group_width: Vec<usize>,
+    /// Input pieces each tile waits for (per image).
+    init_pieces: Vec<usize>,
+}
+
+impl FabricExecutor {
+    pub fn new(layers: Vec<BinaryLayer>, cfg: FabricConfig) -> crate::Result<Self> {
+        let placement = place_layers(&layers, &cfg)?;
+        let v_dd = layers
+            .iter()
+            .map(|l| vdd_for_theta(l.theta, &cfg.device))
+            .collect();
+        let t_step = secs_to_ticks(cfg.device.t_set).max(1);
+
+        let mut group_rows = Vec::with_capacity(placement.n_groups);
+        let mut group_width = Vec::with_capacity(placement.n_groups);
+        for tiling in &placement.tilings {
+            for tr in 0..tiling.grid_rows() {
+                group_rows.push(tiling.row_range(tr));
+                group_width.push(tiling.grid_cols());
+            }
+        }
+
+        let init_pieces = placement
+            .tiles
+            .iter()
+            .map(|tile| {
+                if tile.layer == 0 {
+                    1
+                } else {
+                    let pt = &placement.tilings[tile.layer - 1];
+                    (0..pt.grid_rows())
+                        .filter(|&tr| {
+                            let rr = pt.row_range(tr);
+                            rr.start < tile.col_range.end && tile.col_range.start < rr.end
+                        })
+                        .count()
+                }
+            })
+            .collect();
+
+        Ok(Self {
+            cfg,
+            layers,
+            placement,
+            v_dd,
+            t_step,
+            group_rows,
+            group_width,
+            init_pieces,
+        })
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    pub fn layers(&self) -> &[BinaryLayer] {
+        &self.layers
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Execute a batch of images through the pipelined fabric. Each run is
+    /// an independent simulation starting at t = 0 with idle resources.
+    pub fn run_batch(&self, images: &[Vec<bool>]) -> crate::Result<FabricRun> {
+        let m = images.len();
+        let l_count = self.layers.len();
+        let n_in0 = self.layers[0].n_in();
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(
+                img.len() == n_in0,
+                "image {i}: {} pixels, expected {n_in0}",
+                img.len()
+            );
+        }
+        let p = self.cfg.device;
+        let placement = &self.placement;
+        let t_count = placement.n_tiles();
+        let n_out_last = self.layers[l_count - 1].n_out();
+
+        let mut nodes: Vec<SubarrayNode> = (0..self.cfg.n_nodes())
+            .map(|n| {
+                let (r, c) = self.cfg.node_coords(n);
+                SubarrayNode::new(n, r, c)
+            })
+            .collect();
+        let mut links = LinkFabric::new(&self.cfg);
+        let mut queue: EventQueue<Ev> = EventQueue::new();
+
+        // per-image state
+        let mut outputs: Vec<Vec<Vec<bool>>> = (0..m)
+            .map(|_| self.layers.iter().map(|l| vec![false; l.n_out()]).collect())
+            .collect();
+        let mut pieces_pending: Vec<Vec<usize>> = vec![self.init_pieces.clone(); m];
+        let mut stash: Vec<Vec<Option<TileStep>>> = vec![vec![None; t_count]; m];
+        let mut acc_counts: Vec<Vec<Vec<u32>>> = (0..m)
+            .map(|_| self.group_rows.iter().map(|r| vec![0u32; r.len()]).collect())
+            .collect();
+        let mut acc_pending: Vec<Vec<usize>> = vec![self.group_width.clone(); m];
+        let layer_groups: Vec<usize> = placement.tilings.iter().map(|t| t.grid_rows()).collect();
+        let mut groups_left: Vec<Vec<usize>> = vec![layer_groups; m];
+        let mut done_at: Vec<Time> = vec![0; m];
+
+        // host injection: image i enters the fabric at i · t_inject
+        let t_inject = secs_to_ticks(self.cfg.t_inject);
+        for (i, image) in images.iter().enumerate() {
+            let ready = i as Time * t_inject;
+            for &ti in &placement.by_layer[0] {
+                let tile = &placement.tiles[ti];
+                let lines = tile.col_range.len() as u64;
+                let set = image[tile.col_range.clone()].iter().filter(|&&b| b).count();
+                let arrival =
+                    links.transfer_input(ready, tile.node, lines, set as f64 * p.i_set);
+                queue.schedule(arrival, Ev::Piece { image: i, tile: ti });
+            }
+        }
+
+        while let Some((now, ev)) = queue.pop() {
+            match ev {
+                Ev::Piece { image, tile } => {
+                    pieces_pending[image][tile] -= 1;
+                    if pieces_pending[image][tile] > 0 {
+                        continue;
+                    }
+                    let t = &placement.tiles[tile];
+                    // all input pieces arrived: run the tile's TMVM step
+                    let step = {
+                        let x_full: &[bool] = if t.layer == 0 {
+                            &images[image]
+                        } else {
+                            &outputs[image][t.layer - 1]
+                        };
+                        tile_step(
+                            &t.weights,
+                            &x_full[t.col_range.clone()],
+                            self.v_dd[t.layer],
+                            &p,
+                        )
+                    };
+                    let node = &mut nodes[t.node];
+                    let (_start, end) = node.reserve_step(now, self.t_step);
+                    node.ledger
+                        .book_step(self.v_dd[t.layer], step.current_sum, p.t_set);
+                    stash[image][tile] = Some(step);
+                    queue.schedule(end, Ev::Send { image, tile });
+                }
+                Ev::Send { image, tile } => {
+                    // the step just finished: ship the partial counts to
+                    // the row group's head node, reserving interlinks now
+                    let t = &placement.tiles[tile];
+                    let (lines, i_tot) = {
+                        let step = stash[image][tile].as_ref().expect("step was stashed");
+                        (step.counts.len() as u64, step.current_sum)
+                    };
+                    let head = placement.heads[t.layer][t.tile_row];
+                    let arrival = links.transfer(now, t.node, head, lines, i_tot);
+                    queue.schedule(arrival, Ev::Partial { image, tile });
+                }
+                Ev::Partial { image, tile } => {
+                    let t = &placement.tiles[tile];
+                    let step = stash[image][tile].take().expect("partial was stashed");
+                    let g = placement.group_id(t.layer, t.tile_row);
+                    // current summing on the linked bit lines: count-space
+                    // accumulation at the head node
+                    for (k, &c) in step.counts.iter().enumerate() {
+                        acc_counts[image][g][k] += c;
+                    }
+                    acc_pending[image][g] -= 1;
+                    if acc_pending[image][g] > 0 {
+                        continue;
+                    }
+                    // all column tiles merged: threshold this row group
+                    let layer = t.layer;
+                    let theta = self.layers[layer].theta;
+                    let row_range = self.group_rows[g].clone();
+                    for (k, r) in row_range.clone().enumerate() {
+                        outputs[image][layer][r] = acc_counts[image][g][k] as usize >= theta;
+                    }
+                    groups_left[image][layer] -= 1;
+                    if layer + 1 == l_count {
+                        if groups_left[image][layer] == 0 {
+                            done_at[image] = now;
+                        }
+                    } else {
+                        // fan the fresh bits out to next-layer tiles that
+                        // consume any of these rows as input columns
+                        let head = placement.heads[layer][t.tile_row];
+                        for &t2 in &placement.by_layer[layer + 1] {
+                            let tile2 = &placement.tiles[t2];
+                            let lo = row_range.start.max(tile2.col_range.start);
+                            let hi = row_range.end.min(tile2.col_range.end);
+                            if lo >= hi {
+                                continue;
+                            }
+                            let set = outputs[image][layer][lo..hi]
+                                .iter()
+                                .filter(|&&b| b)
+                                .count();
+                            let arrival = links.transfer(
+                                now,
+                                head,
+                                tile2.node,
+                                (hi - lo) as u64,
+                                set as f64 * p.i_set,
+                            );
+                            queue.schedule(arrival, Ev::Piece { image, tile: t2 });
+                        }
+                    }
+                }
+            }
+        }
+
+        // simulator invariant: every image drained through every layer
+        assert!(
+            groups_left.iter().all(|per| per.iter().all(|&g| g == 0)),
+            "fabric deadlock: undrained row groups"
+        );
+
+        let makespan_ticks = queue.now();
+        let makespan = ticks_to_secs(makespan_ticks);
+        let final_counts: Vec<Vec<u32>> = (0..m)
+            .map(|i| {
+                let mut v = vec![0u32; n_out_last];
+                let lt = l_count - 1;
+                let tiling = &placement.tilings[lt];
+                for tr in 0..tiling.grid_rows() {
+                    let g = placement.group_id(lt, tr);
+                    for (k, r) in tiling.row_range(tr).enumerate() {
+                        v[r] = acc_counts[i][g][k];
+                    }
+                }
+                v
+            })
+            .collect();
+        let final_bits: Vec<Vec<bool>> =
+            outputs.into_iter().map(|mut per| per.pop().expect("≥1 layer")).collect();
+
+        let compute_energy: f64 = nodes.iter().map(|n| n.ledger.energy).sum();
+        let traffic = links.totals();
+        let link_energy = traffic.energy + traffic.input_energy;
+        let steps: u64 = nodes.iter().map(|n| n.ledger.steps).sum();
+        let utilization: Vec<f64> = nodes.iter().map(|n| n.utilization(makespan)).collect();
+        let cycles = makespan_ticks.div_ceil(self.t_step);
+
+        Ok(FabricRun {
+            outputs: final_bits,
+            final_counts,
+            makespan,
+            cycles,
+            steps,
+            compute_energy,
+            link_energy,
+            energy: compute_energy + link_energy,
+            utilization,
+            traffic,
+            per_image_done: done_at.iter().map(|&t| ticks_to_secs(t)).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            theta,
+        )
+    }
+
+    fn chain_forward(layers: &[BinaryLayer], x: &[bool]) -> Vec<bool> {
+        let mut v = x.to_vec();
+        for l in layers {
+            v = l.forward(&v);
+        }
+        v
+    }
+
+    #[test]
+    fn single_tile_layer_matches_functional_forward() {
+        let mut rng = Pcg32::seeded(91);
+        let layer = random_layer(&mut rng, 6, 12, 3);
+        let exec =
+            FabricExecutor::new(vec![layer.clone()], FabricConfig::new(1, 1, 16, 16)).unwrap();
+        let images: Vec<Vec<bool>> = (0..5)
+            .map(|_| (0..12).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let run = exec.run_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], layer.forward(img), "image {i}");
+            assert_eq!(run.final_counts[i], layer.counts(img), "image {i} counts");
+        }
+        assert_eq!(run.steps, 5, "one step per image on a single tile");
+        // single tile: no grid traffic, host spine only
+        assert_eq!(run.traffic.transfers, 0);
+        assert_eq!(run.traffic.input_transfers, 5);
+        assert!(run.compute_energy > 0.0 && run.makespan > 0.0);
+        assert_eq!(run.utilization.len(), 1);
+    }
+
+    #[test]
+    fn split_columns_accumulate_through_links() {
+        let mut rng = Pcg32::seeded(92);
+        let layer = random_layer(&mut rng, 4, 30, 5);
+        // 30 input cols over 8-wide tiles → 4 column tiles, 1 row group
+        let exec =
+            FabricExecutor::new(vec![layer.clone()], FabricConfig::new(2, 2, 8, 8)).unwrap();
+        let images: Vec<Vec<bool>> = (0..6)
+            .map(|_| (0..30).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let run = exec.run_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], layer.forward(img), "image {i}");
+            assert_eq!(run.final_counts[i], layer.counts(img), "image {i}");
+        }
+        assert_eq!(run.steps, 6 * 4);
+        assert!(run.traffic.transfers > 0, "partials crossed the fabric");
+        assert!(run.traffic.lines > 0 && run.link_energy > 0.0);
+    }
+
+    #[test]
+    fn multilayer_matches_chained_forward() {
+        let mut rng = Pcg32::seeded(93);
+        let layers = vec![
+            random_layer(&mut rng, 10, 20, 4),
+            random_layer(&mut rng, 7, 10, 2),
+            random_layer(&mut rng, 3, 7, 1),
+        ];
+        let exec = FabricExecutor::new(layers.clone(), FabricConfig::new(2, 3, 8, 8)).unwrap();
+        let images: Vec<Vec<bool>> = (0..9)
+            .map(|_| (0..20).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let run = exec.run_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(run.outputs[i], chain_forward(&layers, img), "image {i}");
+        }
+        assert!(run.cycles > 0);
+        assert!(run.per_image_done.iter().all(|&t| t > 0.0 && t <= run.makespan));
+    }
+
+    #[test]
+    fn pipelining_overlaps_images_across_layers() {
+        let mut rng = Pcg32::seeded(94);
+        let layers = vec![
+            random_layer(&mut rng, 12, 16, 3),
+            random_layer(&mut rng, 12, 12, 3),
+            random_layer(&mut rng, 8, 12, 2),
+        ];
+        let exec = FabricExecutor::new(layers, FabricConfig::new(2, 2, 16, 16)).unwrap();
+        let one: Vec<Vec<bool>> = (0..1)
+            .map(|_| (0..16).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let latency = exec.run_batch(&one).unwrap().makespan;
+        let m = 8;
+        let many: Vec<Vec<bool>> = (0..m)
+            .map(|_| (0..16).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let run = exec.run_batch(&many).unwrap();
+        assert!(
+            run.makespan < 0.75 * m as f64 * latency,
+            "no overlap: {} images took {} vs latency {}",
+            m,
+            run.makespan,
+            latency
+        );
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let mut rng = Pcg32::seeded(95);
+        let layers = vec![
+            random_layer(&mut rng, 9, 14, 2),
+            random_layer(&mut rng, 5, 9, 2),
+        ];
+        let exec = FabricExecutor::new(layers, FabricConfig::new(2, 2, 8, 8)).unwrap();
+        let images: Vec<Vec<bool>> = (0..7)
+            .map(|_| (0..14).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let a = exec.run_batch(&images).unwrap();
+        let b = exec.run_batch(&images).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.traffic.transfers, b.traffic.transfers);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut rng = Pcg32::seeded(96);
+        let layer = random_layer(&mut rng, 3, 6, 1);
+        let exec = FabricExecutor::new(vec![layer], FabricConfig::new(1, 1, 8, 8)).unwrap();
+        let run = exec.run_batch(&[]).unwrap();
+        assert_eq!(run.outputs.len(), 0);
+        assert_eq!(run.makespan, 0.0);
+        assert_eq!(run.steps, 0);
+        assert_eq!(run.cycles, 0);
+    }
+
+    #[test]
+    fn wrong_image_width_rejected() {
+        let mut rng = Pcg32::seeded(97);
+        let layer = random_layer(&mut rng, 3, 6, 1);
+        let exec = FabricExecutor::new(vec![layer], FabricConfig::new(1, 1, 8, 8)).unwrap();
+        let err = exec.run_batch(&[vec![true; 5]]).unwrap_err();
+        assert!(err.to_string().contains("expected 6"), "{err}");
+    }
+}

@@ -1,0 +1,268 @@
+//! Interlink channels of the fabric: directed nearest-neighbour links
+//! between adjacent subarrays (the BL-to-BL / BL-to-WLT switch fabrics of
+//! Fig. 6, generalized to a grid), plus a dedicated host-injection spine.
+//!
+//! Transfers are routed dimension-ordered (columns first, then rows) and
+//! reserve each hop FIFO: a hop starts no earlier than the link frees up,
+//! so contention shows up as latency instead of being silently ignored.
+//! Per-hop energy uses the same switch-loss expression as
+//! [`LinkedPair::tmvm_into`](crate::scaling::interlink::LinkedPair):
+//! `E = I_total² · R_switch · t_SET`.
+
+use super::event::{secs_to_ticks, Time};
+use super::placement::FabricConfig;
+use std::collections::HashMap;
+
+/// One directed channel (between adjacent subarrays, or from the host
+/// spine into a subarray).
+#[derive(Clone, Debug)]
+pub struct Interlink {
+    pub from: usize,
+    pub to: usize,
+    /// The channel is reserved up to this simulated time.
+    pub busy_until: Time,
+    /// Completed transfers over this channel.
+    pub transfers: u64,
+    /// Bit lines carried by this channel (one "line" = one row's partial
+    /// result or one activation bit lane).
+    pub lines: u64,
+    /// Switch losses booked on this channel \[J\].
+    pub energy: f64,
+}
+
+impl Interlink {
+    fn new(from: usize, to: usize) -> Self {
+        Self {
+            from,
+            to,
+            busy_until: 0,
+            transfers: 0,
+            lines: 0,
+            energy: 0.0,
+        }
+    }
+
+    /// Reserve this channel for one transfer of `dur` ticks starting no
+    /// earlier than `ready`; returns the arrival time.
+    fn reserve(&mut self, ready: Time, dur: Time, lines: u64, energy: f64) -> Time {
+        let start = ready.max(self.busy_until);
+        let end = start + dur;
+        self.busy_until = end;
+        self.transfers += 1;
+        self.lines += lines;
+        self.energy += energy;
+        end
+    }
+}
+
+/// Aggregate interlink traffic of a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkTraffic {
+    /// Grid interlink hop-transfers (one transfer crossing three hops
+    /// counts three).
+    pub transfers: u64,
+    /// Line-hops: bit lines moved × hops crossed (the per-hop sum, the
+    /// traffic a link-level power model integrates — not distinct lines).
+    pub lines: u64,
+    /// Grid interlink switch energy \[J\].
+    pub energy: f64,
+    /// Host-spine injections.
+    pub input_transfers: u64,
+    /// Host-spine energy \[J\].
+    pub input_energy: f64,
+}
+
+/// The grid of interlinks plus the host-injection spine.
+#[derive(Clone, Debug)]
+pub struct LinkFabric {
+    grid_rows: usize,
+    grid_cols: usize,
+    t_hop: Time,
+    r_switch: f64,
+    t_set: f64,
+    links: Vec<Interlink>,
+    /// `(from, to)` → index into `links` for adjacent node pairs.
+    edges: HashMap<(usize, usize), usize>,
+    /// One injection channel per node, fed by the host spine.
+    input_ports: Vec<Interlink>,
+    /// Injection latency per node: `t_hop · (1 + manhattan((0,0), node))`.
+    input_latency: Vec<Time>,
+}
+
+impl LinkFabric {
+    pub fn new(cfg: &FabricConfig) -> Self {
+        let (gr, gc) = (cfg.grid_rows, cfg.grid_cols);
+        let t_hop = secs_to_ticks(cfg.t_hop).max(1);
+        let mut links = Vec::new();
+        let mut edges = HashMap::new();
+        let add = |links: &mut Vec<Interlink>,
+                       edges: &mut HashMap<(usize, usize), usize>,
+                       a: usize,
+                       b: usize| {
+            edges.insert((a, b), links.len());
+            links.push(Interlink::new(a, b));
+            edges.insert((b, a), links.len());
+            links.push(Interlink::new(b, a));
+        };
+        for r in 0..gr {
+            for c in 0..gc {
+                let n = r * gc + c;
+                if c + 1 < gc {
+                    add(&mut links, &mut edges, n, n + 1);
+                }
+                if r + 1 < gr {
+                    add(&mut links, &mut edges, n, n + gc);
+                }
+            }
+        }
+        let mut input_ports = Vec::with_capacity(gr * gc);
+        let mut input_latency = Vec::with_capacity(gr * gc);
+        for n in 0..gr * gc {
+            let (r, c) = (n / gc, n % gc);
+            input_ports.push(Interlink::new(usize::MAX, n));
+            input_latency.push(t_hop * (1 + r + c) as Time);
+        }
+        Self {
+            grid_rows: gr,
+            grid_cols: gc,
+            t_hop,
+            r_switch: cfg.r_switch,
+            t_set: cfg.device.t_set,
+            links,
+            edges,
+            input_ports,
+            input_latency,
+        }
+    }
+
+    /// Dimension-ordered route (columns first, then rows); empty when
+    /// `from == to`.
+    pub fn route(&self, from: usize, to: usize) -> Vec<usize> {
+        let gc = self.grid_cols;
+        let (mut r, mut c) = (from / gc, from % gc);
+        let (tr, tc) = (to / gc, to % gc);
+        debug_assert!(r < self.grid_rows && tr < self.grid_rows);
+        let mut hops = Vec::new();
+        while c != tc {
+            let nc = if tc > c { c + 1 } else { c - 1 };
+            hops.push(self.edges[&(r * gc + c, r * gc + nc)]);
+            c = nc;
+        }
+        while r != tr {
+            let nr = if tr > r { r + 1 } else { r - 1 };
+            hops.push(self.edges[&(r * gc + c, nr * gc + c)]);
+            r = nr;
+        }
+        hops
+    }
+
+    /// Reserve a transfer of `lines` bit lines carrying total current
+    /// `i_total` from node `from` to node `to`, ready at `ready`.
+    /// Returns the arrival time (== `ready` when `from == to`).
+    pub fn transfer(&mut self, ready: Time, from: usize, to: usize, lines: u64, i_total: f64) -> Time {
+        let hop_energy = i_total * i_total * self.r_switch * self.t_set;
+        let mut t = ready;
+        for hop in self.route(from, to) {
+            t = self.links[hop].reserve(t, self.t_hop, lines, hop_energy);
+        }
+        t
+    }
+
+    /// Inject an input slice from the host spine into `node`.
+    pub fn transfer_input(&mut self, ready: Time, node: usize, lines: u64, i_total: f64) -> Time {
+        let energy = i_total * i_total * self.r_switch * self.t_set;
+        let dur = self.input_latency[node];
+        self.input_ports[node].reserve(ready, dur, lines, energy)
+    }
+
+    /// Aggregate traffic counters.
+    pub fn totals(&self) -> LinkTraffic {
+        let mut t = LinkTraffic::default();
+        for l in &self.links {
+            t.transfers += l.transfers;
+            t.lines += l.lines;
+            t.energy += l.energy;
+        }
+        for p in &self.input_ports {
+            t.input_transfers += p.transfers;
+            t.input_energy += p.energy;
+        }
+        t
+    }
+
+    /// Per-link view (for reports/tests).
+    pub fn links(&self) -> &[Interlink] {
+        &self.links
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(gr: usize, gc: usize) -> LinkFabric {
+        LinkFabric::new(&FabricConfig::new(gr, gc, 8, 8))
+    }
+
+    #[test]
+    fn grid_has_all_directed_neighbour_links() {
+        let f = fabric(2, 3);
+        // horizontal: 2 rows × 2 gaps, vertical: 1 gap × 3 cols — ×2 directions
+        assert_eq!(f.links.len(), (2 * 2 + 3) * 2);
+        assert!(f.edges.contains_key(&(0, 1)) && f.edges.contains_key(&(1, 0)));
+        assert!(f.edges.contains_key(&(2, 5)) && f.edges.contains_key(&(5, 2)));
+        assert!(!f.edges.contains_key(&(0, 5)), "no diagonal links");
+    }
+
+    #[test]
+    fn route_is_dimension_ordered_manhattan() {
+        let f = fabric(3, 4);
+        // node 1 = (0,1), node 11 = (2,3): 2 col hops then 2 row hops
+        let hops = f.route(1, 11);
+        assert_eq!(hops.len(), 4);
+        let first = &f.links[hops[0]];
+        assert_eq!((first.from, first.to), (1, 2));
+        let last = &f.links[hops[3]];
+        assert_eq!((last.from, last.to), (7, 11));
+        assert!(f.route(5, 5).is_empty());
+    }
+
+    #[test]
+    fn transfers_serialize_on_shared_links() {
+        let mut f = fabric(1, 3);
+        let hop = f.t_hop;
+        let a1 = f.transfer(0, 0, 2, 4, 1e-4);
+        assert_eq!(a1, 2 * hop);
+        // second transfer over the same first link queues behind it
+        let a2 = f.transfer(0, 0, 1, 4, 1e-4);
+        assert_eq!(a2, 2 * hop);
+        let a3 = f.transfer(0, 0, 2, 4, 1e-4);
+        assert_eq!(a3, 4 * hop, "queues behind both earlier reservations");
+        let tot = f.totals();
+        assert_eq!(tot.transfers, 5);
+        assert_eq!(tot.lines, 5 * 4);
+        assert!(tot.energy > 0.0);
+    }
+
+    #[test]
+    fn same_node_transfer_is_free_and_instant() {
+        let mut f = fabric(2, 2);
+        assert_eq!(f.transfer(123, 3, 3, 9, 1e-3), 123);
+        let tot = f.totals();
+        assert_eq!(tot.transfers, 0);
+        assert_eq!(tot.energy, 0.0);
+    }
+
+    #[test]
+    fn host_spine_latency_grows_with_distance() {
+        let mut f = fabric(2, 2);
+        let hop = f.t_hop;
+        assert_eq!(f.transfer_input(0, 0, 1, 1e-4), hop);
+        assert_eq!(f.transfer_input(0, 3, 1, 1e-4), 3 * hop);
+        // port occupancy serializes per node
+        assert_eq!(f.transfer_input(0, 0, 1, 1e-4), 2 * hop);
+        let tot = f.totals();
+        assert_eq!(tot.input_transfers, 3);
+        assert!(tot.input_energy > 0.0);
+    }
+}

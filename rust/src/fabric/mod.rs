@@ -1,0 +1,34 @@
+//! The multi-subarray fabric simulator (paper §IV scaled out): a
+//! discrete-event model of a grid of 3D XPoint subarrays joined by
+//! BL-to-BL / BL-to-WLT interlinks, executing multi-layer binary networks
+//! tiled across the grid with image-level pipelining.
+//!
+//! Layer map:
+//!
+//! * [`event`] — integer-time event queue/clock (no wall-clock).
+//! * [`placement`] — [`FabricConfig`] + round-robin mapping of
+//!   [`scaling::Tiling`](crate::scaling::Tiling) tiles and
+//!   [`nn::BinaryLayer`](crate::nn::BinaryLayer) weights onto subarrays.
+//! * [`node`] — per-subarray occupancy + the count-space TMVM model
+//!   (energy identical to the cell-level engine's ideal mode).
+//! * [`link`] — nearest-neighbour interlink channels with FIFO occupancy,
+//!   dimension-ordered routing and switch-loss energy.
+//! * [`exec`] — the pipelined executor: bit-exact with the functional
+//!   model, reporting makespan/cycles, utilization, traffic and energy.
+//! * [`backend`] — [`FabricBackend`] implementing
+//!   [`coordinator::Backend`](crate::coordinator::Backend) so the serving
+//!   shell drives a whole fabric instead of one subarray.
+
+pub mod event;
+pub mod placement;
+pub mod node;
+pub mod link;
+pub mod exec;
+pub mod backend;
+
+pub use backend::FabricBackend;
+pub use event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
+pub use exec::{FabricExecutor, FabricRun};
+pub use link::{Interlink, LinkFabric, LinkTraffic};
+pub use node::{row_current, tile_step, vdd_for_theta, SubarrayNode, TileStep};
+pub use placement::{place_layers, FabricConfig, Placement, TileSlice};

@@ -1,0 +1,210 @@
+//! Per-subarray state of the fabric simulator: step occupancy and the
+//! count-space TMVM model with the same electrical/energy semantics as the
+//! cell-level engine in [`crate::array`] (Eq. 3 at the crystalline
+//! endpoint), booked through the shared [`EnergyLedger`].
+//!
+//! The fabric deliberately does **not** instantiate `2·N_row·N_col` PCM
+//! cells per node: computation is count-exact by construction (the
+//! partial-count dataflow is what the executor simulates), while currents
+//! and energy use exactly the ideal-mode formulas of
+//! [`Subarray::tmvm`](crate::array::Subarray::tmvm), which keeps the two
+//! engines' ledgers comparable. `node::tests` pins that equivalence
+//! against the cell-level engine.
+
+use super::event::Time;
+use crate::array::EnergyLedger;
+use crate::device::DeviceParams;
+
+/// The operating voltage realizing integer firing threshold `theta` —
+/// delegates to the shared [`DeviceParams::vdd_for_threshold`], the same
+/// expression the cell-level engine uses.
+pub fn vdd_for_theta(theta: usize, p: &DeviceParams) -> f64 {
+    p.vdd_for_threshold(theta)
+}
+
+/// Ideal-mode output current for a row with `count` crystalline products
+/// among `active` driven inputs (Eq. 3 with `G_O = G_C`):
+/// `I = G_C·V·Σg / (Σg + G_C)` with
+/// `Σg = count·G_C + (active − count)·G_A` — amorphous cells on driven
+/// word lines still leak `G_A`, exactly as in the cell-level engine.
+pub fn row_current(count: u32, active: u32, v_dd: f64, p: &DeviceParams) -> f64 {
+    debug_assert!(count <= active);
+    if active == 0 {
+        return 0.0;
+    }
+    let g_sum = count as f64 * p.g_c + (active - count) as f64 * p.g_a;
+    p.g_c * v_dd * g_sum / (g_sum + p.g_c)
+}
+
+/// Result of one tile step: partial dot-product counts for the tile's
+/// rows, plus the summed output current (energy/link intensity).
+#[derive(Clone, Debug)]
+pub struct TileStep {
+    pub counts: Vec<u32>,
+    /// Driven word lines in this tile's input slice.
+    pub active: u32,
+    pub current_sum: f64,
+}
+
+/// Compute a tile's partial counts for input slice `x` (already sliced to
+/// the tile's column range): `counts[r] = Σ_c x[c]·w[r][c]`, with per-row
+/// currents drawn through Eq. 3 including amorphous leakage.
+pub fn tile_step(weights: &[Vec<bool>], x: &[bool], v_dd: f64, p: &DeviceParams) -> TileStep {
+    let active = x.iter().filter(|&&b| b).count() as u32;
+    let mut counts = Vec::with_capacity(weights.len());
+    let mut current_sum = 0.0;
+    for row in weights {
+        debug_assert_eq!(row.len(), x.len(), "input slice width");
+        let c = row.iter().zip(x).filter(|(&w, &xi)| w && xi).count() as u32;
+        current_sum += row_current(c, active, v_dd, p);
+        counts.push(c);
+    }
+    TileStep {
+        counts,
+        active,
+        current_sum,
+    }
+}
+
+/// One physical subarray of the fabric: occupancy for the event scheduler
+/// plus the per-node energy/step ledger.
+#[derive(Clone, Debug)]
+pub struct SubarrayNode {
+    pub id: usize,
+    pub grid_row: usize,
+    pub grid_col: usize,
+    /// The node is reserved up to this simulated time.
+    pub busy_until: Time,
+    /// Energy/busy-time/step accounting (shared ledger type with the
+    /// cell-level engine).
+    pub ledger: EnergyLedger,
+}
+
+impl SubarrayNode {
+    pub fn new(id: usize, grid_row: usize, grid_col: usize) -> Self {
+        Self {
+            id,
+            grid_row,
+            grid_col,
+            busy_until: 0,
+            ledger: EnergyLedger::new(),
+        }
+    }
+
+    /// Reserve the node for one computational step of `dur` ticks,
+    /// starting no earlier than `ready`. Returns `(start, end)`; the node
+    /// serializes overlapping requests FIFO in reservation order.
+    pub fn reserve_step(&mut self, ready: Time, dur: Time) -> (Time, Time) {
+        let start = ready.max(self.busy_until);
+        let end = start + dur;
+        self.busy_until = end;
+        (start, end)
+    }
+
+    /// Fraction of the run this node spent computing.
+    pub fn utilization(&self, makespan_s: f64) -> f64 {
+        if makespan_s <= 0.0 {
+            0.0
+        } else {
+            (self.ledger.time / makespan_s).min(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ArrayDesign;
+    use crate::array::{Level, Subarray, TmvmMode};
+    use crate::interconnect::LineConfig;
+    use crate::util::Pcg32;
+
+    /// The fabric's count-space current/energy model must agree with the
+    /// cell-level TMVM engine row for row.
+    #[test]
+    fn currents_and_energy_match_cell_level_engine() {
+        let mut rng = Pcg32::seeded(71);
+        let (n_row, n_col) = (12, 24);
+        let weights: Vec<Vec<bool>> = (0..n_row)
+            .map(|_| (0..n_col).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.5)).collect();
+        let theta = 3;
+
+        let mut sa = Subarray::new(ArrayDesign::new(
+            n_row,
+            n_col,
+            LineConfig::config3(),
+            3.0,
+            1.0,
+        ));
+        sa.program_level(Level::Top, &weights);
+        let v_cell = sa.vdd_for_threshold(theta);
+        let rep = sa.tmvm(&x, 0, v_cell, TmvmMode::Ideal);
+
+        let p = sa.design().device;
+        let v_fab = vdd_for_theta(theta, &p);
+        assert!((v_fab - v_cell).abs() / v_cell < 1e-12, "same V_DD");
+
+        let step = tile_step(&weights, &x, v_fab, &p);
+        for (r, &i_cell) in rep.currents.iter().enumerate() {
+            let i_fab = row_current(step.counts[r], step.active, v_fab, &p);
+            assert!(
+                (i_fab - i_cell).abs() <= 1e-18 + 1e-12 * i_cell.abs(),
+                "row {r}: fabric {i_fab} vs cell {i_cell}"
+            );
+            // thresholding agrees too
+            assert_eq!(step.counts[r] as usize >= theta, rep.outputs[r], "row {r}");
+        }
+        // energy: book the same step through the shared ledger
+        let mut ledger = EnergyLedger::new();
+        ledger.book_step(v_fab, step.current_sum, p.t_set);
+        assert!(
+            (ledger.energy - rep.energy).abs() <= 1e-24 + 1e-9 * rep.energy,
+            "fabric {} vs cell {}",
+            ledger.energy,
+            rep.energy
+        );
+    }
+
+    #[test]
+    fn tile_step_counts_are_exact() {
+        let w = vec![
+            vec![true, true, false, true],
+            vec![false, false, false, false],
+            vec![true, true, true, true],
+        ];
+        let x = vec![true, false, true, true];
+        let p = DeviceParams::default();
+        let step = tile_step(&w, &x, vdd_for_theta(2, &p), &p);
+        assert_eq!(step.counts, vec![2, 0, 3]);
+        assert_eq!(step.active, 3);
+        assert!(step.current_sum > 0.0);
+        // the all-zero row still leaks through its amorphous cells
+        let leak = row_current(0, 3, vdd_for_theta(2, &p), &p);
+        assert!(leak > 0.0 && leak < p.i_set);
+    }
+
+    #[test]
+    fn reserve_step_serializes_fifo() {
+        let mut n = SubarrayNode::new(0, 0, 0);
+        let (s1, e1) = n.reserve_step(100, 80);
+        assert_eq!((s1, e1), (100, 180));
+        // a request arriving earlier still queues behind the reservation
+        let (s2, e2) = n.reserve_step(50, 80);
+        assert_eq!((s2, e2), (180, 260));
+        // idle gap: starts at the ready time
+        let (s3, _) = n.reserve_step(1000, 80);
+        assert_eq!(s3, 1000);
+    }
+
+    #[test]
+    fn utilization_is_bounded() {
+        let mut n = SubarrayNode::new(0, 0, 0);
+        n.ledger.book_step(1.0, 1e-3, 80e-9);
+        n.ledger.book_step(1.0, 1e-3, 80e-9);
+        assert!((n.utilization(320e-9) - 0.5).abs() < 1e-12);
+        assert_eq!(n.utilization(0.0), 0.0);
+        assert!(n.utilization(1e-9) <= 1.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Fabric geometry and the placement layer: maps multi-layer
+//! [`BinaryLayer`] weights, tiled by [`scaling::Tiling`], onto the
+//! physical grid of subarrays.
+//!
+//! Placement is round-robin over the node grid in (layer, tile-row,
+//! tile-col) order: consecutive tiles — and therefore consecutive layers —
+//! land on different subarrays, which is what lets the executor overlap
+//! layer *k* of image *i* with layer *k−1* of image *i+1*. When there are
+//! more tiles than subarrays, several tiles share a node and the node's
+//! occupancy serializes them (visible as utilization in the run report).
+
+use crate::device::DeviceParams;
+use crate::nn::BinaryLayer;
+use crate::scaling::Tiling;
+use std::ops::Range;
+
+/// Physical fabric description: a `grid_rows × grid_cols` grid of
+/// identical subarrays (each `tile_rows × tile_cols` cells), plus the
+/// interlink timing/electrical parameters.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// Subarray grid height.
+    pub grid_rows: usize,
+    /// Subarray grid width.
+    pub grid_cols: usize,
+    /// Rows per subarray (logical matrix rows a tile can hold).
+    pub tile_rows: usize,
+    /// Columns per subarray.
+    pub tile_cols: usize,
+    /// Device parameters shared by every subarray (energy model).
+    pub device: DeviceParams,
+    /// Per-hop interlink latency \[s\] (switch fabric traversal between
+    /// adjacent subarrays, Fig. 6).
+    pub t_hop: f64,
+    /// Per-switch series resistance \[Ω\] — same default as
+    /// [`crate::scaling::interlink::LinkedPair`].
+    pub r_switch: f64,
+    /// Host injection interval between consecutive images \[s\]. Defaults
+    /// to one computational step (`t_SET`), the paper's pipeline cadence.
+    pub t_inject: f64,
+}
+
+impl FabricConfig {
+    pub fn new(grid_rows: usize, grid_cols: usize, tile_rows: usize, tile_cols: usize) -> Self {
+        assert!(grid_rows > 0 && grid_cols > 0, "empty fabric grid");
+        assert!(tile_rows > 0 && tile_cols > 0, "empty subarray tile");
+        let device = DeviceParams::default();
+        Self {
+            grid_rows,
+            grid_cols,
+            tile_rows,
+            tile_cols,
+            t_hop: 10e-9,
+            r_switch: 50.0,
+            t_inject: device.t_set,
+            device,
+        }
+    }
+
+    /// Total subarrays in the fabric.
+    pub fn n_nodes(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Grid coordinates of flat node id `n`.
+    pub fn node_coords(&self, n: usize) -> (usize, usize) {
+        debug_assert!(n < self.n_nodes());
+        (n / self.grid_cols, n % self.grid_cols)
+    }
+
+    /// Flat node id of grid position `(r, c)`.
+    pub fn node_id(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.grid_rows && c < self.grid_cols);
+        r * self.grid_cols + c
+    }
+}
+
+/// One weight tile: a slice of one layer's weight matrix resident on one
+/// physical subarray.
+#[derive(Clone, Debug)]
+pub struct TileSlice {
+    /// Which network layer this tile belongs to.
+    pub layer: usize,
+    /// Tile grid coordinates within the layer's [`Tiling`].
+    pub tile_row: usize,
+    pub tile_col: usize,
+    /// Physical node (flat id) hosting the tile.
+    pub node: usize,
+    /// Logical output rows this tile covers.
+    pub row_range: Range<usize>,
+    /// Logical input columns this tile covers.
+    pub col_range: Range<usize>,
+    /// The weight slice, `weights[local_row][local_col]`.
+    pub weights: Vec<Vec<bool>>,
+}
+
+/// A complete placement of a layer stack onto a fabric.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Per-layer logical tiling (`n_out × n_in` over `tile_rows × tile_cols`).
+    pub tilings: Vec<Tiling>,
+    /// All weight tiles, in (layer, tile_row, tile_col) order.
+    pub tiles: Vec<TileSlice>,
+    /// Tile indices grouped by layer.
+    pub by_layer: Vec<Vec<usize>>,
+    /// `heads[layer][tile_row]` — the node hosting tile `(tile_row, 0)`,
+    /// where the row group's partial counts accumulate (linked bit lines)
+    /// and are thresholded.
+    pub heads: Vec<Vec<usize>>,
+    /// Row-group id offset per layer (row groups are numbered globally).
+    pub group_offset: Vec<usize>,
+    /// Total row groups across all layers.
+    pub n_groups: usize,
+}
+
+impl Placement {
+    /// Global row-group id of `(layer, tile_row)`.
+    pub fn group_id(&self, layer: usize, tile_row: usize) -> usize {
+        self.group_offset[layer] + tile_row
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.tilings.len()
+    }
+}
+
+/// Tile a stack of layers and place the tiles round-robin on the fabric.
+///
+/// Validates the layer chain (`layers[k+1].n_in == layers[k].n_out`).
+/// Arbitrarily large layers are accepted — when a layer needs more tiles
+/// than the fabric has subarrays, placement wraps around and the shared
+/// nodes serialize (shown as utilization/occupancy in the run report).
+pub fn place_layers(layers: &[BinaryLayer], cfg: &FabricConfig) -> crate::Result<Placement> {
+    anyhow::ensure!(!layers.is_empty(), "fabric placement needs at least one layer");
+    for (k, pair) in layers.windows(2).enumerate() {
+        anyhow::ensure!(
+            pair[1].n_in() == pair[0].n_out(),
+            "layer {} shape mismatch: layer {} outputs {} but layer {} expects {}",
+            k + 1,
+            k,
+            pair[0].n_out(),
+            k + 1,
+            pair[1].n_in()
+        );
+    }
+    let n_nodes = cfg.n_nodes();
+    let mut tilings = Vec::with_capacity(layers.len());
+    let mut tiles = Vec::new();
+    let mut by_layer = Vec::with_capacity(layers.len());
+    let mut heads = Vec::with_capacity(layers.len());
+    let mut group_offset = Vec::with_capacity(layers.len());
+    let mut n_groups = 0usize;
+    let mut next_node = 0usize;
+
+    for (l, layer) in layers.iter().enumerate() {
+        let tiling = Tiling::new(layer.n_out(), layer.n_in(), cfg.tile_rows, cfg.tile_cols);
+        let mut layer_tiles = Vec::with_capacity(tiling.n_tiles());
+        let mut layer_heads = vec![0usize; tiling.grid_rows()];
+        for tr in 0..tiling.grid_rows() {
+            for tc in 0..tiling.grid_cols() {
+                let node = next_node % n_nodes;
+                next_node += 1;
+                let row_range = tiling.row_range(tr);
+                let col_range = tiling.col_range(tc);
+                let weights: Vec<Vec<bool>> = row_range
+                    .clone()
+                    .map(|r| layer.weights[r][col_range.clone()].to_vec())
+                    .collect();
+                if tc == 0 {
+                    layer_heads[tr] = node;
+                }
+                layer_tiles.push(tiles.len());
+                tiles.push(TileSlice {
+                    layer: l,
+                    tile_row: tr,
+                    tile_col: tc,
+                    node,
+                    row_range,
+                    col_range,
+                    weights,
+                });
+            }
+        }
+        group_offset.push(n_groups);
+        n_groups += tiling.grid_rows();
+        by_layer.push(layer_tiles);
+        heads.push(layer_heads);
+        tilings.push(tiling);
+    }
+
+    Ok(Placement {
+        tilings,
+        tiles,
+        by_layer,
+        heads,
+        group_offset,
+        n_groups,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            2,
+        )
+    }
+
+    #[test]
+    fn tiles_cover_every_weight_exactly_once() {
+        let mut rng = Pcg32::seeded(41);
+        let layer = random_layer(&mut rng, 37, 53);
+        let cfg = FabricConfig::new(3, 3, 16, 16);
+        let p = place_layers(std::slice::from_ref(&layer), &cfg).unwrap();
+        let mut seen = vec![vec![0u32; 53]; 37];
+        for t in &p.tiles {
+            for (lr, r) in t.row_range.clone().enumerate() {
+                for (lc, c) in t.col_range.clone().enumerate() {
+                    assert_eq!(t.weights[lr][lc], layer.weights[r][c]);
+                    seen[r][c] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().flatten().all(|&n| n == 1), "exact cover");
+        // 37 rows / 16 = 3 row groups, 53 cols / 16 = 4 col tiles
+        assert_eq!(p.tilings[0].grid_rows(), 3);
+        assert_eq!(p.tilings[0].grid_cols(), 4);
+        assert_eq!(p.n_tiles(), 12);
+        assert_eq!(p.n_groups, 3);
+    }
+
+    #[test]
+    fn round_robin_spreads_consecutive_layers() {
+        let mut rng = Pcg32::seeded(42);
+        let layers = vec![
+            random_layer(&mut rng, 8, 16),
+            random_layer(&mut rng, 8, 8),
+            random_layer(&mut rng, 4, 8),
+        ];
+        let cfg = FabricConfig::new(2, 2, 16, 16);
+        let p = place_layers(&layers, &cfg).unwrap();
+        // 1 tile per layer, 4 nodes: layers land on distinct nodes
+        assert_eq!(p.n_tiles(), 3);
+        let nodes: Vec<usize> = p.tiles.iter().map(|t| t.node).collect();
+        assert_eq!(nodes, vec![0, 1, 2]);
+        // heads point at the (tr, 0) tiles
+        assert_eq!(p.heads[0], vec![0]);
+        assert_eq!(p.heads[2], vec![2]);
+        // group ids are globally consecutive
+        assert_eq!(p.group_id(0, 0), 0);
+        assert_eq!(p.group_id(2, 0), 2);
+    }
+
+    #[test]
+    fn more_tiles_than_nodes_wraps_around() {
+        let mut rng = Pcg32::seeded(43);
+        let layer = random_layer(&mut rng, 20, 20);
+        let cfg = FabricConfig::new(1, 2, 8, 8); // 2 nodes, 3×3 = 9 tiles
+        let p = place_layers(std::slice::from_ref(&layer), &cfg).unwrap();
+        assert_eq!(p.n_tiles(), 9);
+        assert!(p.tiles.iter().all(|t| t.node < 2));
+        let on0 = p.tiles.iter().filter(|t| t.node == 0).count();
+        assert_eq!(on0, 5, "round robin: ⌈9/2⌉ tiles on node 0");
+    }
+
+    #[test]
+    fn mismatched_chain_rejected() {
+        let mut rng = Pcg32::seeded(44);
+        let layers = vec![random_layer(&mut rng, 6, 10), random_layer(&mut rng, 3, 7)];
+        let cfg = FabricConfig::new(2, 2, 16, 16);
+        let err = place_layers(&layers, &cfg).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn node_coordinate_mapping_roundtrips() {
+        let cfg = FabricConfig::new(3, 5, 8, 8);
+        for n in 0..cfg.n_nodes() {
+            let (r, c) = cfg.node_coords(n);
+            assert_eq!(cfg.node_id(r, c), n);
+        }
+    }
+}

@@ -28,6 +28,11 @@
 //!   multi-bit schemes of Table III.
 //! * [`scaling`] — inter-subarray links (BL-to-BL and BL-to-WLT, Fig. 6) and
 //!   matrix tiling across subarrays.
+//! * [`fabric`] — the multi-subarray fabric simulator: a discrete-event
+//!   model of a grid of interconnected subarrays executing multi-layer
+//!   networks tiled across the grid, with image-level pipelining,
+//!   per-subarray occupancy, interlink traffic/latency and energy — plus
+//!   `FabricBackend`, which lets the coordinator serve a whole fabric.
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
 //!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
 //! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
@@ -50,6 +55,7 @@ pub mod interconnect;
 pub mod analysis;
 pub mod array;
 pub mod scaling;
+pub mod fabric;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;

@@ -8,6 +8,7 @@ use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
 use xpoint_imc::array::TmvmMode;
 use xpoint_imc::cli::Args;
 use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig, SimBackend, XlaBackend};
+use xpoint_imc::fabric::{FabricBackend, FabricConfig};
 use xpoint_imc::interconnect::LineConfig;
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::report;
@@ -30,8 +31,11 @@ COMMANDS:
   fig13     NM sweeps, all four panels (paper Fig. 13)
   table2    digit-recognition evaluation (paper Table II)
   table3    multi-bit TMVM costs (paper Table III)
+  fabric    pipelined multi-subarray fabric scaling exhibit
+            --batch N (default 32)
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
+            [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
   help      this text
 ";
 
@@ -154,13 +158,7 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             Ok(())
         }
         Some("table2") => {
-            let layer = match ArtifactStore::open_default() {
-                Ok(store) => store.single_layer()?,
-                Err(_) => {
-                    eprintln!("(artifacts missing — using template weights)");
-                    report::table2::template_layer()
-                }
-            };
+            let (layer, _) = load_layer_or_template()?;
             let rows = report::table2_rows(&layer);
             print!("{}", report::table2::table2_table(&rows).render());
             Ok(())
@@ -168,6 +166,12 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
         Some("table3") => {
             let (_, _, t) = report::table3_rows(0.9);
             print!("{}", t.render());
+            Ok(())
+        }
+        Some("fabric") => {
+            let batch = args.get_usize("batch", 32)?;
+            let rows = report::fabric_scaling_rows(&report::FABRIC_GRIDS, batch)?;
+            print!("{}", report::fabric_scaling_table(&rows).render());
             Ok(())
         }
         Some("serve") => serve(args),
@@ -179,24 +183,52 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
     }
 }
 
+/// The trained single-layer artifact network when `make artifacts` has
+/// run, the self-contained template layer otherwise.
+fn load_layer_or_template(
+) -> xpoint_imc::Result<(xpoint_imc::nn::BinaryLayer, Option<ArtifactStore>)> {
+    match ArtifactStore::open_default() {
+        Ok(store) => Ok((store.single_layer()?, Some(store))),
+        Err(_) => {
+            eprintln!("(artifacts missing — using template weights)");
+            Ok((report::table2::template_layer(), None))
+        }
+    }
+}
+
 fn serve(args: &Args) -> xpoint_imc::Result<()> {
     let n_images = args.get_usize("images", 1000)?;
     let n_workers = args.get_usize("workers", 2)?;
     let batch = args.get_usize("batch", 64)?;
     let use_xla = args.has_flag("xla");
+    let use_fabric = args.has_flag("fabric");
+    anyhow::ensure!(
+        !(use_xla && use_fabric),
+        "--xla and --fabric are mutually exclusive — pick one backend"
+    );
     let mode = if args.has_flag("parasitic") {
         TmvmMode::Parasitic
     } else {
         TmvmMode::Ideal
     };
 
-    let store = ArtifactStore::open_default()?;
-    let layer = store.single_layer()?;
+    // trained artifact weights when available, self-contained template
+    // weights otherwise (keeps `serve` usable in artifact-free checkouts);
+    // the XLA backend has no template fallback, so fail fast there instead
+    // of printing a misleading fallback notice first
+    let (layer, store) = if use_xla {
+        let store = ArtifactStore::open_default()
+            .map_err(|_| anyhow::anyhow!("--xla needs artifacts — run `make artifacts`"))?;
+        (store.single_layer()?, Some(store))
+    } else {
+        load_layer_or_template()?
+    };
     let design = ArrayDesign::new(batch.max(64), 128, LineConfig::config3(), 3.0, 1.0)
         .with_span(layer.n_in());
 
     let backends: Vec<xpoint_imc::coordinator::BackendFactory> = if use_xla {
         println!("backend: XLA golden model (PJRT CPU, one client per worker)");
+        let store = store.expect("store is always loaded on the --xla path");
         let v_dd = store.meta_f64("vdd_single")?;
         (0..n_workers)
             .map(|_| {
@@ -205,6 +237,22 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
                 Box::new(move || {
                     let runtime = Runtime::cpu()?;
                     Ok(Box::new(XlaBackend::new(&runtime, &hlo, layer, 64, v_dd)?)
+                        as Box<dyn xpoint_imc::coordinator::Backend>)
+                }) as xpoint_imc::coordinator::BackendFactory
+            })
+            .collect()
+    } else if use_fabric {
+        let grid = args.get_usize("grid", 2)?;
+        anyhow::ensure!(grid >= 1, "--grid must be at least 1");
+        println!("backend: event-driven fabric simulator ({grid}×{grid} subarray grid per worker)");
+        (0..n_workers)
+            .map(|_| {
+                let layer = layer.clone();
+                Box::new(move || {
+                    // 64×32-cell subarrays: the 10×121 layer splits into
+                    // four column tiles whose partials merge on the fabric
+                    let cfg = FabricConfig::new(grid, grid, 64, 32);
+                    Ok(Box::new(FabricBackend::new(vec![layer], cfg, 1024)?)
                         as Box<dyn xpoint_imc::coordinator::Backend>)
                 }) as xpoint_imc::coordinator::BackendFactory
             })
@@ -236,13 +284,21 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
     let mut receivers = Vec::with_capacity(n_images);
     for _ in 0..n_images {
         let s = gen.next_sample();
-        receivers.push(coord.submit(s.pixels, Some(s.label)));
+        receivers.push(coord.submit(s.pixels, Some(s.label))?);
     }
+    let mut dropped = 0usize;
     for rx in receivers {
-        rx.recv().expect("prediction");
+        if rx.recv().is_err() {
+            dropped += 1;
+        }
     }
     let wall = started.elapsed().as_secs_f64();
     let snap = coord.shutdown();
+    anyhow::ensure!(
+        dropped == 0,
+        "{dropped}/{n_images} requests got no prediction — worker backend(s) failed \
+         (see errors above)"
+    );
 
     println!("images:          {}", snap.images);
     println!("batches:         {}", snap.batches);

@@ -66,15 +66,20 @@ impl BinaryLayer {
 
     /// Functional classification: argmax of counts (first max wins).
     pub fn argmax(&self, x: &[bool]) -> usize {
-        let counts = self.counts(x);
-        let mut best = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            if c > counts[best] {
-                best = i;
-            }
-        }
-        best
+        argmax_counts(&self.counts(x))
     }
+}
+
+/// Argmax over a count vector, first max wins — the tie-break every
+/// classifier in the stack (functional, subarray, fabric) must share.
+pub fn argmax_counts(counts: &[u32]) -> usize {
+    let mut best = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 /// Result of running a batch of images through a layer on a subarray.

@@ -7,5 +7,5 @@ pub mod mlp;
 pub mod conv;
 
 pub use dataset::{Dataset, DigitGen, IMAGE_PIXELS, IMAGE_SIDE, N_CLASSES};
-pub use layer::BinaryLayer;
+pub use layer::{argmax_counts, BinaryLayer};
 pub use mlp::{BinaryMlp, MlpOnSubarrays};

@@ -1,0 +1,174 @@
+//! Fabric scaling exhibit (new, beyond the paper's single-subarray
+//! tables): pipelined multi-layer inference throughput, subarray
+//! utilization, interlink traffic and energy as a function of fabric size.
+//!
+//! The workload is a fixed three-layer binary network (121→64→32→10,
+//! digit-sized input) tiled over 32×32-cell subarrays; only the fabric
+//! grid varies, so the table isolates the effect of spreading the same
+//! tile set over more subarrays — the §IV scalability story turned into a
+//! throughput claim.
+
+use crate::fabric::{FabricConfig, FabricExecutor};
+use crate::nn::BinaryLayer;
+use crate::util::si::{format_duration, format_pct, format_si};
+use crate::util::{Pcg32, Table};
+
+/// Subarray tile dimensions used by the exhibit.
+pub const FABRIC_TILE: (usize, usize) = (32, 32);
+
+/// Default fabric grids swept by the exhibit.
+pub const FABRIC_GRIDS: [(usize, usize); 5] = [(1, 1), (1, 2), (2, 2), (3, 3), (4, 4)];
+
+/// One evaluated fabric size.
+#[derive(Clone, Debug)]
+pub struct FabricScalingRow {
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    pub nodes: usize,
+    pub tiles: usize,
+    pub batch: usize,
+    /// Simulated end-to-end batch time \[s\].
+    pub makespan: f64,
+    /// Makespan in computational-step quanta.
+    pub cycles: u64,
+    /// Simulated throughput \[images/s\].
+    pub throughput: f64,
+    /// Mean / peak subarray busy fraction.
+    pub mean_util: f64,
+    pub max_util: f64,
+    /// Interlink hop-transfers and line-hops (per-hop traffic sums).
+    pub transfers: u64,
+    pub lines: u64,
+    /// Total energy per image \[J\].
+    pub energy_per_image: f64,
+}
+
+/// The fixed three-layer exhibit workload (deterministic weights).
+pub fn fabric_workload() -> Vec<BinaryLayer> {
+    let mut rng = Pcg32::seeded(0xfab);
+    let mut layer = |n_out: usize, n_in: usize, theta: usize| {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.35)).collect())
+                .collect(),
+            theta,
+        )
+    };
+    vec![layer(64, 121, 12), layer(32, 64, 8), layer(10, 32, 4)]
+}
+
+/// Run the exhibit: the same workload and batch on each fabric grid.
+pub fn fabric_scaling_rows(
+    grids: &[(usize, usize)],
+    batch: usize,
+) -> crate::Result<Vec<FabricScalingRow>> {
+    let layers = fabric_workload();
+    let mut rng = Pcg32::seeded(0x1112);
+    let images: Vec<Vec<bool>> = (0..batch)
+        .map(|_| (0..layers[0].n_in()).map(|_| rng.bernoulli(0.4)).collect())
+        .collect();
+
+    let mut rows = Vec::with_capacity(grids.len());
+    for &(gr, gc) in grids {
+        let cfg = FabricConfig::new(gr, gc, FABRIC_TILE.0, FABRIC_TILE.1);
+        let exec = FabricExecutor::new(layers.clone(), cfg)?;
+        let run = exec.run_batch(&images)?;
+        let max_util = run.utilization.iter().cloned().fold(0.0, f64::max);
+        rows.push(FabricScalingRow {
+            grid_rows: gr,
+            grid_cols: gc,
+            nodes: gr * gc,
+            tiles: exec.placement().n_tiles(),
+            batch,
+            makespan: run.makespan,
+            cycles: run.cycles,
+            throughput: run.throughput(),
+            mean_util: run.mean_utilization(),
+            max_util,
+            transfers: run.traffic.transfers,
+            lines: run.traffic.lines,
+            energy_per_image: if batch > 0 {
+                run.energy / batch as f64
+            } else {
+                0.0
+            },
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the exhibit table.
+pub fn fabric_scaling_table(rows: &[FabricScalingRow]) -> Table {
+    let title = format!(
+        "Fabric scaling — pipelined 3-layer inference, {}×{} subarrays, batch {}",
+        FABRIC_TILE.0,
+        FABRIC_TILE.1,
+        rows.first().map_or(0, |r| r.batch)
+    );
+    let mut t = Table::new(&title).header(&[
+        "Fabric",
+        "Subarrays",
+        "Tiles",
+        "Makespan",
+        "Cycles",
+        "Throughput",
+        "Util (mean/max)",
+        "Link xfers",
+        "Line-hops",
+        "E/image",
+    ]);
+    for r in rows {
+        t.row(&[
+            format!("{}×{}", r.grid_rows, r.grid_cols),
+            r.nodes.to_string(),
+            r.tiles.to_string(),
+            format_duration(r.makespan),
+            r.cycles.to_string(),
+            format!("{} img/s", format_si(r.throughput, "")),
+            format!("{} / {}", format_pct(r.mean_util), format_pct(r.max_util)),
+            r.transfers.to_string(),
+            r.lines.to_string(),
+            format_si(r.energy_per_image, "J"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_scales_with_fabric_size() {
+        let rows = fabric_scaling_rows(&FABRIC_GRIDS, 32).unwrap();
+        assert_eq!(rows.len(), 5);
+        // same workload everywhere: tile count is constant
+        assert!(rows.windows(2).all(|w| w[0].tiles == w[1].tiles));
+        // more subarrays → strictly faster batch, until tiles spread out
+        let t1 = rows.first().unwrap().throughput;
+        let t16 = rows.last().unwrap().throughput;
+        assert!(
+            t16 > 2.0 * t1,
+            "16 subarrays {t16:.0} img/s vs 1 subarray {t1:.0} img/s"
+        );
+        // makespans are monotonically non-increasing across the sweep
+        assert!(rows.windows(2).all(|w| w[1].makespan <= w[0].makespan * 1.001));
+        // single-node fabric moves nothing across grid interlinks
+        assert_eq!(rows[0].transfers, 0);
+        assert!(rows.last().unwrap().transfers > 0);
+        // utilization is a valid fraction, higher when nodes are shared
+        assert!(rows.iter().all(|r| r.mean_util > 0.0 && r.max_util <= 1.0));
+        assert!(rows[0].mean_util > rows.last().unwrap().mean_util);
+        // energy per image stays in the physical (sub-nJ) regime
+        assert!(rows.iter().all(|r| r.energy_per_image > 1e-13 && r.energy_per_image < 2e-9));
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = fabric_scaling_rows(&[(1, 1), (2, 2)], 8).unwrap();
+        let t = fabric_scaling_table(&rows);
+        assert_eq!(t.n_rows(), 2);
+        let s = t.render();
+        assert!(s.contains("1×1") && s.contains("2×2"), "{s}");
+    }
+}

@@ -3,10 +3,12 @@
 //! generated from exactly one code path.
 
 pub mod exhibits;
+pub mod fabric;
 pub mod table2;
 
 pub use exhibits::{
     fig10_series, fig11_regions, fig13_sweeps, table1_rows, table3_rows, Fig10Row, Fig11Data,
     Fig13Series,
 };
+pub use fabric::{fabric_scaling_rows, fabric_scaling_table, FabricScalingRow, FABRIC_GRIDS};
 pub use table2::{table2_rows, Table2Row, TABLE2_DESIGNS};

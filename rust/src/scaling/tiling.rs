@@ -30,7 +30,11 @@ pub struct Tiling {
 
 impl Tiling {
     pub fn new(logical_rows: usize, logical_cols: usize, tile_rows: usize, tile_cols: usize) -> Self {
-        assert!(tile_rows > 0 && tile_cols > 0);
+        assert!(tile_rows > 0 && tile_cols > 0, "empty tile dimensions");
+        assert!(
+            logical_rows > 0 && logical_cols > 0,
+            "empty logical matrix: {logical_rows}×{logical_cols}"
+        );
         Self {
             logical_rows,
             logical_cols,
@@ -132,6 +136,24 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty logical matrix")]
+    fn zero_logical_rows_rejected() {
+        let _ = Tiling::new(0, 10, 4, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty logical matrix")]
+    fn zero_logical_cols_rejected() {
+        let _ = Tiling::new(10, 0, 4, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty tile dimensions")]
+    fn zero_tile_dims_rejected() {
+        let _ = Tiling::new(10, 10, 0, 4);
     }
 
     #[test]

@@ -40,7 +40,7 @@ fn serves_digit_corpus_with_accuracy_and_energy() {
     for _ in 0..n {
         let s = gen.next_sample();
         expected.push((layer.forward(&s.pixels), layer.argmax(&s.pixels)));
-        rxs.push(coord.submit(s.pixels, Some(s.label)));
+        rxs.push(coord.submit(s.pixels, Some(s.label)).expect("submit"));
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
@@ -83,7 +83,7 @@ fn throughput_scales_with_workers() {
         let n = 2048;
         let started = std::time::Instant::now();
         let rxs: Vec<_> = (0..n)
-            .map(|_| coord.submit(gen.next_sample().pixels, None))
+            .map(|_| coord.submit(gen.next_sample().pixels, None).expect("submit"))
             .collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(60)).expect("reply");
@@ -123,7 +123,7 @@ fn partial_batches_flush_on_linger() {
     let mut gen = DigitGen::new(2);
     // submit fewer than a batch; linger must flush them
     let rxs: Vec<_> = (0..5)
-        .map(|_| coord.submit(gen.next_sample().pixels, None))
+        .map(|_| coord.submit(gen.next_sample().pixels, None).expect("submit"))
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(10)).expect("linger flush");

@@ -1,0 +1,188 @@
+//! Integration: the event-driven fabric must be bit-exact with the
+//! functional models — `tiled_tmvm_counts` for single layers and chained
+//! `BinaryLayer::forward` for deep stacks — across random shapes and
+//! fabric grids, while reporting physically sensible timing/energy. Also
+//! drives a whole fabric through the L3 coordinator.
+
+use std::time::Duration;
+use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig};
+use xpoint_imc::fabric::{FabricBackend, FabricConfig, FabricExecutor};
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::report::table2::template_layer;
+use xpoint_imc::scaling::tiling::{tiled_tmvm_counts, Tiling};
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize) -> BinaryLayer {
+    let theta = rng.range(1, 6);
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.45)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+/// Property: single-layer fabric counts equal `tiled_tmvm_counts` (same
+/// tiling) and bits equal `BinaryLayer::forward`, for random shapes,
+/// tile sizes and fabric grids.
+#[test]
+fn prop_fabric_matches_tiled_counts_and_forward() {
+    forall(Config::default().cases(60), "fabric ≡ tiled counts", |rng| {
+        let n_out = rng.range(1, 40);
+        let n_in = rng.range(1, 60);
+        let layer = random_layer(rng, n_out, n_in);
+        let tile_rows = rng.range(1, 24);
+        let tile_cols = rng.range(1, 24);
+        let grid = (rng.range(1, 4), rng.range(1, 4));
+        let cfg = FabricConfig::new(grid.0, grid.1, tile_rows, tile_cols);
+        let exec = FabricExecutor::new(vec![layer.clone()], cfg)
+            .map_err(|e| format!("placement: {e}"))?;
+
+        let m = rng.range(1, 8);
+        let images: Vec<Vec<bool>> = (0..m)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let run = exec.run_batch(&images).map_err(|e| format!("run: {e}"))?;
+
+        let g: Vec<Vec<bool>> = layer.weights.clone();
+        let tiling = Tiling::new(n_out, n_in, tile_rows, tile_cols);
+        for (i, img) in images.iter().enumerate() {
+            let want_counts = tiled_tmvm_counts(&tiling, &g, img);
+            if run.final_counts[i] != want_counts {
+                return Err(format!(
+                    "image {i}: counts {:?} != tiled {:?} (grid {grid:?}, tile {tile_rows}×{tile_cols})",
+                    run.final_counts[i], want_counts
+                ));
+            }
+            if run.outputs[i] != layer.forward(img) {
+                return Err(format!("image {i}: bits diverge from forward"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: deep stacks (2–4 layers) through random fabrics equal the
+/// chained functional forward pass, and the run reports are sane.
+#[test]
+fn prop_multilayer_fabric_matches_chained_forward() {
+    forall(Config::default().cases(40), "deep fabric ≡ forward chain", |rng| {
+        let depth = rng.range(2, 5);
+        let mut widths = vec![rng.range(4, 40)];
+        for _ in 0..depth {
+            widths.push(rng.range(2, 30));
+        }
+        let mut layers = Vec::with_capacity(depth);
+        for k in 0..depth {
+            layers.push(random_layer(rng, widths[k + 1], widths[k]));
+        }
+        let cfg = FabricConfig::new(rng.range(1, 4), rng.range(1, 4), rng.range(2, 16), rng.range(2, 16));
+        let exec = FabricExecutor::new(layers.clone(), cfg).map_err(|e| format!("{e}"))?;
+
+        let m = rng.range(1, 6);
+        let images: Vec<Vec<bool>> = (0..m)
+            .map(|_| (0..widths[0]).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let run = exec.run_batch(&images).map_err(|e| format!("{e}"))?;
+
+        for (i, img) in images.iter().enumerate() {
+            let mut x = img.clone();
+            for l in &layers {
+                x = l.forward(&x);
+            }
+            if run.outputs[i] != x {
+                return Err(format!("image {i} diverges (depth {depth})"));
+            }
+        }
+        // report sanity (energy can legitimately be 0 when a sparse random
+        // case yields all-zero counts — no current flows anywhere)
+        if !(run.makespan > 0.0 && run.cycles > 0 && run.energy >= 0.0) {
+            return Err("empty report".into());
+        }
+        if run.utilization.iter().any(|&u| !(0.0..=1.0).contains(&u)) {
+            return Err(format!("utilization out of range: {:?}", run.utilization));
+        }
+        let expected_steps: u64 = (m * exec.placement().n_tiles()) as u64;
+        if run.steps != expected_steps {
+            return Err(format!("steps {} != m·tiles {expected_steps}", run.steps));
+        }
+        Ok(())
+    });
+}
+
+/// Pipelining: on a fabric with one tile per node, a batch finishes far
+/// sooner than images run back to back, and per-image completions are
+/// staggered monotonically.
+#[test]
+fn pipeline_overlap_beats_serial_execution() {
+    let mut rng = Pcg32::seeded(314);
+    let layers = vec![
+        random_layer(&mut rng, 16, 24),
+        random_layer(&mut rng, 16, 16),
+        random_layer(&mut rng, 8, 16),
+    ];
+    let exec = FabricExecutor::new(layers, FabricConfig::new(2, 2, 24, 24)).unwrap();
+    let image = |rng: &mut Pcg32| -> Vec<bool> { (0..24).map(|_| rng.bernoulli(0.5)).collect() };
+    let one = vec![image(&mut rng)];
+    let latency = exec.run_batch(&one).unwrap().makespan;
+
+    let m = 16;
+    let many: Vec<Vec<bool>> = (0..m).map(|_| image(&mut rng)).collect();
+    let run = exec.run_batch(&many).unwrap();
+    assert!(
+        run.makespan < 0.6 * m as f64 * latency,
+        "batch {} vs serial {}",
+        run.makespan,
+        m as f64 * latency
+    );
+    // completions are monotone (FIFO injection) and all within the run
+    for w in run.per_image_done.windows(2) {
+        assert!(w[1] >= w[0], "completions out of order: {:?}", run.per_image_done);
+    }
+    assert!(run.per_image_done.iter().all(|&t| t <= run.makespan + 1e-15));
+}
+
+/// The serving shell drives a whole fabric: predictions through
+/// `FabricBackend` match the functional layer exactly, with fabric
+/// timing/energy flowing into the coordinator metrics.
+#[test]
+fn coordinator_serves_fabric_backend() {
+    let factories: Vec<BackendFactory> = (0..2)
+        .map(|_| {
+            Box::new(move || {
+                let layer = template_layer();
+                let cfg = FabricConfig::new(2, 2, 64, 32);
+                Ok(Box::new(FabricBackend::new(vec![layer], cfg, 1024)?)
+                    as Box<dyn xpoint_imc::coordinator::Backend>)
+            }) as BackendFactory
+        })
+        .collect();
+    let mut coord = Coordinator::spawn(
+        factories,
+        CoordinatorConfig {
+            batch_capacity: 32,
+            linger: Duration::from_micros(100),
+        },
+    );
+    let layer = template_layer();
+    let mut gen = xpoint_imc::nn::dataset::DigitGen::new(xpoint_imc::nn::dataset::TEST_SEED);
+    let n = 128;
+    let mut expected = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = gen.next_sample();
+        expected.push((layer.forward(&s.pixels), layer.argmax(&s.pixels)));
+        rxs.push(coord.submit(s.pixels, Some(s.label)).expect("submit"));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+        assert_eq!(pred.bits, expected[i].0, "request {i} bits");
+        assert_eq!(pred.class, expected[i].1, "request {i} class");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.images, n as u64);
+    assert!(snap.accuracy.expect("labelled") > 0.5);
+    assert!(snap.energy > 0.0, "fabric energy reaches the metrics");
+    assert!(snap.sim_time > 0.0, "fabric makespan reaches the metrics");
+}

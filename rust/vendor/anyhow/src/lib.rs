@@ -1,0 +1,233 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so instead of the real
+//! dependency this vendored crate implements exactly the surface the
+//! workspace uses:
+//!
+//! * [`Error`] — a boxed-free error with a context chain; `{}` prints the
+//!   outermost message, `{:#}` the full `outer: inner: …` chain (matching
+//!   anyhow's alternate formatting).
+//! * [`Result<T>`] with the `E = Error` default.
+//! * A blanket `From<E: std::error::Error>` so `?` lifts std errors.
+//! * The [`Context`] extension trait for `Result` and `Option`.
+//! * The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what keeps the blanket `From` coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error with a chain of context messages (outermost first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the chain messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, anyhow-style
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // flatten the std source chain into our message chain
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>` — like `std::result::Result` with a default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+// One impl covers both std errors (via the blanket `From`) and
+// `anyhow::Error` itself (via the identity `From`) with no overlap.
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ctx(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("parsing the flag")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn from_std_error_and_context_chain() {
+        let err = parse_ctx("abc").unwrap_err();
+        assert_eq!(err.to_string(), "parsing the flag");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("parsing the flag: "), "{full}");
+        assert!(parse_ctx("42").is_ok());
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn f(x: Option<u8>) -> Result<u8> {
+            let v = x.context("missing value")?;
+            ensure!(v < 10, "value {v} too large");
+            if v == 9 {
+                bail!("nine is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(f(None).unwrap_err().to_string(), "missing value");
+        assert_eq!(f(Some(20)).unwrap_err().to_string(), "value 20 too large");
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(e.to_string(), "x = 5");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let err = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("top") && dbg.contains("Caused by:") && dbg.contains("root"));
+        assert_eq!(err.root_cause(), "root");
+    }
+}
