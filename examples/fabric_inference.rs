@@ -1,13 +1,15 @@
-//! Pipelined inference on a simulated multi-subarray fabric: tile a
-//! three-layer binary network over a grid of 3D XPoint subarrays, stream a
-//! batch of digit images through it, and inspect timing, per-subarray
-//! utilization, interlink traffic and energy.
+//! Pipelined inference on a simulated multi-subarray fabric, served
+//! through the unified engine API: declare the fabric with an
+//! `EngineSpec`, stream a batch of digit images through the resulting
+//! engine, and read timing, per-subarray utilization, interlink traffic
+//! and energy from its typed telemetry.
 //!
 //! ```bash
 //! cargo run --release --example fabric_inference
 //! ```
 
-use xpoint_imc::fabric::{FabricConfig, FabricExecutor};
+use xpoint_imc::engine::{BackendKind, EngineSpec};
+use xpoint_imc::fabric::FabricExecutor;
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::nn::BinaryLayer;
 use xpoint_imc::report::table2::template_layer;
@@ -28,68 +30,82 @@ fn main() -> xpoint_imc::Result<()> {
     };
     let l2 = mk(16, 10, 2, &mut rng);
     let l3 = mk(10, 16, 3, &mut rng);
+    let layers = vec![l1, l2, l3];
     println!("network: 121 → 10 → 16 → 10 (binary weights, shared θ per layer)");
 
-    // 2. place it on a 2×2 fabric of 32×32-cell subarrays
-    let cfg = FabricConfig::new(2, 2, 32, 32);
-    let exec = FabricExecutor::new(vec![l1, l2, l3], cfg)?;
-    let p = exec.placement();
+    // 2. declare the whole serving stack: a 2×2 fabric of 32×32-cell
+    //    subarrays hosting the layer stack, behind one EngineSpec
+    let spec = EngineSpec::new(BackendKind::Fabric)
+        .with_layers(layers.clone())
+        .with_grid(2, 2)
+        .with_tile(32, 32);
+    let mut engine = spec.build_engine()?;
+    let caps = engine.capabilities();
     println!(
         "fabric:  2×2 subarrays (32×32 cells), {} weight tiles placed round-robin",
-        p.n_tiles()
+        caps.tiles
     );
-    for t in &p.tiles {
+    // the placement itself is a fabric-layer detail, still inspectable —
+    // derived from the same spec so the two views can't drift apart
+    let exec = FabricExecutor::new(layers.clone(), spec.fabric.config())?;
+    for t in &exec.placement().tiles {
         println!(
             "         layer {} tile ({},{}) rows {:?} cols {:?} → subarray {}",
             t.layer, t.tile_row, t.tile_col, t.row_range, t.col_range, t.node
         );
     }
 
-    // 3. stream a batch of synthetic digits through the pipeline
+    // 3. per-image latency first: one image alone through a fresh engine
     let mut gen = DigitGen::new(TEST_SEED);
     let batch = 48;
     let images: Vec<Vec<bool>> = (0..batch).map(|_| gen.next_sample().pixels).collect();
-    let run = exec.run_batch(&images)?;
+    let one = spec.build_engine()?.infer_batch(&images[..1])?;
 
+    // 4. stream the whole batch through the pipeline and read telemetry
+    let res = engine.infer_batch(&images)?;
+    let tel = engine.telemetry();
     println!("\nbatch of {batch} images:");
-    println!("  makespan:       {} ({} cycles)", format_duration(run.makespan), run.cycles);
+    println!(
+        "  makespan:       {} ({} cycles)",
+        format_duration(res.sim_time),
+        tel.cycles
+    );
     println!(
         "  throughput:     {} img/s (simulated)",
-        format_si(run.throughput(), "")
+        format_si(batch as f64 / res.sim_time, "")
     );
-    println!("  TMVM steps:     {}", run.steps);
+    println!("  TMVM steps:     {}", res.steps);
     println!(
         "  energy:         {} compute + {} interlink = {} total ({}/image)",
-        format_si(run.compute_energy, "J"),
-        format_si(run.link_energy, "J"),
-        format_si(run.energy, "J"),
-        format_si(run.energy / batch as f64, "J"),
+        format_si(tel.compute_energy, "J"),
+        format_si(tel.link_energy, "J"),
+        format_si(res.energy, "J"),
+        format_si(res.energy / batch as f64, "J"),
     );
     println!(
         "  interlink:      {} hop-transfers, {} line-hops of traffic",
-        run.traffic.transfers, run.traffic.lines
+        tel.link_transfers, tel.link_lines
     );
-    for (n, u) in run.utilization.iter().enumerate() {
+    for (n, u) in tel.utilization.iter().enumerate() {
         println!("  subarray {n}:     {} busy", format_pct(*u));
     }
 
-    // 4. pipelining: compare with one image alone
-    let one = exec.run_batch(&images[..1])?;
+    // 5. pipelining: the batch finishes far sooner than back-to-back
     println!(
         "\nper-image latency alone: {} — {} images pipelined in {} ({:.1}× over back-to-back)",
-        format_duration(one.makespan),
+        format_duration(one.sim_time),
         batch,
-        format_duration(run.makespan),
-        batch as f64 * one.makespan / run.makespan
+        format_duration(res.sim_time),
+        batch as f64 * one.sim_time / res.sim_time
     );
 
-    // 5. the executor is bit-exact with the functional forward chain
+    // 6. the engine is bit-exact with the functional forward chain
     let mismatches = images
         .iter()
-        .zip(&run.outputs)
+        .zip(&res.bits)
         .filter(|(img, out)| {
             let mut x = (*img).clone();
-            for l in exec.layers() {
+            for l in &layers {
                 x = l.forward(&x);
             }
             &x != *out

@@ -15,14 +15,11 @@
 //! ```
 
 use std::time::{Duration, Instant};
-use xpoint_imc::analysis::{noise_margin, ArrayDesign};
-use xpoint_imc::array::TmvmMode;
-use xpoint_imc::coordinator::{
-    Backend, BackendFactory, Coordinator, CoordinatorConfig, SimBackend, XlaBackend,
-};
-use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::analysis::noise_margin;
+use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig};
+use xpoint_imc::engine::{ArraySpec, BackendKind, EngineSpec, NetworkSource};
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
-use xpoint_imc::runtime::{ArtifactStore, Runtime};
+use xpoint_imc::runtime::ArtifactStore;
 use xpoint_imc::util::si::{format_duration, format_pct, format_si};
 
 fn main() -> xpoint_imc::Result<()> {
@@ -46,12 +43,19 @@ fn main() -> xpoint_imc::Result<()> {
     }
     println!("[2] dataset contract: 32/32 samples bit-identical rust vs python ✓");
 
-    // --- XLA golden vs rust simulator ---
-    let runtime = Runtime::cpu()?;
-    let mut xla = XlaBackend::new(&runtime, &store.nn_infer_hlo(), layer.clone(), 64, v_dd)?;
-    let design = ArrayDesign::new(64, 128, LineConfig::config3(), 3.0, 1.0).with_span(121);
-    let nm = noise_margin(&design);
-    let mut sim = SimBackend::new(layer.clone(), design.clone(), TmvmMode::Ideal);
+    // --- XLA golden vs rust simulator, both through EngineSpec::build ---
+    let array = ArraySpec {
+        rows: 64,
+        cols: 128,
+        span: Some(121),
+        ..ArraySpec::default()
+    };
+    let nm = noise_margin(&array.design()?);
+    let sim_spec = EngineSpec::new(BackendKind::Ideal)
+        .with_network(NetworkSource::Artifact)
+        .with_array(array);
+    let mut xla = EngineSpec::new(BackendKind::Xla).build_engine()?;
+    let mut sim = sim_spec.build_engine()?;
     let mut gen = DigitGen::new(TEST_SEED);
     let batch: Vec<Vec<bool>> = (0..64).map(|_| gen.next_sample().pixels).collect();
     let t0 = Instant::now();
@@ -80,16 +84,10 @@ fn main() -> xpoint_imc::Result<()> {
     // --- full corpus through the coordinator ---
     let n_images = 10_000usize;
     let n_workers = 2usize;
-    let factories: Vec<BackendFactory> = (0..n_workers)
-        .map(|_| {
-            let layer = layer.clone();
-            let design = design.clone();
-            Box::new(move || {
-                Ok(Box::new(SimBackend::new(layer, design, TmvmMode::Ideal))
-                    as Box<dyn Backend>)
-            }) as BackendFactory
-        })
-        .collect();
+    let factories = sim_spec
+        .clone()
+        .with_workers(n_workers)
+        .build_factories()?;
     let mut coord = Coordinator::spawn(
         factories,
         CoordinatorConfig {

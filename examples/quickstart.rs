@@ -1,5 +1,6 @@
-//! Quickstart: program a small 3D XPoint subarray, run a thresholded
-//! matrix–vector multiply in-memory, and inspect the result.
+//! Quickstart: serve digit inference through the unified engine API, swap
+//! backend fidelities with one enum, then drop down to the raw subarray
+//! to see the in-memory TMVM the engines simulate.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -7,14 +8,72 @@
 
 use xpoint_imc::analysis::{ideal_window, noise_margin, ArrayDesign};
 use xpoint_imc::array::{Level, Subarray, TmvmMode};
+use xpoint_imc::engine::{BackendKind, EngineSpec, NetworkSource};
 use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::util::si::{format_pct, format_si};
 
-fn main() {
-    // 1. a subarray design: 8×8, configuration 3 wiring, cell 36×240 nm
+fn main() -> xpoint_imc::Result<()> {
+    // ------------------------------------------------------------------
+    // 1. the front door: a declarative EngineSpec → a running engine.
+    //    The same spec is expressible as JSON (`xpoint serve --engine
+    //    spec.json`) or CLI flags (`xpoint serve --parasitic`).
+    let spec = EngineSpec::new(BackendKind::Ideal).with_network(NetworkSource::Template);
+    println!("engine spec (JSON form):\n{}", spec.to_json());
+
+    let mut engine = spec.build_engine()?;
+    let caps = engine.capabilities();
+    println!(
+        "engine: {:?} backend, {}→{} network, batch ≤ {}, {} subarray(s)",
+        caps.kind, caps.n_in, caps.n_out, caps.max_batch, caps.nodes
+    );
+
+    // 2. infer a batch of synthetic digits and read the typed telemetry
+    let mut gen = DigitGen::new(TEST_SEED);
+    let samples: Vec<_> = (0..8).map(|_| gen.next_sample()).collect();
+    let images: Vec<Vec<bool>> = samples.iter().map(|s| s.pixels.clone()).collect();
+    let res = engine.infer_batch(&images)?;
+    let correct = samples
+        .iter()
+        .zip(&res.classes)
+        .filter(|(s, &c)| s.label == c)
+        .count();
+    let tel = engine.telemetry();
+    println!(
+        "batch of {}: {}/{} correct, {} simulated, {} ({}/image)",
+        images.len(),
+        correct,
+        images.len(),
+        format_si(tel.sim_time, "s"),
+        format_si(tel.energy, "J"),
+        format_si(tel.energy_per_image(), "J"),
+    );
+
+    // 3. swap fidelity with one enum variant: the parasitic-aware model
+    //    must agree bit-for-bit on a healthy design
+    let mut parasitic = EngineSpec::new(BackendKind::Parasitic)
+        .with_network(NetworkSource::Template)
+        .build_engine()?;
+    let res_p = parasitic.infer_batch(&images)?;
+    let agree = res_p.bits.iter().zip(&res.bits).filter(|(p, i)| p == i).count();
+    println!(
+        "parasitic backend: {agree}/{} images decode identically (wire drops can \
+         only lose bits), energy {}",
+        images.len(),
+        format_si(res_p.energy, "J")
+    );
+
+    // 4. the non-blocking surface the coordinator and future shards share
+    let ticket = engine.submit(images.clone())?;
+    let polled = engine.poll(ticket)?.expect("simulated engines complete at submit");
+    assert_eq!(polled.bits, res.bits);
+    println!("submit/poll: ticket {ticket} redeemed, same predictions\n");
+
+    // ------------------------------------------------------------------
+    // 5. under the hood: an 8×8 subarray design and its feasibility
     let design = ArrayDesign::new(8, 8, LineConfig::config3(), 3.0, 1.0);
     println!(
-        "design: {}×{} cells, config {}, cell {:.0}×{:.0} nm, area {:.3} µm²",
+        "raw subarray: {}×{} cells, config {}, cell {:.0}×{:.0} nm, area {:.3} µm²",
         design.n_row,
         design.n_col,
         design.config.id,
@@ -22,8 +81,6 @@ fn main() {
         design.cell.l_cell * 1e9,
         design.area() * 1e12
     );
-
-    // 2. feasibility first: the paper's noise-margin analysis
     let nm = noise_margin(&design);
     println!(
         "noise margin: {} (window [{}, {}])",
@@ -32,7 +89,7 @@ fn main() {
         format_si(nm.v_hi(), "V"),
     );
 
-    // 3. program a binary matrix G into the top PCM level
+    // 6. program a binary matrix G into the top PCM level
     let mut sa = Subarray::new(design);
     let g: Vec<Vec<bool>> = (0..8)
         .map(|r| (0..8).map(|c| (r + c) % 3 == 0).collect())
@@ -44,51 +101,40 @@ fn main() {
         println!("  {line}");
     }
 
-    // 4. choose an operating voltage realizing firing threshold θ = 2
+    // 7. choose an operating voltage realizing firing threshold θ = 2 and
+    //    apply an input vector as word-line pulses; thresholded dot
+    //    products land in bottom-level column 0
     let theta = 2;
     let v_dd = sa.vdd_for_threshold(theta);
     println!("\nθ = {theta} ⇒ V_DD = {}", format_si(v_dd, "V"));
-
-    // 5. apply an input vector as word-line pulses; thresholded dot
-    //    products land in bottom-level column 0
     let x = vec![true, false, true, true, false, false, true, false];
     let report = sa.tmvm(&x, 0, v_dd, TmvmMode::Ideal);
     println!(
-        "x = {:?}\ncurrents = [{}]",
+        "x = {:?}\nO = {:?}   (electrically clean: {})",
         x.iter().map(|&b| b as u8).collect::<Vec<_>>(),
-        report
-            .currents
-            .iter()
-            .map(|&i| format_si(i, "A"))
-            .collect::<Vec<_>>()
-            .join(", ")
-    );
-    println!(
-        "O = {:?}   (electrically clean: {})",
         report.outputs.iter().map(|&b| b as u8).collect::<Vec<_>>(),
         report.is_clean()
     );
 
-    // 6. verify against exact integer counts
+    // 8. verify against exact integer counts
     for (r, row) in g.iter().enumerate() {
         let count = row.iter().zip(&x).filter(|(&w, &xi)| w && xi).count();
         assert_eq!(report.outputs[r], count >= theta);
     }
-    println!("\nverified: outputs equal exact count-thresholding ✓");
+    println!("verified: outputs equal exact count-thresholding ✓");
 
-    // 7. energy/latency ledger
+    // 9. energy/latency ledger + the ideal operating window (Eqs. 4–5)
     println!(
         "energy booked: {}, busy time: {}",
         format_si(sa.ledger.energy, "J"),
         format_si(sa.ledger.time, "s")
     );
-
-    // 8. the ideal operating window for a 121-input TMVM (Eqs. 4–5)
     let w = ideal_window(121, &sa.design().device);
     println!(
-        "\nideal window for 121 inputs: [{}, {}] (NM {})",
+        "ideal window for 121 inputs: [{}, {}] (NM {})",
         format_si(w.v_min(), "V"),
         format_si(w.v_max(), "V"),
         format_pct(w.noise_margin())
     );
+    Ok(())
 }

@@ -4,7 +4,7 @@
 //! the workload is CPU-bound simulation, so a thread-per-worker design
 //! outperforms an async reactor here.
 
-use super::backend::BackendFactory;
+use crate::engine::BackendFactory;
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use std::sync::mpsc;
@@ -213,10 +213,7 @@ impl Drop for Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::ArrayDesign;
-    use crate::array::TmvmMode;
-    use crate::coordinator::backend::SimBackend;
-    use crate::interconnect::LineConfig;
+    use crate::engine::{ArraySpec, BackendKind, EngineSpec};
     use crate::nn::BinaryLayer;
     use crate::util::Pcg32;
 
@@ -228,12 +225,16 @@ mod tests {
                 .collect(),
             4,
         );
-        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
-        let l = layer.clone();
-        let factory: BackendFactory = Box::new(move || {
-            Ok(Box::new(SimBackend::new(l, design, TmvmMode::Ideal)) as Box<dyn super::super::Backend>)
-        });
-        (layer, factory)
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 32,
+                span: Some(32),
+                ..ArraySpec::default()
+            })
+            .with_batching(32, 200) // capacity may not exceed the 32 rows
+            .with_layers(vec![layer.clone()]);
+        (layer, spec.build().expect("valid spec"))
     }
 
     #[test]

@@ -4,15 +4,22 @@
 //! The paper's contribution is the in-memory compute substrate itself, so
 //! the coordinator is deliberately thin: it owns process topology and the
 //! batching policy (`⌊N_row/P⌋` images per computational step, Table II)
-//! and treats the inference backend as pluggable — either the circuit-level
-//! rust simulator or the AOT-compiled XLA golden model.
+//! and treats the inference backend as pluggable behind the unified
+//! [`Engine`](crate::engine::Engine) trait — workers are spawned from the
+//! [`BackendFactory`] list produced by
+//! [`EngineSpec::build_factories`](crate::engine::EngineSpec::build_factories).
+//!
+//! `Backend` is a re-export of `engine::Engine` (the engine API subsumed
+//! the old coordinator-local trait); the concrete backends live in
+//! [`crate::engine::backends`].
 
-pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 
-pub use backend::{Backend, BackendFactory, InferenceResult, SimBackend, XlaBackend};
+pub use crate::engine::{
+    Engine as Backend, BackendFactory, InferenceResult, SimBackend, XlaBackend,
+};
 pub use batcher::Batcher;
 pub use engine::{Coordinator, CoordinatorConfig, Prediction};
 pub use metrics::{Metrics, MetricsSnapshot};

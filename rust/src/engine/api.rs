@@ -1,0 +1,228 @@
+//! The unified serving API: the [`Engine`] trait every backend fidelity
+//! implements, plus its typed companions — [`Capabilities`] (static
+//! introspection), [`Telemetry`] (cumulative energy/time/steps/utilization
+//! counters) and the non-blocking [`Engine::submit`]/[`Engine::poll`] pair.
+//!
+//! `Engine` subsumes the old `coordinator::Backend` trait (batched
+//! inference + `max_batch`) so the coordinator, the report exhibits and
+//! future multi-fabric shards all drive backends through one surface.
+
+use super::error::EngineError;
+use super::spec::BackendKind;
+
+/// Output of a batched inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    /// Hardware thresholded bits, `[image][neuron]`.
+    pub bits: Vec<Vec<bool>>,
+    /// Functional class prediction per image (count-space argmax, realized
+    /// on hardware by a θ-sweep of `V_DD`).
+    pub classes: Vec<usize>,
+    /// Simulated array busy time for the batch \[s\] (0 for XLA).
+    pub sim_time: f64,
+    /// Simulated energy for the batch \[J\] (0 for XLA).
+    pub energy: f64,
+    /// Computational steps consumed.
+    pub steps: u64,
+}
+
+/// What an engine *is*: static introspection a scheduler can plan with
+/// before submitting any work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Backend fidelity this engine realizes.
+    pub kind: BackendKind,
+    /// Input bits per image.
+    pub n_in: usize,
+    /// Output neurons per image.
+    pub n_out: usize,
+    /// Largest batch one `infer_batch` call accepts.
+    pub max_batch: usize,
+    /// Physical subarrays backing the engine.
+    pub nodes: usize,
+    /// Weight tiles placed on those subarrays.
+    pub tiles: usize,
+    /// Whether `InferenceResult::energy`/`sim_time` carry physical values
+    /// (the XLA golden model reports zeros).
+    pub reports_energy: bool,
+    /// Whether batches overlap internally (image-level pipelining).
+    pub pipelined: bool,
+}
+
+/// Cumulative typed telemetry, updated by every successful `infer_batch`
+/// (and therefore by `submit`). Counters accumulate since construction;
+/// `utilization` is the per-subarray busy fraction of the *most recent*
+/// batch (single-subarray engines report an empty vector).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Telemetry {
+    pub batches: u64,
+    pub images: u64,
+    /// TMVM computational steps executed.
+    pub steps: u64,
+    /// Simulated array busy time \[s\].
+    pub sim_time: f64,
+    /// Total simulated energy \[J\].
+    pub energy: f64,
+    /// Compute (TMVM step) share of `energy` \[J\] (fabric engines).
+    pub compute_energy: f64,
+    /// Interlink/switch share of `energy` \[J\] (fabric engines).
+    pub link_energy: f64,
+    /// Makespan in computational-step quanta (fabric engines).
+    pub cycles: u64,
+    /// Interlink hop-transfers (fabric engines).
+    pub link_transfers: u64,
+    /// Interlink line-hops of traffic (fabric engines).
+    pub link_lines: u64,
+    /// Per-subarray busy fraction of the most recent batch.
+    pub utilization: Vec<f64>,
+}
+
+impl Telemetry {
+    /// Fold one batch result into the counters.
+    pub(crate) fn record(&mut self, res: &InferenceResult) {
+        self.batches += 1;
+        self.images += res.bits.len() as u64;
+        self.steps += res.steps;
+        self.sim_time += res.sim_time;
+        self.energy += res.energy;
+    }
+
+    /// Mean energy per served image \[J\].
+    pub fn energy_per_image(&self) -> f64 {
+        if self.images > 0 {
+            self.energy / self.images as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean of the per-subarray busy fractions (0 when not reported).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.utilization.is_empty() {
+            0.0
+        } else {
+            self.utilization.iter().sum::<f64>() / self.utilization.len() as f64
+        }
+    }
+
+    /// Peak per-subarray busy fraction (0 when not reported).
+    pub fn max_utilization(&self) -> f64 {
+        self.utilization.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Handle for a submitted batch, redeemed via [`Engine::poll`].
+pub type Ticket = u64;
+
+/// A batched binary-NN inference engine at some fidelity.
+///
+/// Not `Send`: PJRT handles are thread-affine, so the coordinator
+/// constructs each engine *inside* its worker thread via a
+/// [`BackendFactory`].
+pub trait Engine {
+    /// Infer a batch of images (each `n_in` bits), blocking until done.
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult>;
+
+    /// Largest batch the engine can take at once.
+    fn max_batch(&self) -> usize;
+
+    /// Static introspection: what this engine is and can do.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Cumulative counters since construction (see [`Telemetry`]).
+    fn telemetry(&self) -> Telemetry;
+
+    /// Non-blocking enqueue: accept a batch, return a [`Ticket`] redeemed
+    /// via [`poll`](Engine::poll). The in-process simulation engines
+    /// complete the batch before returning (the simulation is synchronous
+    /// host-side work), so their tickets are immediately redeemable — the
+    /// pair exists so callers written against it also drive future engines
+    /// whose work genuinely completes later (remote shards, async fabrics).
+    fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket>;
+
+    /// Redeem a ticket: `Ok(Some(..))` once the batch is done (at most
+    /// once per ticket), `Ok(None)` while still in flight, `Err` for
+    /// tickets never issued or already collected.
+    fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>>;
+}
+
+/// Constructs an engine on the worker thread that will own it.
+pub type BackendFactory = Box<dyn FnOnce() -> crate::Result<Box<dyn Engine>> + Send + 'static>;
+
+/// Completion buffer shared by the synchronous engines' `submit`/`poll`
+/// implementations: issues monotonically increasing tickets and hands each
+/// finished result out exactly once.
+#[derive(Debug, Default)]
+pub struct Completions {
+    issued: Ticket,
+    done: Vec<(Ticket, InferenceResult)>,
+}
+
+impl Completions {
+    /// Stash a finished result, returning its ticket.
+    pub fn push(&mut self, res: InferenceResult) -> Ticket {
+        self.issued += 1;
+        self.done.push((self.issued, res));
+        self.issued
+    }
+
+    /// Redeem `ticket` (exactly once).
+    pub fn take(&mut self, ticket: Ticket) -> Result<InferenceResult, EngineError> {
+        match self.done.iter().position(|(t, _)| *t == ticket) {
+            Some(i) => Ok(self.done.remove(i).1),
+            None => Err(EngineError::UnknownTicket(ticket)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(n: usize) -> InferenceResult {
+        InferenceResult {
+            bits: vec![vec![true]; n],
+            classes: vec![0; n],
+            sim_time: 1.0,
+            energy: 2.0,
+            steps: 3,
+        }
+    }
+
+    #[test]
+    fn telemetry_accumulates_batches() {
+        let mut t = Telemetry::default();
+        t.record(&result(4));
+        t.record(&result(2));
+        assert_eq!(t.batches, 2);
+        assert_eq!(t.images, 6);
+        assert_eq!(t.steps, 6);
+        assert!((t.sim_time - 2.0).abs() < 1e-12);
+        assert!((t.energy_per_image() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(Telemetry::default().energy_per_image(), 0.0);
+    }
+
+    #[test]
+    fn utilization_summaries() {
+        let t = Telemetry {
+            utilization: vec![0.2, 0.6, 0.4],
+            ..Telemetry::default()
+        };
+        assert!((t.mean_utilization() - 0.4).abs() < 1e-12);
+        assert!((t.max_utilization() - 0.6).abs() < 1e-12);
+        assert_eq!(Telemetry::default().mean_utilization(), 0.0);
+        assert_eq!(Telemetry::default().max_utilization(), 0.0);
+    }
+
+    #[test]
+    fn completions_hand_out_each_ticket_once() {
+        let mut c = Completions::default();
+        let t1 = c.push(result(1));
+        let t2 = c.push(result(2));
+        assert_ne!(t1, t2);
+        assert_eq!(c.take(t2).unwrap().bits.len(), 2);
+        assert_eq!(c.take(t1).unwrap().bits.len(), 1);
+        assert_eq!(c.take(t1).unwrap_err(), EngineError::UnknownTicket(t1));
+        assert_eq!(c.take(99).unwrap_err(), EngineError::UnknownTicket(99));
+    }
+}

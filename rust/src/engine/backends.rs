@@ -1,0 +1,535 @@
+//! The concrete [`Engine`] implementations, one per backend fidelity:
+//!
+//! * [`SimBackend`] — one circuit-level subarray (ideal Eq. 3 or
+//!   parasitic-aware TMVM).
+//! * [`FabricBackend`] — a whole event-driven multi-subarray fabric.
+//! * [`XlaBackend`] — the AOT-compiled XLA golden model on PJRT.
+//!
+//! Construction validates dimensions with [`EngineError`] (no `assert!`
+//! panics on bad shapes — a misconfigured spec must fail the build, not
+//! kill a worker thread). Everything here is normally reached through
+//! [`EngineSpec::build`](super::spec::EngineSpec::build) rather than
+//! direct constructor calls.
+
+use super::api::{Capabilities, Completions, Engine, InferenceResult, Telemetry, Ticket};
+use super::error::EngineError;
+use super::spec::BackendKind;
+use crate::analysis::ArrayDesign;
+use crate::array::{Subarray, TmvmMode};
+use crate::fabric::{FabricConfig, FabricExecutor, FabricRun};
+use crate::nn::{argmax_counts, BinaryLayer};
+use crate::runtime::{Executable, Runtime, TensorF32};
+
+/// Fixed batch dimension of the AOT-lowered XLA inference graph.
+pub const XLA_GRAPH_BATCH: usize = 64;
+
+// ------------------------------------------------------------- simulator
+
+/// Circuit-level engine: one subarray running the single-layer network.
+pub struct SimBackend {
+    layer: BinaryLayer,
+    subarray: Subarray,
+    mode: TmvmMode,
+    telemetry: Telemetry,
+    completions: Completions,
+}
+
+impl SimBackend {
+    /// Shape validation shared with [`EngineSpec::build`]: the layer's
+    /// inputs and outputs must both fit the design's columns (images are
+    /// stored one per row; weights are applied as word-line pulses and
+    /// outputs land in bottom-level columns).
+    pub fn validate_shapes(
+        layer: &BinaryLayer,
+        design: &ArrayDesign,
+    ) -> Result<(), EngineError> {
+        if layer.n_in() > design.n_col || layer.n_out() > design.n_col {
+            return Err(EngineError::LayerTooLarge {
+                n_in: layer.n_in(),
+                n_out: layer.n_out(),
+                n_col: design.n_col,
+            });
+        }
+        Ok(())
+    }
+
+    pub fn new(
+        layer: BinaryLayer,
+        design: ArrayDesign,
+        mode: TmvmMode,
+    ) -> Result<Self, EngineError> {
+        Self::validate_shapes(&layer, &design)?;
+        Ok(Self {
+            layer,
+            subarray: Subarray::new(design),
+            mode,
+            telemetry: Telemetry::default(),
+            completions: Completions::default(),
+        })
+    }
+
+    pub fn layer(&self) -> &BinaryLayer {
+        &self.layer
+    }
+}
+
+impl Engine for SimBackend {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        let run = self.layer.run_batch(&mut self.subarray, images, self.mode);
+        let classes = images.iter().map(|img| self.layer.argmax(img)).collect();
+        // Table II accounting: compute (TMVM step) energy only — image
+        // programming is the array's storage role, shared with memory use.
+        let compute_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        let res = InferenceResult {
+            bits: run.outputs,
+            classes,
+            sim_time: run.time,
+            energy: compute_energy,
+            steps: self.layer.n_out() as u64,
+        };
+        self.telemetry.record(&res);
+        Ok(res)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.subarray.n_row()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            kind: match self.mode {
+                TmvmMode::Ideal => BackendKind::Ideal,
+                TmvmMode::Parasitic => BackendKind::Parasitic,
+            },
+            n_in: self.layer.n_in(),
+            n_out: self.layer.n_out(),
+            max_batch: self.subarray.n_row(),
+            nodes: 1,
+            tiles: 1,
+            reports_energy: true,
+            pipelined: false,
+        }
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.telemetry.clone()
+    }
+
+    fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
+        let res = self.infer_batch(&images)?;
+        Ok(self.completions.push(res))
+    }
+
+    fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
+        Ok(Some(self.completions.take(ticket)?))
+    }
+}
+
+// ---------------------------------------------------------------- fabric
+
+/// Engine running batches through a pipelined multi-subarray
+/// [`FabricExecutor`].
+pub struct FabricBackend {
+    exec: FabricExecutor,
+    max_batch: usize,
+    telemetry: Telemetry,
+    completions: Completions,
+}
+
+impl FabricBackend {
+    /// Place `layers` on the fabric described by `cfg`. `max_batch` caps
+    /// the images accepted per `infer_batch` call (the pipeline itself has
+    /// no hard limit; the cap bounds per-batch simulation memory).
+    pub fn new(
+        layers: Vec<BinaryLayer>,
+        cfg: FabricConfig,
+        max_batch: usize,
+    ) -> Result<Self, EngineError> {
+        cfg.validate()?;
+        if max_batch < 1 {
+            return Err(EngineError::ZeroBatch);
+        }
+        let exec = FabricExecutor::new(layers, cfg)
+            .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
+        Ok(Self {
+            exec,
+            max_batch,
+            telemetry: Telemetry::default(),
+            completions: Completions::default(),
+        })
+    }
+
+    pub fn executor(&self) -> &FabricExecutor {
+        &self.exec
+    }
+
+    /// The run's argmax classes from fabric-accumulated counts (shared
+    /// first-max-wins tie-break with [`BinaryLayer::argmax`]).
+    fn classes(run: &FabricRun) -> Vec<usize> {
+        run.final_counts
+            .iter()
+            .map(|counts| argmax_counts(counts))
+            .collect()
+    }
+}
+
+impl Engine for FabricBackend {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        anyhow::ensure!(
+            images.len() <= self.max_batch,
+            "batch of {} exceeds fabric max_batch {}",
+            images.len(),
+            self.max_batch
+        );
+        let run = self.exec.run_batch(images)?;
+        let classes = Self::classes(&run);
+        let res = InferenceResult {
+            bits: run.outputs,
+            classes,
+            sim_time: run.makespan,
+            energy: run.energy,
+            steps: run.steps,
+        };
+        self.telemetry.record(&res);
+        self.telemetry.compute_energy += run.compute_energy;
+        self.telemetry.link_energy += run.link_energy;
+        self.telemetry.cycles += run.cycles;
+        self.telemetry.link_transfers += run.traffic.transfers;
+        self.telemetry.link_lines += run.traffic.lines;
+        self.telemetry.utilization = run.utilization;
+        Ok(res)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        let layers = self.exec.layers();
+        Capabilities {
+            kind: BackendKind::Fabric,
+            n_in: layers.first().map_or(0, |l| l.n_in()),
+            n_out: layers.last().map_or(0, |l| l.n_out()),
+            max_batch: self.max_batch,
+            nodes: self.exec.config().n_nodes(),
+            tiles: self.exec.placement().n_tiles(),
+            reports_energy: true,
+            pipelined: true,
+        }
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.telemetry.clone()
+    }
+
+    fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
+        let res = self.infer_batch(&images)?;
+        Ok(self.completions.push(res))
+    }
+
+    fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
+        Ok(Some(self.completions.take(ticket)?))
+    }
+}
+
+// ------------------------------------------------------------------ XLA
+
+/// XLA golden-model engine: executes the AOT-lowered JAX graph (which
+/// itself wraps the Pallas kernel) on the PJRT CPU client.
+pub struct XlaBackend {
+    exe: Executable,
+    weights: TensorF32, // (n_in, n_out), column-major classes
+    layer: BinaryLayer, // for functional argmax + shapes
+    batch: usize,
+    v_dd: f32,
+    telemetry: Telemetry,
+    completions: Completions,
+}
+
+impl XlaBackend {
+    /// Load from the artifact store outputs.
+    pub fn new(
+        runtime: &Runtime,
+        hlo_path: &std::path::Path,
+        layer: BinaryLayer,
+        batch: usize,
+        v_dd: f64,
+    ) -> crate::Result<Self> {
+        let exe = runtime.load_hlo_text(hlo_path)?;
+        // rust layout [out][in] -> graph layout (n_in, n_out)
+        let n_in = layer.n_in();
+        let n_out = layer.n_out();
+        let mut w = vec![0.0f32; n_in * n_out];
+        for (o, row) in layer.weights.iter().enumerate() {
+            for (i, &bit) in row.iter().enumerate() {
+                w[i * n_out + o] = bit as u8 as f32;
+            }
+        }
+        Ok(Self {
+            exe,
+            weights: TensorF32::new(vec![n_in, n_out], w),
+            layer,
+            batch,
+            v_dd: v_dd as f32,
+            telemetry: Telemetry::default(),
+            completions: Completions::default(),
+        })
+    }
+}
+
+impl Engine for XlaBackend {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        anyhow::ensure!(images.len() <= self.batch, "batch too large for graph");
+        let n_in = self.layer.n_in();
+        // zero-pad the batch to the graph's fixed shape
+        let mut x = vec![0.0f32; self.batch * n_in];
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(img.len() == n_in, "image {i} size");
+            for (j, &b) in img.iter().enumerate() {
+                x[i * n_in + j] = b as u8 as f32;
+            }
+        }
+        let alpha = TensorF32::new(vec![self.batch, 1], vec![1.0; self.batch]);
+        let r_th = TensorF32::new(vec![self.batch, 1], vec![0.0; self.batch]);
+        let out = self.exe.run(&[
+            TensorF32::new(vec![self.batch, n_in], x),
+            self.weights.clone(),
+            alpha,
+            r_th,
+            TensorF32::scalar(self.v_dd),
+        ])?;
+        let bits_t = &out[0];
+        let n_out = self.layer.n_out();
+        let bits = (0..images.len())
+            .map(|i| {
+                (0..n_out)
+                    .map(|o| bits_t.data[i * n_out + o] >= 0.5)
+                    .collect()
+            })
+            .collect();
+        let classes = images.iter().map(|img| self.layer.argmax(img)).collect();
+        let res = InferenceResult {
+            bits,
+            classes,
+            sim_time: 0.0,
+            energy: 0.0,
+            steps: n_out as u64,
+        };
+        self.telemetry.record(&res);
+        Ok(res)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            kind: BackendKind::Xla,
+            n_in: self.layer.n_in(),
+            n_out: self.layer.n_out(),
+            max_batch: self.batch,
+            nodes: 1,
+            tiles: 1,
+            reports_energy: false,
+            pipelined: false,
+        }
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.telemetry.clone()
+    }
+
+    fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
+        let res = self.infer_batch(&images)?;
+        Ok(self.completions.push(res))
+    }
+
+    fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
+        Ok(Some(self.completions.take(ticket)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::LineConfig;
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            theta,
+        )
+    }
+
+    #[test]
+    fn sim_backend_matches_functional_layer() {
+        let mut rng = Pcg32::seeded(77);
+        let layer = random_layer(&mut rng, 10, 20, 4);
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let mut be = SimBackend::new(layer.clone(), design, TmvmMode::Ideal).unwrap();
+        let images: Vec<Vec<bool>> = (0..8)
+            .map(|_| (0..20).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let res = be.infer_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(res.bits[i], layer.forward(img));
+            assert_eq!(res.classes[i], layer.argmax(img));
+        }
+        assert!(res.energy > 0.0 && res.sim_time > 0.0);
+        assert_eq!(res.steps, 10);
+        assert_eq!(be.max_batch(), 32);
+        let caps = be.capabilities();
+        assert_eq!(caps.kind, BackendKind::Ideal);
+        assert_eq!((caps.n_in, caps.n_out), (20, 10));
+        assert!(caps.reports_energy && !caps.pipelined);
+        let tel = be.telemetry();
+        assert_eq!((tel.batches, tel.images), (1, 8));
+        assert!(tel.energy > 0.0);
+    }
+
+    /// Regression (was an `assert!` panic): a layer wider than the design
+    /// errors out of `new` instead of killing the worker thread.
+    #[test]
+    fn sim_backend_rejects_oversized_layer() {
+        let mut rng = Pcg32::seeded(78);
+        let layer = random_layer(&mut rng, 10, 40, 4);
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let err = SimBackend::new(layer, design, TmvmMode::Ideal).unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::LayerTooLarge {
+                n_in: 40,
+                n_out: 10,
+                n_col: 32
+            }
+        );
+    }
+
+    /// A fabric hosting a single tiled layer must agree with the
+    /// single-subarray `SimBackend` on bits, classes — and on compute
+    /// energy (the step decompositions differ, weights-applied vs
+    /// weights-stored, but the summed Eq. 3 currents are identical).
+    #[test]
+    fn fabric_backend_matches_sim_backend() {
+        let mut rng = Pcg32::seeded(61);
+        let layer = random_layer(&mut rng, 10, 40, 4);
+        let images: Vec<Vec<bool>> = (0..12)
+            .map(|_| (0..40).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+
+        let design = ArrayDesign::new(16, 64, LineConfig::config3(), 3.0, 1.0);
+        let mut sim = SimBackend::new(layer.clone(), design, TmvmMode::Ideal).unwrap();
+        let sim_res = sim.infer_batch(&images).unwrap();
+
+        // untiled fabric (layer fits one subarray): bits and classes agree
+        // exactly, and compute energy agrees to sub-percent — the crystalline
+        // current terms are identical whether steps sweep neurons
+        // (SimBackend, images stored / weights applied) or images (fabric,
+        // weights stored / images applied); only the tiny G_A leakage term
+        // differs between the two orientations.
+        let mut fab1 =
+            FabricBackend::new(vec![layer.clone()], FabricConfig::new(1, 1, 16, 64), 64).unwrap();
+        let res1 = fab1.infer_batch(&images).unwrap();
+        assert_eq!(res1.bits, sim_res.bits);
+        assert_eq!(res1.classes, sim_res.classes);
+        let run1 = fab1.executor().run_batch(&images).unwrap();
+        let rel = (run1.compute_energy - sim_res.energy).abs() / sim_res.energy;
+        assert!(
+            rel < 0.01,
+            "compute energy drift: fabric {} vs sim {}",
+            run1.compute_energy,
+            sim_res.energy
+        );
+
+        // column-tiled fabric (40 cols over 16-wide tiles → 3 tiles):
+        // still bit-exact; compute energy is ≥ the flat value because each
+        // tile's local current I(c) = G_C·V·c/(c+1) is concave in c —
+        // partial paths book more than the merged path would
+        let mut fab3 =
+            FabricBackend::new(vec![layer], FabricConfig::new(2, 2, 16, 16), 64).unwrap();
+        let res3 = fab3.infer_batch(&images).unwrap();
+        assert_eq!(res3.bits, sim_res.bits);
+        assert_eq!(res3.classes, sim_res.classes);
+        let run3 = fab3.executor().run_batch(&images).unwrap();
+        assert!(run3.compute_energy >= sim_res.energy * (1.0 - 1e-12));
+        assert!(run3.link_energy > 0.0, "partials crossed the fabric");
+        assert!(res3.sim_time > 0.0);
+        assert!(res3.steps >= sim_res.steps, "tiled steps ≥ per-neuron steps");
+
+        // telemetry mirrors the run report
+        let tel = fab3.telemetry();
+        assert_eq!(tel.batches, 1);
+        assert!(tel.link_transfers > 0 && tel.cycles > 0);
+        assert_eq!(tel.utilization.len(), 4);
+        let caps = fab3.capabilities();
+        assert_eq!(caps.kind, BackendKind::Fabric);
+        assert_eq!(caps.nodes, 4);
+        assert!(caps.pipelined);
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let mut rng = Pcg32::seeded(62);
+        let layer = random_layer(&mut rng, 4, 8, 2);
+        let mut fab =
+            FabricBackend::new(vec![layer], FabricConfig::new(1, 1, 8, 8), 2).unwrap();
+        let images: Vec<Vec<bool>> = (0..3).map(|_| vec![true; 8]).collect();
+        assert!(fab.infer_batch(&images).is_err());
+    }
+
+    /// Regression (was an `assert!` panic inside `FabricConfig::new`): a
+    /// zero grid or tile dimension — e.g. a bad `--grid` — returns a typed
+    /// error instead of panicking the worker thread.
+    #[test]
+    fn fabric_backend_rejects_degenerate_dimensions() {
+        let mut rng = Pcg32::seeded(63);
+        let layer = random_layer(&mut rng, 4, 8, 2);
+        let err = FabricBackend::new(
+            vec![layer.clone()],
+            FabricConfig::new(0, 2, 8, 8),
+            16,
+        )
+        .unwrap_err();
+        assert_eq!(err, EngineError::EmptyGrid { rows: 0, cols: 2 });
+
+        let err = FabricBackend::new(
+            vec![layer.clone()],
+            FabricConfig::new(2, 2, 8, 0),
+            16,
+        )
+        .unwrap_err();
+        assert_eq!(err, EngineError::EmptyTile { rows: 8, cols: 0 });
+
+        let err =
+            FabricBackend::new(vec![layer], FabricConfig::new(2, 2, 8, 8), 0).unwrap_err();
+        assert_eq!(err, EngineError::ZeroBatch);
+    }
+
+    #[test]
+    fn submit_poll_roundtrip() {
+        let mut rng = Pcg32::seeded(64);
+        let layer = random_layer(&mut rng, 6, 12, 2);
+        let design = ArrayDesign::new(16, 16, LineConfig::config3(), 3.0, 1.0);
+        let mut be = SimBackend::new(layer.clone(), design, TmvmMode::Ideal).unwrap();
+        let images: Vec<Vec<bool>> = (0..4)
+            .map(|_| (0..12).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let t1 = be.submit(images.clone()).unwrap();
+        let t2 = be.submit(images[..2].to_vec()).unwrap();
+        // out-of-order redemption is fine
+        let r2 = be.poll(t2).unwrap().expect("sync engines complete at submit");
+        assert_eq!(r2.bits.len(), 2);
+        let r1 = be.poll(t1).unwrap().expect("sync engines complete at submit");
+        assert_eq!(r1.bits.len(), 4);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(r1.bits[i], layer.forward(img));
+        }
+        // each ticket redeems exactly once
+        assert!(be.poll(t1).is_err());
+        assert_eq!(be.telemetry().batches, 2);
+    }
+}

@@ -1,0 +1,156 @@
+//! [`EngineError`] — the typed error surface of the engine layer.
+//!
+//! Spec validation, backend construction and ticket bookkeeping all fail
+//! through this enum, so callers can match on *what* went wrong instead of
+//! grepping strings. It implements [`std::error::Error`], which the
+//! crate-wide `anyhow` blanket `From` lifts into [`crate::Result`] — `?`
+//! works unchanged in `anyhow`-typed code.
+
+use std::fmt;
+
+/// Everything the engine layer can reject.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The layer does not fit the single-subarray design.
+    LayerTooLarge {
+        n_in: usize,
+        n_out: usize,
+        n_col: usize,
+    },
+    /// A layer with a zero dimension cannot be placed or served.
+    EmptyLayer {
+        index: usize,
+        n_out: usize,
+        n_in: usize,
+    },
+    /// Fabric grid with a zero dimension.
+    EmptyGrid { rows: usize, cols: usize },
+    /// Subarray tile with a zero dimension.
+    EmptyTile { rows: usize, cols: usize },
+    /// Batch capacity (or fabric `max_batch`) of zero.
+    ZeroBatch,
+    /// Worker count of zero.
+    ZeroWorkers,
+    /// Two options selecting incompatible backends were both given.
+    Conflict {
+        first: &'static str,
+        second: &'static str,
+    },
+    /// An option that only applies together with another one.
+    Requires {
+        option: &'static str,
+        requires: &'static str,
+    },
+    /// Unknown backend kind name.
+    UnknownBackend(String),
+    /// Unknown network source name.
+    UnknownNetwork(String),
+    /// Metal-line configuration id outside `1..=3`.
+    UnknownLineConfig(String),
+    /// Engaged column span outside `1..=n_col`.
+    BadSpan { span: usize, n_col: usize },
+    /// A spec field failed validation.
+    Spec {
+        field: &'static str,
+        detail: String,
+    },
+    /// Malformed engine-spec JSON.
+    Json(String),
+    /// The backend needs AOT artifacts that are not available.
+    Artifacts(String),
+    /// Placing the network onto the fabric failed.
+    Placement(String),
+    /// Polling a ticket that was never issued or already collected.
+    UnknownTicket(u64),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::LayerTooLarge { n_in, n_out, n_col } => write!(
+                f,
+                "layer does not fit the subarray: {n_in} inputs / {n_out} outputs \
+                 need at most {n_col} columns"
+            ),
+            Self::EmptyLayer { index, n_out, n_in } => {
+                write!(f, "layer {index} has an empty shape ({n_out}×{n_in})")
+            }
+            Self::EmptyGrid { rows, cols } => {
+                write!(f, "fabric grid must be at least 1×1, got {rows}×{cols}")
+            }
+            Self::EmptyTile { rows, cols } => write!(
+                f,
+                "subarray tile must be at least 1×1 cells, got {rows}×{cols}"
+            ),
+            Self::ZeroBatch => write!(f, "batch capacity must be at least 1"),
+            Self::ZeroWorkers => write!(f, "worker count must be at least 1"),
+            Self::Conflict { first, second } => write!(
+                f,
+                "{first} and {second} are mutually exclusive — pick one backend"
+            ),
+            Self::Requires { option, requires } => write!(f, "{option} requires {requires}"),
+            Self::UnknownBackend(s) => write!(
+                f,
+                "unknown backend kind '{s}' (expected ideal|parasitic|fabric|xla)"
+            ),
+            Self::UnknownNetwork(s) => write!(
+                f,
+                "unknown network source '{s}' (expected auto|template|artifact)"
+            ),
+            Self::UnknownLineConfig(s) => write!(
+                f,
+                "unknown metal-line configuration '{s}' (expected 1|2|3)"
+            ),
+            Self::BadSpan { span, n_col } => {
+                write!(f, "column span {span} outside 1..={n_col}")
+            }
+            Self::Spec { field, detail } => {
+                write!(f, "invalid engine spec field '{field}': {detail}")
+            }
+            Self::Json(detail) => write!(f, "engine spec JSON: {detail}"),
+            Self::Artifacts(detail) => write!(f, "{detail}"),
+            Self::Placement(detail) => write!(f, "fabric placement: {detail}"),
+            Self::UnknownTicket(t) => {
+                write!(f, "ticket {t} was never issued or already collected")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_actionable() {
+        let e = EngineError::Conflict {
+            first: "--xla",
+            second: "--fabric",
+        };
+        assert_eq!(
+            e.to_string(),
+            "--xla and --fabric are mutually exclusive — pick one backend"
+        );
+        let e = EngineError::Requires {
+            option: "--grid",
+            requires: "--fabric",
+        };
+        assert_eq!(e.to_string(), "--grid requires --fabric");
+        assert!(EngineError::EmptyGrid { rows: 0, cols: 2 }
+            .to_string()
+            .contains("at least 1×1"));
+    }
+
+    #[test]
+    fn lifts_into_anyhow() {
+        fn fails() -> crate::Result<()> {
+            let r: Result<(), EngineError> = Err(EngineError::ZeroBatch);
+            r?;
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        assert!(err.to_string().contains("batch capacity"), "{err}");
+    }
+}

@@ -1,0 +1,39 @@
+//! The unified engine layer: **one declarative spec, one serving API,
+//! every backend fidelity**.
+//!
+//! The paper's accelerator is a single substrate exposed at several
+//! fidelities — the ideal Eq. 3 TMVM, the parasitic-aware ladder model,
+//! the multi-subarray fabric, the AOT-compiled XLA golden model. This
+//! module makes that a first-class idea instead of four ad-hoc entry
+//! points:
+//!
+//! * [`spec`] — [`EngineSpec`]: a declarative, builder-style configuration
+//!   unifying the subarray design, the fabric geometry, the batching
+//!   policy, the network source and the [`BackendKind`]; constructible
+//!   from code, from CLI flags ([`EngineSpec::from_args`]) and from JSON
+//!   ([`EngineSpec::from_json_file`], `--engine path.json`). Its
+//!   [`build`](EngineSpec::build) method is the one registry every
+//!   serving path goes through.
+//! * [`api`] — the [`Engine`] trait (batched inference + [`Capabilities`]
+//!   introspection + typed [`Telemetry`] + the non-blocking
+//!   [`submit`](Engine::submit)/[`poll`](Engine::poll) pair) and the
+//!   [`BackendFactory`] the coordinator spawns workers from.
+//! * [`backends`] — the concrete engines: [`SimBackend`],
+//!   [`FabricBackend`], [`XlaBackend`].
+//! * [`error`] — [`EngineError`], the typed error surface (implements
+//!   `std::error::Error`, lifts into `anyhow` via `?`).
+//!
+//! Adding a new backend fidelity = one [`BackendKind`] variant + one arm
+//! in [`EngineSpec::build`] — no new `main.rs` special case.
+
+pub mod api;
+pub mod backends;
+pub mod error;
+pub mod spec;
+
+pub use api::{
+    BackendFactory, Capabilities, Completions, Engine, InferenceResult, Telemetry, Ticket,
+};
+pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
+pub use error::EngineError;
+pub use spec::{ArraySpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource};

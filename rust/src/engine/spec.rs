@@ -1,0 +1,1114 @@
+//! [`EngineSpec`] — one declarative description of the accelerator at any
+//! fidelity, and the registry that turns it into running engines.
+//!
+//! A spec unifies everything the old ad-hoc entry points took separately:
+//! the subarray design ([`ArraySpec`]), the fabric geometry
+//! ([`FabricSpec`]), the batching policy ([`BatchPolicy`]), the network
+//! source and the backend kind. It is constructible three ways:
+//!
+//! * **from code** — builder style: `EngineSpec::new(BackendKind::Fabric)
+//!   .with_grid(4, 4).with_layers(layers)`;
+//! * **from CLI flags** — [`EngineSpec::from_args`] (the `xpoint serve`
+//!   surface: `--fabric`, `--xla`, `--parasitic`, `--grid`, `--batch`,
+//!   `--workers`, with conflicts rejected as typed [`EngineError`]s);
+//! * **from a JSON file** — [`EngineSpec::from_json_file`] (`--engine
+//!   path.json`), with [`EngineSpec::to_json`] as the inverse.
+//!
+//! [`EngineSpec::build`] is the single construction path for every
+//! backend: it validates eagerly on the calling thread and returns a
+//! [`BackendFactory`] that the coordinator runs on a worker thread.
+
+use std::path::Path;
+use std::time::Duration;
+
+use super::api::{BackendFactory, Engine};
+use super::backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
+use super::error::EngineError;
+use crate::analysis::ArrayDesign;
+use crate::array::TmvmMode;
+use crate::cli::Args;
+use crate::coordinator::CoordinatorConfig;
+use crate::fabric::{place_layers, FabricConfig};
+use crate::interconnect::LineConfig;
+use crate::nn::BinaryLayer;
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::json::Json;
+
+/// Backend fidelity: which model of the substrate serves the requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single subarray, ideal Eq. 3 TMVM (no wire parasitics).
+    Ideal,
+    /// Single subarray with the Appendix-A parasitic ladder model.
+    Parasitic,
+    /// Event-driven multi-subarray fabric (tiled, pipelined).
+    Fabric,
+    /// AOT-compiled XLA golden model on the PJRT CPU client.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ideal => "ideal",
+            Self::Parasitic => "parasitic",
+            Self::Fabric => "fabric",
+            Self::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, EngineError> {
+        match s.to_ascii_lowercase().as_str() {
+            "ideal" => Ok(Self::Ideal),
+            "parasitic" => Ok(Self::Parasitic),
+            "fabric" => Ok(Self::Fabric),
+            "xla" => Ok(Self::Xla),
+            _ => Err(EngineError::UnknownBackend(s.to_string())),
+        }
+    }
+}
+
+/// Where the served network's weights come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkSource {
+    /// Trained artifacts when available, template weights otherwise.
+    Auto,
+    /// The self-contained digit template layer (no artifacts needed).
+    Template,
+    /// Trained artifacts, required (`make artifacts`).
+    Artifact,
+}
+
+impl NetworkSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Template => "template",
+            Self::Artifact => "artifact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, EngineError> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Self::Auto),
+            "template" => Ok(Self::Template),
+            "artifact" => Ok(Self::Artifact),
+            _ => Err(EngineError::UnknownNetwork(s.to_string())),
+        }
+    }
+}
+
+/// Single-subarray design parameters (the `Ideal`/`Parasitic` backends).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArraySpec {
+    /// Rows (images a batch can store).
+    pub rows: usize,
+    /// Columns (must hold the layer's inputs and outputs).
+    pub cols: usize,
+    /// Metal-line configuration id (paper Table I: 1|2|3).
+    pub line_config: usize,
+    /// Cell length as a multiple of the configuration minimum.
+    pub l_scale: f64,
+    /// Cell width as a multiple of the configuration minimum.
+    pub w_scale: f64,
+    /// Engaged column span for the parasitic corner case; `None` defaults
+    /// to the served layer's `n_in` (workload-aware, as `serve` always
+    /// did).
+    pub span: Option<usize>,
+}
+
+impl Default for ArraySpec {
+    fn default() -> Self {
+        Self {
+            rows: 64,
+            cols: 128,
+            line_config: 3,
+            l_scale: 3.0,
+            w_scale: 1.0,
+            span: None,
+        }
+    }
+}
+
+impl ArraySpec {
+    fn line(&self) -> Result<LineConfig, EngineError> {
+        match self.line_config {
+            1 => Ok(LineConfig::config1()),
+            2 => Ok(LineConfig::config2()),
+            3 => Ok(LineConfig::config3()),
+            other => Err(EngineError::UnknownLineConfig(other.to_string())),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(EngineError::Spec {
+                field: "array",
+                detail: format!(
+                    "design must be at least 1×1 cells, got {}×{}",
+                    self.rows, self.cols
+                ),
+            });
+        }
+        if !(self.l_scale.is_finite() && self.l_scale > 0.0)
+            || !(self.w_scale.is_finite() && self.w_scale > 0.0)
+        {
+            return Err(EngineError::Spec {
+                field: "array",
+                detail: format!(
+                    "cell scales must be positive and finite, got l_scale={} w_scale={}",
+                    self.l_scale, self.w_scale
+                ),
+            });
+        }
+        self.line()?;
+        if let Some(span) = self.span {
+            if span < 1 || span > self.cols {
+                return Err(EngineError::BadSpan {
+                    span,
+                    n_col: self.cols,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// The [`ArrayDesign`] this spec describes (explicit span applied;
+    /// `span: None` is resolved against the served layer at build time).
+    pub fn design(&self) -> Result<ArrayDesign, EngineError> {
+        self.validate()?;
+        let mut d = ArrayDesign::new(
+            self.rows,
+            self.cols,
+            self.line()?,
+            self.l_scale,
+            self.w_scale,
+        );
+        if let Some(span) = self.span {
+            d = d.with_span(span);
+        }
+        Ok(d)
+    }
+
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "array")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "rows" => spec.rows = json_usize(val, "array.rows")?,
+                "cols" => spec.cols = json_usize(val, "array.cols")?,
+                "line_config" => spec.line_config = json_usize(val, "array.line_config")?,
+                "l_scale" => spec.l_scale = json_f64(val, "array.l_scale")?,
+                "w_scale" => spec.w_scale = json_f64(val, "array.w_scale")?,
+                "span" => {
+                    spec.span = if val.is_null() {
+                        None
+                    } else {
+                        Some(json_usize(val, "array.span")?)
+                    }
+                }
+                other => return Err(EngineError::Json(format!("unknown field 'array.{other}'"))),
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("rows".into(), Json::Num(self.rows as f64)),
+            ("cols".into(), Json::Num(self.cols as f64)),
+            ("line_config".into(), Json::Num(self.line_config as f64)),
+            ("l_scale".into(), Json::Num(self.l_scale)),
+            ("w_scale".into(), Json::Num(self.w_scale)),
+            (
+                "span".into(),
+                match self.span {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Fabric geometry (the `Fabric` backend): subarray grid and tile shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricSpec {
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    /// Rows per subarray tile.
+    pub tile_rows: usize,
+    /// Columns per subarray tile.
+    pub tile_cols: usize,
+    /// Images accepted per `infer_batch` call (bounds simulation memory).
+    pub max_batch: usize,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        Self {
+            grid_rows: 2,
+            grid_cols: 2,
+            tile_rows: 64,
+            tile_cols: 32,
+            max_batch: 1024,
+        }
+    }
+}
+
+impl FabricSpec {
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.grid_rows == 0 || self.grid_cols == 0 {
+            return Err(EngineError::EmptyGrid {
+                rows: self.grid_rows,
+                cols: self.grid_cols,
+            });
+        }
+        if self.tile_rows == 0 || self.tile_cols == 0 {
+            return Err(EngineError::EmptyTile {
+                rows: self.tile_rows,
+                cols: self.tile_cols,
+            });
+        }
+        if self.max_batch == 0 {
+            return Err(EngineError::ZeroBatch);
+        }
+        Ok(())
+    }
+
+    /// The [`FabricConfig`] this spec describes.
+    pub fn config(&self) -> FabricConfig {
+        FabricConfig::new(
+            self.grid_rows,
+            self.grid_cols,
+            self.tile_rows,
+            self.tile_cols,
+        )
+    }
+
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "fabric")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "grid_rows" => spec.grid_rows = json_usize(val, "fabric.grid_rows")?,
+                "grid_cols" => spec.grid_cols = json_usize(val, "fabric.grid_cols")?,
+                "tile_rows" => spec.tile_rows = json_usize(val, "fabric.tile_rows")?,
+                "tile_cols" => spec.tile_cols = json_usize(val, "fabric.tile_cols")?,
+                "max_batch" => spec.max_batch = json_usize(val, "fabric.max_batch")?,
+                other => return Err(EngineError::Json(format!("unknown field 'fabric.{other}'"))),
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("grid_rows".into(), Json::Num(self.grid_rows as f64)),
+            ("grid_cols".into(), Json::Num(self.grid_cols as f64)),
+            ("tile_rows".into(), Json::Num(self.tile_rows as f64)),
+            ("tile_cols".into(), Json::Num(self.tile_cols as f64)),
+            ("max_batch".into(), Json::Num(self.max_batch as f64)),
+        ])
+    }
+}
+
+/// Coordinator batching policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Max images per dispatched batch.
+    pub capacity: usize,
+    /// How long a partial batch may wait before shipping \[µs\].
+    pub linger_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            capacity: 64,
+            linger_us: 200,
+        }
+    }
+}
+
+impl BatchPolicy {
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "batching")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "capacity" => spec.capacity = json_usize(val, "batching.capacity")?,
+                "linger_us" => spec.linger_us = json_usize(val, "batching.linger_us")? as u64,
+                other => {
+                    return Err(EngineError::Json(format!("unknown field 'batching.{other}'")))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("capacity".into(), Json::Num(self.capacity as f64)),
+            ("linger_us".into(), Json::Num(self.linger_us as f64)),
+        ])
+    }
+}
+
+/// One declarative engine configuration — see the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineSpec {
+    /// Backend fidelity.
+    pub kind: BackendKind,
+    /// Worker engines the coordinator spawns (one thread each).
+    pub workers: usize,
+    /// Where the served weights come from (ignored when explicit layers
+    /// are attached via [`with_layers`](EngineSpec::with_layers)).
+    pub network: NetworkSource,
+    /// Single-subarray design (`Ideal`/`Parasitic`).
+    pub array: ArraySpec,
+    /// Fabric geometry (`Fabric`).
+    pub fabric: FabricSpec,
+    /// Coordinator batching policy.
+    pub batching: BatchPolicy,
+    /// Explicit layer stack (code-level override; never serialized).
+    layers: Option<Vec<BinaryLayer>>,
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        Self::new(BackendKind::Ideal)
+    }
+}
+
+impl EngineSpec {
+    pub fn new(kind: BackendKind) -> Self {
+        Self {
+            kind,
+            workers: 2,
+            network: NetworkSource::Auto,
+            array: ArraySpec::default(),
+            fabric: FabricSpec::default(),
+            batching: BatchPolicy::default(),
+            layers: None,
+        }
+    }
+
+    // ------------------------------------------------------------ builder
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_network(mut self, network: NetworkSource) -> Self {
+        self.network = network;
+        self
+    }
+
+    pub fn with_array(mut self, array: ArraySpec) -> Self {
+        self.array = array;
+        self
+    }
+
+    pub fn with_grid(mut self, rows: usize, cols: usize) -> Self {
+        self.fabric.grid_rows = rows;
+        self.fabric.grid_cols = cols;
+        self
+    }
+
+    pub fn with_tile(mut self, rows: usize, cols: usize) -> Self {
+        self.fabric.tile_rows = rows;
+        self.fabric.tile_cols = cols;
+        self
+    }
+
+    pub fn with_fabric_max_batch(mut self, max_batch: usize) -> Self {
+        self.fabric.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_batching(mut self, capacity: usize, linger_us: u64) -> Self {
+        self.batching = BatchPolicy {
+            capacity,
+            linger_us,
+        };
+        self
+    }
+
+    /// Attach an explicit layer stack (benches/tests/examples with their
+    /// own weights). `Ideal`/`Parasitic` take exactly one layer; `Fabric`
+    /// takes the whole stack; `Xla` always loads from artifacts.
+    pub fn with_layers(mut self, layers: Vec<BinaryLayer>) -> Self {
+        self.layers = Some(layers);
+        self
+    }
+
+    /// The explicitly attached layer stack, if any.
+    pub fn layers(&self) -> Option<&[BinaryLayer]> {
+        self.layers.as_deref()
+    }
+
+    // --------------------------------------------------------- validation
+
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.workers == 0 {
+            return Err(EngineError::ZeroWorkers);
+        }
+        if self.batching.capacity == 0 {
+            return Err(EngineError::ZeroBatch);
+        }
+        match self.kind {
+            BackendKind::Ideal | BackendKind::Parasitic => self.array.validate()?,
+            BackendKind::Fabric => self.fabric.validate()?,
+            BackendKind::Xla => {
+                // the XLA graph ships with the trained artifacts; a spec
+                // promising template (artifact-free) weights can never build
+                if self.network == NetworkSource::Template {
+                    return Err(EngineError::Spec {
+                        field: "network",
+                        detail: "the xla backend always loads its network from \
+                                 artifacts (use network source 'artifact' or 'auto')"
+                            .into(),
+                    });
+                }
+            }
+        }
+        // every backend has a hard per-call batch limit; a coordinator
+        // capacity above it would fail (or panic) per batch on the worker
+        // thread, so reject the mismatch here instead
+        let backend_max = match self.kind {
+            BackendKind::Ideal | BackendKind::Parasitic => self.array.rows,
+            BackendKind::Fabric => self.fabric.max_batch,
+            BackendKind::Xla => XLA_GRAPH_BATCH,
+        };
+        if self.batching.capacity > backend_max {
+            return Err(EngineError::Spec {
+                field: "batching",
+                detail: format!(
+                    "batch capacity {} exceeds the {} backend's max batch {}",
+                    self.batching.capacity,
+                    self.kind.name(),
+                    backend_max
+                ),
+            });
+        }
+        if let Some(layers) = &self.layers {
+            if layers.is_empty() {
+                return Err(EngineError::Spec {
+                    field: "layers",
+                    detail: "explicit layer stack is empty".into(),
+                });
+            }
+            if self.kind == BackendKind::Xla {
+                return Err(EngineError::Spec {
+                    field: "layers",
+                    detail: "the xla backend loads its network from artifacts".into(),
+                });
+            }
+            if matches!(self.kind, BackendKind::Ideal | BackendKind::Parasitic)
+                && layers.len() != 1
+            {
+                return Err(EngineError::Spec {
+                    field: "layers",
+                    detail: format!(
+                        "the {} backend serves exactly one layer, got {}",
+                        self.kind.name(),
+                        layers.len()
+                    ),
+                });
+            }
+            for (i, l) in layers.iter().enumerate() {
+                if l.n_out() == 0 || l.n_in() == 0 {
+                    return Err(EngineError::EmptyLayer {
+                        index: i,
+                        n_out: l.n_out(),
+                        n_in: l.n_in(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------- CLI flags
+
+    /// Build a spec from `xpoint serve` flags: an optional `--engine
+    /// path.json` base overlaid with `--xla`/`--fabric`/`--parasitic`,
+    /// `--grid N`, `--batch N` and `--workers N`. Conflicting flag
+    /// combinations are rejected with one typed error each.
+    pub fn from_args(args: &Args) -> Result<Self, EngineError> {
+        let json_base = args.get("engine").is_some();
+        let mut spec = match args.get("engine") {
+            Some(path) => Self::from_json_file(Path::new(path))?,
+            None => Self::default(),
+        };
+        spec.apply_args(args, json_base)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn apply_args(&mut self, args: &Args, json_base: bool) -> Result<(), EngineError> {
+        let xla = args.has_flag("xla");
+        let fabric = args.has_flag("fabric");
+        let parasitic = args.has_flag("parasitic");
+        if xla && fabric {
+            return Err(EngineError::Conflict {
+                first: "--xla",
+                second: "--fabric",
+            });
+        }
+        if xla && parasitic {
+            return Err(EngineError::Conflict {
+                first: "--xla",
+                second: "--parasitic",
+            });
+        }
+        if fabric && parasitic {
+            return Err(EngineError::Conflict {
+                first: "--fabric",
+                second: "--parasitic",
+            });
+        }
+        if xla {
+            self.kind = BackendKind::Xla;
+            self.network = NetworkSource::Artifact;
+        } else if fabric {
+            self.kind = BackendKind::Fabric;
+        } else if parasitic {
+            self.kind = BackendKind::Parasitic;
+        }
+        if let Some(w) = parse_opt_usize(args, "workers")? {
+            self.workers = w;
+        }
+        if let Some(b) = parse_opt_usize(args, "batch")? {
+            if json_base {
+                // an explicit --engine spec owns the array design — --batch
+                // only adjusts the coordinator batch (still capped to the
+                // fixed XLA graph shape when that backend serves it)
+                self.batching.capacity = if self.kind == BackendKind::Xla {
+                    b.min(XLA_GRAPH_BATCH)
+                } else {
+                    b
+                };
+            } else {
+                // the historical `--batch` contract: the coordinator batch
+                // is capped at the XLA graph shape and the subarray is
+                // sized to store the whole batch
+                self.batching.capacity = b.min(XLA_GRAPH_BATCH);
+                self.array.rows = b.max(XLA_GRAPH_BATCH);
+            }
+        }
+        if let Some(g) = parse_opt_usize(args, "grid")? {
+            if self.kind != BackendKind::Fabric {
+                return Err(EngineError::Requires {
+                    option: "--grid",
+                    requires: "--fabric",
+                });
+            }
+            if g == 0 {
+                return Err(EngineError::EmptyGrid { rows: g, cols: g });
+            }
+            self.fabric.grid_rows = g;
+            self.fabric.grid_cols = g;
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------------- JSON
+
+    /// Serialize to the JSON spec format (inverse of
+    /// [`from_json`](EngineSpec::from_json); explicit layers are not
+    /// serialized).
+    pub fn to_json(&self) -> String {
+        let obj = Json::Obj(vec![
+            ("backend".into(), Json::Str(self.kind.name().into())),
+            ("workers".into(), Json::Num(self.workers as f64)),
+            ("network".into(), Json::Str(self.network.name().into())),
+            ("array".into(), self.array.to_json()),
+            ("fabric".into(), self.fabric.to_json()),
+            ("batching".into(), self.batching.to_json()),
+        ]);
+        let mut s = obj.pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse and validate a JSON spec. Missing fields take their
+    /// defaults; unknown fields are rejected (typo protection).
+    pub fn from_json(text: &str) -> Result<Self, EngineError> {
+        let v = Json::parse(text).map_err(EngineError::Json)?;
+        let entries = obj_entries(&v, "engine spec")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "backend" => spec.kind = BackendKind::parse(json_str(val, "backend")?)?,
+                "workers" => spec.workers = json_usize(val, "workers")?,
+                "network" => spec.network = NetworkSource::parse(json_str(val, "network")?)?,
+                "array" => spec.array = ArraySpec::from_json(val)?,
+                "fabric" => spec.fabric = FabricSpec::from_json(val)?,
+                "batching" => spec.batching = BatchPolicy::from_json(val)?,
+                other => return Err(EngineError::Json(format!("unknown field '{other}'"))),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a JSON spec from disk (`--engine path.json`).
+    pub fn from_json_file(path: &Path) -> Result<Self, EngineError> {
+        let text = crate::util::io::read_text(path)
+            .map_err(|e| EngineError::Json(format!("{e:#}")))?;
+        Self::from_json(&text).map_err(|e| match e {
+            EngineError::Json(detail) => {
+                EngineError::Json(format!("{}: {detail}", path.display()))
+            }
+            other => other,
+        })
+    }
+
+    // ------------------------------------------------------------ serving
+
+    /// One-line human description of the configured backend.
+    pub fn describe(&self) -> String {
+        match self.kind {
+            BackendKind::Xla => "XLA golden model (PJRT CPU, one client per worker)".to_string(),
+            BackendKind::Fabric => format!(
+                "event-driven fabric simulator ({}×{} subarray grid per worker)",
+                self.fabric.grid_rows, self.fabric.grid_cols
+            ),
+            BackendKind::Ideal => "circuit-level simulator (Ideal)".to_string(),
+            BackendKind::Parasitic => "circuit-level simulator (Parasitic)".to_string(),
+        }
+    }
+
+    /// The coordinator configuration this spec's batching policy implies.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            batch_capacity: self.batching.capacity,
+            linger: Duration::from_micros(self.batching.linger_us),
+        }
+    }
+
+    // ----------------------------------------------------------- registry
+
+    /// Resolve the layer stack this spec serves (explicit layers win,
+    /// then the configured [`NetworkSource`]).
+    fn resolve_layers(&self) -> Result<Vec<BinaryLayer>, EngineError> {
+        if let Some(layers) = &self.layers {
+            return Ok(layers.clone());
+        }
+        fn from_store(store: &ArtifactStore) -> Result<Vec<BinaryLayer>, EngineError> {
+            store
+                .single_layer()
+                .map(|l| vec![l])
+                .map_err(|e| EngineError::Artifacts(format!("loading trained layer: {e:#}")))
+        }
+        match self.network {
+            NetworkSource::Template => Ok(vec![crate::report::table2::template_layer()]),
+            NetworkSource::Artifact => {
+                let store = ArtifactStore::open_default().map_err(|_| {
+                    EngineError::Artifacts(
+                        "network source 'artifact' needs artifacts — run `make artifacts`"
+                            .into(),
+                    )
+                })?;
+                from_store(&store)
+            }
+            NetworkSource::Auto => match ArtifactStore::open_default() {
+                Ok(store) => from_store(&store),
+                Err(_) => Ok(vec![crate::report::table2::template_layer()]),
+            },
+        }
+    }
+
+    /// The registry: turn the spec into a [`BackendFactory`] for its
+    /// backend kind. Validation (shapes, placement, artifacts) happens
+    /// here, eagerly, on the calling thread — a bad spec fails the build
+    /// with a typed error instead of killing a worker thread later.
+    pub fn build(&self) -> Result<BackendFactory, EngineError> {
+        Ok(self.build_many(1)?.pop().expect("one factory"))
+    }
+
+    /// One factory per configured worker.
+    pub fn build_factories(&self) -> Result<Vec<BackendFactory>, EngineError> {
+        self.build_many(self.workers)
+    }
+
+    /// Shared resolution — layer loading, artifact reads, eager placement
+    /// and shape checks — runs **once** per spec here; only cheap clones
+    /// go into the `n` per-worker factories.
+    fn build_many(&self, n: usize) -> Result<Vec<BackendFactory>, EngineError> {
+        self.validate()?;
+        match self.kind {
+            BackendKind::Ideal | BackendKind::Parasitic => {
+                let mode = match self.kind {
+                    BackendKind::Ideal => TmvmMode::Ideal,
+                    _ => TmvmMode::Parasitic,
+                };
+                // validate() rejected explicit multi-layer stacks and every
+                // network source resolves to exactly one layer
+                let mut layers = self.resolve_layers()?;
+                debug_assert_eq!(layers.len(), 1, "sim backends serve one layer");
+                let layer = layers.pop().expect("resolved non-empty");
+                let mut design = self.array.design()?;
+                SimBackend::validate_shapes(&layer, &design)?;
+                if self.array.span.is_none() {
+                    // workload-aware engaged span (what `serve` always used)
+                    design = design.with_span(layer.n_in().clamp(1, design.n_col));
+                }
+                Ok((0..n)
+                    .map(|_| {
+                        let layer = layer.clone();
+                        let design = design.clone();
+                        Box::new(move || {
+                            Ok(Box::new(SimBackend::new(layer, design, mode)?)
+                                as Box<dyn Engine>)
+                        }) as BackendFactory
+                    })
+                    .collect())
+            }
+            BackendKind::Fabric => {
+                let layers = self.resolve_layers()?;
+                let cfg = self.fabric.config();
+                // surface placement errors now, on the calling thread
+                place_layers(&layers, &cfg)
+                    .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
+                let max_batch = self.fabric.max_batch;
+                Ok((0..n)
+                    .map(|_| {
+                        let layers = layers.clone();
+                        let cfg = cfg.clone();
+                        Box::new(move || {
+                            Ok(Box::new(FabricBackend::new(layers, cfg, max_batch)?)
+                                as Box<dyn Engine>)
+                        }) as BackendFactory
+                    })
+                    .collect())
+            }
+            BackendKind::Xla => {
+                let store = ArtifactStore::open_default().map_err(|_| {
+                    EngineError::Artifacts("--xla needs artifacts — run `make artifacts`".into())
+                })?;
+                let layer = store.single_layer().map_err(|e| {
+                    EngineError::Artifacts(format!("loading trained layer: {e:#}"))
+                })?;
+                let v_dd = store
+                    .meta_f64("vdd_single")
+                    .map_err(|e| EngineError::Artifacts(format!("vdd_single: {e:#}")))?;
+                let hlo = store.nn_infer_hlo();
+                Ok((0..n)
+                    .map(|_| {
+                        let layer = layer.clone();
+                        let hlo = hlo.clone();
+                        Box::new(move || {
+                            let runtime = Runtime::cpu()?;
+                            Ok(Box::new(XlaBackend::new(
+                                &runtime,
+                                &hlo,
+                                layer,
+                                XLA_GRAPH_BATCH,
+                                v_dd,
+                            )?) as Box<dyn Engine>)
+                        }) as BackendFactory
+                    })
+                    .collect())
+            }
+        }
+    }
+
+    /// Build and construct an engine on the current thread (examples,
+    /// exhibits and tests that don't need the coordinator).
+    pub fn build_engine(&self) -> crate::Result<Box<dyn Engine>> {
+        let factory = self.build()?;
+        factory()
+    }
+}
+
+fn parse_opt_usize(args: &Args, key: &'static str) -> Result<Option<usize>, EngineError> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v.parse::<usize>().map(Some).map_err(|_| EngineError::Spec {
+            field: key,
+            detail: format!("expects a non-negative integer, got '{v}'"),
+        }),
+    }
+}
+
+fn obj_entries<'a>(
+    v: &'a Json,
+    what: &str,
+) -> Result<&'a [(String, Json)], EngineError> {
+    match v {
+        Json::Obj(entries) => Ok(entries),
+        _ => Err(EngineError::Json(format!("'{what}' must be an object"))),
+    }
+}
+
+fn json_usize(v: &Json, field: &str) -> Result<usize, EngineError> {
+    v.as_usize()
+        .ok_or_else(|| EngineError::Json(format!("field '{field}': expected a non-negative integer")))
+}
+
+fn json_f64(v: &Json, field: &str) -> Result<f64, EngineError> {
+    v.as_f64()
+        .ok_or_else(|| EngineError::Json(format!("field '{field}': expected a number")))
+}
+
+fn json_str<'a>(v: &'a Json, field: &str) -> Result<&'a str, EngineError> {
+    v.as_str()
+        .ok_or_else(|| EngineError::Json(format!("field '{field}': expected a string")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(line: &str) -> Args {
+        Args::parse(line.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_match_the_historical_serve_configuration() {
+        let spec = EngineSpec::default();
+        assert_eq!(spec.kind, BackendKind::Ideal);
+        assert_eq!(spec.workers, 2);
+        assert_eq!((spec.array.rows, spec.array.cols), (64, 128));
+        assert_eq!(spec.batching.capacity, 64);
+        assert_eq!(spec.fabric.grid_rows, 2);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let spec = EngineSpec::new(BackendKind::Fabric)
+            .with_workers(3)
+            .with_network(NetworkSource::Template)
+            .with_grid(3, 5)
+            .with_tile(16, 48)
+            .with_fabric_max_batch(256)
+            .with_batching(32, 500);
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).expect("roundtrip parse");
+        assert_eq!(parsed, spec);
+        // serialization is a fixed point
+        assert_eq!(parsed.to_json(), text);
+    }
+
+    #[test]
+    fn json_span_survives_roundtrip() {
+        let spec = EngineSpec::new(BackendKind::Parasitic)
+            .with_batching(32, 200)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 144,
+                span: Some(121),
+                ..ArraySpec::default()
+            });
+        let parsed = EngineSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(parsed.array.span, Some(121));
+        assert_eq!(parsed, spec);
+    }
+
+    #[test]
+    fn json_missing_fields_take_defaults() {
+        let spec = EngineSpec::from_json(r#"{"backend": "fabric"}"#).unwrap();
+        assert_eq!(spec.kind, BackendKind::Fabric);
+        assert_eq!(spec.fabric, FabricSpec::default());
+        assert_eq!(spec.workers, 2);
+    }
+
+    #[test]
+    fn json_rejects_unknown_and_ill_typed_fields() {
+        let err = EngineSpec::from_json(r#"{"backnd": "fabric"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown field 'backnd'"), "{err}");
+        let err = EngineSpec::from_json(r#"{"array": {"rows": "64"}}"#).unwrap_err();
+        assert!(err.to_string().contains("array.rows"), "{err}");
+        let err = EngineSpec::from_json(r#"{"backend": "warp"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown backend kind"), "{err}");
+        assert!(EngineSpec::from_json("[1]").is_err());
+    }
+
+    #[test]
+    fn flags_select_backends() {
+        assert_eq!(
+            EngineSpec::from_args(&args("serve")).unwrap().kind,
+            BackendKind::Ideal
+        );
+        assert_eq!(
+            EngineSpec::from_args(&args("serve --parasitic")).unwrap().kind,
+            BackendKind::Parasitic
+        );
+        let spec = EngineSpec::from_args(&args("serve --fabric --grid 3")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Fabric);
+        assert_eq!((spec.fabric.grid_rows, spec.fabric.grid_cols), (3, 3));
+        let spec = EngineSpec::from_args(&args("serve --xla --workers 4")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Xla);
+        assert_eq!(spec.network, NetworkSource::Artifact);
+        assert_eq!(spec.workers, 4);
+    }
+
+    #[test]
+    fn each_conflicting_flag_combination_has_its_message() {
+        let err = EngineSpec::from_args(&args("serve --xla --fabric")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--xla and --fabric are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --xla --parasitic")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--xla and --parasitic are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --fabric --parasitic")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--fabric and --parasitic are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --grid 2")).unwrap_err();
+        assert_eq!(err.to_string(), "--grid requires --fabric");
+        let err = EngineSpec::from_args(&args("serve --fabric --grid 0")).unwrap_err();
+        assert_eq!(err, EngineError::EmptyGrid { rows: 0, cols: 0 });
+    }
+
+    #[test]
+    fn batch_flag_keeps_the_historical_contract() {
+        let spec = EngineSpec::from_args(&args("serve --batch 16")).unwrap();
+        assert_eq!(spec.batching.capacity, 16);
+        assert_eq!(spec.array.rows, 64);
+        let spec = EngineSpec::from_args(&args("serve --batch 256")).unwrap();
+        assert_eq!(spec.batching.capacity, 64);
+        assert_eq!(spec.array.rows, 256);
+    }
+
+    #[test]
+    fn batch_flag_does_not_clobber_an_explicit_spec_file_base() {
+        let mut spec = EngineSpec::from_json(
+            r#"{"backend":"fabric","array":{"rows":256},"batching":{"capacity":128}}"#,
+        )
+        .unwrap();
+        spec.apply_args(&args("serve --batch 16"), true).unwrap();
+        assert_eq!(spec.batching.capacity, 16);
+        assert_eq!(spec.array.rows, 256, "spec-file array design untouched");
+        // without a spec-file base, the historical contract still applies
+        let mut bare = EngineSpec::default();
+        bare.apply_args(&args("serve --batch 16"), false).unwrap();
+        assert_eq!(bare.batching.capacity, 16);
+        assert_eq!(bare.array.rows, 64);
+    }
+
+    #[test]
+    fn batch_capacity_may_not_exceed_the_backend_max_batch() {
+        // would previously pass validation and then panic the worker
+        // thread inside BinaryLayer::run_batch ("batch exceeds rows")
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 128,
+                ..ArraySpec::default()
+            })
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "batching", .. }),
+            "{err}"
+        );
+        let err = EngineSpec::new(BackendKind::Fabric)
+            .with_fabric_max_batch(16)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "batching", .. }),
+            "{err}"
+        );
+        let err = EngineSpec::new(BackendKind::Xla)
+            .with_batching(128, 200)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "batching", .. }),
+            "{err}"
+        );
+        // shrinking the capacity to fit makes each of them valid
+        assert!(EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 128,
+                ..ArraySpec::default()
+            })
+            .with_batching(32, 200)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn xla_spec_rejects_template_network() {
+        let err = EngineSpec::new(BackendKind::Xla)
+            .with_network(NetworkSource::Template)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "network", .. }),
+            "{err}"
+        );
+        assert!(EngineSpec::new(BackendKind::Xla).validate().is_ok(), "auto is fine");
+    }
+
+    #[test]
+    fn malformed_numbers_are_typed_errors() {
+        let err = EngineSpec::from_args(&args("serve --workers abc")).unwrap_err();
+        assert!(
+            err.to_string().contains("'workers'") && err.to_string().contains("abc"),
+            "{err}"
+        );
+        let err = EngineSpec::from_args(&args("serve --workers 0")).unwrap_err();
+        assert_eq!(err, EngineError::ZeroWorkers);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_specs() {
+        let err = EngineSpec::new(BackendKind::Fabric)
+            .with_grid(0, 1)
+            .validate()
+            .unwrap_err();
+        assert_eq!(err, EngineError::EmptyGrid { rows: 0, cols: 1 });
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                span: Some(500),
+                ..ArraySpec::default()
+            })
+            .validate()
+            .unwrap_err();
+        assert_eq!(err, EngineError::BadSpan { span: 500, n_col: 128 });
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                line_config: 7,
+                ..ArraySpec::default()
+            })
+            .validate()
+            .unwrap_err();
+        assert_eq!(err, EngineError::UnknownLineConfig("7".into()));
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_layers(vec![])
+            .validate()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Spec { field: "layers", .. }));
+    }
+
+    #[test]
+    fn coordinator_config_mirrors_the_batching_policy() {
+        let spec = EngineSpec::default().with_batching(8, 1000);
+        let cfg = spec.coordinator_config();
+        assert_eq!(cfg.batch_capacity, 8);
+        assert_eq!(cfg.linger, Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn describe_names_each_backend() {
+        assert!(EngineSpec::new(BackendKind::Ideal).describe().contains("Ideal"));
+        assert!(EngineSpec::new(BackendKind::Xla).describe().contains("XLA"));
+        assert!(EngineSpec::new(BackendKind::Fabric)
+            .describe()
+            .contains("2×2 subarray grid"));
+    }
+}

@@ -15,18 +15,20 @@
 //!   dimension-ordered routing and switch-loss energy.
 //! * [`exec`] — the pipelined executor: bit-exact with the functional
 //!   model, reporting makespan/cycles, utilization, traffic and energy.
-//! * [`backend`] — [`FabricBackend`] implementing
-//!   [`coordinator::Backend`](crate::coordinator::Backend) so the serving
-//!   shell drives a whole fabric instead of one subarray.
+//!
+//! The serving adapter lives one layer up:
+//! [`FabricBackend`](crate::engine::FabricBackend) (re-exported here for
+//! convenience) implements [`Engine`](crate::engine::Engine) so the
+//! coordinator drives a whole fabric instead of one subarray; it is
+//! constructed through [`EngineSpec::build`](crate::engine::EngineSpec::build).
 
 pub mod event;
 pub mod placement;
 pub mod node;
 pub mod link;
 pub mod exec;
-pub mod backend;
 
-pub use backend::FabricBackend;
+pub use crate::engine::FabricBackend;
 pub use event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 pub use exec::{FabricExecutor, FabricRun};
 pub use link::{Interlink, LinkFabric, LinkTraffic};

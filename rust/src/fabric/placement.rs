@@ -10,6 +10,7 @@
 //! occupancy serializes them (visible as utilization in the run report).
 
 use crate::device::DeviceParams;
+use crate::engine::EngineError;
 use crate::nn::BinaryLayer;
 use crate::scaling::Tiling;
 use std::ops::Range;
@@ -41,9 +42,12 @@ pub struct FabricConfig {
 }
 
 impl FabricConfig {
+    /// Dimensions are *not* asserted here: a config is plain data, and a
+    /// zero grid/tile dimension (e.g. a bad `--grid`) must surface as a
+    /// typed error from [`validate`](FabricConfig::validate) — which every
+    /// consumer ([`place_layers`], `FabricBackend::new`) calls — instead
+    /// of panicking the thread that builds the backend.
     pub fn new(grid_rows: usize, grid_cols: usize, tile_rows: usize, tile_cols: usize) -> Self {
-        assert!(grid_rows > 0 && grid_cols > 0, "empty fabric grid");
-        assert!(tile_rows > 0 && tile_cols > 0, "empty subarray tile");
         let device = DeviceParams::default();
         Self {
             grid_rows,
@@ -55,6 +59,23 @@ impl FabricConfig {
             t_inject: device.t_set,
             device,
         }
+    }
+
+    /// Reject zero grid/tile dimensions with a typed error.
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.grid_rows == 0 || self.grid_cols == 0 {
+            return Err(EngineError::EmptyGrid {
+                rows: self.grid_rows,
+                cols: self.grid_cols,
+            });
+        }
+        if self.tile_rows == 0 || self.tile_cols == 0 {
+            return Err(EngineError::EmptyTile {
+                rows: self.tile_rows,
+                cols: self.tile_cols,
+            });
+        }
+        Ok(())
     }
 
     /// Total subarrays in the fabric.
@@ -135,7 +156,18 @@ impl Placement {
 /// than the fabric has subarrays, placement wraps around and the shared
 /// nodes serialize (shown as utilization/occupancy in the run report).
 pub fn place_layers(layers: &[BinaryLayer], cfg: &FabricConfig) -> crate::Result<Placement> {
+    cfg.validate()?;
     anyhow::ensure!(!layers.is_empty(), "fabric placement needs at least one layer");
+    for (k, layer) in layers.iter().enumerate() {
+        if layer.n_out() == 0 || layer.n_in() == 0 {
+            return Err(EngineError::EmptyLayer {
+                index: k,
+                n_out: layer.n_out(),
+                n_in: layer.n_in(),
+            }
+            .into());
+        }
+    }
     for (k, pair) in layers.windows(2).enumerate() {
         anyhow::ensure!(
             pair[1].n_in() == pair[0].n_out(),
@@ -280,6 +312,25 @@ mod tests {
         let cfg = FabricConfig::new(2, 2, 16, 16);
         let err = place_layers(&layers, &cfg).unwrap_err();
         assert!(err.to_string().contains("shape mismatch"), "{err}");
+    }
+
+    /// Regression (was an `assert!` panic in `FabricConfig::new` /
+    /// `Tiling::new`): degenerate fabric or layer dimensions come back as
+    /// typed errors.
+    #[test]
+    fn degenerate_dimensions_error_instead_of_panicking() {
+        let mut rng = Pcg32::seeded(45);
+        let layer = random_layer(&mut rng, 4, 8);
+        let err = place_layers(std::slice::from_ref(&layer), &FabricConfig::new(0, 1, 8, 8))
+            .unwrap_err();
+        assert!(err.to_string().contains("grid"), "{err}");
+        let err = place_layers(std::slice::from_ref(&layer), &FabricConfig::new(1, 1, 8, 0))
+            .unwrap_err();
+        assert!(err.to_string().contains("tile"), "{err}");
+        let empty = BinaryLayer::new(vec![vec![]; 2], 1);
+        let err = place_layers(std::slice::from_ref(&empty), &FabricConfig::new(1, 1, 8, 8))
+            .unwrap_err();
+        assert!(err.to_string().contains("empty shape"), "{err}");
     }
 
     #[test]

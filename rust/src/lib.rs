@@ -4,12 +4,48 @@
 //! *"Exploring the Feasibility of Using 3D XPoint as an In-Memory Computing
 //! Accelerator"* (Zabihi et al., 2021).
 //!
-//! The library is organized bottom-up:
+//! ## Front door: the engine
+//!
+//! Inference is served through one declarative configuration → engine API,
+//! regardless of model fidelity:
+//!
+//! ```no_run
+//! use xpoint_imc::engine::{BackendKind, EngineSpec, NetworkSource};
+//!
+//! let spec = EngineSpec::new(BackendKind::Ideal).with_network(NetworkSource::Template);
+//! let mut engine = spec.build_engine()?;              // Box<dyn Engine>
+//! let result = engine.infer_batch(&[vec![false; 121]])?;
+//! println!("class {} in {} J", result.classes[0], engine.telemetry().energy);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The same [`engine::EngineSpec`] is constructible from CLI flags
+//! (`xpoint serve --fabric --grid 4`) and from JSON (`--engine spec.json`),
+//! and [`engine::EngineSpec::build`] is the only construction path for
+//! every backend — the coordinator, the exhibits, the benches and the
+//! examples all go through it.
+//!
+//! ## Choosing a backend
+//!
+//! | [`engine::BackendKind`] | model | when to use |
+//! |---|---|---|
+//! | `Ideal` | one subarray, exact Eq. 3 TMVM, no wire parasitics | functional work, fastest simulation, paper Table II accounting |
+//! | `Parasitic` | one subarray + the Appendix-A Thevenin ladder | electrical fidelity: attenuation, noise-margin-limited behavior |
+//! | `Fabric` | event-driven grid of subarrays, tiled + pipelined | multi-layer networks, scaling studies, utilization/interlink traffic |
+//! | `Xla` | AOT-compiled JAX/Pallas graph on PJRT (needs `make artifacts`) | golden-model verification, host-speed inference |
+//!
+//! All four present the same [`engine::Engine`] trait: batched inference,
+//! [`engine::Capabilities`] introspection, typed [`engine::Telemetry`]
+//! (energy/time/steps/utilization) and a non-blocking `submit`/`poll`
+//! pair. Simulated kinds are bit-exact with each other's functional
+//! semantics (pinned by the engine equivalence tests).
+//!
+//! ## Layer map (bottom-up)
 //!
 //! * [`util`] / [`testing`] — self-contained substrates (PRNG, stats, table
-//!   rendering, CSV/JSON output, a mini property-testing framework). The
-//!   build is fully offline, so these replace `rand`, `criterion` and
-//!   `proptest`.
+//!   rendering, CSV/JSON I/O, a mini property-testing framework). The
+//!   build is fully offline, so these replace `rand`, `serde`, `criterion`
+//!   and `proptest`.
 //! * [`device`] — PCM + OTS compact models (paper Fig. 2, Table IV): state,
 //!   partial crystallization, SET/RESET pulse dynamics.
 //! * [`circuit`] — a generic resistive-network substrate: netlist builder,
@@ -31,19 +67,26 @@
 //! * [`fabric`] — the multi-subarray fabric simulator: a discrete-event
 //!   model of a grid of interconnected subarrays executing multi-layer
 //!   networks tiled across the grid, with image-level pipelining,
-//!   per-subarray occupancy, interlink traffic/latency and energy — plus
-//!   `FabricBackend`, which lets the coordinator serve a whole fabric.
+//!   per-subarray occupancy, interlink traffic/latency and energy.
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
 //!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
 //! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
 //!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and serves as
 //!   the functional golden model on the rust side.
+//! * [`engine`] — **the public serving API**: [`engine::EngineSpec`]
+//!   (declarative config: code / CLI / JSON), the [`engine::Engine`] trait
+//!   (inference + capabilities + telemetry + submit/poll), the typed
+//!   [`engine::EngineError`], and the concrete backends
+//!   ([`engine::SimBackend`], [`engine::FabricBackend`],
+//!   [`engine::XlaBackend`]) behind the [`engine::EngineSpec::build`]
+//!   registry.
 //! * [`coordinator`] — the L3 serving shell: request batching, subarray
 //!   scheduling (`⌊N_row/P⌋` images per computational step), worker threads
-//!   and metrics.
-//! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III) as a
-//!   library function returning structured rows, shared by benches, examples
-//!   and the CLI.
+//!   (one engine each, spawned from [`engine::BackendFactory`]) and
+//!   metrics.
+//! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III, fabric
+//!   scaling) as a library function returning structured rows, shared by
+//!   benches, examples and the CLI.
 //!
 //! See `examples/quickstart.rs` for a runnable end-to-end tour.
 
@@ -58,6 +101,7 @@ pub mod scaling;
 pub mod fabric;
 pub mod nn;
 pub mod runtime;
+pub mod engine;
 pub mod coordinator;
 pub mod report;
 pub mod cli;

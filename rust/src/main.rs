@@ -5,14 +5,14 @@
 //! synthetic digit workload (simulator or XLA backend).
 
 use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
-use xpoint_imc::array::TmvmMode;
 use xpoint_imc::cli::Args;
-use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig, SimBackend, XlaBackend};
-use xpoint_imc::fabric::{FabricBackend, FabricConfig};
+use xpoint_imc::coordinator::Coordinator;
+use xpoint_imc::engine::{BackendKind, EngineSpec, NetworkSource};
 use xpoint_imc::interconnect::LineConfig;
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::report;
-use xpoint_imc::runtime::{ArtifactStore, Runtime};
+use xpoint_imc::runtime::artifact::artifacts_available;
+use xpoint_imc::runtime::ArtifactStore;
 use xpoint_imc::util::si::{format_duration, format_pct, format_si};
 
 const USAGE: &str = "\
@@ -36,6 +36,7 @@ COMMANDS:
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
+            [--engine spec.json]  (declarative EngineSpec; flags override)
   help      this text
 ";
 
@@ -198,86 +199,23 @@ fn load_layer_or_template(
 
 fn serve(args: &Args) -> xpoint_imc::Result<()> {
     let n_images = args.get_usize("images", 1000)?;
-    let n_workers = args.get_usize("workers", 2)?;
-    let batch = args.get_usize("batch", 64)?;
-    let use_xla = args.has_flag("xla");
-    let use_fabric = args.has_flag("fabric");
-    anyhow::ensure!(
-        !(use_xla && use_fabric),
-        "--xla and --fabric are mutually exclusive — pick one backend"
-    );
-    let mode = if args.has_flag("parasitic") {
-        TmvmMode::Parasitic
-    } else {
-        TmvmMode::Ideal
-    };
 
-    // trained artifact weights when available, self-contained template
-    // weights otherwise (keeps `serve` usable in artifact-free checkouts);
-    // the XLA backend has no template fallback, so fail fast there instead
-    // of printing a misleading fallback notice first
-    let (layer, store) = if use_xla {
-        let store = ArtifactStore::open_default()
-            .map_err(|_| anyhow::anyhow!("--xla needs artifacts — run `make artifacts`"))?;
-        (store.single_layer()?, Some(store))
-    } else {
-        load_layer_or_template()?
-    };
-    let design = ArrayDesign::new(batch.max(64), 128, LineConfig::config3(), 3.0, 1.0)
-        .with_span(layer.n_in());
+    // one declarative spec unifies backend kind, array design, fabric
+    // geometry and batching policy; flags overlay an optional --engine
+    // spec.json and conflicting combinations fail with typed errors
+    let spec = EngineSpec::from_args(args)?;
+    // the XLA backend never falls back to template weights — it fails fast
+    // in build_factories instead, so no misleading notice there
+    if spec.kind != BackendKind::Xla
+        && spec.network == NetworkSource::Auto
+        && !artifacts_available()
+    {
+        eprintln!("(artifacts missing — using template weights)");
+    }
+    println!("backend: {}", spec.describe());
 
-    let backends: Vec<xpoint_imc::coordinator::BackendFactory> = if use_xla {
-        println!("backend: XLA golden model (PJRT CPU, one client per worker)");
-        let store = store.expect("store is always loaded on the --xla path");
-        let v_dd = store.meta_f64("vdd_single")?;
-        (0..n_workers)
-            .map(|_| {
-                let layer = layer.clone();
-                let hlo = store.nn_infer_hlo();
-                Box::new(move || {
-                    let runtime = Runtime::cpu()?;
-                    Ok(Box::new(XlaBackend::new(&runtime, &hlo, layer, 64, v_dd)?)
-                        as Box<dyn xpoint_imc::coordinator::Backend>)
-                }) as xpoint_imc::coordinator::BackendFactory
-            })
-            .collect()
-    } else if use_fabric {
-        let grid = args.get_usize("grid", 2)?;
-        anyhow::ensure!(grid >= 1, "--grid must be at least 1");
-        println!("backend: event-driven fabric simulator ({grid}×{grid} subarray grid per worker)");
-        (0..n_workers)
-            .map(|_| {
-                let layer = layer.clone();
-                Box::new(move || {
-                    // 64×32-cell subarrays: the 10×121 layer splits into
-                    // four column tiles whose partials merge on the fabric
-                    let cfg = FabricConfig::new(grid, grid, 64, 32);
-                    Ok(Box::new(FabricBackend::new(vec![layer], cfg, 1024)?)
-                        as Box<dyn xpoint_imc::coordinator::Backend>)
-                }) as xpoint_imc::coordinator::BackendFactory
-            })
-            .collect()
-    } else {
-        println!("backend: circuit-level simulator ({mode:?})");
-        (0..n_workers)
-            .map(|_| {
-                let layer = layer.clone();
-                let design = design.clone();
-                Box::new(move || {
-                    Ok(Box::new(SimBackend::new(layer, design, mode))
-                        as Box<dyn xpoint_imc::coordinator::Backend>)
-                }) as xpoint_imc::coordinator::BackendFactory
-            })
-            .collect()
-    };
-
-    let mut coord = Coordinator::spawn(
-        backends,
-        CoordinatorConfig {
-            batch_capacity: batch.min(64),
-            linger: std::time::Duration::from_micros(200),
-        },
-    );
+    let backends = spec.build_factories()?;
+    let mut coord = Coordinator::spawn(backends, spec.coordinator_config());
 
     let mut gen = DigitGen::new(TEST_SEED);
     let started = std::time::Instant::now();

@@ -8,7 +8,7 @@
 //! tile set over more subarrays — the §IV scalability story turned into a
 //! throughput claim.
 
-use crate::fabric::{FabricConfig, FabricExecutor};
+use crate::engine::{BackendKind, EngineSpec};
 use crate::nn::BinaryLayer;
 use crate::util::si::{format_duration, format_pct, format_si};
 use crate::util::{Pcg32, Table};
@@ -57,7 +57,9 @@ pub fn fabric_workload() -> Vec<BinaryLayer> {
     vec![layer(64, 121, 12), layer(32, 64, 8), layer(10, 32, 4)]
 }
 
-/// Run the exhibit: the same workload and batch on each fabric grid.
+/// Run the exhibit: the same workload and batch on each fabric grid, each
+/// engine constructed through the declarative [`EngineSpec`] registry and
+/// read back through the unified telemetry surface.
 pub fn fabric_scaling_rows(
     grids: &[(usize, usize)],
     batch: usize,
@@ -70,25 +72,34 @@ pub fn fabric_scaling_rows(
 
     let mut rows = Vec::with_capacity(grids.len());
     for &(gr, gc) in grids {
-        let cfg = FabricConfig::new(gr, gc, FABRIC_TILE.0, FABRIC_TILE.1);
-        let exec = FabricExecutor::new(layers.clone(), cfg)?;
-        let run = exec.run_batch(&images)?;
-        let max_util = run.utilization.iter().cloned().fold(0.0, f64::max);
+        let spec = EngineSpec::new(BackendKind::Fabric)
+            .with_layers(layers.clone())
+            .with_grid(gr, gc)
+            .with_tile(FABRIC_TILE.0, FABRIC_TILE.1)
+            .with_fabric_max_batch(batch.max(1))
+            .with_batching(batch.max(1), 200);
+        let mut engine = spec.build_engine()?;
+        let res = engine.infer_batch(&images)?;
+        let tel = engine.telemetry();
         rows.push(FabricScalingRow {
             grid_rows: gr,
             grid_cols: gc,
             nodes: gr * gc,
-            tiles: exec.placement().n_tiles(),
+            tiles: engine.capabilities().tiles,
             batch,
-            makespan: run.makespan,
-            cycles: run.cycles,
-            throughput: run.throughput(),
-            mean_util: run.mean_utilization(),
-            max_util,
-            transfers: run.traffic.transfers,
-            lines: run.traffic.lines,
+            makespan: res.sim_time,
+            cycles: tel.cycles,
+            throughput: if res.sim_time > 0.0 {
+                batch as f64 / res.sim_time
+            } else {
+                0.0
+            },
+            mean_util: tel.mean_utilization(),
+            max_util: tel.max_utilization(),
+            transfers: tel.link_transfers,
+            lines: tel.link_lines,
             energy_per_image: if batch > 0 {
-                run.energy / batch as f64
+                res.energy / batch as f64
             } else {
                 0.0
             },

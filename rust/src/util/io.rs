@@ -37,6 +37,12 @@ pub fn repo_root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
 }
 
+/// Read a whole text file with a path-labelled error (config/spec files,
+/// e.g. `EngineSpec::from_json_file`).
+pub fn read_text(path: &Path) -> crate::Result<String> {
+    fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))
+}
+
 /// Load a whitespace-separated float matrix. All rows must have equal
 /// length.
 pub fn load_matrix(path: &Path) -> crate::Result<Vec<Vec<f64>>> {

@@ -5,7 +5,9 @@ pub mod stats;
 pub mod table;
 pub mod si;
 pub mod io;
+pub mod json;
 
+pub use json::Json;
 pub use prng::{Pcg32, SplitMix64};
 pub use stats::Summary;
 pub use table::Table;

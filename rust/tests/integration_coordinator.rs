@@ -2,25 +2,28 @@
 //! simulator backends.
 
 use std::time::Duration;
-use xpoint_imc::analysis::ArrayDesign;
 use xpoint_imc::array::TmvmMode;
-use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SimBackend};
-use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig};
+use xpoint_imc::engine::{ArraySpec, BackendKind, EngineSpec, NetworkSource};
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::report::table2::template_layer;
 
 fn sim_factories(n: usize, n_row: usize, mode: TmvmMode) -> Vec<BackendFactory> {
-    (0..n)
-        .map(|_| {
-            let layer = template_layer();
-            let design =
-                ArrayDesign::new(n_row, 128, LineConfig::config3(), 3.0, 1.0).with_span(121);
-            Box::new(move || {
-                Ok(Box::new(SimBackend::new(layer, design, mode))
-                    as Box<dyn xpoint_imc::coordinator::Backend>)
-            }) as BackendFactory
+    let kind = match mode {
+        TmvmMode::Ideal => BackendKind::Ideal,
+        TmvmMode::Parasitic => BackendKind::Parasitic,
+    };
+    EngineSpec::new(kind)
+        .with_workers(n)
+        .with_network(NetworkSource::Template)
+        .with_array(ArraySpec {
+            rows: n_row,
+            cols: 128,
+            span: Some(121),
+            ..ArraySpec::default()
         })
-        .collect()
+        .build_factories()
+        .expect("valid engine spec")
 }
 
 #[test]

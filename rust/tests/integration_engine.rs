@@ -1,0 +1,379 @@
+//! Integration: the unified engine API. Pins the redesign's core
+//! contract — everything `EngineSpec::build` constructs is **bit-exact**
+//! (predictions *and* energy/time) with what the old direct-constructor
+//! paths produced — plus the JSON spec round-trip and the CLI surface.
+
+use std::time::Duration;
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::TmvmMode;
+use xpoint_imc::cli::Args;
+use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig};
+use xpoint_imc::engine::{
+    ArraySpec, BackendKind, Engine, EngineSpec, FabricBackend, NetworkSource, SimBackend,
+    XLA_GRAPH_BATCH,
+};
+use xpoint_imc::fabric::FabricConfig;
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::report::table2::template_layer;
+use xpoint_imc::runtime::artifact::artifacts_available;
+use xpoint_imc::runtime::ArtifactStore;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize) -> BinaryLayer {
+    let theta = rng.range(1, 6);
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.45)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+fn random_images(rng: &mut Pcg32, m: usize, n_in: usize) -> Vec<Vec<bool>> {
+    (0..m)
+        .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+        .collect()
+}
+
+/// Property: for `Ideal` and `Parasitic`, an engine built from
+/// `EngineSpec` equals the directly-constructed `SimBackend` — same bits,
+/// classes, energy and simulated time, on random shapes.
+#[test]
+fn prop_sim_spec_engine_bit_exact_with_direct_constructor() {
+    forall(Config::default().cases(40), "spec ≡ SimBackend", |rng| {
+        let n_out = rng.range(1, 12);
+        let n_in = rng.range(1, 30);
+        let layer = random_layer(rng, n_out, n_in);
+        let rows = rng.range(8, 48);
+        let cols = n_in.max(n_out) + rng.range(0, 16);
+        let mode = if rng.bernoulli(0.5) {
+            TmvmMode::Ideal
+        } else {
+            TmvmMode::Parasitic
+        };
+        let kind = match mode {
+            TmvmMode::Ideal => BackendKind::Ideal,
+            TmvmMode::Parasitic => BackendKind::Parasitic,
+        };
+
+        // old path: direct constructor, serve's engaged-span default
+        let design = ArrayDesign::new(rows, cols, LineConfig::config3(), 3.0, 1.0)
+            .with_span(n_in);
+        let mut old = SimBackend::new(layer.clone(), design, mode)
+            .map_err(|e| format!("direct: {e}"))?;
+
+        // new path: declarative spec (span None resolves to n_in)
+        let spec = EngineSpec::new(kind)
+            .with_array(ArraySpec {
+                rows,
+                cols,
+                span: None,
+                ..ArraySpec::default()
+            })
+            .with_batching(rows.min(64), 200)
+            .with_layers(vec![layer.clone()]);
+        let mut new = spec.build_engine().map_err(|e| format!("spec: {e:#}"))?;
+
+        let m = rng.range(1, rows.min(8) + 1);
+        let images = random_images(rng, m, n_in);
+        let a = old.infer_batch(&images).map_err(|e| format!("old: {e:#}"))?;
+        let b = new.infer_batch(&images).map_err(|e| format!("new: {e:#}"))?;
+        if a.bits != b.bits {
+            return Err("bits diverge".into());
+        }
+        if a.classes != b.classes {
+            return Err("classes diverge".into());
+        }
+        if a.energy != b.energy {
+            return Err(format!("energy diverges: {} vs {}", a.energy, b.energy));
+        }
+        if a.sim_time != b.sim_time {
+            return Err(format!("time diverges: {} vs {}", a.sim_time, b.sim_time));
+        }
+        if a.steps != b.steps {
+            return Err("steps diverge".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property: a fabric engine built from `EngineSpec` equals the
+/// directly-constructed `FabricBackend` on random multi-layer stacks,
+/// tile shapes and grids — bits, classes, energy, time and steps.
+#[test]
+fn prop_fabric_spec_engine_bit_exact_with_direct_constructor() {
+    forall(Config::default().cases(25), "spec ≡ FabricBackend", |rng| {
+        let depth = rng.range(1, 4);
+        let mut widths = vec![rng.range(4, 30)];
+        for _ in 0..depth {
+            widths.push(rng.range(2, 20));
+        }
+        let mut layers = Vec::with_capacity(depth);
+        for k in 0..depth {
+            layers.push(random_layer(rng, widths[k + 1], widths[k]));
+        }
+        let (gr, gc) = (rng.range(1, 4), rng.range(1, 4));
+        let (tr, tc) = (rng.range(2, 16), rng.range(2, 16));
+
+        let mut old = FabricBackend::new(
+            layers.clone(),
+            FabricConfig::new(gr, gc, tr, tc),
+            64,
+        )
+        .map_err(|e| format!("direct: {e}"))?;
+
+        let spec = EngineSpec::new(BackendKind::Fabric)
+            .with_layers(layers)
+            .with_grid(gr, gc)
+            .with_tile(tr, tc)
+            .with_fabric_max_batch(64);
+        let mut new = spec.build_engine().map_err(|e| format!("spec: {e:#}"))?;
+
+        let images = random_images(rng, rng.range(1, 6), widths[0]);
+        let a = old.infer_batch(&images).map_err(|e| format!("old: {e:#}"))?;
+        let b = new.infer_batch(&images).map_err(|e| format!("new: {e:#}"))?;
+        if a.bits != b.bits || a.classes != b.classes {
+            return Err("predictions diverge".into());
+        }
+        if a.energy != b.energy || a.sim_time != b.sim_time || a.steps != b.steps {
+            return Err(format!(
+                "telemetry diverges: E {} vs {}, t {} vs {}",
+                a.energy, b.energy, a.sim_time, b.sim_time
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The XLA golden model through the spec registry equals the direct
+/// constructor path (skips when `make artifacts` hasn't run).
+#[test]
+fn xla_spec_engine_matches_direct_constructor() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let store = ArtifactStore::open_default().unwrap();
+    let layer = store.single_layer().unwrap();
+    let v_dd = store.meta_f64("vdd_single").unwrap();
+    let runtime = xpoint_imc::runtime::Runtime::cpu().unwrap();
+    let mut old = xpoint_imc::engine::XlaBackend::new(
+        &runtime,
+        &store.nn_infer_hlo(),
+        layer.clone(),
+        64,
+        v_dd,
+    )
+    .unwrap();
+
+    let mut new = EngineSpec::new(BackendKind::Xla).build_engine().unwrap();
+
+    let mut gen = xpoint_imc::nn::dataset::DigitGen::new(xpoint_imc::nn::dataset::TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..32).map(|_| gen.next_sample().pixels).collect();
+    let a = old.infer_batch(&images).unwrap();
+    let b = new.infer_batch(&images).unwrap();
+    assert_eq!(a.bits, b.bits);
+    assert_eq!(a.classes, b.classes);
+}
+
+/// The serve path (`EngineSpec::from_args`) builds the same engine the
+/// old hand-rolled `main.rs::serve` constructed — checked end to end
+/// through the coordinator on the digit workload.
+#[test]
+fn serve_flags_reproduce_the_old_serve_construction() {
+    let args = Args::parse(
+        "serve --fabric --grid 2 --batch 32 --workers 1"
+            .split_whitespace()
+            .map(String::from),
+    );
+    let spec = EngineSpec::from_args(&args).expect("serve flags");
+    assert_eq!(spec.kind, BackendKind::Fabric);
+    assert_eq!(spec.coordinator_config().batch_capacity, 32);
+
+    // old path: what serve() used to assemble by hand — template layer
+    // (or artifact layer when present: the Auto contract), 2×2 grid of
+    // 64×32 subarrays, max_batch 1024
+    let layer = match ArtifactStore::open_default() {
+        Ok(s) => s.single_layer().expect("artifact layer"),
+        Err(_) => template_layer(),
+    };
+    let mut old = FabricBackend::new(
+        vec![layer.clone()],
+        FabricConfig::new(2, 2, 64, 32),
+        1024,
+    )
+    .unwrap();
+
+    let mut gen = xpoint_imc::nn::dataset::DigitGen::new(xpoint_imc::nn::dataset::TEST_SEED);
+    let samples: Vec<_> = (0..48).map(|_| gen.next_sample()).collect();
+    let images: Vec<Vec<bool>> = samples.iter().map(|s| s.pixels.clone()).collect();
+    let want = old.infer_batch(&images).unwrap();
+
+    let mut coord = Coordinator::spawn(
+        spec.build_factories().expect("factories"),
+        CoordinatorConfig {
+            // exactly one full batch (long linger: nothing ships early),
+            // so energy/time compare exactly against one infer_batch call
+            batch_capacity: 48,
+            linger: Duration::from_secs(5),
+        },
+    );
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| coord.submit(s.pixels.clone(), Some(s.label)).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+        assert_eq!(pred.bits, want.bits[i], "request {i} bits");
+        assert_eq!(pred.class, want.classes[i], "request {i} class");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.images, 48);
+    assert_eq!(snap.energy, want.energy, "energy identical before/after");
+    assert_eq!(snap.sim_time, want.sim_time, "time identical before/after");
+}
+
+/// JSON round-trip through a real file: write → `from_json_file` → build,
+/// and the parsed spec serializes back to the identical document.
+#[test]
+fn engine_spec_json_file_roundtrip_and_build() {
+    let spec = EngineSpec::new(BackendKind::Fabric)
+        .with_workers(1)
+        .with_network(NetworkSource::Template)
+        .with_grid(2, 2)
+        .with_tile(64, 32)
+        .with_fabric_max_batch(128)
+        .with_batching(16, 300);
+    let text = spec.to_json();
+
+    let path = std::env::temp_dir().join(format!(
+        "xpoint-engine-spec-{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, &text).expect("write spec file");
+    let loaded = EngineSpec::from_json_file(&path).expect("load spec file");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, spec);
+    assert_eq!(loaded.to_json(), text);
+
+    // a loaded spec is directly buildable
+    let mut engine = loaded.build_engine().expect("build from file spec");
+    let caps = engine.capabilities();
+    assert_eq!(caps.kind, BackendKind::Fabric);
+    assert_eq!(caps.nodes, 4);
+    let mut gen = xpoint_imc::nn::dataset::DigitGen::new(7);
+    let images: Vec<Vec<bool>> = (0..4).map(|_| gen.next_sample().pixels).collect();
+    let res = engine.infer_batch(&images).unwrap();
+    let layer = template_layer();
+    for (img, bits) in images.iter().zip(&res.bits) {
+        assert_eq!(bits, &layer.forward(img));
+    }
+
+    // a missing file is a typed, path-labelled error
+    let err = EngineSpec::from_json_file(std::path::Path::new(
+        "/nonexistent/xpoint-spec.json",
+    ))
+    .unwrap_err();
+    assert!(err.to_string().contains("engine spec JSON"), "{err}");
+}
+
+/// Property: random valid specs survive JSON serialization exactly.
+#[test]
+fn prop_spec_json_roundtrip_on_random_shapes() {
+    forall(Config::default().cases(60), "spec JSON roundtrip", |rng| {
+        let kind = *rng.choose(&[
+            BackendKind::Ideal,
+            BackendKind::Parasitic,
+            BackendKind::Fabric,
+            BackendKind::Xla,
+        ]);
+        let network = if kind == BackendKind::Xla {
+            // xla + template is rejected by validation (no artifact-free run)
+            *rng.choose(&[NetworkSource::Auto, NetworkSource::Artifact])
+        } else {
+            *rng.choose(&[
+                NetworkSource::Auto,
+                NetworkSource::Template,
+                NetworkSource::Artifact,
+            ])
+        };
+        let cols = rng.range(1, 200);
+        let rows = rng.range(1, 300);
+        let max_batch = rng.range(1, 2048);
+        // the coordinator batch capacity must fit the backend's max batch
+        let capacity_limit = match kind {
+            BackendKind::Ideal | BackendKind::Parasitic => rows,
+            BackendKind::Fabric => max_batch,
+            BackendKind::Xla => XLA_GRAPH_BATCH,
+        };
+        let spec = EngineSpec::new(kind)
+            .with_workers(rng.range(1, 8))
+            .with_network(network)
+            .with_array(ArraySpec {
+                rows,
+                cols,
+                line_config: rng.range(1, 4),
+                l_scale: (rng.range(1, 9) as f64) * 0.5,
+                w_scale: (rng.range(1, 5) as f64) * 0.5,
+                span: if rng.bernoulli(0.5) {
+                    Some(rng.range(1, cols + 1))
+                } else {
+                    None
+                },
+            })
+            .with_grid(rng.range(1, 6), rng.range(1, 6))
+            .with_tile(rng.range(1, 64), rng.range(1, 64))
+            .with_fabric_max_batch(max_batch)
+            .with_batching(rng.range(1, capacity_limit + 1), rng.range(1, 10_000) as u64);
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).map_err(|e| format!("parse: {e}"))?;
+        if parsed != spec {
+            return Err(format!("roundtrip drift:\n{text}"));
+        }
+        if parsed.to_json() != text {
+            return Err("serialization not a fixed point".into());
+        }
+        Ok(())
+    });
+}
+
+/// The unified surface: submit/poll and telemetry behave identically
+/// across backend kinds built from specs.
+#[test]
+fn submit_poll_and_telemetry_across_kinds() {
+    let specs = [
+        EngineSpec::new(BackendKind::Ideal).with_network(NetworkSource::Template),
+        EngineSpec::new(BackendKind::Parasitic).with_network(NetworkSource::Template),
+        EngineSpec::new(BackendKind::Fabric).with_network(NetworkSource::Template),
+    ];
+    let layer = template_layer();
+    let mut gen = xpoint_imc::nn::dataset::DigitGen::new(11);
+    let images: Vec<Vec<bool>> = (0..6).map(|_| gen.next_sample().pixels).collect();
+    for spec in specs {
+        let mut engine = spec.build_engine().expect("build");
+        let caps = engine.capabilities();
+        assert_eq!(caps.n_in, 121);
+        assert_eq!(caps.n_out, 10);
+        assert!(caps.max_batch >= images.len());
+        let ticket = engine.submit(images.clone()).expect("submit");
+        let res = engine
+            .poll(ticket)
+            .expect("poll")
+            .expect("sync engines complete at submit");
+        if caps.kind != BackendKind::Parasitic {
+            // ideal-fidelity kinds are bit-exact with the functional model
+            // (parasitic wire drops may legitimately lose marginal bits)
+            for (img, bits) in images.iter().zip(&res.bits) {
+                assert_eq!(bits, &layer.forward(img), "kind {:?}", caps.kind);
+            }
+        }
+        assert_eq!(res.bits.len(), images.len());
+        assert!(engine.poll(ticket).is_err(), "tickets redeem once");
+        let tel = engine.telemetry();
+        assert_eq!(tel.images, 6);
+        assert_eq!(tel.batches, 1);
+        assert!(tel.energy > 0.0, "kind {:?} reports energy", caps.kind);
+    }
+}

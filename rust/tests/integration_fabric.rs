@@ -5,8 +5,9 @@
 //! drives a whole fabric through the L3 coordinator.
 
 use std::time::Duration;
-use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig};
-use xpoint_imc::fabric::{FabricBackend, FabricConfig, FabricExecutor};
+use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig};
+use xpoint_imc::engine::{BackendKind, EngineSpec, NetworkSource};
+use xpoint_imc::fabric::{FabricConfig, FabricExecutor};
 use xpoint_imc::nn::BinaryLayer;
 use xpoint_imc::report::table2::template_layer;
 use xpoint_imc::scaling::tiling::{tiled_tmvm_counts, Tiling};
@@ -143,21 +144,19 @@ fn pipeline_overlap_beats_serial_execution() {
     assert!(run.per_image_done.iter().all(|&t| t <= run.makespan + 1e-15));
 }
 
-/// The serving shell drives a whole fabric: predictions through
-/// `FabricBackend` match the functional layer exactly, with fabric
+/// The serving shell drives a whole fabric: predictions through the
+/// fabric engine match the functional layer exactly, with fabric
 /// timing/energy flowing into the coordinator metrics.
 #[test]
 fn coordinator_serves_fabric_backend() {
-    let factories: Vec<BackendFactory> = (0..2)
-        .map(|_| {
-            Box::new(move || {
-                let layer = template_layer();
-                let cfg = FabricConfig::new(2, 2, 64, 32);
-                Ok(Box::new(FabricBackend::new(vec![layer], cfg, 1024)?)
-                    as Box<dyn xpoint_imc::coordinator::Backend>)
-            }) as BackendFactory
-        })
-        .collect();
+    let factories = EngineSpec::new(BackendKind::Fabric)
+        .with_workers(2)
+        .with_network(NetworkSource::Template)
+        .with_grid(2, 2)
+        .with_tile(64, 32)
+        .with_fabric_max_batch(1024)
+        .build_factories()
+        .expect("valid engine spec");
     let mut coord = Coordinator::spawn(
         factories,
         CoordinatorConfig {
