@@ -58,6 +58,40 @@ fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMod
     );
 }
 
+/// Sharded fabric serving: one coordinator worker driving `shards`
+/// independent fabric engines through the async submit/poll scheduler.
+/// The sweep makes the sharding speedup visible in the perf trajectory:
+/// wall-clock throughput should scale with shards (simulated energy per
+/// image is shard-invariant).
+fn run_sharded(label: &str, shards: usize, batch: usize, n_images: usize) {
+    let spec = xpoint_imc::report::sharding::shard_scaling_spec(shards, batch);
+    let mut coord = Coordinator::spawn(
+        spec.build_factories().expect("sharded factories"),
+        CoordinatorConfig {
+            batch_capacity: batch,
+            linger: Duration::from_micros(100),
+        },
+    );
+    let mut gen = DigitGen::new(1);
+    let images: Vec<_> = (0..n_images).map(|_| gen.next_sample()).collect();
+    let started = Instant::now();
+    let rxs: Vec<_> = images
+        .into_iter()
+        .map(|s| coord.submit(s.pixels, Some(s.label)).expect("submit"))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply");
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+    println!(
+        "{label:<42} {:>9.0} img/s  mean-latency {:>10}  sim-E/img {:>8}",
+        n_images as f64 / wall,
+        format_duration(snap.mean_latency),
+        format_si(snap.energy_per_image, "J"),
+    );
+}
+
 fn main() {
     exhibit_header("End-to-end coordinator throughput (simulator backends)");
     let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
@@ -68,4 +102,9 @@ fn main() {
     run("ideal, 1 worker, batch 8 (latency-biased)", 1, 8, 2048, TmvmMode::Ideal);
     run("parasitic, 1 worker, batch 64", 1, 64, 2048, TmvmMode::Parasitic);
     run("parasitic, 2 workers, batch 64", 2, 64, 2048, TmvmMode::Parasitic);
+
+    println!();
+    run_sharded("fabric, 1 shard, batch 64", 1, 64, 1024);
+    run_sharded("fabric, 2 shards, batch 64", 2, 64, 1024);
+    run_sharded("fabric, 4 shards, batch 64", 4, 64, 1024);
 }

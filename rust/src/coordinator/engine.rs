@@ -1,8 +1,21 @@
 //! The coordinator engine: a leader thread batches incoming requests and
-//! dispatches them to worker threads, each owning one inference backend
-//! (= one simulated subarray). std-thread based — the build is offline and
-//! the workload is CPU-bound simulation, so a thread-per-worker design
-//! outperforms an async reactor here.
+//! dispatches them to scheduler threads, each driving one [`Engine`]
+//! **purely through the non-blocking `submit`/`poll` pair**.
+//!
+//! The scheduler loop is backend-agnostic by construction: a synchronous
+//! engine (one simulated subarray, a fabric, the XLA golden model)
+//! completes its batch inside `submit` and the very next `poll` redeems
+//! it — the `Completions`-backed submit/poll of those engines is the
+//! trivial adapter. An asynchronous engine
+//! ([`ShardedEngine`](crate::engine::ShardedEngine)) returns from
+//! `submit` immediately while its shard threads work, so the scheduler
+//! keeps several batches in flight (bounded by
+//! [`Capabilities::shards`](crate::engine::Capabilities)) and drains
+//! completions **out of order**, matching each ticket back to the jobs
+//! that produced it — per-request identity is preserved by construction.
+//!
+//! std-thread based — the build is offline and the workload is CPU-bound
+//! simulation, so threads + channels outperform an async reactor here.
 
 use crate::engine::BackendFactory;
 use super::batcher::Batcher;
@@ -52,6 +65,132 @@ enum Message {
     Shutdown,
 }
 
+/// How often an idle scheduler re-polls its in-flight tickets. Small
+/// enough to keep completion latency negligible next to a simulated
+/// batch, large enough not to spin a host core.
+const POLL_INTERVAL: Duration = Duration::from_micros(50);
+
+/// Deliver one completed batch: replies to every job, then one metrics
+/// record for the batch.
+fn deliver(
+    metrics: &Metrics,
+    jobs: Vec<Job>,
+    res: crate::engine::InferenceResult,
+    submitted: Instant,
+) {
+    let latency = submitted.elapsed().as_secs_f64() / jobs.len().max(1) as f64;
+    let mut correct = 0u64;
+    let mut labelled = 0u64;
+    for (j, job) in jobs.iter().enumerate() {
+        if let Some(label) = job.label {
+            labelled += 1;
+            if res.classes[j] == label {
+                correct += 1;
+            }
+        }
+        let _ = job.reply.send(Prediction {
+            id: job.id,
+            bits: res.bits[j].clone(),
+            class: res.classes[j],
+        });
+    }
+    metrics.record_batch(
+        jobs.len() as u64,
+        res.steps,
+        latency,
+        res.sim_time,
+        res.energy,
+        correct,
+        labelled,
+    );
+}
+
+/// The scheduler loop: one per engine. Accepts job batches from the
+/// leader, submits them, and drains completions out of order — the only
+/// engine surface it touches is `submit`/`poll` (+ introspection).
+fn scheduler_main(
+    wid: usize,
+    factory: BackendFactory,
+    wrx: mpsc::Receiver<Vec<Job>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut engine = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("worker {wid}: backend construction failed: {e:#}");
+            return;
+        }
+    };
+    // keep enough batches in flight to cover every shard plus one being
+    // formed; synchronous engines complete at submit, so for them this
+    // bound is never reached
+    let max_in_flight = engine.capabilities().shards.max(1) + 1;
+    let mut in_flight: Vec<(u64, Vec<Job>, Instant)> = Vec::new();
+    let mut open = true;
+
+    while open || !in_flight.is_empty() {
+        // 1. intake — block only when nothing is in flight
+        if open && in_flight.len() < max_in_flight {
+            let next = if in_flight.is_empty() {
+                match wrx.recv() {
+                    Ok(jobs) => Some(jobs),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                }
+            } else {
+                match wrx.recv_timeout(POLL_INTERVAL) {
+                    Ok(jobs) => Some(jobs),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                }
+            };
+            if let Some(jobs) = next {
+                let images: Vec<Vec<bool>> = jobs.iter().map(|j| j.image.clone()).collect();
+                // stamp before submit: synchronous engines do the whole
+                // inference inside it, and that time is the latency
+                let submitted = Instant::now();
+                match engine.submit(images) {
+                    Ok(ticket) => in_flight.push((ticket, jobs, submitted)),
+                    Err(e) => {
+                        eprintln!("worker {wid}: submit of {} jobs failed: {e:#}", jobs.len())
+                    }
+                }
+            }
+        } else if !in_flight.is_empty() {
+            // intake closed or full: wait for completions without spinning
+            std::thread::sleep(POLL_INTERVAL);
+        }
+
+        // 2. drain — redeem every ready ticket, in whatever order the
+        // engine finished them
+        let mut i = 0;
+        while i < in_flight.len() {
+            match engine.poll(in_flight[i].0) {
+                Ok(Some(res)) => {
+                    let (_, jobs, submitted) = in_flight.swap_remove(i);
+                    deliver(&metrics, jobs, res, submitted);
+                }
+                Ok(None) => i += 1,
+                Err(e) => {
+                    let (ticket, jobs, _) = in_flight.swap_remove(i);
+                    eprintln!(
+                        "worker {wid}: batch (ticket {ticket}, {} jobs) failed: {e:#}",
+                        jobs.len()
+                    );
+                }
+            }
+        }
+    }
+    // final per-shard telemetry into the shared metrics (one entry per
+    // shard; plain engines contribute a single entry)
+    metrics.record_shards(engine.shard_telemetry());
+}
+
 /// The running coordinator.
 pub struct Coordinator {
     tx: mpsc::Sender<Message>,
@@ -61,14 +200,16 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn the leader and one worker per backend factory. Each factory
-    /// runs on its worker thread (PJRT handles are thread-affine).
+    /// Spawn the leader and one scheduler per backend factory. Each
+    /// factory runs on its scheduler thread (PJRT handles are
+    /// thread-affine; sharded engines spawn their own shard threads from
+    /// there).
     pub fn spawn(backends: Vec<BackendFactory>, config: CoordinatorConfig) -> Self {
         assert!(!backends.is_empty());
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel::<Message>();
 
-        // worker channels
+        // scheduler channels
         let mut worker_txs = Vec::new();
         let mut worker_handles = Vec::new();
         for (wid, factory) in backends.into_iter().enumerate() {
@@ -76,55 +217,11 @@ impl Coordinator {
             let m = Arc::clone(&metrics);
             worker_txs.push(wtx);
             worker_handles.push(std::thread::spawn(move || {
-                let mut backend = match factory() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("worker {wid}: backend construction failed: {e:#}");
-                        return;
-                    }
-                };
-                while let Ok(jobs) = wrx.recv() {
-                    let started = Instant::now();
-                    let images: Vec<Vec<bool>> =
-                        jobs.iter().map(|j| j.image.clone()).collect();
-                    match backend.infer_batch(&images) {
-                        Ok(res) => {
-                            let latency =
-                                started.elapsed().as_secs_f64() / jobs.len() as f64;
-                            let mut correct = 0u64;
-                            let mut labelled = 0u64;
-                            for (j, job) in jobs.iter().enumerate() {
-                                if let Some(label) = job.label {
-                                    labelled += 1;
-                                    if res.classes[j] == label {
-                                        correct += 1;
-                                    }
-                                }
-                                let _ = job.reply.send(Prediction {
-                                    id: job.id,
-                                    bits: res.bits[j].clone(),
-                                    class: res.classes[j],
-                                });
-                            }
-                            m.record_batch(
-                                jobs.len() as u64,
-                                res.steps,
-                                latency,
-                                res.sim_time,
-                                res.energy,
-                                correct,
-                                labelled,
-                            );
-                        }
-                        Err(e) => {
-                            eprintln!("worker {wid}: batch failed: {e:#}");
-                        }
-                    }
-                }
+                scheduler_main(wid, factory, wrx, m)
             }));
         }
 
-        // leader: batch + round-robin dispatch
+        // leader: batch + round-robin dispatch over the schedulers
         let cfg = config.clone();
         let leader = std::thread::spawn(move || {
             let mut batcher: Batcher<Job> = Batcher::new(cfg.batch_capacity, cfg.linger);
@@ -264,6 +361,8 @@ mod tests {
         assert_eq!(snap.images, 40);
         assert!(snap.energy > 0.0);
         assert!(snap.batches >= 5, "batched into ≥5 batches of ≤8");
+        assert_eq!(snap.shards.len(), 1, "one plain engine = one shard entry");
+        assert_eq!(snap.shards[0].images, 40);
     }
 
     #[test]
@@ -290,6 +389,55 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.images, 32);
         assert!(snap.accuracy.is_some());
+        assert_eq!(snap.shards.len(), 2, "one shard entry per worker engine");
+    }
+
+    /// The scheduler loop drives a genuinely asynchronous engine: a
+    /// sharded backend whose batches complete on shard threads, out of
+    /// order — every prediction must still reach its own requester.
+    #[test]
+    fn scheduler_serves_a_sharded_engine() {
+        let mut rng = Pcg32::seeded(21);
+        let layer = BinaryLayer::new(
+            (0..10)
+                .map(|_| (0..25).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            4,
+        );
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 32,
+                span: Some(32),
+                ..ArraySpec::default()
+            })
+            .with_batching(8, 100)
+            .with_layers(vec![layer.clone()])
+            .with_shards(3, BackendKind::Ideal)
+            .with_workers(1);
+        let mut coord = Coordinator::spawn(
+            spec.build_factories().expect("sharded factories"),
+            CoordinatorConfig {
+                batch_capacity: 8,
+                linger: Duration::from_micros(50),
+            },
+        );
+        let images: Vec<Vec<bool>> = (0..64)
+            .map(|_| (0..25).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
+            .collect();
+        for (img, rx) in images.iter().zip(rxs) {
+            let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+            assert_eq!(pred.bits, layer.forward(img), "identity preserved");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.images, 64);
+        assert_eq!(snap.shards.len(), 3, "per-shard telemetry reaches metrics");
+        let spread: u64 = snap.shards.iter().map(|t| t.images).sum();
+        assert_eq!(spread, 64, "every image accounted to some shard");
     }
 
     #[test]

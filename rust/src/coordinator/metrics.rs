@@ -1,5 +1,6 @@
 //! Lock-cheap metrics aggregation for the coordinator.
 
+use crate::engine::Telemetry;
 use crate::util::stats::Welford;
 use std::sync::Mutex;
 
@@ -19,6 +20,7 @@ struct Inner {
     steps: u64,
     correct: u64,
     labelled: u64,
+    shards: Vec<Telemetry>, // final per-shard telemetry, worker by worker
 }
 
 /// A point-in-time copy of the aggregated metrics.
@@ -35,6 +37,10 @@ pub struct MetricsSnapshot {
     pub energy_per_image: f64,
     /// Functional accuracy over labelled requests (if any).
     pub accuracy: Option<f64>,
+    /// Per-shard [`Telemetry`], concatenated across workers (one entry
+    /// per plain engine, one per shard of a sharded engine) — recorded at
+    /// scheduler exit, so it is complete after `shutdown`.
+    pub shards: Vec<Telemetry>,
 }
 
 impl Metrics {
@@ -67,6 +73,13 @@ impl Metrics {
         m.labelled += labelled;
     }
 
+    /// Append a worker engine's final per-shard telemetry (called once
+    /// per scheduler thread, at exit).
+    pub fn record_shards(&self, telemetry: Vec<Telemetry>) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        m.shards.extend(telemetry);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
         MetricsSnapshot {
@@ -87,6 +100,7 @@ impl Metrics {
             } else {
                 None
             },
+            shards: m.shards.clone(),
         }
     }
 }
@@ -116,5 +130,30 @@ mod tests {
         assert_eq!(s.images, 0);
         assert_eq!(s.energy_per_image, 0.0);
         assert!(s.accuracy.is_none());
+        assert!(s.shards.is_empty());
+    }
+
+    #[test]
+    fn shard_telemetry_concatenates_across_workers() {
+        let m = Metrics::new();
+        m.record_shards(vec![
+            Telemetry {
+                images: 10,
+                energy: 1.0,
+                ..Telemetry::default()
+            },
+            Telemetry {
+                images: 6,
+                energy: 0.5,
+                ..Telemetry::default()
+            },
+        ]);
+        m.record_shards(vec![Telemetry {
+            images: 4,
+            ..Telemetry::default()
+        }]);
+        let s = m.snapshot();
+        assert_eq!(s.shards.len(), 3);
+        assert_eq!(s.shards.iter().map(|t| t.images).sum::<u64>(), 20);
     }
 }

@@ -1,24 +1,30 @@
 //! L3 coordinator: the serving shell around the simulated accelerator —
-//! request batching, subarray scheduling, worker threads and metrics.
+//! request batching, asynchronous scheduling over submit/poll, and
+//! metrics.
 //!
 //! The paper's contribution is the in-memory compute substrate itself, so
 //! the coordinator is deliberately thin: it owns process topology and the
 //! batching policy (`⌊N_row/P⌋` images per computational step, Table II)
 //! and treats the inference backend as pluggable behind the unified
-//! [`Engine`](crate::engine::Engine) trait — workers are spawned from the
-//! [`BackendFactory`] list produced by
-//! [`EngineSpec::build_factories`](crate::engine::EngineSpec::build_factories).
+//! [`Engine`](crate::engine::Engine) trait — scheduler threads are
+//! spawned from the [`BackendFactory`] list produced by
+//! [`EngineSpec::build_factories`](crate::engine::EngineSpec::build_factories),
+//! and each scheduler drives its engine purely through the non-blocking
+//! `submit`/`poll` pair (out-of-order completion, per-request identity
+//! preserved; see [`engine`]). Per-shard
+//! [`Telemetry`](crate::engine::Telemetry) flows into
+//! [`MetricsSnapshot::shards`].
 //!
 //! `Backend` is a re-export of `engine::Engine` (the engine API subsumed
 //! the old coordinator-local trait); the concrete backends live in
-//! [`crate::engine::backends`].
+//! [`crate::engine::backends`] and [`crate::engine::sharded`].
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 
 pub use crate::engine::{
-    Engine as Backend, BackendFactory, InferenceResult, SimBackend, XlaBackend,
+    Engine as Backend, BackendFactory, InferenceResult, ShardedEngine, SimBackend, XlaBackend,
 };
 pub use batcher::Batcher;
 pub use engine::{Coordinator, CoordinatorConfig, Prediction};

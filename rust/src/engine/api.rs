@@ -42,6 +42,9 @@ pub struct Capabilities {
     pub nodes: usize,
     /// Weight tiles placed on those subarrays.
     pub tiles: usize,
+    /// Independent shards behind `submit` (1 for the plain engines). A
+    /// scheduler can keep this many batches in flight productively.
+    pub shards: usize,
     /// Whether `InferenceResult::energy`/`sim_time` carry physical values
     /// (the XLA golden model reports zeros).
     pub reports_energy: bool,
@@ -132,17 +135,29 @@ pub trait Engine {
     /// Cumulative counters since construction (see [`Telemetry`]).
     fn telemetry(&self) -> Telemetry;
 
+    /// Per-shard telemetry. Plain engines are their own single shard; a
+    /// [`ShardedEngine`](super::sharded::ShardedEngine) reports one entry
+    /// per shard so schedulers and metrics can see load balance.
+    fn shard_telemetry(&self) -> Vec<Telemetry> {
+        vec![self.telemetry()]
+    }
+
     /// Non-blocking enqueue: accept a batch, return a [`Ticket`] redeemed
     /// via [`poll`](Engine::poll). The in-process simulation engines
     /// complete the batch before returning (the simulation is synchronous
-    /// host-side work), so their tickets are immediately redeemable — the
-    /// pair exists so callers written against it also drive future engines
-    /// whose work genuinely completes later (remote shards, async fabrics).
+    /// host-side work), so their tickets are immediately redeemable — that
+    /// [`Completions`]-backed behavior is the trivial adapter that lets
+    /// the coordinator's scheduler loop drive blocking backends through
+    /// the same surface as genuinely asynchronous ones
+    /// ([`ShardedEngine`](super::sharded::ShardedEngine), whose batches
+    /// complete later on shard worker threads).
     fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket>;
 
     /// Redeem a ticket: `Ok(Some(..))` once the batch is done (at most
-    /// once per ticket), `Ok(None)` while still in flight, `Err` for
-    /// tickets never issued or already collected.
+    /// once per ticket), `Ok(None)` while still in flight. Errors are
+    /// typed and never block or panic: [`EngineError::Empty`] when nothing
+    /// was ever submitted, [`EngineError::UnknownTicket`] for tickets
+    /// never issued or already collected.
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>>;
 }
 
@@ -166,10 +181,13 @@ impl Completions {
         self.issued
     }
 
-    /// Redeem `ticket` (exactly once).
+    /// Redeem `ticket` (exactly once). Polling before anything was ever
+    /// submitted is the typed [`EngineError::Empty`]; an issued-but-gone
+    /// (or never-issued) ticket is [`EngineError::UnknownTicket`].
     pub fn take(&mut self, ticket: Ticket) -> Result<InferenceResult, EngineError> {
         match self.done.iter().position(|(t, _)| *t == ticket) {
             Some(i) => Ok(self.done.remove(i).1),
+            None if self.issued == 0 => Err(EngineError::Empty),
             None => Err(EngineError::UnknownTicket(ticket)),
         }
     }
@@ -224,5 +242,15 @@ mod tests {
         assert_eq!(c.take(t1).unwrap().bits.len(), 1);
         assert_eq!(c.take(t1).unwrap_err(), EngineError::UnknownTicket(t1));
         assert_eq!(c.take(99).unwrap_err(), EngineError::UnknownTicket(99));
+    }
+
+    #[test]
+    fn polling_before_any_submit_is_the_typed_empty_error() {
+        let mut c = Completions::default();
+        assert_eq!(c.take(1).unwrap_err(), EngineError::Empty);
+        let t = c.push(result(1));
+        c.take(t).unwrap();
+        // once something was submitted, a bad ticket is UnknownTicket
+        assert_eq!(c.take(t).unwrap_err(), EngineError::UnknownTicket(t));
     }
 }

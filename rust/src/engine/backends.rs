@@ -106,6 +106,7 @@ impl Engine for SimBackend {
             max_batch: self.subarray.n_row(),
             nodes: 1,
             tiles: 1,
+            shards: 1,
             reports_energy: true,
             pipelined: false,
         }
@@ -213,6 +214,7 @@ impl Engine for FabricBackend {
             max_batch: self.max_batch,
             nodes: self.exec.config().n_nodes(),
             tiles: self.exec.placement().n_tiles(),
+            shards: 1,
             reports_energy: true,
             pipelined: true,
         }
@@ -331,6 +333,7 @@ impl Engine for XlaBackend {
             max_batch: self.batch,
             nodes: 1,
             tiles: 1,
+            shards: 1,
             reports_energy: false,
             pipelined: false,
         }

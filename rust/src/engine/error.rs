@@ -31,6 +31,8 @@ pub enum EngineError {
     ZeroBatch,
     /// Worker count of zero.
     ZeroWorkers,
+    /// Shard count of zero (`--shards 0`).
+    ZeroShards,
     /// Two options selecting incompatible backends were both given.
     Conflict {
         first: &'static str,
@@ -45,6 +47,8 @@ pub enum EngineError {
     UnknownBackend(String),
     /// Unknown network source name.
     UnknownNetwork(String),
+    /// Unknown placement strategy name.
+    UnknownPlacement(String),
     /// Metal-line configuration id outside `1..=3`.
     UnknownLineConfig(String),
     /// Engaged column span outside `1..=n_col`.
@@ -62,6 +66,10 @@ pub enum EngineError {
     Placement(String),
     /// Polling a ticket that was never issued or already collected.
     UnknownTicket(u64),
+    /// Polling an engine that has never had a batch submitted.
+    Empty,
+    /// A submitted batch exceeds every shard's per-call batch limit.
+    NoShardFits { batch: usize, max_batch: usize },
 }
 
 impl fmt::Display for EngineError {
@@ -84,6 +92,7 @@ impl fmt::Display for EngineError {
             ),
             Self::ZeroBatch => write!(f, "batch capacity must be at least 1"),
             Self::ZeroWorkers => write!(f, "worker count must be at least 1"),
+            Self::ZeroShards => write!(f, "shard count must be at least 1"),
             Self::Conflict { first, second } => write!(
                 f,
                 "{first} and {second} are mutually exclusive — pick one backend"
@@ -96,6 +105,10 @@ impl fmt::Display for EngineError {
             Self::UnknownNetwork(s) => write!(
                 f,
                 "unknown network source '{s}' (expected auto|template|artifact)"
+            ),
+            Self::UnknownPlacement(s) => write!(
+                f,
+                "unknown placement strategy '{s}' (expected roundrobin|locality)"
             ),
             Self::UnknownLineConfig(s) => write!(
                 f,
@@ -113,6 +126,11 @@ impl fmt::Display for EngineError {
             Self::UnknownTicket(t) => {
                 write!(f, "ticket {t} was never issued or already collected")
             }
+            Self::Empty => write!(f, "nothing submitted — no batch is in flight"),
+            Self::NoShardFits { batch, max_batch } => write!(
+                f,
+                "batch of {batch} exceeds every shard's max batch {max_batch}"
+            ),
         }
     }
 }
@@ -141,6 +159,20 @@ mod tests {
         assert!(EngineError::EmptyGrid { rows: 0, cols: 2 }
             .to_string()
             .contains("at least 1×1"));
+        assert_eq!(
+            EngineError::ZeroShards.to_string(),
+            "shard count must be at least 1"
+        );
+        assert_eq!(
+            EngineError::Empty.to_string(),
+            "nothing submitted — no batch is in flight"
+        );
+        assert!(EngineError::NoShardFits { batch: 9, max_batch: 4 }
+            .to_string()
+            .contains("batch of 9"));
+        assert!(EngineError::UnknownPlacement("snake".into())
+            .to_string()
+            .contains("roundrobin|locality"));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   [`BackendFactory`] the coordinator spawns workers from.
 //! * [`backends`] — the concrete engines: [`SimBackend`],
 //!   [`FabricBackend`], [`XlaBackend`].
+//! * [`sharded`] — [`ShardedEngine`]: N inner engines on their own worker
+//!   threads behind an asynchronous, capability-aware least-loaded
+//!   submit/poll scheduler (the `Sharded` backend kind).
 //! * [`error`] — [`EngineError`], the typed error surface (implements
 //!   `std::error::Error`, lifts into `anyhow` via `?`).
 //!
@@ -29,6 +32,7 @@
 pub mod api;
 pub mod backends;
 pub mod error;
+pub mod sharded;
 pub mod spec;
 
 pub use api::{
@@ -36,4 +40,7 @@ pub use api::{
 };
 pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 pub use error::EngineError;
-pub use spec::{ArraySpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource};
+pub use sharded::ShardedEngine;
+pub use spec::{
+    ArraySpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource, ShardSpec,
+};

@@ -1,0 +1,525 @@
+//! [`ShardedEngine`] — genuinely asynchronous serving over N independent
+//! engine shards.
+//!
+//! The paper's §"system scalability" connects multiple 3D XPoint arrays
+//! into a larger engine; the fabric layer simulates one such grid, and
+//! this module scales *past* one grid: a `ShardedEngine` owns N inner
+//! engines (any non-sharded [`BackendKind`]), each constructed from its
+//! [`BackendFactory`] **on its own worker thread** (engines are not
+//! `Send`; PJRT handles are thread-affine — the factory travels, the
+//! engine never does).
+//!
+//! The submit/poll pair is where the asynchrony becomes real instead of
+//! the synchronous-completion adapter the plain engines use:
+//!
+//! * [`submit`](Engine::submit) is **capability-aware least-loaded
+//!   dispatch**: the batch goes to the shard with the fewest in-flight
+//!   images among those whose `max_batch` admits it, and returns a
+//!   [`Ticket`] immediately — the shard thread does the work later.
+//! * [`poll`](Engine::poll) drains shard completion channels without
+//!   blocking and redeems tickets **out of submission order** while
+//!   preserving per-ticket identity; `Ok(None)` means genuinely still in
+//!   flight on a shard thread.
+//! * [`infer_batch`](Engine::infer_batch) is submit + a blocking drain of
+//!   the owning shard's completions — the synchronous view of the same
+//!   machinery.
+//!
+//! Telemetry sums across shards (energy and simulated time are additive;
+//! per-subarray utilization concatenates in shard order), and
+//! [`Engine::shard_telemetry`] exposes the per-shard breakdown so the
+//! coordinator's metrics and the report exhibits can show load balance.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::api::{BackendFactory, Capabilities, Engine, InferenceResult, Telemetry, Ticket};
+use super::error::EngineError;
+use super::spec::BackendKind;
+
+/// Work order for a shard thread.
+enum ShardRequest {
+    Infer { ticket: Ticket, images: Vec<Vec<bool>> },
+}
+
+/// Message from a shard thread back to the `ShardedEngine`.
+enum ShardEvent {
+    /// Engine construction finished (capabilities) or failed (message).
+    Built(Result<Capabilities, String>),
+    /// One batch completed (or failed), with the shard's telemetry
+    /// snapshot taken right after the batch.
+    Done {
+        ticket: Ticket,
+        result: Result<InferenceResult, String>,
+        telemetry: Telemetry,
+    },
+}
+
+/// One shard: the channel pair to its worker thread plus the scheduler's
+/// view of it (capabilities, last telemetry snapshot, in-flight load).
+struct Shard {
+    tx: Option<mpsc::Sender<ShardRequest>>,
+    rx: mpsc::Receiver<ShardEvent>,
+    join: Option<JoinHandle<()>>,
+    caps: Capabilities,
+    telemetry: Telemetry,
+    /// Batches currently submitted to this shard and not yet drained.
+    in_flight_batches: usize,
+    /// Images in those batches — the least-loaded dispatch key.
+    in_flight_images: usize,
+    alive: bool,
+}
+
+/// Bookkeeping for one outstanding ticket.
+struct InFlight {
+    shard: usize,
+    images: usize,
+}
+
+/// N engine shards behind one [`Engine`] — see the module docs.
+pub struct ShardedEngine {
+    shards: Vec<Shard>,
+    caps: Capabilities,
+    next_ticket: Ticket,
+    /// Rotation origin for the least-loaded tie-break: equal loads
+    /// round-robin instead of always favouring shard 0.
+    next_pref: usize,
+    in_flight: HashMap<Ticket, InFlight>,
+    /// Drained completions awaiting redemption, in completion order.
+    ready: Vec<(Ticket, Result<InferenceResult, String>)>,
+}
+
+fn shard_main(
+    factory: BackendFactory,
+    rx: mpsc::Receiver<ShardRequest>,
+    tx: mpsc::Sender<ShardEvent>,
+) {
+    let mut engine = match factory() {
+        Ok(engine) => {
+            let _ = tx.send(ShardEvent::Built(Ok(engine.capabilities())));
+            engine
+        }
+        Err(e) => {
+            let _ = tx.send(ShardEvent::Built(Err(format!("{e:#}"))));
+            return;
+        }
+    };
+    while let Ok(ShardRequest::Infer { ticket, images }) = rx.recv() {
+        let result = engine.infer_batch(&images).map_err(|e| format!("{e:#}"));
+        if tx
+            .send(ShardEvent::Done {
+                ticket,
+                result,
+                telemetry: engine.telemetry(),
+            })
+            .is_err()
+        {
+            break; // owner gone — nothing left to report to
+        }
+    }
+}
+
+impl ShardedEngine {
+    /// Spawn one worker thread per factory and construct each shard's
+    /// engine on its own thread (builds run concurrently). Fails with the
+    /// first shard's construction error if any factory fails.
+    pub fn new(factories: Vec<BackendFactory>) -> crate::Result<Self> {
+        anyhow::ensure!(
+            !factories.is_empty(),
+            "sharded engine needs at least one shard"
+        );
+        let mut pending = Vec::with_capacity(factories.len());
+        for (i, factory) in factories.into_iter().enumerate() {
+            let (req_tx, req_rx) = mpsc::channel::<ShardRequest>();
+            let (evt_tx, evt_rx) = mpsc::channel::<ShardEvent>();
+            let join = std::thread::Builder::new()
+                .name(format!("xpoint-shard-{i}"))
+                .spawn(move || shard_main(factory, req_rx, evt_tx))
+                .map_err(|e| anyhow::anyhow!("spawning shard {i} thread: {e}"))?;
+            pending.push((req_tx, evt_rx, join));
+        }
+
+        let mut shards = Vec::with_capacity(pending.len());
+        for (i, (tx, rx, join)) in pending.into_iter().enumerate() {
+            // the first event is always Built; dropping the remaining
+            // `pending` senders on an early return unwinds the other
+            // threads cleanly (their request channels close)
+            let caps = match rx.recv() {
+                Ok(ShardEvent::Built(Ok(caps))) => caps,
+                Ok(ShardEvent::Built(Err(e))) => {
+                    anyhow::bail!("shard {i}: backend construction failed: {e}")
+                }
+                Ok(ShardEvent::Done { .. }) => unreachable!("Done before Built"),
+                Err(_) => anyhow::bail!("shard {i}: worker thread died during construction"),
+            };
+            shards.push(Shard {
+                tx: Some(tx),
+                rx,
+                join: Some(join),
+                caps,
+                telemetry: Telemetry::default(),
+                in_flight_batches: 0,
+                in_flight_images: 0,
+                alive: true,
+            });
+        }
+
+        let first = shards[0].caps;
+        let caps = Capabilities {
+            kind: BackendKind::Sharded,
+            n_in: first.n_in,
+            n_out: first.n_out,
+            // one batch lands on one shard, so the engine-level limit is
+            // the largest single shard's (shards are normally identical)
+            max_batch: shards.iter().map(|s| s.caps.max_batch).max().unwrap_or(0),
+            nodes: shards.iter().map(|s| s.caps.nodes).sum(),
+            tiles: shards.iter().map(|s| s.caps.tiles).sum(),
+            shards: shards.len(),
+            reports_energy: first.reports_energy,
+            pipelined: first.pipelined,
+        };
+        Ok(Self {
+            shards,
+            caps,
+            next_ticket: 0,
+            next_pref: 0,
+            in_flight: HashMap::new(),
+            ready: Vec::new(),
+        })
+    }
+
+    /// Shards behind this engine.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// In-flight images per shard — the live load the least-loaded
+    /// dispatch balances (test/introspection hook).
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.in_flight_images).collect()
+    }
+
+    /// Fail every outstanding ticket on a shard whose thread is gone.
+    fn mark_shard_dead(&mut self, shard: usize) {
+        if !self.shards[shard].alive {
+            return;
+        }
+        self.shards[shard].alive = false;
+        let dead: Vec<Ticket> = self
+            .in_flight
+            .iter()
+            .filter(|(_, f)| f.shard == shard)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in dead {
+            self.in_flight.remove(&t);
+            self.ready
+                .push((t, Err(format!("shard {shard} worker thread died"))));
+        }
+        self.shards[shard].in_flight_batches = 0;
+        self.shards[shard].in_flight_images = 0;
+    }
+
+    fn apply_event(&mut self, shard: usize, evt: ShardEvent) {
+        match evt {
+            // Built is consumed in new(); afterwards the channel only
+            // carries completions
+            ShardEvent::Built(_) => {}
+            ShardEvent::Done {
+                ticket,
+                result,
+                telemetry,
+            } => {
+                self.shards[shard].telemetry = telemetry;
+                if let Some(info) = self.in_flight.remove(&ticket) {
+                    let s = &mut self.shards[info.shard];
+                    s.in_flight_batches = s.in_flight_batches.saturating_sub(1);
+                    s.in_flight_images = s.in_flight_images.saturating_sub(info.images);
+                }
+                self.ready.push((ticket, result));
+            }
+        }
+    }
+
+    /// Pull every completion that has already arrived, without blocking.
+    fn drain_events(&mut self) {
+        for i in 0..self.shards.len() {
+            loop {
+                match self.shards[i].rx.try_recv() {
+                    Ok(evt) => self.apply_event(i, evt),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        if self.shards[i].in_flight_batches > 0 {
+                            self.mark_shard_dead(i);
+                        } else {
+                            self.shards[i].alive = false;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until the shard owning `ticket` reports *something* (its
+    /// completions arrive in order, so this makes progress toward the
+    /// ticket without busy-waiting).
+    fn block_on_owner(&mut self, ticket: Ticket) {
+        let shard = match self.in_flight.get(&ticket) {
+            Some(f) => f.shard,
+            None => return, // already drained (or failed)
+        };
+        match self.shards[shard].rx.recv() {
+            Ok(evt) => self.apply_event(shard, evt),
+            Err(_) => self.mark_shard_dead(shard),
+        }
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+        let ticket = self.submit(images.to_vec())?;
+        loop {
+            if let Some(res) = self.poll(ticket)? {
+                return Ok(res);
+            }
+            self.block_on_owner(ticket);
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        self.caps.max_batch
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.caps
+    }
+
+    /// Aggregate across shards: counters and energy/time sum (both are
+    /// physically additive over independent arrays); `utilization`
+    /// concatenates the per-shard vectors in shard order. Snapshots are
+    /// as of the most recently drained completion.
+    fn telemetry(&self) -> Telemetry {
+        let mut total = Telemetry::default();
+        for s in &self.shards {
+            let t = &s.telemetry;
+            total.batches += t.batches;
+            total.images += t.images;
+            total.steps += t.steps;
+            total.sim_time += t.sim_time;
+            total.energy += t.energy;
+            total.compute_energy += t.compute_energy;
+            total.link_energy += t.link_energy;
+            total.cycles += t.cycles;
+            total.link_transfers += t.link_transfers;
+            total.link_lines += t.link_lines;
+            total.utilization.extend(t.utilization.iter().copied());
+        }
+        total
+    }
+
+    fn shard_telemetry(&self) -> Vec<Telemetry> {
+        self.shards.iter().map(|s| s.telemetry.clone()).collect()
+    }
+
+    fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
+        self.drain_events();
+        let n = images.len();
+        // least-loaded shard among those whose max_batch admits the
+        // batch; ties resolve in rotation order from `next_pref`, so an
+        // all-idle engine round-robins instead of pinning shard 0
+        let n_shards = self.shards.len();
+        let mut best: Option<usize> = None;
+        for k in 0..n_shards {
+            let i = (self.next_pref + k) % n_shards;
+            let s = &self.shards[i];
+            if !s.alive || n > s.caps.max_batch {
+                continue;
+            }
+            best = match best {
+                Some(b) if self.shards[b].in_flight_images <= s.in_flight_images => Some(b),
+                _ => Some(i),
+            };
+        }
+        let Some(i) = best else {
+            return Err(EngineError::NoShardFits {
+                batch: n,
+                max_batch: self.caps.max_batch,
+            }
+            .into());
+        };
+        self.next_pref = (i + 1) % n_shards;
+        self.next_ticket += 1;
+        let ticket = self.next_ticket;
+        self.shards[i]
+            .tx
+            .as_ref()
+            .expect("senders live until drop")
+            .send(ShardRequest::Infer { ticket, images })
+            .map_err(|_| anyhow::anyhow!("shard {i} worker thread is down"))?;
+        self.shards[i].in_flight_batches += 1;
+        self.shards[i].in_flight_images += n;
+        self.in_flight.insert(ticket, InFlight { shard: i, images: n });
+        Ok(ticket)
+    }
+
+    fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
+        self.drain_events();
+        if let Some(pos) = self.ready.iter().position(|(t, _)| *t == ticket) {
+            let (_, result) = self.ready.remove(pos);
+            return result
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("sharded batch failed: {e}"));
+        }
+        if self.in_flight.contains_key(&ticket) {
+            return Ok(None);
+        }
+        if self.next_ticket == 0 {
+            return Err(EngineError::Empty.into());
+        }
+        Err(EngineError::UnknownTicket(ticket).into())
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        for s in &mut self.shards {
+            s.tx.take(); // closing the request channel ends the thread
+        }
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ArraySpec, EngineSpec};
+    use crate::nn::BinaryLayer;
+    use crate::util::Pcg32;
+
+    fn layer(seed: u64) -> BinaryLayer {
+        let mut rng = Pcg32::seeded(seed);
+        BinaryLayer::new(
+            (0..8)
+                .map(|_| (0..16).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            3,
+        )
+    }
+
+    fn sharded(shards: usize, rows: usize) -> ShardedEngine {
+        let factories = EngineSpec::new(BackendKind::Ideal)
+            .with_workers(shards)
+            .with_array(ArraySpec {
+                rows,
+                cols: 32,
+                span: Some(16),
+                ..ArraySpec::default()
+            })
+            .with_batching(rows.min(64), 200)
+            .with_layers(vec![layer(3)])
+            .build_factories()
+            .expect("valid spec");
+        ShardedEngine::new(factories).expect("shards build")
+    }
+
+    fn images(seed: u64, m: usize) -> Vec<Vec<bool>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..m)
+            .map(|_| (0..16).map(|_| rng.bernoulli(0.4)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn sharded_infer_matches_functional_layer() {
+        let l = layer(3);
+        let mut e = sharded(3, 32);
+        assert_eq!(e.n_shards(), 3);
+        let caps = e.capabilities();
+        assert_eq!(caps.kind, BackendKind::Sharded);
+        assert_eq!(caps.shards, 3);
+        assert_eq!(caps.nodes, 3, "one subarray per shard");
+        let imgs = images(4, 6);
+        let res = e.infer_batch(&imgs).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(res.bits[i], l.forward(img));
+            assert_eq!(res.classes[i], l.argmax(img));
+        }
+        let tel = e.telemetry();
+        assert_eq!((tel.batches, tel.images), (1, 6));
+        assert!(tel.energy > 0.0);
+        assert_eq!(e.shard_telemetry().len(), 3);
+    }
+
+    #[test]
+    fn tickets_redeem_out_of_order_with_identity() {
+        let l = layer(3);
+        let mut e = sharded(2, 32);
+        let a = images(5, 5);
+        let b = images(6, 2);
+        let ta = e.submit(a.clone()).unwrap();
+        let tb = e.submit(b.clone()).unwrap();
+        assert_ne!(ta, tb);
+        // redeem in reverse submission order; blocking helper drives both
+        let rb = loop {
+            match e.poll(tb).unwrap() {
+                Some(r) => break r,
+                None => e.block_on_owner(tb),
+            }
+        };
+        let ra = loop {
+            match e.poll(ta).unwrap() {
+                Some(r) => break r,
+                None => e.block_on_owner(ta),
+            }
+        };
+        assert_eq!(rb.bits.len(), 2);
+        assert_eq!(ra.bits.len(), 5);
+        for (img, bits) in a.iter().zip(&ra.bits) {
+            assert_eq!(bits, &l.forward(img), "batch a identity");
+        }
+        for (img, bits) in b.iter().zip(&rb.bits) {
+            assert_eq!(bits, &l.forward(img), "batch b identity");
+        }
+        // dispatch rotation: two consecutive submits land on different
+        // shards deterministically (ties round-robin from next_pref)
+        let per_shard = e.shard_telemetry();
+        assert_eq!(per_shard.iter().map(|t| t.batches).sum::<u64>(), 2);
+        assert!(per_shard.iter().all(|t| t.batches == 1), "one batch each");
+        // each ticket redeems exactly once
+        assert!(e.poll(ta).is_err());
+    }
+
+    #[test]
+    fn poll_contract_empty_then_unknown() {
+        let mut e = sharded(2, 16);
+        let err = e.poll(1).unwrap_err();
+        assert!(
+            err.to_string().contains("nothing submitted"),
+            "fresh engine: {err}"
+        );
+        let t = e.submit(images(7, 3)).unwrap();
+        loop {
+            match e.poll(t).unwrap() {
+                Some(_) => break,
+                None => e.block_on_owner(t),
+            }
+        }
+        let err = e.poll(t).unwrap_err();
+        assert!(err.to_string().contains("never issued"), "{err}");
+    }
+
+    #[test]
+    fn oversized_batch_is_a_typed_error() {
+        let mut e = sharded(2, 8);
+        let err = e.submit(images(8, 9)).unwrap_err();
+        assert!(
+            err.to_string().contains("exceeds every shard"),
+            "{err}"
+        );
+    }
+}

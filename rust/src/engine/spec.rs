@@ -24,11 +24,12 @@ use std::time::Duration;
 use super::api::{BackendFactory, Engine};
 use super::backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 use super::error::EngineError;
+use super::sharded::ShardedEngine;
 use crate::analysis::ArrayDesign;
 use crate::array::TmvmMode;
 use crate::cli::Args;
 use crate::coordinator::CoordinatorConfig;
-use crate::fabric::{place_layers, FabricConfig};
+use crate::fabric::{place_layers, FabricConfig, PlacementStrategy};
 use crate::interconnect::LineConfig;
 use crate::nn::BinaryLayer;
 use crate::runtime::{ArtifactStore, Runtime};
@@ -45,6 +46,10 @@ pub enum BackendKind {
     Fabric,
     /// AOT-compiled XLA golden model on the PJRT CPU client.
     Xla,
+    /// N independent shards of [`ShardSpec::inner`], each on its own
+    /// worker thread behind an asynchronous least-loaded scheduler
+    /// ([`ShardedEngine`]). Configured by [`EngineSpec::sharding`].
+    Sharded,
 }
 
 impl BackendKind {
@@ -54,6 +59,7 @@ impl BackendKind {
             Self::Parasitic => "parasitic",
             Self::Fabric => "fabric",
             Self::Xla => "xla",
+            Self::Sharded => "sharded",
         }
     }
 
@@ -63,8 +69,52 @@ impl BackendKind {
             "parasitic" => Ok(Self::Parasitic),
             "fabric" => Ok(Self::Fabric),
             "xla" => Ok(Self::Xla),
+            "sharded" => Ok(Self::Sharded),
             _ => Err(EngineError::UnknownBackend(s.to_string())),
         }
+    }
+}
+
+/// Sharding section of the spec: how many shards and what each shard is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Independent engine shards (each is one full inner backend).
+    pub shards: usize,
+    /// The backend each shard runs. Must itself be non-sharded; `Xla` is
+    /// rejected (PJRT clients are thread-affine — scale it with workers).
+    pub inner: BackendKind,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            inner: BackendKind::Ideal,
+        }
+    }
+}
+
+impl ShardSpec {
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "sharding")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "shards" => spec.shards = json_usize(val, "sharding.shards")?,
+                "inner" => spec.inner = BackendKind::parse(json_str(val, "sharding.inner")?)?,
+                other => {
+                    return Err(EngineError::Json(format!("unknown field 'sharding.{other}'")))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("shards".into(), Json::Num(self.shards as f64)),
+            ("inner".into(), Json::Str(self.inner.name().into())),
+        ])
     }
 }
 
@@ -242,6 +292,10 @@ pub struct FabricSpec {
     pub tile_cols: usize,
     /// Images accepted per `infer_batch` call (bounds simulation memory).
     pub max_batch: usize,
+    /// How tiles walk the node grid ([`PlacementStrategy`]): flat
+    /// round-robin (historical default) or the locality-aware serpentine
+    /// that keeps consecutive layers one interlink hop apart.
+    pub placement: PlacementStrategy,
 }
 
 impl Default for FabricSpec {
@@ -252,6 +306,7 @@ impl Default for FabricSpec {
             tile_rows: 64,
             tile_cols: 32,
             max_batch: 1024,
+            placement: PlacementStrategy::RoundRobin,
         }
     }
 }
@@ -284,6 +339,7 @@ impl FabricSpec {
             self.tile_rows,
             self.tile_cols,
         )
+        .with_strategy(self.placement)
     }
 
     fn from_json(v: &Json) -> Result<Self, EngineError> {
@@ -296,6 +352,10 @@ impl FabricSpec {
                 "tile_rows" => spec.tile_rows = json_usize(val, "fabric.tile_rows")?,
                 "tile_cols" => spec.tile_cols = json_usize(val, "fabric.tile_cols")?,
                 "max_batch" => spec.max_batch = json_usize(val, "fabric.max_batch")?,
+                "placement" => {
+                    spec.placement =
+                        PlacementStrategy::parse(json_str(val, "fabric.placement")?)?
+                }
                 other => return Err(EngineError::Json(format!("unknown field 'fabric.{other}'"))),
             }
         }
@@ -309,6 +369,7 @@ impl FabricSpec {
             ("tile_rows".into(), Json::Num(self.tile_rows as f64)),
             ("tile_cols".into(), Json::Num(self.tile_cols as f64)),
             ("max_batch".into(), Json::Num(self.max_batch as f64)),
+            ("placement".into(), Json::Str(self.placement.name().into())),
         ])
     }
 }
@@ -369,6 +430,8 @@ pub struct EngineSpec {
     pub array: ArraySpec,
     /// Fabric geometry (`Fabric`).
     pub fabric: FabricSpec,
+    /// Sharding topology (`Sharded`).
+    pub sharding: ShardSpec,
     /// Coordinator batching policy.
     pub batching: BatchPolicy,
     /// Explicit layer stack (code-level override; never serialized).
@@ -389,8 +452,19 @@ impl EngineSpec {
             network: NetworkSource::Auto,
             array: ArraySpec::default(),
             fabric: FabricSpec::default(),
+            sharding: ShardSpec::default(),
             batching: BatchPolicy::default(),
             layers: None,
+        }
+    }
+
+    /// The backend kind that actually serves requests: the inner kind for
+    /// `Sharded` specs, `kind` itself otherwise.
+    pub fn effective_kind(&self) -> BackendKind {
+        if self.kind == BackendKind::Sharded {
+            self.sharding.inner
+        } else {
+            self.kind
         }
     }
 
@@ -428,6 +502,20 @@ impl EngineSpec {
         self
     }
 
+    /// Wrap the spec in a sharded topology: `shards` independent copies
+    /// of the `inner` backend behind the asynchronous scheduler.
+    pub fn with_shards(mut self, shards: usize, inner: BackendKind) -> Self {
+        self.kind = BackendKind::Sharded;
+        self.sharding = ShardSpec { shards, inner };
+        self
+    }
+
+    /// Select the fabric's tile [`PlacementStrategy`].
+    pub fn with_placement(mut self, placement: PlacementStrategy) -> Self {
+        self.fabric.placement = placement;
+        self
+    }
+
     pub fn with_batching(mut self, capacity: usize, linger_us: u64) -> Self {
         self.batching = BatchPolicy {
             capacity,
@@ -458,7 +546,31 @@ impl EngineSpec {
         if self.batching.capacity == 0 {
             return Err(EngineError::ZeroBatch);
         }
-        match self.kind {
+        if self.kind == BackendKind::Sharded {
+            if self.sharding.shards == 0 {
+                return Err(EngineError::ZeroShards);
+            }
+            match self.sharding.inner {
+                BackendKind::Sharded => {
+                    return Err(EngineError::Spec {
+                        field: "sharding",
+                        detail: "shards cannot nest — the inner backend must be \
+                                 ideal|parasitic|fabric"
+                            .into(),
+                    });
+                }
+                BackendKind::Xla => {
+                    return Err(EngineError::Spec {
+                        field: "sharding",
+                        detail: "the xla backend cannot be sharded — PJRT clients are \
+                                 thread-affine; scale it with --workers instead"
+                            .into(),
+                    });
+                }
+                _ => {}
+            }
+        }
+        match self.effective_kind() {
             BackendKind::Ideal | BackendKind::Parasitic => self.array.validate()?,
             BackendKind::Fabric => self.fabric.validate()?,
             BackendKind::Xla => {
@@ -473,14 +585,18 @@ impl EngineSpec {
                     });
                 }
             }
+            // unreachable: nesting was rejected above
+            BackendKind::Sharded => {}
         }
         // every backend has a hard per-call batch limit; a coordinator
         // capacity above it would fail (or panic) per batch on the worker
-        // thread, so reject the mismatch here instead
-        let backend_max = match self.kind {
+        // thread, so reject the mismatch here instead (a sharded engine's
+        // limit is its inner backend's — each batch lands on one shard)
+        let backend_max = match self.effective_kind() {
             BackendKind::Ideal | BackendKind::Parasitic => self.array.rows,
             BackendKind::Fabric => self.fabric.max_batch,
             BackendKind::Xla => XLA_GRAPH_BATCH,
+            BackendKind::Sharded => usize::MAX, // unreachable after the nest check
         };
         if self.batching.capacity > backend_max {
             return Err(EngineError::Spec {
@@ -500,20 +616,22 @@ impl EngineSpec {
                     detail: "explicit layer stack is empty".into(),
                 });
             }
-            if self.kind == BackendKind::Xla {
+            if self.effective_kind() == BackendKind::Xla {
                 return Err(EngineError::Spec {
                     field: "layers",
                     detail: "the xla backend loads its network from artifacts".into(),
                 });
             }
-            if matches!(self.kind, BackendKind::Ideal | BackendKind::Parasitic)
-                && layers.len() != 1
+            if matches!(
+                self.effective_kind(),
+                BackendKind::Ideal | BackendKind::Parasitic
+            ) && layers.len() != 1
             {
                 return Err(EngineError::Spec {
                     field: "layers",
                     detail: format!(
                         "the {} backend serves exactly one layer, got {}",
-                        self.kind.name(),
+                        self.effective_kind().name(),
                         layers.len()
                     ),
                 });
@@ -535,8 +653,9 @@ impl EngineSpec {
 
     /// Build a spec from `xpoint serve` flags: an optional `--engine
     /// path.json` base overlaid with `--xla`/`--fabric`/`--parasitic`,
-    /// `--grid N`, `--batch N` and `--workers N`. Conflicting flag
-    /// combinations are rejected with one typed error each.
+    /// `--shards N`, `--grid N`, `--placement S`, `--batch N` and
+    /// `--workers N`. Conflicting flag combinations are rejected with one
+    /// typed error each.
     pub fn from_args(args: &Args) -> Result<Self, EngineError> {
         let json_base = args.get("engine").is_some();
         let mut spec = match args.get("engine") {
@@ -578,6 +697,31 @@ impl EngineSpec {
         } else if parasitic {
             self.kind = BackendKind::Parasitic;
         }
+        if let Some(s) = parse_opt_usize(args, "shards")? {
+            if xla {
+                return Err(EngineError::Conflict {
+                    first: "--shards",
+                    second: "--xla",
+                });
+            }
+            if s == 0 {
+                return Err(EngineError::ZeroShards);
+            }
+            // wrap whatever backend the other flags (or the spec file)
+            // selected; effective_kind() keeps an already-sharded JSON
+            // base from nesting
+            self.sharding = ShardSpec {
+                shards: s,
+                inner: self.effective_kind(),
+            };
+            self.kind = BackendKind::Sharded;
+            // the shards already parallelize across their own threads, so
+            // one coordinator worker drives them unless --workers (or an
+            // explicit spec file) says otherwise
+            if !json_base && args.get("workers").is_none() {
+                self.workers = 1;
+            }
+        }
         if let Some(w) = parse_opt_usize(args, "workers")? {
             self.workers = w;
         }
@@ -600,7 +744,7 @@ impl EngineSpec {
             }
         }
         if let Some(g) = parse_opt_usize(args, "grid")? {
-            if self.kind != BackendKind::Fabric {
+            if self.effective_kind() != BackendKind::Fabric {
                 return Err(EngineError::Requires {
                     option: "--grid",
                     requires: "--fabric",
@@ -611,6 +755,15 @@ impl EngineSpec {
             }
             self.fabric.grid_rows = g;
             self.fabric.grid_cols = g;
+        }
+        if let Some(p) = args.get("placement") {
+            if self.effective_kind() != BackendKind::Fabric {
+                return Err(EngineError::Requires {
+                    option: "--placement",
+                    requires: "--fabric",
+                });
+            }
+            self.fabric.placement = PlacementStrategy::parse(p)?;
         }
         Ok(())
     }
@@ -627,6 +780,7 @@ impl EngineSpec {
             ("network".into(), Json::Str(self.network.name().into())),
             ("array".into(), self.array.to_json()),
             ("fabric".into(), self.fabric.to_json()),
+            ("sharding".into(), self.sharding.to_json()),
             ("batching".into(), self.batching.to_json()),
         ]);
         let mut s = obj.pretty();
@@ -647,6 +801,7 @@ impl EngineSpec {
                 "network" => spec.network = NetworkSource::parse(json_str(val, "network")?)?,
                 "array" => spec.array = ArraySpec::from_json(val)?,
                 "fabric" => spec.fabric = FabricSpec::from_json(val)?,
+                "sharding" => spec.sharding = ShardSpec::from_json(val)?,
                 "batching" => spec.batching = BatchPolicy::from_json(val)?,
                 other => return Err(EngineError::Json(format!("unknown field '{other}'"))),
             }
@@ -674,11 +829,22 @@ impl EngineSpec {
         match self.kind {
             BackendKind::Xla => "XLA golden model (PJRT CPU, one client per worker)".to_string(),
             BackendKind::Fabric => format!(
-                "event-driven fabric simulator ({}×{} subarray grid per worker)",
-                self.fabric.grid_rows, self.fabric.grid_cols
+                "event-driven fabric simulator ({}×{} subarray grid per worker, {} placement)",
+                self.fabric.grid_rows,
+                self.fabric.grid_cols,
+                self.fabric.placement.name()
             ),
             BackendKind::Ideal => "circuit-level simulator (Ideal)".to_string(),
             BackendKind::Parasitic => "circuit-level simulator (Parasitic)".to_string(),
+            BackendKind::Sharded => {
+                let mut inner = self.clone();
+                inner.kind = self.sharding.inner;
+                format!(
+                    "async sharded engine: {} shard(s), each a {}",
+                    self.sharding.shards,
+                    inner.describe()
+                )
+            }
         }
     }
 
@@ -785,6 +951,25 @@ impl EngineSpec {
                         }) as BackendFactory
                     })
                     .collect())
+            }
+            BackendKind::Sharded => {
+                // resolve the inner spec once for all n·shards engines
+                // (keeping the once-per-spec contract above), then chunk
+                // the factories so every coordinator worker owns an
+                // independent sharded engine of `shards` shards
+                let mut inner = self.clone();
+                inner.kind = self.sharding.inner;
+                let shards = self.sharding.shards;
+                let mut inner_factories = inner.build_many(n * shards)?;
+                let mut out: Vec<BackendFactory> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let group: Vec<BackendFactory> =
+                        inner_factories.drain(..shards).collect();
+                    out.push(Box::new(move || {
+                        Ok(Box::new(ShardedEngine::new(group)?) as Box<dyn Engine>)
+                    }) as BackendFactory);
+                }
+                Ok(out)
             }
             BackendKind::Xla => {
                 let store = ArtifactStore::open_default().map_err(|_| {
@@ -972,6 +1157,122 @@ mod tests {
     }
 
     #[test]
+    fn shards_flag_wraps_the_selected_backend() {
+        let spec = EngineSpec::from_args(&args("serve --fabric --shards 4")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(
+            spec.sharding,
+            ShardSpec {
+                shards: 4,
+                inner: BackendKind::Fabric
+            }
+        );
+        assert_eq!(spec.effective_kind(), BackendKind::Fabric);
+        assert_eq!(spec.workers, 1, "sharding defaults to one coordinator worker");
+        let spec = EngineSpec::from_args(&args("serve --shards 2 --workers 3")).unwrap();
+        assert_eq!(spec.sharding.inner, BackendKind::Ideal);
+        assert_eq!(spec.workers, 3, "--workers overrides the sharded default");
+    }
+
+    #[test]
+    fn shards_flag_conflicts_and_zero_are_typed_errors() {
+        let err = EngineSpec::from_args(&args("serve --xla --shards 2")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--shards and --xla are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --shards 0")).unwrap_err();
+        assert_eq!(err, EngineError::ZeroShards);
+        assert_eq!(err.to_string(), "shard count must be at least 1");
+        let err = EngineSpec::from_args(&args("serve --shards two")).unwrap_err();
+        assert!(
+            err.to_string().contains("'shards'") && err.to_string().contains("two"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn placement_flag_selects_the_strategy() {
+        let spec =
+            EngineSpec::from_args(&args("serve --fabric --placement locality")).unwrap();
+        assert_eq!(spec.fabric.placement, PlacementStrategy::Locality);
+        // …also through the sharded wrapper (kind is Sharded by then)
+        let spec = EngineSpec::from_args(&args(
+            "serve --fabric --shards 2 --placement locality",
+        ))
+        .unwrap();
+        assert_eq!(spec.fabric.placement, PlacementStrategy::Locality);
+        let err = EngineSpec::from_args(&args("serve --placement locality")).unwrap_err();
+        assert_eq!(err.to_string(), "--placement requires --fabric");
+        let err =
+            EngineSpec::from_args(&args("serve --fabric --placement diagonal")).unwrap_err();
+        assert_eq!(err, EngineError::UnknownPlacement("diagonal".into()));
+    }
+
+    #[test]
+    fn sharded_spec_validation() {
+        assert!(EngineSpec::new(BackendKind::Ideal)
+            .with_shards(2, BackendKind::Ideal)
+            .validate()
+            .is_ok());
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_shards(0, BackendKind::Ideal)
+            .validate()
+            .unwrap_err();
+        assert_eq!(err, EngineError::ZeroShards);
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_shards(2, BackendKind::Sharded)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "sharding", .. })
+                && err.to_string().contains("nest"),
+            "{err}"
+        );
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_shards(2, BackendKind::Xla)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "sharding", .. })
+                && err.to_string().contains("thread-affine"),
+            "{err}"
+        );
+        // the batch-capacity cap flows through to the inner backend
+        let err = EngineSpec::new(BackendKind::Fabric)
+            .with_fabric_max_batch(16)
+            .with_shards(2, BackendKind::Fabric)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "batching", .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn sharded_and_placement_survive_json_roundtrip() {
+        let spec = EngineSpec::new(BackendKind::Fabric)
+            .with_grid(3, 3)
+            .with_placement(PlacementStrategy::Locality)
+            .with_shards(4, BackendKind::Fabric)
+            .with_batching(32, 100);
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).expect("roundtrip parse");
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json(), text);
+        let spec = EngineSpec::from_json(
+            r#"{"backend":"sharded","sharding":{"shards":3,"inner":"fabric"}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(spec.sharding.shards, 3);
+        assert_eq!(spec.effective_kind(), BackendKind::Fabric);
+        let err = EngineSpec::from_json(r#"{"fabric":{"placement":"diag"}}"#).unwrap_err();
+        assert!(err.to_string().contains("placement"), "{err}");
+    }
+
+    #[test]
     fn batch_flag_keeps_the_historical_contract() {
         let spec = EngineSpec::from_args(&args("serve --batch 16")).unwrap();
         assert_eq!(spec.batching.capacity, 16);
@@ -1110,5 +1411,9 @@ mod tests {
         assert!(EngineSpec::new(BackendKind::Fabric)
             .describe()
             .contains("2×2 subarray grid"));
+        let d = EngineSpec::new(BackendKind::Fabric)
+            .with_shards(4, BackendKind::Fabric)
+            .describe();
+        assert!(d.contains("4 shard(s)") && d.contains("fabric"), "{d}");
     }
 }

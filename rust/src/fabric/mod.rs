@@ -33,4 +33,4 @@ pub use event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 pub use exec::{FabricExecutor, FabricRun};
 pub use link::{Interlink, LinkFabric, LinkTraffic};
 pub use node::{row_current, tile_step, vdd_for_theta, SubarrayNode, TileStep};
-pub use placement::{place_layers, FabricConfig, Placement, TileSlice};
+pub use placement::{place_layers, FabricConfig, Placement, PlacementStrategy, TileSlice};

@@ -1,19 +1,82 @@
 //! Fabric geometry and the placement layer: maps multi-layer
-//! [`BinaryLayer`] weights, tiled by [`scaling::Tiling`], onto the
-//! physical grid of subarrays.
+//! [`BinaryLayer`] weights, tiled by [`Tiling`](crate::scaling::Tiling),
+//! onto the physical grid of subarrays.
 //!
-//! Placement is round-robin over the node grid in (layer, tile-row,
-//! tile-col) order: consecutive tiles — and therefore consecutive layers —
-//! land on different subarrays, which is what lets the executor overlap
-//! layer *k* of image *i* with layer *k−1* of image *i+1*. When there are
-//! more tiles than subarrays, several tiles share a node and the node's
-//! occupancy serializes them (visible as utilization in the run report).
+//! Tiles are assigned to nodes in (layer, tile-row, tile-col) order,
+//! walking the grid in the order chosen by the configured
+//! [`PlacementStrategy`]: consecutive tiles — and therefore consecutive
+//! layers — land on different subarrays, which is what lets the executor
+//! overlap layer *k* of image *i* with layer *k−1* of image *i+1*. When
+//! there are more tiles than subarrays, several tiles share a node and
+//! the node's occupancy serializes them (visible as utilization in the
+//! run report).
 
 use crate::device::DeviceParams;
 use crate::engine::EngineError;
 use crate::nn::BinaryLayer;
 use crate::scaling::Tiling;
 use std::ops::Range;
+
+/// How tiles walk the node grid during placement.
+///
+/// Both strategies hand out nodes round-robin from a fixed node *order*;
+/// they differ in what that order is — and therefore in how far apart
+/// (in interlink hops, dimension-ordered routing) consecutive tiles land:
+///
+/// * [`RoundRobin`](PlacementStrategy::RoundRobin) — flat node-id order
+///   `0, 1, …, n−1`. Row-major, so the wrap from the end of one grid row
+///   to the start of the next costs `grid_cols − 1` extra hops. The
+///   historical default; keeps every pre-existing placement bit-stable.
+/// * [`Locality`](PlacementStrategy::Locality) — serpentine
+///   (boustrophedon) order: even grid rows left→right, odd rows
+///   right→left. Consecutive order positions are always grid-adjacent
+///   (one hop), so the partial-sum and activation traffic between
+///   consecutive tiles and layers crosses the minimum number of
+///   interlink hops. Placement is still deterministic and the executor
+///   stays bit-exact — only timing, traffic and link energy change.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// Flat node-id order (the historical default).
+    #[default]
+    RoundRobin,
+    /// Serpentine grid walk: consecutive tiles are always one hop apart.
+    Locality,
+}
+
+impl PlacementStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "roundrobin",
+            Self::Locality => "locality",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, EngineError> {
+        match s.to_ascii_lowercase().as_str() {
+            "roundrobin" | "round-robin" => Ok(Self::RoundRobin),
+            "locality" => Ok(Self::Locality),
+            _ => Err(EngineError::UnknownPlacement(s.to_string())),
+        }
+    }
+
+    /// The node order this strategy walks: a permutation of `0..n_nodes`.
+    pub fn node_order(self, grid_rows: usize, grid_cols: usize) -> Vec<usize> {
+        match self {
+            Self::RoundRobin => (0..grid_rows * grid_cols).collect(),
+            Self::Locality => {
+                let mut order = Vec::with_capacity(grid_rows * grid_cols);
+                for r in 0..grid_rows {
+                    if r % 2 == 0 {
+                        order.extend((0..grid_cols).map(|c| r * grid_cols + c));
+                    } else {
+                        order.extend((0..grid_cols).rev().map(|c| r * grid_cols + c));
+                    }
+                }
+                order
+            }
+        }
+    }
+}
 
 /// Physical fabric description: a `grid_rows × grid_cols` grid of
 /// identical subarrays (each `tile_rows × tile_cols` cells), plus the
@@ -39,6 +102,8 @@ pub struct FabricConfig {
     /// Host injection interval between consecutive images \[s\]. Defaults
     /// to one computational step (`t_SET`), the paper's pipeline cadence.
     pub t_inject: f64,
+    /// Node-order strategy used by [`place_layers`].
+    pub strategy: PlacementStrategy,
 }
 
 impl FabricConfig {
@@ -57,8 +122,15 @@ impl FabricConfig {
             t_hop: 10e-9,
             r_switch: 50.0,
             t_inject: device.t_set,
+            strategy: PlacementStrategy::RoundRobin,
             device,
         }
+    }
+
+    /// Same config with a different [`PlacementStrategy`].
+    pub fn with_strategy(mut self, strategy: PlacementStrategy) -> Self {
+        self.strategy = strategy;
+        self
     }
 
     /// Reject zero grid/tile dimensions with a typed error.
@@ -149,7 +221,9 @@ impl Placement {
     }
 }
 
-/// Tile a stack of layers and place the tiles round-robin on the fabric.
+/// Tile a stack of layers and place the tiles on the fabric, walking the
+/// node grid in the order chosen by `cfg.strategy` (flat round-robin or
+/// the locality-aware serpentine — see [`PlacementStrategy`]).
 ///
 /// Validates the layer chain (`layers[k+1].n_in == layers[k].n_out`).
 /// Arbitrarily large layers are accepted — when a layer needs more tiles
@@ -180,6 +254,7 @@ pub fn place_layers(layers: &[BinaryLayer], cfg: &FabricConfig) -> crate::Result
         );
     }
     let n_nodes = cfg.n_nodes();
+    let order = cfg.strategy.node_order(cfg.grid_rows, cfg.grid_cols);
     let mut tilings = Vec::with_capacity(layers.len());
     let mut tiles = Vec::new();
     let mut by_layer = Vec::with_capacity(layers.len());
@@ -194,7 +269,7 @@ pub fn place_layers(layers: &[BinaryLayer], cfg: &FabricConfig) -> crate::Result
         let mut layer_heads = vec![0usize; tiling.grid_rows()];
         for tr in 0..tiling.grid_rows() {
             for tc in 0..tiling.grid_cols() {
-                let node = next_node % n_nodes;
+                let node = order[next_node % n_nodes];
                 next_node += 1;
                 let row_range = tiling.row_range(tr);
                 let col_range = tiling.col_range(tc);
@@ -340,5 +415,82 @@ mod tests {
             let (r, c) = cfg.node_coords(n);
             assert_eq!(cfg.node_id(r, c), n);
         }
+    }
+
+    #[test]
+    fn strategy_names_parse_and_roundtrip() {
+        assert_eq!(
+            PlacementStrategy::parse("roundrobin").unwrap(),
+            PlacementStrategy::RoundRobin
+        );
+        assert_eq!(
+            PlacementStrategy::parse("Locality").unwrap(),
+            PlacementStrategy::Locality
+        );
+        assert_eq!(
+            PlacementStrategy::parse("snake").unwrap_err(),
+            EngineError::UnknownPlacement("snake".into())
+        );
+        for s in [PlacementStrategy::RoundRobin, PlacementStrategy::Locality] {
+            assert_eq!(PlacementStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(PlacementStrategy::default(), PlacementStrategy::RoundRobin);
+    }
+
+    /// Serpentine order: a permutation of the nodes where every pair of
+    /// consecutive entries is grid-adjacent (one interlink hop), which is
+    /// exactly the property the round-robin flat order lacks at row wraps.
+    #[test]
+    fn locality_order_is_an_adjacent_permutation() {
+        for (gr, gc) in [(1, 4), (2, 2), (3, 3), (2, 5)] {
+            let cfg = FabricConfig::new(gr, gc, 8, 8);
+            let order = PlacementStrategy::Locality.node_order(gr, gc);
+            let mut seen = vec![false; gr * gc];
+            for &n in &order {
+                assert!(!seen[n], "node {n} repeated");
+                seen[n] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "not a permutation");
+            for w in order.windows(2) {
+                let (r0, c0) = cfg.node_coords(w[0]);
+                let (r1, c1) = cfg.node_coords(w[1]);
+                let hops = r0.abs_diff(r1) + c0.abs_diff(c1);
+                assert_eq!(hops, 1, "{:?} -> {:?} is {hops} hops", w[0], w[1]);
+            }
+        }
+    }
+
+    /// Locality placement puts a chain of single-tile layers on an
+    /// adjacent path; round-robin pays the row-wrap detour. Bit-level
+    /// results are placement-independent (pinned by the executor tests) —
+    /// the win is in hop distance, and therefore link traffic and time.
+    #[test]
+    fn locality_shortens_consecutive_layer_hops() {
+        let mut rng = Pcg32::seeded(46);
+        // 5 single-tile layers on a 2×2 grid: placement wraps once
+        let layers: Vec<BinaryLayer> = {
+            let mut v = vec![random_layer(&mut rng, 8, 8)];
+            for _ in 0..4 {
+                let l = random_layer(&mut rng, 8, 8);
+                v.push(l);
+            }
+            v
+        };
+        let hops_for = |strategy: PlacementStrategy| -> usize {
+            let cfg = FabricConfig::new(2, 2, 16, 16).with_strategy(strategy);
+            let p = place_layers(&layers, &cfg).unwrap();
+            p.tiles
+                .windows(2)
+                .map(|w| {
+                    let (r0, c0) = cfg.node_coords(w[0].node);
+                    let (r1, c1) = cfg.node_coords(w[1].node);
+                    r0.abs_diff(r1) + c0.abs_diff(c1)
+                })
+                .sum()
+        };
+        let rr = hops_for(PlacementStrategy::RoundRobin);
+        let loc = hops_for(PlacementStrategy::Locality);
+        assert_eq!(loc, 4, "serpentine chain: one hop per layer transition");
+        assert!(loc < rr, "locality {loc} hops vs round-robin {rr}");
     }
 }

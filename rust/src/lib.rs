@@ -33,12 +33,17 @@
 //! | `Parasitic` | one subarray + the Appendix-A Thevenin ladder | electrical fidelity: attenuation, noise-margin-limited behavior |
 //! | `Fabric` | event-driven grid of subarrays, tiled + pipelined | multi-layer networks, scaling studies, utilization/interlink traffic |
 //! | `Xla` | AOT-compiled JAX/Pallas graph on PJRT (needs `make artifacts`) | golden-model verification, host-speed inference |
+//! | `Sharded` | N shards of any kind above, each on its own thread behind an async least-loaded scheduler | serving throughput: scale one engine to many arrays (`--shards N`) |
 //!
-//! All four present the same [`engine::Engine`] trait: batched inference,
+//! All five present the same [`engine::Engine`] trait: batched inference,
 //! [`engine::Capabilities`] introspection, typed [`engine::Telemetry`]
 //! (energy/time/steps/utilization) and a non-blocking `submit`/`poll`
-//! pair. Simulated kinds are bit-exact with each other's functional
-//! semantics (pinned by the engine equivalence tests).
+//! pair — genuinely asynchronous for `Sharded` (tickets complete out of
+//! order on shard threads), synchronous-at-submit for the rest. Simulated
+//! kinds are bit-exact with each other's functional semantics (pinned by
+//! the engine equivalence and sharding integration tests), and a sharded
+//! engine is bit-exact with a single engine of its inner spec while its
+//! energy/time telemetry sums across shards.
 //!
 //! ## Layer map (bottom-up)
 //!
@@ -67,7 +72,9 @@
 //! * [`fabric`] — the multi-subarray fabric simulator: a discrete-event
 //!   model of a grid of interconnected subarrays executing multi-layer
 //!   networks tiled across the grid, with image-level pipelining,
-//!   per-subarray occupancy, interlink traffic/latency and energy.
+//!   per-subarray occupancy, interlink traffic/latency and energy; tile
+//!   placement is strategy-selectable ([`fabric::PlacementStrategy`]:
+//!   round-robin or the locality-aware serpentine).
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
 //!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
 //! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
@@ -76,13 +83,16 @@
 //! * [`engine`] — **the public serving API**: [`engine::EngineSpec`]
 //!   (declarative config: code / CLI / JSON), the [`engine::Engine`] trait
 //!   (inference + capabilities + telemetry + submit/poll), the typed
-//!   [`engine::EngineError`], and the concrete backends
+//!   [`engine::EngineError`], the concrete backends
 //!   ([`engine::SimBackend`], [`engine::FabricBackend`],
-//!   [`engine::XlaBackend`]) behind the [`engine::EngineSpec::build`]
+//!   [`engine::XlaBackend`]) and the asynchronous
+//!   [`engine::ShardedEngine`] (N shards, least-loaded dispatch,
+//!   out-of-order completion) behind the [`engine::EngineSpec::build`]
 //!   registry.
-//! * [`coordinator`] — the L3 serving shell: request batching, subarray
-//!   scheduling (`⌊N_row/P⌋` images per computational step), worker threads
-//!   (one engine each, spawned from [`engine::BackendFactory`]) and
+//! * [`coordinator`] — the L3 serving shell: request batching plus one
+//!   scheduler thread per engine, driving it purely through the
+//!   non-blocking `submit`/`poll` pair (spawned from
+//!   [`engine::BackendFactory`]), with per-shard telemetry in the
 //!   metrics.
 //! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III, fabric
 //!   scaling) as a library function returning structured rows, shared by

@@ -33,9 +33,13 @@ COMMANDS:
   table3    multi-bit TMVM costs (paper Table III)
   fabric    pipelined multi-subarray fabric scaling exhibit
             --batch N (default 32)
+  shards    sharded-serving exhibit: throughput + load balance over
+            1|2|4 fabric shards  --images N (default 1024) --batch N
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
+            [--shards N]          (N async engine shards per worker)
+            [--placement roundrobin|locality] (fabric tile placement)
             [--engine spec.json]  (declarative EngineSpec; flags override)
   help      this text
 ";
@@ -175,6 +179,13 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             print!("{}", report::fabric_scaling_table(&rows).render());
             Ok(())
         }
+        Some("shards") => {
+            let images = args.get_usize("images", 1024)?;
+            let batch = args.get_usize("batch", 64)?;
+            let rows = report::shard_scaling_rows(&report::SHARD_SWEEP, images, batch)?;
+            print!("{}", report::shard_scaling_table(&rows).render());
+            Ok(())
+        }
         Some("serve") => serve(args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -251,6 +262,18 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
     println!("energy/image:    {}", format_si(snap.energy_per_image, "J"));
     if let Some(acc) = snap.accuracy {
         println!("accuracy:        {}", format_pct(acc));
+    }
+    // per-shard breakdown (one line per engine shard, across all workers)
+    if snap.shards.len() > 1 {
+        for (i, t) in snap.shards.iter().enumerate() {
+            println!(
+                "shard {i}:         {} images, {} batches, {} ({}/image)",
+                t.images,
+                t.batches,
+                format_si(t.energy, "J"),
+                format_si(t.energy_per_image(), "J"),
+            );
+        }
     }
     Ok(())
 }

@@ -4,6 +4,7 @@
 
 pub mod exhibits;
 pub mod fabric;
+pub mod sharding;
 pub mod table2;
 
 pub use exhibits::{
@@ -11,4 +12,5 @@ pub use exhibits::{
     Fig13Series,
 };
 pub use fabric::{fabric_scaling_rows, fabric_scaling_table, FabricScalingRow, FABRIC_GRIDS};
+pub use sharding::{shard_scaling_rows, shard_scaling_table, ShardScalingRow, SHARD_SWEEP};
 pub use table2::{table2_rows, Table2Row, TABLE2_DESIGNS};

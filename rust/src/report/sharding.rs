@@ -1,0 +1,183 @@
+//! Sharded-serving exhibit (beyond the paper's single-array tables): host
+//! throughput, per-image latency and shard load balance as the same
+//! fabric workload is served by 1, 2 and 4 fabric shards behind the
+//! asynchronous coordinator scheduler.
+//!
+//! Simulated time and energy *sum* across shards (they are independent
+//! arrays doing the same physical work), so the exhibit's claim is about
+//! the serving system: host wall-clock throughput scales with shards
+//! while the per-image physics stays fixed — the §IV "system scalability"
+//! story carried from one grid to a farm of grids.
+
+use std::time::Instant;
+
+use crate::coordinator::Coordinator;
+use crate::engine::{BackendKind, EngineSpec};
+use crate::nn::dataset::{DigitGen, TEST_SEED};
+use crate::util::si::{format_duration, format_pct, format_si};
+use crate::util::Table;
+
+use super::fabric::{fabric_workload, FABRIC_TILE};
+
+/// Default shard counts swept by the exhibit.
+pub const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
+
+/// One evaluated shard count.
+#[derive(Clone, Debug)]
+pub struct ShardScalingRow {
+    pub shards: usize,
+    pub images: usize,
+    /// Host wall-clock for the whole run \[s\].
+    pub wall: f64,
+    /// Host throughput \[images/s\].
+    pub throughput: f64,
+    /// Mean per-image host latency \[s\].
+    pub mean_latency: f64,
+    /// Simulated energy per image \[J\] (shard-count invariant).
+    pub energy_per_image: f64,
+    /// Images served by each shard — the load-balance view.
+    pub shard_images: Vec<u64>,
+    /// Mean subarray utilization across shards.
+    pub mean_util: f64,
+}
+
+/// The spec this exhibit serves for `shards` shards: the fixed 3-layer
+/// fabric workload on a 2×2 grid per shard, one coordinator worker.
+pub fn shard_scaling_spec(shards: usize, batch: usize) -> EngineSpec {
+    let mut spec = EngineSpec::new(BackendKind::Fabric)
+        .with_layers(fabric_workload())
+        .with_grid(2, 2)
+        .with_tile(FABRIC_TILE.0, FABRIC_TILE.1)
+        .with_fabric_max_batch(batch.max(1))
+        .with_batching(batch.max(1), 200)
+        .with_workers(1);
+    if shards > 1 {
+        spec = spec.with_shards(shards, BackendKind::Fabric);
+    }
+    spec
+}
+
+/// Run the exhibit: the same digit stream through the coordinator at each
+/// shard count, reading throughput from the wall clock and balance from
+/// the per-shard telemetry in
+/// [`MetricsSnapshot::shards`](crate::coordinator::MetricsSnapshot).
+pub fn shard_scaling_rows(
+    shard_counts: &[usize],
+    n_images: usize,
+    batch: usize,
+) -> crate::Result<Vec<ShardScalingRow>> {
+    let mut rows = Vec::with_capacity(shard_counts.len());
+    for &shards in shard_counts {
+        let spec = shard_scaling_spec(shards, batch);
+        let mut coord =
+            Coordinator::spawn(spec.build_factories()?, spec.coordinator_config());
+        let mut gen = DigitGen::new(TEST_SEED);
+        let started = Instant::now();
+        let mut rxs = Vec::with_capacity(n_images);
+        for _ in 0..n_images {
+            rxs.push(coord.submit(gen.next_sample().pixels, None)?);
+        }
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        let wall = started.elapsed().as_secs_f64();
+        let snap = coord.shutdown();
+        let shard_images: Vec<u64> = snap.shards.iter().map(|t| t.images).collect();
+        let utils: Vec<f64> = snap
+            .shards
+            .iter()
+            .filter(|t| !t.utilization.is_empty())
+            .map(|t| t.mean_utilization())
+            .collect();
+        rows.push(ShardScalingRow {
+            shards,
+            images: n_images,
+            wall,
+            throughput: if wall > 0.0 {
+                n_images as f64 / wall
+            } else {
+                0.0
+            },
+            mean_latency: snap.mean_latency,
+            energy_per_image: snap.energy_per_image,
+            shard_images,
+            mean_util: if utils.is_empty() {
+                0.0
+            } else {
+                utils.iter().sum::<f64>() / utils.len() as f64
+            },
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the exhibit table.
+pub fn shard_scaling_table(rows: &[ShardScalingRow]) -> Table {
+    let title = format!(
+        "Sharded serving — 3-layer fabric workload, {} images per run",
+        rows.first().map_or(0, |r| r.images)
+    );
+    let mut t = Table::new(&title).header(&[
+        "Shards",
+        "Host wall",
+        "Throughput",
+        "Mean latency",
+        "E/image",
+        "Util (mean)",
+        "Images/shard",
+    ]);
+    for r in rows {
+        let balance = r
+            .shard_images
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        t.row(&[
+            r.shards.to_string(),
+            format_duration(r.wall),
+            format!("{} img/s", format_si(r.throughput, "")),
+            format_duration(r.mean_latency),
+            format_si(r.energy_per_image, "J"),
+            format_pct(r.mean_util),
+            balance,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_the_sweep_and_account_every_image() {
+        let rows = shard_scaling_rows(&[1, 2], 96, 32).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.images, 96);
+            assert!(r.throughput > 0.0, "shards {}", r.shards);
+            assert_eq!(
+                r.shard_images.iter().sum::<u64>(),
+                96,
+                "every image lands on some shard (shards {})",
+                r.shards
+            );
+            // physics is shard-invariant: per-image energy in the same
+            // sub-nJ regime at every shard count
+            assert!(r.energy_per_image > 1e-13 && r.energy_per_image < 2e-9);
+        }
+        assert_eq!(rows[0].shard_images.len(), 1);
+        assert_eq!(rows[1].shard_images.len(), 2);
+        // both shards of the 2-shard run actually served work
+        assert!(rows[1].shard_images.iter().all(|&n| n > 0));
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = shard_scaling_rows(&[1], 48, 16).unwrap();
+        let t = shard_scaling_table(&rows);
+        assert_eq!(t.n_rows(), 1);
+        assert!(t.render().contains("img/s"));
+    }
+}
