@@ -38,4 +38,19 @@ fn main() {
             black_box(run.makespan);
         });
     }
+
+    // live weight reprogramming hot path: per-tile diff + spine/write-driver
+    // event sim + in-place swap (alternating A→B→A so every iteration
+    // rewrites a real diff)
+    let a = layers;
+    let b = xpoint_imc::report::perturbed_workload();
+    let mut exec = FabricExecutor::new(a.clone(), FabricConfig::new(2, 2, 32, 32))
+        .expect("placement");
+    let mut to_b = true;
+    bench("reprogram 3-layer stack, 2×2 fabric", || {
+        let target = if to_b { b.clone() } else { a.clone() };
+        let run = exec.reprogram(target).expect("reprogram");
+        black_box(run.plan.cells_changed());
+        to_b = !to_b;
+    });
 }

@@ -18,6 +18,7 @@
 //! simulation, so threads + channels outperform an async reactor here.
 
 use crate::engine::BackendFactory;
+use crate::nn::BinaryLayer;
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use std::sync::mpsc;
@@ -62,7 +63,15 @@ struct Job {
 
 enum Message {
     Job(Job),
+    /// Rolling update: live-swap every worker engine to this network.
+    Swap(Vec<BinaryLayer>),
     Shutdown,
+}
+
+/// What the leader hands a scheduler thread.
+enum Work {
+    Jobs(Vec<Job>),
+    Swap(Vec<BinaryLayer>),
 }
 
 /// How often an idle scheduler re-polls its in-flight tickets. Small
@@ -105,13 +114,16 @@ fn deliver(
     );
 }
 
-/// The scheduler loop: one per engine. Accepts job batches from the
-/// leader, submits them, and drains completions out of order — the only
-/// engine surface it touches is `submit`/`poll` (+ introspection).
+/// The scheduler loop: one per engine. Accepts job batches (and rolling
+/// weight-swap orders) from the leader, submits them, and drains
+/// completions out of order — the only engine surface it touches is
+/// `submit`/`poll`/`begin_swap`/`poll_swap` (+ introspection). A rolling
+/// swap on an asynchronous engine proceeds *while* the loop keeps
+/// submitting traffic, so aggregate throughput never hits zero.
 fn scheduler_main(
     wid: usize,
     factory: BackendFactory,
-    wrx: mpsc::Receiver<Vec<Job>>,
+    wrx: mpsc::Receiver<Work>,
     metrics: Arc<Metrics>,
 ) {
     let mut engine = match factory() {
@@ -126,14 +138,16 @@ fn scheduler_main(
     // bound is never reached
     let max_in_flight = engine.capabilities().shards.max(1) + 1;
     let mut in_flight: Vec<(u64, Vec<Job>, Instant)> = Vec::new();
+    let mut swap_pending = false;
     let mut open = true;
 
-    while open || !in_flight.is_empty() {
-        // 1. intake — block only when nothing is in flight
+    while open || !in_flight.is_empty() || swap_pending {
+        // 1. intake — block only when nothing is in flight and no swap
+        // needs driving
         if open && in_flight.len() < max_in_flight {
-            let next = if in_flight.is_empty() {
+            let next = if in_flight.is_empty() && !swap_pending {
                 match wrx.recv() {
-                    Ok(jobs) => Some(jobs),
+                    Ok(work) => Some(work),
                     Err(_) => {
                         open = false;
                         None
@@ -141,7 +155,7 @@ fn scheduler_main(
                 }
             } else {
                 match wrx.recv_timeout(POLL_INTERVAL) {
-                    Ok(jobs) => Some(jobs),
+                    Ok(work) => Some(work),
                     Err(mpsc::RecvTimeoutError::Timeout) => None,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         open = false;
@@ -149,19 +163,33 @@ fn scheduler_main(
                     }
                 }
             };
-            if let Some(jobs) = next {
-                let images: Vec<Vec<bool>> = jobs.iter().map(|j| j.image.clone()).collect();
-                // stamp before submit: synchronous engines do the whole
-                // inference inside it, and that time is the latency
-                let submitted = Instant::now();
-                match engine.submit(images) {
-                    Ok(ticket) => in_flight.push((ticket, jobs, submitted)),
-                    Err(e) => {
-                        eprintln!("worker {wid}: submit of {} jobs failed: {e:#}", jobs.len())
+            match next {
+                Some(Work::Jobs(jobs)) => {
+                    let images: Vec<Vec<bool>> =
+                        jobs.iter().map(|j| j.image.clone()).collect();
+                    // stamp before submit: synchronous engines do the whole
+                    // inference inside it, and that time is the latency
+                    let submitted = Instant::now();
+                    match engine.submit(images) {
+                        Ok(ticket) => in_flight.push((ticket, jobs, submitted)),
+                        Err(e) => {
+                            eprintln!(
+                                "worker {wid}: submit of {} jobs failed: {e:#}",
+                                jobs.len()
+                            )
+                        }
                     }
                 }
+                Some(Work::Swap(target)) => match engine.begin_swap(target) {
+                    // synchronous engines rewrite inline
+                    Ok(Some(report)) => metrics.record_swap(&report),
+                    // a rolling swap is now walking the shards
+                    Ok(None) => swap_pending = true,
+                    Err(e) => eprintln!("worker {wid}: weight swap rejected: {e:#}"),
+                },
+                None => {}
             }
-        } else if !in_flight.is_empty() {
+        } else if !in_flight.is_empty() || swap_pending {
             // intake closed or full: wait for completions without spinning
             std::thread::sleep(POLL_INTERVAL);
         }
@@ -182,6 +210,22 @@ fn scheduler_main(
                         "worker {wid}: batch (ticket {ticket}, {} jobs) failed: {e:#}",
                         jobs.len()
                     );
+                }
+            }
+        }
+
+        // 3. drive the rolling swap: every pass advances the walk
+        // (drain → reprogram → rejoin) without blocking traffic
+        if swap_pending {
+            match engine.poll_swap() {
+                Ok(Some(report)) => {
+                    metrics.record_swap(&report);
+                    swap_pending = false;
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    eprintln!("worker {wid}: rolling swap failed: {e:#}");
+                    swap_pending = false;
                 }
             }
         }
@@ -213,7 +257,7 @@ impl Coordinator {
         let mut worker_txs = Vec::new();
         let mut worker_handles = Vec::new();
         for (wid, factory) in backends.into_iter().enumerate() {
-            let (wtx, wrx) = mpsc::channel::<Vec<Job>>();
+            let (wtx, wrx) = mpsc::channel::<Work>();
             let m = Arc::clone(&metrics);
             worker_txs.push(wtx);
             worker_handles.push(std::thread::spawn(move || {
@@ -229,7 +273,7 @@ impl Coordinator {
             let dispatch = |batch: Vec<super::batcher::Request<Job>>,
                                 next_worker: &mut usize| {
                 let jobs: Vec<Job> = batch.into_iter().map(|r| r.payload).collect();
-                let _ = worker_txs[*next_worker % worker_txs.len()].send(jobs);
+                let _ = worker_txs[*next_worker % worker_txs.len()].send(Work::Jobs(jobs));
                 *next_worker += 1;
             };
             loop {
@@ -238,6 +282,17 @@ impl Coordinator {
                     Ok(Message::Job(job)) => {
                         let id = job.id;
                         batcher.push(id, job);
+                    }
+                    Ok(Message::Swap(target)) => {
+                        // rolling update: flush formed batches first so the
+                        // swap lands between batches, then walk every
+                        // worker engine (each rolls its own shards)
+                        while let Some(batch) = batcher.take_batch(Instant::now()) {
+                            dispatch(batch, &mut next_worker);
+                        }
+                        for wtx in &worker_txs {
+                            let _ = wtx.send(Work::Swap(target.clone()));
+                        }
                     }
                     Ok(Message::Shutdown) => break,
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -286,6 +341,19 @@ impl Coordinator {
             .send(Message::Job(job))
             .map_err(|_| anyhow::anyhow!("coordinator is down: leader exited, not accepting jobs"))?;
         Ok(rx)
+    }
+
+    /// Start a rolling live weight swap: every worker engine reprograms
+    /// to `target` — sharded engines walk their shards one at a time
+    /// (drain → reprogram → rejoin) while the rest keep serving, so
+    /// aggregate throughput never hits zero. Asynchronous: returns once
+    /// the leader accepts the order; completion (pulse counts, energy,
+    /// programming time) lands in [`MetricsSnapshot`]'s swap counters.
+    pub fn swap_network(&mut self, target: Vec<BinaryLayer>) -> crate::Result<()> {
+        anyhow::ensure!(!target.is_empty(), "swap target stack is empty");
+        self.tx
+            .send(Message::Swap(target))
+            .map_err(|_| anyhow::anyhow!("coordinator is down: leader exited, not accepting swaps"))
     }
 
     /// Graceful shutdown: flush queues, join workers, return final metrics.
@@ -438,6 +506,92 @@ mod tests {
         assert_eq!(snap.shards.len(), 3, "per-shard telemetry reaches metrics");
         let spread: u64 = snap.shards.iter().map(|t| t.images).sum();
         assert_eq!(spread, 64, "every image accounted to some shard");
+    }
+
+    /// The full rolling update path: serve → `swap_network` → keep
+    /// serving. Every prediction is wholly-old or wholly-new, the swap's
+    /// pulse accounting lands in the metrics, and traffic submitted while
+    /// the shards roll still completes (throughput never hits zero).
+    #[test]
+    fn rolling_swap_through_the_scheduler_flips_predictions() {
+        let mut rng = Pcg32::seeded(31);
+        let mut random_layer = |theta: usize| {
+            BinaryLayer::new(
+                (0..10)
+                    .map(|_| (0..25).map(|_| rng.bernoulli(0.5)).collect())
+                    .collect(),
+                theta,
+            )
+        };
+        let old = random_layer(4);
+        let new = random_layer(3);
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 32,
+                span: Some(32),
+                ..ArraySpec::default()
+            })
+            .with_batching(8, 100)
+            .with_layers(vec![old.clone()])
+            .with_shards(2, BackendKind::Ideal)
+            .with_workers(1);
+        let mut coord = Coordinator::spawn(
+            spec.build_factories().expect("factories"),
+            CoordinatorConfig {
+                batch_capacity: 8,
+                linger: Duration::from_micros(50),
+            },
+        );
+        let mut rng2 = Pcg32::seeded(32);
+        let mut image = move || -> Vec<bool> { (0..25).map(|_| rng2.bernoulli(0.4)).collect() };
+
+        // phase 1 — old weights serve
+        let imgs: Vec<Vec<bool>> = (0..8).map(|_| image()).collect();
+        let rxs: Vec<_> = imgs
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
+            .collect();
+        for (img, rx) in imgs.iter().zip(rxs) {
+            let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+            assert_eq!(pred.bits, old.forward(img), "pre-swap is wholly-old");
+        }
+
+        // phase 2 — order the rolling update and keep the traffic flowing;
+        // every in-window prediction is wholly-old or wholly-new
+        coord.swap_network(vec![new.clone()]).expect("swap accepted");
+        let imgs: Vec<Vec<bool>> = (0..16).map(|_| image()).collect();
+        let rxs: Vec<_> = imgs
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit during swap"))
+            .collect();
+        for (img, rx) in imgs.iter().zip(rxs) {
+            let pred = rx.recv_timeout(Duration::from_secs(30)).expect("served during swap");
+            let is_old = pred.bits == old.forward(img);
+            let is_new = pred.bits == new.forward(img);
+            assert!(is_old || is_new, "never a torn mix");
+        }
+
+        // phase 3 — wait for the swap to land, then everything is new
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while coord.metrics.snapshot().swaps == 0 {
+            assert!(Instant::now() < deadline, "rolling swap never completed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let imgs: Vec<Vec<bool>> = (0..8).map(|_| image()).collect();
+        let rxs: Vec<_> = imgs
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
+            .collect();
+        for (img, rx) in imgs.iter().zip(rxs) {
+            let pred = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+            assert_eq!(pred.bits, new.forward(img), "post-swap is wholly-new");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.swaps, 1, "one engine-level rolling swap");
+        assert!(snap.set_pulses + snap.reset_pulses > 0, "pulses accounted");
+        assert!(snap.swap_energy > 0.0 && snap.swap_time > 0.0);
+        assert_eq!(snap.images, 32);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Lock-cheap metrics aggregation for the coordinator.
 
-use crate::engine::Telemetry;
+use crate::engine::{SwapReport, Telemetry};
 use crate::util::stats::Welford;
 use std::sync::Mutex;
 
@@ -21,6 +21,11 @@ struct Inner {
     correct: u64,
     labelled: u64,
     shards: Vec<Telemetry>, // final per-shard telemetry, worker by worker
+    swaps: u64,             // completed live weight swaps (engine-level)
+    set_pulses: u64,        // SET pulses across those swaps
+    reset_pulses: u64,      // RESET pulses across those swaps
+    swap_time: f64,         // simulated programming time [s]
+    swap_energy: f64,       // programming energy [J]
 }
 
 /// A point-in-time copy of the aggregated metrics.
@@ -41,6 +46,17 @@ pub struct MetricsSnapshot {
     /// per plain engine, one per shard of a sharded engine) — recorded at
     /// scheduler exit, so it is complete after `shutdown`.
     pub shards: Vec<Telemetry>,
+    /// Completed live weight swaps (one per worker engine per rolling
+    /// update).
+    pub swaps: u64,
+    /// SET pulses executed across those swaps.
+    pub set_pulses: u64,
+    /// RESET pulses executed across those swaps.
+    pub reset_pulses: u64,
+    /// Simulated time the arrays spent programming \[s\].
+    pub swap_time: f64,
+    /// Programming energy across those swaps \[J\].
+    pub swap_energy: f64,
 }
 
 impl Metrics {
@@ -80,6 +96,17 @@ impl Metrics {
         m.shards.extend(telemetry);
     }
 
+    /// Record one completed live weight swap (a worker engine finished
+    /// its rolling update).
+    pub fn record_swap(&self, report: &SwapReport) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        m.swaps += 1;
+        m.set_pulses += report.set_pulses;
+        m.reset_pulses += report.reset_pulses;
+        m.swap_time += report.time;
+        m.swap_energy += report.energy;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
         MetricsSnapshot {
@@ -101,6 +128,11 @@ impl Metrics {
                 None
             },
             shards: m.shards.clone(),
+            swaps: m.swaps,
+            set_pulses: m.set_pulses,
+            reset_pulses: m.reset_pulses,
+            swap_time: m.swap_time,
+            swap_energy: m.swap_energy,
         }
     }
 }
@@ -131,6 +163,37 @@ mod tests {
         assert_eq!(s.energy_per_image, 0.0);
         assert!(s.accuracy.is_none());
         assert!(s.shards.is_empty());
+        assert_eq!(s.swaps, 0);
+        assert_eq!(s.swap_energy, 0.0);
+    }
+
+    #[test]
+    fn swap_reports_accumulate() {
+        let m = Metrics::new();
+        m.record_swap(&SwapReport {
+            set_pulses: 10,
+            reset_pulses: 4,
+            cells_changed: 14,
+            cells_total: 100,
+            time: 1e-6,
+            energy: 3e-12,
+            shards: 2,
+        });
+        m.record_swap(&SwapReport {
+            set_pulses: 1,
+            reset_pulses: 1,
+            cells_changed: 2,
+            cells_total: 100,
+            time: 1e-7,
+            energy: 1e-13,
+            shards: 1,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.swaps, 2);
+        assert_eq!(s.set_pulses, 11);
+        assert_eq!(s.reset_pulses, 5);
+        assert!((s.swap_time - 1.1e-6).abs() < 1e-18);
+        assert!((s.swap_energy - 3.1e-12).abs() < 1e-24);
     }
 
     #[test]

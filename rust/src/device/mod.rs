@@ -7,9 +7,11 @@ pub mod pcm;
 pub mod ots;
 pub mod pulse;
 pub mod cell;
+pub mod reprogram;
 
 pub use cell::XPointCell;
 pub use ots::Ots;
 pub use params::{DeviceParams, PCM_LOGIC0, PCM_LOGIC1};
 pub use pcm::{PcmCell, PcmState};
 pub use pulse::{Pulse, PulseKind};
+pub use reprogram::ReprogramPlan;

@@ -1,0 +1,158 @@
+//! [`ReprogramPlan`] — the per-cell cost of rewriting a stored weight
+//! matrix in place (paper §II: SET is slow and low-current, RESET fast and
+//! high-current; both are orders of magnitude more expensive than a
+//! computational step).
+//!
+//! A plan is the *diff* between the bits an array currently stores and the
+//! bits a new network needs: every `0 → 1` flip costs one SET pulse, every
+//! `1 → 0` flip one RESET pulse, and unchanged cells cost nothing (PCM is
+//! non-volatile — no refresh, no rewrite of stable state). Time assumes
+//! one write driver per subarray, so pulses serialize:
+//! `T = n_set·t_SET + n_reset·t_RESET`. Pulse energies are taken through
+//! the ON conductance `G_C` — a SET target is threshold-switched ON while
+//! it crystallizes, and a RESET target is crystalline until it melts — the
+//! same operating points [`PcmCell`](super::pcm::PcmCell) integrates.
+
+use super::params::DeviceParams;
+use super::pulse::Pulse;
+
+/// The pulse-level cost of reprogramming one weight matrix (or any subset
+/// of cells) from its current bits to a target.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReprogramPlan {
+    /// `0 → 1` flips (one SET pulse each).
+    pub set_pulses: u64,
+    /// `1 → 0` flips (one RESET pulse each).
+    pub reset_pulses: u64,
+    /// Cells whose stored bit already matches the target.
+    pub unchanged: u64,
+    /// Serialized programming time on one write driver \[s\].
+    pub time: f64,
+    /// Total programming energy \[J\].
+    pub energy: f64,
+}
+
+impl ReprogramPlan {
+    /// Plan the rewrite `current → target`. Both matrices must have
+    /// identical (possibly ragged) shapes — a reprogram never moves
+    /// weights between cells, it only flips bits in place.
+    pub fn diff(
+        current: &[Vec<bool>],
+        target: &[Vec<bool>],
+        p: &DeviceParams,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            current.len() == target.len(),
+            "reprogram shape mismatch: {} rows stored, {} rows targeted",
+            current.len(),
+            target.len()
+        );
+        let mut plan = Self::default();
+        for (r, (cur, tgt)) in current.iter().zip(target).enumerate() {
+            anyhow::ensure!(
+                cur.len() == tgt.len(),
+                "reprogram shape mismatch at row {r}: {} cells stored, {} targeted",
+                cur.len(),
+                tgt.len()
+            );
+            for (&c, &t) in cur.iter().zip(tgt) {
+                match (c, t) {
+                    (false, true) => plan.set_pulses += 1,
+                    (true, false) => plan.reset_pulses += 1,
+                    _ => plan.unchanged += 1,
+                }
+            }
+        }
+        plan.time = plan.set_pulses as f64 * p.t_set + plan.reset_pulses as f64 * p.t_reset;
+        plan.energy = plan.set_pulses as f64 * Pulse::set(p).energy(p.g_c)
+            + plan.reset_pulses as f64 * Pulse::reset(p).energy(p.g_c);
+        Ok(plan)
+    }
+
+    /// Cells that actually flip.
+    pub fn cells_changed(&self) -> u64 {
+        self.set_pulses + self.reset_pulses
+    }
+
+    /// All cells covered by the plan.
+    pub fn cells_total(&self) -> u64 {
+        self.cells_changed() + self.unchanged
+    }
+
+    /// Fold another plan into this one (per-tile plans into a per-node or
+    /// per-fabric total; time adds — one write driver serializes).
+    pub fn merge(&mut self, other: &Self) {
+        self.set_pulses += other.set_pulses;
+        self.reset_pulses += other.reset_pulses;
+        self.unchanged += other.unchanged;
+        self.time += other.time;
+        self.energy += other.energy;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default()
+    }
+
+    #[test]
+    fn diff_counts_each_flip_kind_exactly() {
+        let cur = vec![vec![false, true, true], vec![false, false, true]];
+        let tgt = vec![vec![true, true, false], vec![false, true, true]];
+        let plan = ReprogramPlan::diff(&cur, &tgt, &p()).unwrap();
+        assert_eq!(plan.set_pulses, 2, "0→1 at (0,0) and (1,1)");
+        assert_eq!(plan.reset_pulses, 1, "1→0 at (0,2)");
+        assert_eq!(plan.unchanged, 3);
+        assert_eq!(plan.cells_changed(), 3);
+        assert_eq!(plan.cells_total(), 6);
+    }
+
+    #[test]
+    fn identical_matrices_cost_nothing() {
+        let m = vec![vec![true, false], vec![false, true]];
+        let plan = ReprogramPlan::diff(&m, &m, &p()).unwrap();
+        assert_eq!(plan.cells_changed(), 0);
+        assert_eq!(plan.time, 0.0);
+        assert_eq!(plan.energy, 0.0);
+        assert_eq!(plan.unchanged, 4);
+    }
+
+    #[test]
+    fn time_and_energy_follow_the_pulse_waveforms() {
+        let params = p();
+        let cur = vec![vec![false, true]];
+        let tgt = vec![vec![true, false]]; // one SET + one RESET
+        let plan = ReprogramPlan::diff(&cur, &tgt, &params).unwrap();
+        let want_t = params.t_set + params.t_reset;
+        assert!((plan.time - want_t).abs() < 1e-18);
+        let want_e = Pulse::set(&params).energy(params.g_c)
+            + Pulse::reset(&params).energy(params.g_c);
+        assert!((plan.energy - want_e).abs() < 1e-24);
+        // programming dwarfs a read: pulse energies are pJ-scale
+        assert!(plan.energy > 1e-13, "E = {}", plan.energy);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let cur = vec![vec![true, false]];
+        assert!(ReprogramPlan::diff(&cur, &[vec![true]], &p()).is_err());
+        assert!(ReprogramPlan::diff(&cur, &[], &p()).is_err());
+    }
+
+    #[test]
+    fn merge_accumulates_all_counters() {
+        let params = p();
+        let a = ReprogramPlan::diff(&[vec![false, true]], &[vec![true, true]], &params).unwrap();
+        let b = ReprogramPlan::diff(&[vec![true]], &[vec![false]], &params).unwrap();
+        let mut total = a;
+        total.merge(&b);
+        assert_eq!(total.set_pulses, 1);
+        assert_eq!(total.reset_pulses, 1);
+        assert_eq!(total.unchanged, 1);
+        assert!((total.time - (a.time + b.time)).abs() < 1e-18);
+        assert!((total.energy - (a.energy + b.energy)).abs() < 1e-24);
+    }
+}

@@ -9,6 +9,8 @@
 
 use super::error::EngineError;
 use super::spec::BackendKind;
+use crate::device::ReprogramPlan;
+use crate::nn::BinaryLayer;
 
 /// Output of a batched inference.
 #[derive(Clone, Debug)]
@@ -76,6 +78,16 @@ pub struct Telemetry {
     pub link_transfers: u64,
     /// Interlink line-hops of traffic (fabric engines).
     pub link_lines: u64,
+    /// Completed in-place weight swaps ([`Engine::swap_network`]).
+    pub swaps: u64,
+    /// Simulated time spent programming weights during swaps \[s\]
+    /// (kept separate from `sim_time`: programming is the array's storage
+    /// role, not Table II compute accounting).
+    pub program_time: f64,
+    /// Energy spent programming weights during swaps \[J\] (pulses plus
+    /// weight-distribution traffic; separate from `energy` for the same
+    /// reason).
+    pub program_energy: f64,
     /// Per-subarray busy fraction of the most recent batch.
     pub utilization: Vec<f64>,
 }
@@ -116,6 +128,55 @@ impl Telemetry {
 
 /// Handle for a submitted batch, redeemed via [`Engine::poll`].
 pub type Ticket = u64;
+
+/// What an in-place weight swap cost ([`Engine::swap_network`]): the
+/// executed pulse plan plus the simulated time/energy the rewrite
+/// occupied the array(s).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SwapReport {
+    /// `0 → 1` SET pulses executed.
+    pub set_pulses: u64,
+    /// `1 → 0` RESET pulses executed.
+    pub reset_pulses: u64,
+    /// Cells that flipped.
+    pub cells_changed: u64,
+    /// All weight cells covered by the rewrite.
+    pub cells_total: u64,
+    /// Simulated time the array(s) were busy programming \[s\].
+    pub time: f64,
+    /// Programming energy: pulses + weight-distribution traffic \[J\].
+    pub energy: f64,
+    /// Engine shards the swap walked (1 for plain engines).
+    pub shards: usize,
+}
+
+impl SwapReport {
+    /// Fold another shard's report into this one (a rolling swap walks
+    /// shards one at a time, so times add).
+    pub fn merge(&mut self, other: &Self) {
+        self.set_pulses += other.set_pulses;
+        self.reset_pulses += other.reset_pulses;
+        self.cells_changed += other.cells_changed;
+        self.cells_total += other.cells_total;
+        self.time += other.time;
+        self.energy += other.energy;
+        self.shards += other.shards;
+    }
+}
+
+impl From<&ReprogramPlan> for SwapReport {
+    fn from(plan: &ReprogramPlan) -> Self {
+        Self {
+            set_pulses: plan.set_pulses,
+            reset_pulses: plan.reset_pulses,
+            cells_changed: plan.cells_changed(),
+            cells_total: plan.cells_total(),
+            time: plan.time,
+            energy: plan.energy,
+            shards: 1,
+        }
+    }
+}
 
 /// A batched binary-NN inference engine at some fidelity.
 ///
@@ -159,6 +220,39 @@ pub trait Engine {
     /// was ever submitted, [`EngineError::UnknownTicket`] for tickets
     /// never issued or already collected.
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>>;
+
+    /// Reprogram the resident network to `target` in place, blocking
+    /// until the rewrite completes. The contract is atomicity: every
+    /// inference reflects wholly-old or wholly-new weights, never a torn
+    /// mix — plain engines validate-then-mutate, a sharded engine drains
+    /// and reprograms shards one at a time
+    /// ([`ShardedEngine`](super::sharded::ShardedEngine) rolling swap).
+    /// Backends that cannot rewrite weights (the AOT-compiled XLA golden
+    /// model) fail with the typed [`EngineError::SwapUnsupported`].
+    fn swap_network(&mut self, target: Vec<BinaryLayer>) -> crate::Result<SwapReport> {
+        let _ = target;
+        Err(EngineError::SwapUnsupported {
+            kind: self.capabilities().kind.name(),
+        }
+        .into())
+    }
+
+    /// Non-blocking swap start. `Ok(Some(report))` means the swap
+    /// completed synchronously (the in-process engines rewrite inline,
+    /// mirroring their `submit`); `Ok(None)` means a rolling swap is now
+    /// in progress — redeem it via [`poll_swap`](Engine::poll_swap) while
+    /// continuing to `submit`/`poll` traffic.
+    fn begin_swap(&mut self, target: Vec<BinaryLayer>) -> crate::Result<Option<SwapReport>> {
+        self.swap_network(target).map(Some)
+    }
+
+    /// Redeem an in-progress rolling swap: `Ok(Some(report))` once every
+    /// shard has rejoined (at most once per swap), `Ok(None)` while
+    /// shards are still draining/reprogramming. The typed
+    /// [`EngineError::NoSwap`] when no swap is active.
+    fn poll_swap(&mut self) -> crate::Result<Option<SwapReport>> {
+        Err(EngineError::NoSwap.into())
+    }
 }
 
 /// Constructs an engine on the worker thread that will own it.
@@ -230,6 +324,27 @@ mod tests {
         assert!((t.max_utilization() - 0.6).abs() < 1e-12);
         assert_eq!(Telemetry::default().mean_utilization(), 0.0);
         assert_eq!(Telemetry::default().max_utilization(), 0.0);
+    }
+
+    #[test]
+    fn swap_report_merges_and_lifts_from_plans() {
+        let plan = ReprogramPlan {
+            set_pulses: 3,
+            reset_pulses: 2,
+            unchanged: 5,
+            time: 1e-6,
+            energy: 2e-12,
+        };
+        let mut a = SwapReport::from(&plan);
+        assert_eq!(a.cells_changed, 5);
+        assert_eq!(a.cells_total, 10);
+        assert_eq!(a.shards, 1);
+        let b = SwapReport::from(&plan);
+        a.merge(&b);
+        assert_eq!(a.set_pulses, 6);
+        assert_eq!(a.shards, 2);
+        assert!((a.time - 2e-6).abs() < 1e-18);
+        assert!((a.energy - 4e-12).abs() < 1e-24);
     }
 
     #[test]

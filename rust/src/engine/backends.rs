@@ -11,11 +11,14 @@
 //! [`EngineSpec::build`](super::spec::EngineSpec::build) rather than
 //! direct constructor calls.
 
-use super::api::{Capabilities, Completions, Engine, InferenceResult, Telemetry, Ticket};
+use super::api::{
+    Capabilities, Completions, Engine, InferenceResult, SwapReport, Telemetry, Ticket,
+};
 use super::error::EngineError;
 use super::spec::BackendKind;
 use crate::analysis::ArrayDesign;
 use crate::array::{Subarray, TmvmMode};
+use crate::device::ReprogramPlan;
 use crate::fabric::{FabricConfig, FabricExecutor, FabricRun};
 use crate::nn::{argmax_counts, BinaryLayer};
 use crate::runtime::{Executable, Runtime, TensorF32};
@@ -124,6 +127,46 @@ impl Engine for SimBackend {
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
         Ok(Some(self.completions.take(ticket)?))
     }
+
+    /// In-place swap to a same-shape single layer. The pulse accounting is
+    /// the per-cell SET/RESET diff of the weight store ([`ReprogramPlan`]);
+    /// validation happens before any mutation, so a failed swap leaves the
+    /// old layer serving and a successful one is atomic.
+    fn swap_network(&mut self, target: Vec<BinaryLayer>) -> crate::Result<SwapReport> {
+        if target.len() != 1 {
+            return Err(EngineError::SwapShape {
+                detail: format!(
+                    "the {} backend serves exactly one layer, got {}",
+                    self.capabilities().kind.name(),
+                    target.len()
+                ),
+            }
+            .into());
+        }
+        let new = target.into_iter().next().expect("one layer");
+        if new.n_out() != self.layer.n_out() || new.n_in() != self.layer.n_in() {
+            return Err(EngineError::SwapShape {
+                detail: format!(
+                    "resident layer is {}×{} but the target is {}×{}",
+                    self.layer.n_out(),
+                    self.layer.n_in(),
+                    new.n_out(),
+                    new.n_in()
+                ),
+            }
+            .into());
+        }
+        let plan = ReprogramPlan::diff(
+            &self.layer.weights,
+            &new.weights,
+            &self.subarray.design().device,
+        )?;
+        self.layer = new;
+        self.telemetry.swaps += 1;
+        self.telemetry.program_time += plan.time;
+        self.telemetry.program_energy += plan.energy;
+        Ok(SwapReport::from(&plan))
+    }
 }
 
 // ---------------------------------------------------------------- fabric
@@ -231,6 +274,23 @@ impl Engine for FabricBackend {
 
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
         Ok(Some(self.completions.take(ticket)?))
+    }
+
+    /// In-place swap of the whole placed stack: the executor streams the
+    /// diff over the spine, pulses it through each node's write driver,
+    /// and swaps the resident weights atomically
+    /// ([`FabricExecutor::reprogram`]).
+    fn swap_network(&mut self, target: Vec<BinaryLayer>) -> crate::Result<SwapReport> {
+        let run = self.exec.reprogram(target)?;
+        self.telemetry.swaps += 1;
+        self.telemetry.program_time += run.makespan;
+        self.telemetry.program_energy += run.energy;
+        let mut report = SwapReport::from(&run.plan);
+        // the fabric's rewrite is spine-streamed and node-parallel: report
+        // the simulated makespan and the full (pulse + link) energy
+        report.time = run.makespan;
+        report.energy = run.energy;
+        Ok(report)
     }
 }
 
@@ -510,6 +570,104 @@ mod tests {
         let err =
             FabricBackend::new(vec![layer], FabricConfig::new(2, 2, 8, 8), 0).unwrap_err();
         assert_eq!(err, EngineError::ZeroBatch);
+    }
+
+    #[test]
+    fn sim_backend_swaps_in_place_with_pulse_accounting() {
+        let mut rng = Pcg32::seeded(65);
+        let old = random_layer(&mut rng, 6, 12, 2);
+        let new = random_layer(&mut rng, 6, 12, 3);
+        let design = ArrayDesign::new(16, 16, LineConfig::config3(), 3.0, 1.0);
+        let mut be = SimBackend::new(old.clone(), design, TmvmMode::Ideal).unwrap();
+        let images: Vec<Vec<bool>> = (0..4)
+            .map(|_| (0..12).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        be.infer_batch(&images).unwrap();
+        let report = be.swap_network(vec![new.clone()]).unwrap();
+        // hand-computed diff: the report's pulse counts are exactly the
+        // cellwise flips between the two weight matrices
+        let mut set = 0u64;
+        let mut reset = 0u64;
+        for (a, b) in old.weights.iter().zip(&new.weights) {
+            for (&x, &y) in a.iter().zip(b) {
+                match (x, y) {
+                    (false, true) => set += 1,
+                    (true, false) => reset += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(report.set_pulses, set);
+        assert_eq!(report.reset_pulses, reset);
+        assert_eq!(report.cells_total, 72);
+        assert_eq!(report.shards, 1);
+        assert!(report.energy > 0.0 && report.time > 0.0);
+        // post-swap inference is wholly-new
+        let res = be.infer_batch(&images).unwrap();
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(res.bits[i], new.forward(img), "image {i}");
+        }
+        let tel = be.telemetry();
+        assert_eq!(tel.swaps, 1);
+        assert!(tel.program_energy > 0.0 && tel.program_time > 0.0);
+    }
+
+    /// Satellite contract: a swap target with mismatched dimensions is a
+    /// typed error and leaves the resident network untouched.
+    #[test]
+    fn swap_to_mismatched_dims_is_a_typed_error() {
+        let mut rng = Pcg32::seeded(66);
+        let layer = random_layer(&mut rng, 6, 12, 2);
+        let design = ArrayDesign::new(16, 16, LineConfig::config3(), 3.0, 1.0);
+        let mut be = SimBackend::new(layer.clone(), design, TmvmMode::Ideal).unwrap();
+        let err = be
+            .swap_network(vec![random_layer(&mut rng, 6, 10, 2)])
+            .unwrap_err();
+        assert!(err.to_string().contains("swap target shape mismatch"), "{err}");
+        let err = be
+            .swap_network(vec![layer.clone(), layer.clone()])
+            .unwrap_err();
+        assert!(err.to_string().contains("exactly one layer"), "{err}");
+        // still serving the old network, telemetry unchanged
+        assert_eq!(be.telemetry().swaps, 0);
+        let mut fab = FabricBackend::new(
+            vec![random_layer(&mut rng, 4, 8, 2)],
+            FabricConfig::new(1, 2, 8, 8),
+            16,
+        )
+        .unwrap();
+        let err = fab
+            .swap_network(vec![random_layer(&mut rng, 5, 8, 2)])
+            .unwrap_err();
+        assert!(err.to_string().contains("swap target shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn fabric_backend_swap_is_bit_exact_with_a_fresh_engine() {
+        let mut rng = Pcg32::seeded(67);
+        let old = vec![
+            random_layer(&mut rng, 10, 20, 3),
+            random_layer(&mut rng, 6, 10, 2),
+        ];
+        let new = vec![
+            random_layer(&mut rng, 10, 20, 3),
+            random_layer(&mut rng, 6, 10, 2),
+        ];
+        let images: Vec<Vec<bool>> = (0..6)
+            .map(|_| (0..20).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let cfg = FabricConfig::new(2, 2, 8, 8);
+        let mut fab = FabricBackend::new(old, cfg.clone(), 16).unwrap();
+        fab.infer_batch(&images).unwrap();
+        let report = fab.swap_network(new.clone()).unwrap();
+        assert!(report.cells_changed > 0);
+        assert!(report.time > 0.0 && report.energy > 0.0);
+        let got = fab.infer_batch(&images).unwrap();
+        let mut fresh = FabricBackend::new(new, cfg, 16).unwrap();
+        let want = fresh.infer_batch(&images).unwrap();
+        assert_eq!(got.bits, want.bits);
+        assert_eq!(got.classes, want.classes);
+        assert_eq!(fab.telemetry().swaps, 1);
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub enum EngineError {
     Empty,
     /// A submitted batch exceeds every shard's per-call batch limit.
     NoShardFits { batch: usize, max_batch: usize },
+    /// The backend cannot reprogram its weights in place.
+    SwapUnsupported { kind: &'static str },
+    /// The swap target does not match the resident network's shape.
+    SwapShape { detail: String },
+    /// `begin_swap` while a rolling swap is already active.
+    SwapInProgress,
+    /// `poll_swap` with no swap begun (or the report already collected).
+    NoSwap,
 }
 
 impl fmt::Display for EngineError {
@@ -131,6 +139,18 @@ impl fmt::Display for EngineError {
                 f,
                 "batch of {batch} exceeds every shard's max batch {max_batch}"
             ),
+            Self::SwapUnsupported { kind } => write!(
+                f,
+                "the {kind} backend cannot reprogram weights in place — \
+                 swap is supported by ideal|parasitic|fabric|sharded engines"
+            ),
+            Self::SwapShape { detail } => {
+                write!(f, "swap target shape mismatch: {detail}")
+            }
+            Self::SwapInProgress => {
+                write!(f, "a rolling swap is already in progress — poll it to completion first")
+            }
+            Self::NoSwap => write!(f, "no swap in progress — begin one before polling"),
         }
     }
 }
@@ -173,6 +193,19 @@ mod tests {
         assert!(EngineError::UnknownPlacement("snake".into())
             .to_string()
             .contains("roundrobin|locality"));
+        assert!(EngineError::SwapUnsupported { kind: "xla" }
+            .to_string()
+            .contains("xla backend cannot reprogram"));
+        assert!(EngineError::SwapShape {
+            detail: "layer 0 is 4×8 but the target is 4×9".into()
+        }
+        .to_string()
+        .contains("shape mismatch"));
+        assert_eq!(
+            EngineError::NoSwap.to_string(),
+            "no swap in progress — begin one before polling"
+        );
+        assert!(EngineError::SwapInProgress.to_string().contains("already in progress"));
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //!   [`FabricBackend`], [`XlaBackend`].
 //! * [`sharded`] — [`ShardedEngine`]: N inner engines on their own worker
 //!   threads behind an asynchronous, capability-aware least-loaded
-//!   submit/poll scheduler (the `Sharded` backend kind).
+//!   submit/poll scheduler (the `Sharded` backend kind), with rolling
+//!   live weight swaps through the [`ShardState`] lifecycle
+//!   (`Serving → Draining → Reprogramming → Rejoining`).
 //! * [`error`] — [`EngineError`], the typed error surface (implements
 //!   `std::error::Error`, lifts into `anyhow` via `?`).
 //!
@@ -36,11 +38,12 @@ pub mod sharded;
 pub mod spec;
 
 pub use api::{
-    BackendFactory, Capabilities, Completions, Engine, InferenceResult, Telemetry, Ticket,
+    BackendFactory, Capabilities, Completions, Engine, InferenceResult, SwapReport, Telemetry,
+    Ticket,
 };
 pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 pub use error::EngineError;
-pub use sharded::ShardedEngine;
+pub use sharded::{ShardState, ShardedEngine};
 pub use spec::{
     ArraySpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource, ShardSpec,
 };

@@ -24,22 +24,69 @@
 //!   the owning shard's completions — the synchronous view of the same
 //!   machinery.
 //!
+//! ## Shard lifecycle and rolling weight swaps
+//!
+//! Every shard carries a [`ShardState`]. Normally it is `Serving`; a
+//! rolling swap ([`Engine::begin_swap`]) walks the shards one at a time
+//! through `Serving → Draining → Reprogramming → Rejoining → Serving`:
+//! the dispatcher stops routing to the draining shard, its outstanding
+//! completions drain (and stay redeemable — see the mid-drain poll
+//! regression test), the shard thread reprograms its engine in place
+//! ([`Engine::swap_network`] on the inner backend), and the shard rejoins
+//! the pool. At most one shard is ever out of service, so with ≥2 shards
+//! aggregate throughput never hits zero; per-shard atomicity (inner
+//! engines validate-then-mutate) guarantees every completion reflects
+//! wholly-old or wholly-new weights, never a torn mix.
+//!
 //! Telemetry sums across shards (energy and simulated time are additive;
 //! per-subarray utilization concatenates in shard order), and
 //! [`Engine::shard_telemetry`] exposes the per-shard breakdown so the
 //! coordinator's metrics and the report exhibits can show load balance.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use super::api::{BackendFactory, Capabilities, Engine, InferenceResult, Telemetry, Ticket};
+use super::api::{
+    BackendFactory, Capabilities, Engine, InferenceResult, SwapReport, Telemetry, Ticket,
+};
 use super::error::EngineError;
 use super::spec::BackendKind;
+use crate::nn::BinaryLayer;
+
+/// Lifecycle of one shard under the rolling-swap scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// In the dispatch pool, accepting batches.
+    Serving,
+    /// Out of the pool; outstanding completions are draining (and remain
+    /// redeemable through `poll`).
+    Draining,
+    /// The shard thread is rewriting its engine's weights in place.
+    Reprogramming,
+    /// Reprogrammed, about to re-enter the dispatch pool.
+    Rejoining,
+}
+
+impl ShardState {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Serving => "serving",
+            Self::Draining => "draining",
+            Self::Reprogramming => "reprogramming",
+            Self::Rejoining => "rejoining",
+        }
+    }
+}
+
+/// Sentinel shard id for tickets parked behind a rolling swap (queued,
+/// not yet dispatched to any shard).
+const QUEUED: usize = usize::MAX;
 
 /// Work order for a shard thread.
 enum ShardRequest {
     Infer { ticket: Ticket, images: Vec<Vec<bool>> },
+    Swap { target: Vec<BinaryLayer> },
 }
 
 /// Message from a shard thread back to the `ShardedEngine`.
@@ -53,10 +100,16 @@ enum ShardEvent {
         result: Result<InferenceResult, String>,
         telemetry: Telemetry,
     },
+    /// The shard finished (or failed) reprogramming its engine in place.
+    Swapped {
+        result: Result<SwapReport, String>,
+        telemetry: Telemetry,
+    },
 }
 
 /// One shard: the channel pair to its worker thread plus the scheduler's
-/// view of it (capabilities, last telemetry snapshot, in-flight load).
+/// view of it (capabilities, last telemetry snapshot, in-flight load,
+/// lifecycle state).
 struct Shard {
     tx: Option<mpsc::Sender<ShardRequest>>,
     rx: mpsc::Receiver<ShardEvent>,
@@ -67,6 +120,7 @@ struct Shard {
     in_flight_batches: usize,
     /// Images in those batches — the least-loaded dispatch key.
     in_flight_images: usize,
+    state: ShardState,
     alive: bool,
 }
 
@@ -74,6 +128,16 @@ struct Shard {
 struct InFlight {
     shard: usize,
     images: usize,
+}
+
+/// The in-progress rolling swap: remaining walk order, the shard
+/// currently draining/reprogramming, and the accumulating report.
+struct RollingSwap {
+    target: Vec<BinaryLayer>,
+    pending: VecDeque<usize>,
+    current: Option<usize>,
+    report: SwapReport,
+    failed: Option<String>,
 }
 
 /// N engine shards behind one [`Engine`] — see the module docs.
@@ -87,6 +151,12 @@ pub struct ShardedEngine {
     in_flight: HashMap<Ticket, InFlight>,
     /// Drained completions awaiting redemption, in completion order.
     ready: Vec<(Ticket, Result<InferenceResult, String>)>,
+    /// Batches parked while every fitting shard is out of service
+    /// (only reachable mid-swap on a 1-shard engine).
+    queued: VecDeque<(Ticket, Vec<Vec<bool>>)>,
+    swap: Option<RollingSwap>,
+    /// A finished rolling swap awaiting redemption via `poll_swap`.
+    swap_done: Option<Result<SwapReport, String>>,
 }
 
 fn shard_main(
@@ -104,16 +174,19 @@ fn shard_main(
             return;
         }
     };
-    while let Ok(ShardRequest::Infer { ticket, images }) = rx.recv() {
-        let result = engine.infer_batch(&images).map_err(|e| format!("{e:#}"));
-        if tx
-            .send(ShardEvent::Done {
+    while let Ok(req) = rx.recv() {
+        let evt = match req {
+            ShardRequest::Infer { ticket, images } => ShardEvent::Done {
                 ticket,
-                result,
+                result: engine.infer_batch(&images).map_err(|e| format!("{e:#}")),
                 telemetry: engine.telemetry(),
-            })
-            .is_err()
-        {
+            },
+            ShardRequest::Swap { target } => ShardEvent::Swapped {
+                result: engine.swap_network(target).map_err(|e| format!("{e:#}")),
+                telemetry: engine.telemetry(),
+            },
+        };
+        if tx.send(evt).is_err() {
             break; // owner gone — nothing left to report to
         }
     }
@@ -149,7 +222,7 @@ impl ShardedEngine {
                 Ok(ShardEvent::Built(Err(e))) => {
                     anyhow::bail!("shard {i}: backend construction failed: {e}")
                 }
-                Ok(ShardEvent::Done { .. }) => unreachable!("Done before Built"),
+                Ok(_) => unreachable!("completion before Built"),
                 Err(_) => anyhow::bail!("shard {i}: worker thread died during construction"),
             };
             shards.push(Shard {
@@ -160,6 +233,7 @@ impl ShardedEngine {
                 telemetry: Telemetry::default(),
                 in_flight_batches: 0,
                 in_flight_images: 0,
+                state: ShardState::Serving,
                 alive: true,
             });
         }
@@ -185,6 +259,9 @@ impl ShardedEngine {
             next_pref: 0,
             in_flight: HashMap::new(),
             ready: Vec::new(),
+            queued: VecDeque::new(),
+            swap: None,
+            swap_done: None,
         })
     }
 
@@ -197,6 +274,16 @@ impl ShardedEngine {
     /// dispatch balances (test/introspection hook).
     pub fn shard_loads(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.in_flight_images).collect()
+    }
+
+    /// Lifecycle state per shard (the rolling-swap timeline view).
+    pub fn shard_states(&self) -> Vec<ShardState> {
+        self.shards.iter().map(|s| s.state).collect()
+    }
+
+    /// Whether a rolling swap is currently walking the shards.
+    pub fn swap_in_progress(&self) -> bool {
+        self.swap.is_some()
     }
 
     /// Fail every outstanding ticket on a shard whose thread is gone.
@@ -238,10 +325,30 @@ impl ShardedEngine {
                 }
                 self.ready.push((ticket, result));
             }
+            ShardEvent::Swapped { result, telemetry } => {
+                self.shards[shard].telemetry = telemetry;
+                match result {
+                    Ok(report) => {
+                        if let Some(swap) = self.swap.as_mut() {
+                            swap.report.merge(&report);
+                        }
+                    }
+                    Err(e) => {
+                        // the inner engine validates before mutating, so a
+                        // failed shard rejoins still serving the old weights
+                        if let Some(swap) = self.swap.as_mut() {
+                            swap.failed
+                                .get_or_insert_with(|| format!("shard {shard}: {e}"));
+                        }
+                    }
+                }
+                self.shards[shard].state = ShardState::Rejoining;
+            }
         }
     }
 
-    /// Pull every completion that has already arrived, without blocking.
+    /// Pull every completion that has already arrived, without blocking,
+    /// then advance the rolling swap (drain → reprogram → rejoin).
     fn drain_events(&mut self) {
         for i in 0..self.shards.len() {
             loop {
@@ -259,20 +366,182 @@ impl ShardedEngine {
                 }
             }
         }
+        self.advance_swap();
+    }
+
+    /// Drive the rolling swap forward as far as it can go without
+    /// blocking: pick the next shard, drain it, hand it the reprogram
+    /// order, and return it to the pool when it reports back.
+    fn advance_swap(&mut self) {
+        loop {
+            let Some(swap) = self.swap.as_mut() else { return };
+            match swap.current {
+                None => {
+                    let Some(i) = swap.pending.pop_front() else {
+                        // walk complete: publish the aggregate report
+                        let finished = self.swap.take().expect("active swap");
+                        self.swap_done = Some(match finished.failed {
+                            Some(msg) => Err(msg),
+                            None => Ok(finished.report),
+                        });
+                        self.flush_queued();
+                        return;
+                    };
+                    if !self.shards[i].alive {
+                        swap.failed.get_or_insert_with(|| {
+                            format!("shard {i} worker thread died before its swap")
+                        });
+                        continue;
+                    }
+                    self.shards[i].state = ShardState::Draining;
+                    swap.current = Some(i);
+                }
+                Some(i) => {
+                    if !self.shards[i].alive {
+                        swap.failed.get_or_insert_with(|| {
+                            format!("shard {i} worker thread died mid-swap")
+                        });
+                        swap.current = None;
+                        continue;
+                    }
+                    match self.shards[i].state {
+                        ShardState::Draining => {
+                            if self.shards[i].in_flight_batches > 0 {
+                                return; // completions still outstanding
+                            }
+                            let target = swap.target.clone();
+                            let sent = self.shards[i]
+                                .tx
+                                .as_ref()
+                                .expect("senders live until drop")
+                                .send(ShardRequest::Swap { target });
+                            if sent.is_err() {
+                                swap.failed.get_or_insert_with(|| {
+                                    format!("shard {i} worker thread is down")
+                                });
+                                swap.current = None;
+                                self.mark_shard_dead(i);
+                                continue;
+                            }
+                            self.shards[i].state = ShardState::Reprogramming;
+                            return;
+                        }
+                        // waiting for the shard thread's Swapped event
+                        ShardState::Reprogramming => return,
+                        ShardState::Rejoining => {
+                            self.shards[i].state = ShardState::Serving;
+                            swap.current = None;
+                            self.flush_queued();
+                            continue;
+                        }
+                        ShardState::Serving => return, // unreachable
+                    }
+                }
+            }
+        }
+    }
+
+    /// Least-loaded `Serving` shard admitting a batch of `n` images; ties
+    /// resolve in rotation order from `next_pref`, so an all-idle engine
+    /// round-robins instead of pinning shard 0.
+    fn pick_shard(&self, n: usize) -> Option<usize> {
+        let n_shards = self.shards.len();
+        let mut best: Option<usize> = None;
+        for k in 0..n_shards {
+            let i = (self.next_pref + k) % n_shards;
+            let s = &self.shards[i];
+            if !s.alive || s.state != ShardState::Serving || n > s.caps.max_batch {
+                continue;
+            }
+            best = match best {
+                Some(b) if self.shards[b].in_flight_images <= s.in_flight_images => Some(b),
+                _ => Some(i),
+            };
+        }
+        best
+    }
+
+    /// Hand `ticket`'s batch to shard `i` and account it in flight.
+    fn send_to(&mut self, i: usize, ticket: Ticket, images: Vec<Vec<bool>>) -> crate::Result<()> {
+        let n = images.len();
+        self.next_pref = (i + 1) % self.shards.len();
+        self.shards[i]
+            .tx
+            .as_ref()
+            .expect("senders live until drop")
+            .send(ShardRequest::Infer { ticket, images })
+            .map_err(|_| anyhow::anyhow!("shard {i} worker thread is down"))?;
+        self.shards[i].in_flight_batches += 1;
+        self.shards[i].in_flight_images += n;
+        self.in_flight.insert(ticket, InFlight { shard: i, images: n });
+        Ok(())
+    }
+
+    /// Dispatch parked batches now that a shard may have rejoined the
+    /// pool. Tickets whose batch no longer fits any living shard fail
+    /// instead of waiting forever.
+    fn flush_queued(&mut self) {
+        while let Some((ticket, images)) = self.queued.pop_front() {
+            let n = images.len();
+            match self.pick_shard(n) {
+                Some(i) => {
+                    if let Err(e) = self.send_to(i, ticket, images) {
+                        self.in_flight.remove(&ticket);
+                        self.ready.push((ticket, Err(format!("{e:#}"))));
+                    }
+                }
+                None => {
+                    if self
+                        .shards
+                        .iter()
+                        .any(|s| s.alive && n <= s.caps.max_batch)
+                    {
+                        // a fitting shard is just out of service; keep waiting
+                        self.queued.push_front((ticket, images));
+                        return;
+                    }
+                    self.in_flight.remove(&ticket);
+                    self.ready.push((
+                        ticket,
+                        Err(format!("no living shard admits a batch of {n}")),
+                    ));
+                }
+            }
+        }
     }
 
     /// Block until the shard owning `ticket` reports *something* (its
     /// completions arrive in order, so this makes progress toward the
-    /// ticket without busy-waiting).
+    /// ticket without busy-waiting). Tickets parked behind a rolling swap
+    /// wait on the shard currently being walked.
     fn block_on_owner(&mut self, ticket: Ticket) {
+        self.drain_events(); // also advances the rolling swap
         let shard = match self.in_flight.get(&ticket) {
-            Some(f) => f.shard,
+            Some(f) if f.shard != QUEUED => f.shard,
+            Some(_) => match self.swap.as_ref().and_then(|s| s.current) {
+                Some(i) => i,
+                None => return, // queue flushes on the next drain
+            },
             None => return, // already drained (or failed)
         };
         match self.shards[shard].rx.recv() {
             Ok(evt) => self.apply_event(shard, evt),
             Err(_) => self.mark_shard_dead(shard),
         }
+        self.advance_swap();
+    }
+
+    /// Block until the rolling swap makes progress (an event from the
+    /// shard currently draining or reprogramming).
+    fn block_on_swap(&mut self) {
+        let Some(i) = self.swap.as_ref().and_then(|s| s.current) else {
+            return;
+        };
+        match self.shards[i].rx.recv() {
+            Ok(evt) => self.apply_event(i, evt),
+            Err(_) => self.mark_shard_dead(i),
+        }
+        self.advance_swap();
     }
 }
 
@@ -313,6 +582,9 @@ impl Engine for ShardedEngine {
             total.cycles += t.cycles;
             total.link_transfers += t.link_transfers;
             total.link_lines += t.link_lines;
+            total.swaps += t.swaps;
+            total.program_time += t.program_time;
+            total.program_energy += t.program_energy;
             total.utilization.extend(t.utilization.iter().copied());
         }
         total
@@ -325,46 +597,43 @@ impl Engine for ShardedEngine {
     fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
         self.drain_events();
         let n = images.len();
-        // least-loaded shard among those whose max_batch admits the
-        // batch; ties resolve in rotation order from `next_pref`, so an
-        // all-idle engine round-robins instead of pinning shard 0
-        let n_shards = self.shards.len();
-        let mut best: Option<usize> = None;
-        for k in 0..n_shards {
-            let i = (self.next_pref + k) % n_shards;
-            let s = &self.shards[i];
-            if !s.alive || n > s.caps.max_batch {
-                continue;
+        match self.pick_shard(n) {
+            Some(i) => {
+                self.next_ticket += 1;
+                let ticket = self.next_ticket;
+                self.send_to(i, ticket, images)?;
+                Ok(ticket)
             }
-            best = match best {
-                Some(b) if self.shards[b].in_flight_images <= s.in_flight_images => Some(b),
-                _ => Some(i),
-            };
+            None => {
+                // a rolling swap can take every fitting shard out of
+                // service at once only on a 1-shard engine; park the
+                // batch and flush it when the shard rejoins
+                let fits = self
+                    .shards
+                    .iter()
+                    .any(|s| s.alive && n <= s.caps.max_batch);
+                if self.swap.is_some() && fits {
+                    self.next_ticket += 1;
+                    let ticket = self.next_ticket;
+                    self.in_flight
+                        .insert(ticket, InFlight { shard: QUEUED, images: n });
+                    self.queued.push_back((ticket, images));
+                    return Ok(ticket);
+                }
+                Err(EngineError::NoShardFits {
+                    batch: n,
+                    max_batch: self.caps.max_batch,
+                }
+                .into())
+            }
         }
-        let Some(i) = best else {
-            return Err(EngineError::NoShardFits {
-                batch: n,
-                max_batch: self.caps.max_batch,
-            }
-            .into());
-        };
-        self.next_pref = (i + 1) % n_shards;
-        self.next_ticket += 1;
-        let ticket = self.next_ticket;
-        self.shards[i]
-            .tx
-            .as_ref()
-            .expect("senders live until drop")
-            .send(ShardRequest::Infer { ticket, images })
-            .map_err(|_| anyhow::anyhow!("shard {i} worker thread is down"))?;
-        self.shards[i].in_flight_batches += 1;
-        self.shards[i].in_flight_images += n;
-        self.in_flight.insert(ticket, InFlight { shard: i, images: n });
-        Ok(ticket)
     }
 
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
         self.drain_events();
+        // ready first: a shard mid-`Draining` has left the dispatch pool,
+        // but its already-completed tickets must stay redeemable (pinned
+        // by the drain regression tests) — never a spurious `Empty`
         if let Some(pos) = self.ready.iter().position(|(t, _)| *t == ticket) {
             let (_, result) = self.ready.remove(pos);
             return result
@@ -378,6 +647,70 @@ impl Engine for ShardedEngine {
             return Err(EngineError::Empty.into());
         }
         Err(EngineError::UnknownTicket(ticket).into())
+    }
+
+    /// Blocking rolling swap: `begin_swap` + drive the walk to completion.
+    /// Prefer the non-blocking pair under live traffic — this blocks the
+    /// caller (but the shard pool keeps serving already-submitted work).
+    fn swap_network(&mut self, target: Vec<BinaryLayer>) -> crate::Result<SwapReport> {
+        self.begin_swap(target)?;
+        loop {
+            match self.poll_swap()? {
+                Some(report) => return Ok(report),
+                None => self.block_on_swap(),
+            }
+        }
+    }
+
+    /// Start a rolling swap: shards will drain and reprogram one at a
+    /// time while the rest keep serving. Always returns `Ok(None)` —
+    /// redeem the aggregate [`SwapReport`] via
+    /// [`poll_swap`](Engine::poll_swap).
+    fn begin_swap(&mut self, target: Vec<BinaryLayer>) -> crate::Result<Option<SwapReport>> {
+        self.drain_events();
+        if self.swap.is_some() || self.swap_done.is_some() {
+            return Err(EngineError::SwapInProgress.into());
+        }
+        if target.is_empty() {
+            return Err(EngineError::SwapShape {
+                detail: "target stack is empty".into(),
+            }
+            .into());
+        }
+        // eager end-to-end shape gate; per-layer dims are checked by each
+        // inner engine before it mutates anything
+        let (n_in, n_out) = (target[0].n_in(), target[target.len() - 1].n_out());
+        if n_in != self.caps.n_in || n_out != self.caps.n_out {
+            return Err(EngineError::SwapShape {
+                detail: format!(
+                    "target serves {n_in}→{n_out} but the shards serve {}→{}",
+                    self.caps.n_in, self.caps.n_out
+                ),
+            }
+            .into());
+        }
+        self.swap = Some(RollingSwap {
+            target,
+            pending: (0..self.shards.len()).collect(),
+            current: None,
+            report: SwapReport::default(),
+            failed: None,
+        });
+        self.advance_swap();
+        Ok(None)
+    }
+
+    fn poll_swap(&mut self) -> crate::Result<Option<SwapReport>> {
+        self.drain_events();
+        if let Some(done) = self.swap_done.take() {
+            return done
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("rolling swap failed: {e}"));
+        }
+        if self.swap.is_some() {
+            return Ok(None);
+        }
+        Err(EngineError::NoSwap.into())
     }
 }
 
@@ -453,6 +786,7 @@ mod tests {
         assert_eq!((tel.batches, tel.images), (1, 6));
         assert!(tel.energy > 0.0);
         assert_eq!(e.shard_telemetry().len(), 3);
+        assert!(e.shard_states().iter().all(|&s| s == ShardState::Serving));
     }
 
     #[test]
@@ -521,5 +855,138 @@ mod tests {
             err.to_string().contains("exceeds every shard"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn blocking_rolling_swap_lands_the_new_weights_on_every_shard() {
+        let old = layer(3);
+        let new = layer(4);
+        assert_ne!(old.weights, new.weights, "distinct checkpoints");
+        let mut e = sharded(3, 32);
+        let imgs = images(9, 6);
+        let before = e.infer_batch(&imgs).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(before.bits[i], old.forward(img));
+        }
+        let report = e.swap_network(vec![new.clone()]).unwrap();
+        assert_eq!(report.shards, 3, "the walk visited every shard");
+        assert!(report.cells_changed > 0 && report.energy > 0.0);
+        assert!(e.shard_states().iter().all(|&s| s == ShardState::Serving));
+        // every shard now serves the new network: spread batches across
+        // all three and check identity
+        for seed in 10..16 {
+            let batch = images(seed, 2);
+            let res = e.infer_batch(&batch).unwrap();
+            for (i, img) in batch.iter().enumerate() {
+                assert_eq!(res.bits[i], new.forward(img), "post-swap identity");
+            }
+        }
+        assert_eq!(e.telemetry().swaps, 3, "one in-place swap per shard");
+    }
+
+    /// Regression: tickets completed (or completing) on a shard that has
+    /// entered `Draining` stay redeemable through `poll` — never a
+    /// spurious `EngineError::Empty`, never a lost completion.
+    #[test]
+    fn poll_mid_draining_returns_completed_tickets() {
+        let old = layer(3);
+        let new = layer(5);
+        let mut e = sharded(1, 32);
+        // submit work, then immediately start the swap: the single shard
+        // goes Serving → Draining with these batches still in flight
+        let a = images(21, 4);
+        let b = images(22, 3);
+        let ta = e.submit(a.clone()).unwrap();
+        let tb = e.submit(b.clone()).unwrap();
+        assert!(e.begin_swap(vec![new.clone()]).unwrap().is_none());
+        // the in-flight tickets must drain with old-weight results
+        let ra = loop {
+            match e.poll(ta).expect("poll mid-drain must not error") {
+                Some(r) => break r,
+                None => e.block_on_owner(ta),
+            }
+        };
+        for (img, bits) in a.iter().zip(&ra.bits) {
+            assert_eq!(bits, &old.forward(img), "drained ticket is wholly-old");
+        }
+        let rb = loop {
+            match e.poll(tb).expect("poll mid-drain must not error") {
+                Some(r) => break r,
+                None => e.block_on_owner(tb),
+            }
+        };
+        assert_eq!(rb.bits.len(), 3);
+        // drive the swap home and confirm the flip
+        let report = loop {
+            match e.poll_swap().unwrap() {
+                Some(r) => break r,
+                None => e.block_on_swap(),
+            }
+        };
+        assert_eq!(report.shards, 1);
+        let res = e.infer_batch(&a).unwrap();
+        for (img, bits) in a.iter().zip(&res.bits) {
+            assert_eq!(bits, &new.forward(img), "post-swap is wholly-new");
+        }
+    }
+
+    /// A 1-shard engine mid-swap parks new submits instead of failing
+    /// them; the queue flushes when the shard rejoins, with new weights.
+    #[test]
+    fn submits_during_a_single_shard_swap_are_parked_and_flushed() {
+        let new = layer(6);
+        let mut e = sharded(1, 32);
+        assert!(e.begin_swap(vec![new.clone()]).unwrap().is_none());
+        let batch = images(23, 3);
+        let t = e.submit(batch.clone()).unwrap();
+        let res = loop {
+            match e.poll(t).unwrap() {
+                Some(r) => break r,
+                None => e.block_on_owner(t),
+            }
+        };
+        for (img, bits) in batch.iter().zip(&res.bits) {
+            assert_eq!(bits, &new.forward(img), "flushed after rejoin → wholly-new");
+        }
+        // swap report still redeemable exactly once
+        let report = loop {
+            match e.poll_swap().unwrap() {
+                Some(r) => break r,
+                None => e.block_on_swap(),
+            }
+        };
+        assert_eq!(report.shards, 1);
+        assert!(e.poll_swap().is_err(), "report redeems once");
+    }
+
+    #[test]
+    fn swap_contract_typed_errors() {
+        let mut e = sharded(2, 16);
+        // poll with no swap begun
+        let err = e.poll_swap().unwrap_err();
+        assert!(err.to_string().contains("no swap in progress"), "{err}");
+        // end-to-end shape mismatch is rejected eagerly
+        let mut rng = Pcg32::seeded(77);
+        let wrong = BinaryLayer::new(
+            (0..8)
+                .map(|_| (0..12).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            2,
+        );
+        let err = e.begin_swap(vec![wrong]).unwrap_err();
+        assert!(err.to_string().contains("swap target shape mismatch"), "{err}");
+        let err = e.begin_swap(vec![]).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        // double-begin while one is rolling
+        assert!(e.begin_swap(vec![layer(4)]).unwrap().is_none());
+        let err = e.begin_swap(vec![layer(5)]).unwrap_err();
+        assert!(err.to_string().contains("already in progress"), "{err}");
+        // drive home so Drop joins cleanly with an empty queue
+        loop {
+            match e.poll_swap().unwrap() {
+                Some(_) => break,
+                None => e.block_on_swap(),
+            }
+        }
     }
 }

@@ -426,6 +426,11 @@ pub struct EngineSpec {
     /// Where the served weights come from (ignored when explicit layers
     /// are attached via [`with_layers`](EngineSpec::with_layers)).
     pub network: NetworkSource,
+    /// Reprogramming/swap section: a network to live-swap to mid-serve
+    /// (`--swap-to template|artifact|auto`). Resolved by
+    /// [`resolve_swap_layers`](EngineSpec::resolve_swap_layers); rejected
+    /// for the XLA backend, whose weights are baked into the AOT graph.
+    pub swap_to: Option<NetworkSource>,
     /// Single-subarray design (`Ideal`/`Parasitic`).
     pub array: ArraySpec,
     /// Fabric geometry (`Fabric`).
@@ -450,6 +455,7 @@ impl EngineSpec {
             kind,
             workers: 2,
             network: NetworkSource::Auto,
+            swap_to: None,
             array: ArraySpec::default(),
             fabric: FabricSpec::default(),
             sharding: ShardSpec::default(),
@@ -477,6 +483,13 @@ impl EngineSpec {
 
     pub fn with_network(mut self, network: NetworkSource) -> Self {
         self.network = network;
+        self
+    }
+
+    /// Attach a reprogramming target: the network the serving shell will
+    /// live-swap to mid-run (rolling drain → reprogram → rejoin).
+    pub fn with_swap_to(mut self, source: NetworkSource) -> Self {
+        self.swap_to = Some(source);
         self
     }
 
@@ -574,8 +587,16 @@ impl EngineSpec {
             BackendKind::Ideal | BackendKind::Parasitic => self.array.validate()?,
             BackendKind::Fabric => self.fabric.validate()?,
             BackendKind::Xla => {
-                // the XLA graph ships with the trained artifacts; a spec
-                // promising template (artifact-free) weights can never build
+                // the XLA graph's weights are baked in at AOT-compile time;
+                // it can neither serve template weights nor swap in place
+                if self.swap_to.is_some() {
+                    return Err(EngineError::Spec {
+                        field: "swap_to",
+                        detail: "the xla backend cannot reprogram weights in place — \
+                                 its network is baked into the AOT graph"
+                            .into(),
+                    });
+                }
                 if self.network == NetworkSource::Template {
                     return Err(EngineError::Spec {
                         field: "network",
@@ -765,6 +786,15 @@ impl EngineSpec {
             }
             self.fabric.placement = PlacementStrategy::parse(p)?;
         }
+        if let Some(s) = args.get("swap-to") {
+            if xla {
+                return Err(EngineError::Conflict {
+                    first: "--swap-to",
+                    second: "--xla",
+                });
+            }
+            self.swap_to = Some(NetworkSource::parse(s)?);
+        }
         Ok(())
     }
 
@@ -778,6 +808,13 @@ impl EngineSpec {
             ("backend".into(), Json::Str(self.kind.name().into())),
             ("workers".into(), Json::Num(self.workers as f64)),
             ("network".into(), Json::Str(self.network.name().into())),
+            (
+                "swap_to".into(),
+                match self.swap_to {
+                    Some(s) => Json::Str(s.name().into()),
+                    None => Json::Null,
+                },
+            ),
             ("array".into(), self.array.to_json()),
             ("fabric".into(), self.fabric.to_json()),
             ("sharding".into(), self.sharding.to_json()),
@@ -799,6 +836,13 @@ impl EngineSpec {
                 "backend" => spec.kind = BackendKind::parse(json_str(val, "backend")?)?,
                 "workers" => spec.workers = json_usize(val, "workers")?,
                 "network" => spec.network = NetworkSource::parse(json_str(val, "network")?)?,
+                "swap_to" => {
+                    spec.swap_to = if val.is_null() {
+                        None
+                    } else {
+                        Some(NetworkSource::parse(json_str(val, "swap_to")?)?)
+                    }
+                }
                 "array" => spec.array = ArraySpec::from_json(val)?,
                 "fabric" => spec.fabric = FabricSpec::from_json(val)?,
                 "sharding" => spec.sharding = ShardSpec::from_json(val)?,
@@ -858,19 +902,15 @@ impl EngineSpec {
 
     // ----------------------------------------------------------- registry
 
-    /// Resolve the layer stack this spec serves (explicit layers win,
-    /// then the configured [`NetworkSource`]).
-    fn resolve_layers(&self) -> Result<Vec<BinaryLayer>, EngineError> {
-        if let Some(layers) = &self.layers {
-            return Ok(layers.clone());
-        }
+    /// Resolve a [`NetworkSource`] to its layer stack.
+    fn layers_from_source(source: NetworkSource) -> Result<Vec<BinaryLayer>, EngineError> {
         fn from_store(store: &ArtifactStore) -> Result<Vec<BinaryLayer>, EngineError> {
             store
                 .single_layer()
                 .map(|l| vec![l])
                 .map_err(|e| EngineError::Artifacts(format!("loading trained layer: {e:#}")))
         }
-        match self.network {
+        match source {
             NetworkSource::Template => Ok(vec![crate::report::table2::template_layer()]),
             NetworkSource::Artifact => {
                 let store = ArtifactStore::open_default().map_err(|_| {
@@ -885,6 +925,25 @@ impl EngineSpec {
                 Ok(store) => from_store(&store),
                 Err(_) => Ok(vec![crate::report::table2::template_layer()]),
             },
+        }
+    }
+
+    /// Resolve the layer stack this spec serves (explicit layers win,
+    /// then the configured [`NetworkSource`]).
+    fn resolve_layers(&self) -> Result<Vec<BinaryLayer>, EngineError> {
+        if let Some(layers) = &self.layers {
+            return Ok(layers.clone());
+        }
+        Self::layers_from_source(self.network)
+    }
+
+    /// Resolve the reprogramming target (`swap_to`), if one is
+    /// configured — the network the serving shell hands to
+    /// [`Engine::swap_network`] mid-run.
+    pub fn resolve_swap_layers(&self) -> Result<Option<Vec<BinaryLayer>>, EngineError> {
+        match self.swap_to {
+            None => Ok(None),
+            Some(source) => Self::layers_from_source(source).map(Some),
         }
     }
 
@@ -1270,6 +1329,49 @@ mod tests {
         assert_eq!(spec.effective_kind(), BackendKind::Fabric);
         let err = EngineSpec::from_json(r#"{"fabric":{"placement":"diag"}}"#).unwrap_err();
         assert!(err.to_string().contains("placement"), "{err}");
+    }
+
+    #[test]
+    fn swap_section_parses_roundtrips_and_conflicts() {
+        // flags: --swap-to attaches the reprogramming target
+        let spec = EngineSpec::from_args(&args("serve --swap-to template")).unwrap();
+        assert_eq!(spec.swap_to, Some(NetworkSource::Template));
+        let spec = EngineSpec::from_args(&args("serve --fabric --shards 2 --swap-to auto"))
+            .unwrap();
+        assert_eq!(spec.swap_to, Some(NetworkSource::Auto));
+        // JSON roundtrip (fixed point, Null when absent)
+        let spec = EngineSpec::new(BackendKind::Fabric).with_swap_to(NetworkSource::Template);
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json(), text);
+        let none = EngineSpec::from_json(r#"{"swap_to": null}"#).unwrap();
+        assert_eq!(none.swap_to, None);
+        let spec =
+            EngineSpec::from_json(r#"{"backend":"fabric","swap_to":"template"}"#).unwrap();
+        assert_eq!(spec.swap_to, Some(NetworkSource::Template));
+    }
+
+    #[test]
+    fn swap_to_with_xla_is_a_typed_error() {
+        let err = EngineSpec::from_args(&args("serve --xla --swap-to template")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--swap-to and --xla are mutually exclusive — pick one backend"
+        );
+        // same guard through validation (e.g. a JSON base selecting xla)
+        let err = EngineSpec::new(BackendKind::Xla)
+            .with_swap_to(NetworkSource::Artifact)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "swap_to", .. })
+                && err.to_string().contains("baked into the AOT graph"),
+            "{err}"
+        );
+        // unknown target names stay typed
+        let err = EngineSpec::from_args(&args("serve --swap-to warp")).unwrap_err();
+        assert_eq!(err, EngineError::UnknownNetwork("warp".into()));
     }
 
     #[test]

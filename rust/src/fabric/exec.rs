@@ -27,6 +27,8 @@ use super::event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 use super::link::{LinkFabric, LinkTraffic};
 use super::node::{tile_step, vdd_for_theta, SubarrayNode, TileStep};
 use super::placement::{place_layers, FabricConfig, Placement};
+use super::reprogram::{simulate_reprogram, target_slice, ReprogramRun};
+use crate::engine::EngineError;
 use crate::nn::BinaryLayer;
 use std::ops::Range;
 
@@ -172,6 +174,56 @@ impl FabricExecutor {
 
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// Check that `target` can be programmed into the current placement:
+    /// same layer count and per-layer dimensions (θ may change freely —
+    /// it is realized by the operating voltage, not the stored bits).
+    pub fn validate_swap(&self, target: &[BinaryLayer]) -> Result<(), EngineError> {
+        if target.len() != self.layers.len() {
+            return Err(EngineError::SwapShape {
+                detail: format!(
+                    "target has {} layer(s), the placed network has {}",
+                    target.len(),
+                    self.layers.len()
+                ),
+            });
+        }
+        for (k, (cur, tgt)) in self.layers.iter().zip(target).enumerate() {
+            if cur.n_out() != tgt.n_out() || cur.n_in() != tgt.n_in() {
+                return Err(EngineError::SwapShape {
+                    detail: format!(
+                        "layer {k} is {}×{} but the target is {}×{}",
+                        cur.n_out(),
+                        cur.n_in(),
+                        tgt.n_out(),
+                        tgt.n_in()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Reprogram the fabric to `target` in place: simulate the rewrite
+    /// (spine weight traffic + per-node write-driver occupancy — see
+    /// [`simulate_reprogram`]), then swap the resident weights and
+    /// per-layer operating voltages. Validation and simulation complete
+    /// before any mutation, so a failed swap leaves the old network fully
+    /// intact and a successful one is atomic — the next `run_batch` is
+    /// wholly-new, never a torn mix.
+    pub fn reprogram(&mut self, target: Vec<BinaryLayer>) -> crate::Result<ReprogramRun> {
+        self.validate_swap(&target)?;
+        let run = simulate_reprogram(&self.placement, &self.cfg, &target)?;
+        for tile in &mut self.placement.tiles {
+            tile.weights = target_slice(tile, &target);
+        }
+        self.v_dd = target
+            .iter()
+            .map(|l| vdd_for_theta(l.theta, &self.cfg.device))
+            .collect();
+        self.layers = target;
+        Ok(run)
     }
 
     /// Execute a batch of images through the pipelined fabric. Each run is

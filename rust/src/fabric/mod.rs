@@ -15,6 +15,11 @@
 //!   dimension-ordered routing and switch-loss energy.
 //! * [`exec`] — the pipelined executor: bit-exact with the functional
 //!   model, reporting makespan/cycles, utilization, traffic and energy.
+//! * [`reprogram`] — live weight rewriting: the SET/RESET diff of a new
+//!   network streamed over the spine and pulsed through each node's write
+//!   driver ([`FabricExecutor::reprogram`]), atomically swapping the
+//!   resident weights — the program-traffic class serving-layer rolling
+//!   swaps are built on.
 //!
 //! The serving adapter lives one layer up:
 //! [`FabricBackend`](crate::engine::FabricBackend) (re-exported here for
@@ -27,6 +32,7 @@ pub mod placement;
 pub mod node;
 pub mod link;
 pub mod exec;
+pub mod reprogram;
 
 pub use crate::engine::FabricBackend;
 pub use event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
@@ -34,3 +40,4 @@ pub use exec::{FabricExecutor, FabricRun};
 pub use link::{Interlink, LinkFabric, LinkTraffic};
 pub use node::{row_current, tile_step, vdd_for_theta, SubarrayNode, TileStep};
 pub use placement::{place_layers, FabricConfig, Placement, PlacementStrategy, TileSlice};
+pub use reprogram::{simulate_reprogram, ReprogramRun};

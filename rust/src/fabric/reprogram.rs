@@ -1,0 +1,248 @@
+//! Fabric-level weight reprogramming: streaming a new network's bits over
+//! the interlink fabric and pulsing them into the resident tiles.
+//!
+//! Inference assumed the weights were programmed before serving; swapping
+//! a model in place is a different traffic class entirely — SET/RESET
+//! pulses are orders of magnitude longer than a computational step, and
+//! the new bits have to reach every tile over the same host spine and
+//! interlinks the activations use. The simulation here reuses exactly the
+//! inference machinery so program traffic *contends* for the same
+//! resources:
+//!
+//! * each tile's changed bits travel from the host spine to the tile's
+//!   node ([`LinkFabric::transfer_input`]) — injection ports serialize, so
+//!   a fabric-wide rewrite queues on the spine like a big batch would;
+//! * each node then pulses its tiles' diffs through its single write
+//!   driver ([`SubarrayNode::reserve_step`] occupancy) — tiles sharing a
+//!   subarray serialize, exactly as their inference steps do.
+//!
+//! Only the *diff* is programmed ([`ReprogramPlan`]): unchanged cells are
+//! non-volatile and cost nothing, so swapping between similar checkpoints
+//! is much cheaper than a cold program — the incremental-update story that
+//! makes live swaps viable at all.
+//!
+//! The executor method that drives this ([`FabricExecutor::reprogram`])
+//! swaps the weights only after the whole plan is simulated and validated,
+//! so a fabric is always wholly-old or wholly-new — never a torn mix.
+
+use super::event::{secs_to_ticks, ticks_to_secs, Time};
+use super::link::{LinkFabric, LinkTraffic};
+use super::node::SubarrayNode;
+use super::placement::{FabricConfig, Placement};
+use crate::device::ReprogramPlan;
+use crate::nn::BinaryLayer;
+
+/// Result of reprogramming a placed network to new weights.
+#[derive(Clone, Debug)]
+pub struct ReprogramRun {
+    /// Aggregate pulse plan across every tile.
+    pub plan: ReprogramPlan,
+    /// Per-node pulse plans (index = flat node id).
+    pub per_node: Vec<ReprogramPlan>,
+    /// End-to-end simulated time of the rewrite \[s\] (spine streaming +
+    /// write-driver occupancy, with per-node parallelism).
+    pub makespan: f64,
+    /// Interlink/spine switch losses of the weight distribution \[J\].
+    pub link_energy: f64,
+    /// Total rewrite energy: pulses + distribution \[J\].
+    pub energy: f64,
+    /// Traffic counters of the weight distribution.
+    pub traffic: LinkTraffic,
+    /// Per-node busy fraction of the rewrite makespan.
+    pub utilization: Vec<f64>,
+}
+
+/// The target weight slice a tile must hold after the swap.
+pub(super) fn target_slice(
+    tile: &super::placement::TileSlice,
+    target: &[BinaryLayer],
+) -> Vec<Vec<bool>> {
+    tile.row_range
+        .clone()
+        .map(|r| target[tile.layer].weights[r][tile.col_range.clone()].to_vec())
+        .collect()
+}
+
+/// Simulate rewriting every placed tile from its current weights to the
+/// `target` stack (which must be shape-identical — validated by the
+/// caller). Pure simulation: nothing is mutated.
+pub fn simulate_reprogram(
+    placement: &Placement,
+    cfg: &FabricConfig,
+    target: &[BinaryLayer],
+) -> crate::Result<ReprogramRun> {
+    let p = cfg.device;
+    let mut nodes: Vec<SubarrayNode> = (0..cfg.n_nodes())
+        .map(|n| {
+            let (r, c) = cfg.node_coords(n);
+            SubarrayNode::new(n, r, c)
+        })
+        .collect();
+    let mut links = LinkFabric::new(cfg);
+    let mut per_node = vec![ReprogramPlan::default(); cfg.n_nodes()];
+    let mut total = ReprogramPlan::default();
+    let mut makespan: Time = 0;
+
+    for tile in &placement.tiles {
+        let slice = target_slice(tile, target);
+        let tile_plan = ReprogramPlan::diff(&tile.weights, &slice, &p)?;
+        per_node[tile.node].merge(&tile_plan);
+        total.merge(&tile_plan);
+        if tile_plan.cells_changed() == 0 {
+            continue; // non-volatile cells: no traffic, no pulses
+        }
+        // stream the changed bits to the tile's node: one line per changed
+        // cell, carrying the write current of the bits being set (the
+        // plan's SET pulses are exactly the 0→1 flips)
+        let arrival = links.transfer_input(
+            0,
+            tile.node,
+            tile_plan.cells_changed(),
+            tile_plan.set_pulses as f64 * p.i_set,
+        );
+        // then the node's write driver pulses the diff, serialized behind
+        // whatever this node is already programming
+        let dur = secs_to_ticks(tile_plan.time).max(1);
+        let node = &mut nodes[tile.node];
+        let (_start, end) = node.reserve_step(arrival, dur);
+        node.ledger.energy += tile_plan.energy;
+        node.ledger.time += tile_plan.time;
+        node.ledger.writes += tile_plan.cells_changed();
+        makespan = makespan.max(end);
+    }
+
+    let traffic = links.totals();
+    let link_energy = traffic.energy + traffic.input_energy;
+    let makespan_s = ticks_to_secs(makespan);
+    Ok(ReprogramRun {
+        energy: total.energy + link_energy,
+        plan: total,
+        per_node,
+        makespan: makespan_s,
+        link_energy,
+        traffic,
+        utilization: nodes.iter().map(|n| n.utilization(makespan_s)).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{place_layers, FabricExecutor};
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..n_out)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            theta,
+        )
+    }
+
+    #[test]
+    fn plan_covers_every_cell_and_books_physical_energy() {
+        let mut rng = Pcg32::seeded(0x8e01);
+        let old = vec![random_layer(&mut rng, 20, 20, 4)];
+        let new = vec![random_layer(&mut rng, 20, 20, 4)];
+        let cfg = FabricConfig::new(2, 2, 8, 8);
+        let placement = place_layers(&old, &cfg).unwrap();
+        let run = simulate_reprogram(&placement, &cfg, &new).unwrap();
+        assert_eq!(run.plan.cells_total(), 400, "every weight cell planned");
+        assert!(run.plan.set_pulses > 0 && run.plan.reset_pulses > 0);
+        assert!(run.makespan > 0.0 && run.energy > run.plan.energy);
+        assert!(run.traffic.input_transfers > 0, "bits crossed the spine");
+        assert_eq!(run.utilization.len(), 4);
+        assert!(run.utilization.iter().any(|&u| u > 0.0));
+        // per-node plans partition the aggregate
+        let set: u64 = run.per_node.iter().map(|p| p.set_pulses).sum();
+        assert_eq!(set, run.plan.set_pulses);
+    }
+
+    #[test]
+    fn identical_target_is_free() {
+        let mut rng = Pcg32::seeded(0x8e02);
+        let layers = vec![random_layer(&mut rng, 12, 16, 3)];
+        let cfg = FabricConfig::new(1, 2, 8, 8);
+        let placement = place_layers(&layers, &cfg).unwrap();
+        let run = simulate_reprogram(&placement, &cfg, &layers).unwrap();
+        assert_eq!(run.plan.cells_changed(), 0);
+        assert_eq!(run.makespan, 0.0);
+        assert_eq!(run.energy, 0.0);
+        assert_eq!(run.traffic.input_transfers, 0);
+    }
+
+    #[test]
+    fn tiles_sharing_a_node_serialize_on_its_write_driver() {
+        let mut rng = Pcg32::seeded(0x8e03);
+        let old = vec![random_layer(&mut rng, 16, 16, 3)];
+        let new = vec![random_layer(&mut rng, 16, 16, 3)];
+        // 4 tiles on 1 node vs the same 4 tiles on 4 nodes
+        let cfg1 = FabricConfig::new(1, 1, 8, 8);
+        let cfg4 = FabricConfig::new(2, 2, 8, 8);
+        let run1 =
+            simulate_reprogram(&place_layers(&old, &cfg1).unwrap(), &cfg1, &new).unwrap();
+        let run4 =
+            simulate_reprogram(&place_layers(&old, &cfg4).unwrap(), &cfg4, &new).unwrap();
+        assert_eq!(run1.plan, run4.plan, "same diff either way");
+        assert!(
+            run1.makespan > run4.makespan,
+            "one shared write driver must be slower: {} vs {}",
+            run1.makespan,
+            run4.makespan
+        );
+    }
+
+    #[test]
+    fn executor_reprogram_swaps_weights_atomically() {
+        let mut rng = Pcg32::seeded(0x8e04);
+        let old = vec![
+            random_layer(&mut rng, 12, 18, 3),
+            random_layer(&mut rng, 6, 12, 2),
+        ];
+        let new = vec![
+            random_layer(&mut rng, 12, 18, 4),
+            random_layer(&mut rng, 6, 12, 2),
+        ];
+        let images: Vec<Vec<bool>> = (0..5)
+            .map(|_| (0..18).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let mut exec = FabricExecutor::new(old.clone(), FabricConfig::new(2, 2, 8, 8)).unwrap();
+        let before = exec.run_batch(&images).unwrap();
+        let run = exec.reprogram(new.clone()).unwrap();
+        assert!(run.plan.cells_changed() > 0);
+        let after = exec.run_batch(&images).unwrap();
+        // post-swap the fabric is wholly-new: bit-exact with a fresh
+        // executor built on the new stack (θ change included)
+        let fresh = FabricExecutor::new(new, FabricConfig::new(2, 2, 8, 8)).unwrap();
+        let want = fresh.run_batch(&images).unwrap();
+        assert_eq!(after.outputs, want.outputs);
+        assert_eq!(after.final_counts, want.final_counts);
+        assert_ne!(after.outputs, before.outputs, "weights visibly changed");
+    }
+
+    #[test]
+    fn executor_rejects_mismatched_target_shapes_untouched() {
+        let mut rng = Pcg32::seeded(0x8e05);
+        let old = vec![random_layer(&mut rng, 8, 12, 2)];
+        let images: Vec<Vec<bool>> = (0..3)
+            .map(|_| (0..12).map(|_| rng.bernoulli(0.5)).collect())
+            .collect();
+        let mut exec = FabricExecutor::new(old.clone(), FabricConfig::new(1, 2, 8, 8)).unwrap();
+        let before = exec.run_batch(&images).unwrap();
+        // wrong layer count
+        let err = exec
+            .reprogram(vec![
+                random_layer(&mut rng, 8, 12, 2),
+                random_layer(&mut rng, 4, 8, 1),
+            ])
+            .unwrap_err();
+        assert!(err.to_string().contains("swap"), "{err}");
+        // wrong dims
+        let err = exec.reprogram(vec![random_layer(&mut rng, 8, 10, 2)]).unwrap_err();
+        assert!(err.to_string().contains("swap"), "{err}");
+        // failed swaps leave the old network fully intact
+        let after = exec.run_batch(&images).unwrap();
+        assert_eq!(after.outputs, before.outputs);
+    }
+}

@@ -45,6 +45,24 @@
 //! engine is bit-exact with a single engine of its inner spec while its
 //! energy/time telemetry sums across shards.
 //!
+//! ## Live weight reprogramming
+//!
+//! Every simulated kind can also **swap its network in place** —
+//! [`engine::Engine::swap_network`] (blocking) or the non-blocking
+//! `begin_swap`/`poll_swap` pair — returning a typed
+//! [`engine::SwapReport`] (SET/RESET pulse counts, programming time and
+//! energy from the [`device::ReprogramPlan`] diff; the fabric adds
+//! spine/interlink weight-distribution traffic). A `Sharded` engine rolls
+//! the swap: each shard walks `Serving → Draining → Reprogramming →
+//! Rejoining` ([`engine::ShardState`]) one at a time while the least-loaded
+//! dispatcher routes around it, so with ≥2 shards throughput never hits
+//! zero and every completion is wholly-old or wholly-new — never a torn
+//! mix (pinned by the `integration_reprogram` soak harness). The serving
+//! shell drives it with `xpoint serve --swap-to <network>` and the
+//! `xpoint reprogram` exhibit shows the drain/reprogram timeline. The XLA
+//! golden model cannot swap (its weights are baked into the AOT graph) and
+//! fails with the typed [`engine::EngineError::SwapUnsupported`].
+//!
 //! ## Layer map (bottom-up)
 //!
 //! * [`util`] / [`testing`] — self-contained substrates (PRNG, stats, table
@@ -52,7 +70,9 @@
 //!   build is fully offline, so these replace `rand`, `serde`, `criterion`
 //!   and `proptest`.
 //! * [`device`] — PCM + OTS compact models (paper Fig. 2, Table IV): state,
-//!   partial crystallization, SET/RESET pulse dynamics.
+//!   partial crystallization, SET/RESET pulse dynamics, and the
+//!   [`device::ReprogramPlan`] per-cell rewrite cost model (the diff a
+//!   live weight swap programs).
 //! * [`circuit`] — a generic resistive-network substrate: netlist builder,
 //!   modified-nodal-analysis solver (dense LU with a banded fast path), and
 //!   numeric Thevenin extraction. Used to *validate* the paper's analytic
@@ -74,29 +94,36 @@
 //!   networks tiled across the grid, with image-level pipelining,
 //!   per-subarray occupancy, interlink traffic/latency and energy; tile
 //!   placement is strategy-selectable ([`fabric::PlacementStrategy`]:
-//!   round-robin or the locality-aware serpentine).
+//!   round-robin or the locality-aware serpentine), and
+//!   [`fabric::FabricExecutor::reprogram`] rewrites the placed weights in
+//!   place (program traffic over the same spine and write drivers).
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
 //!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
 //! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
 //!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and serves as
 //!   the functional golden model on the rust side.
 //! * [`engine`] — **the public serving API**: [`engine::EngineSpec`]
-//!   (declarative config: code / CLI / JSON), the [`engine::Engine`] trait
-//!   (inference + capabilities + telemetry + submit/poll), the typed
+//!   (declarative config: code / CLI / JSON, including the `swap_to`
+//!   reprogramming section), the [`engine::Engine`] trait (inference +
+//!   capabilities + telemetry + submit/poll + the
+//!   swap_network/begin_swap/poll_swap reprogramming surface), the typed
 //!   [`engine::EngineError`], the concrete backends
 //!   ([`engine::SimBackend`], [`engine::FabricBackend`],
 //!   [`engine::XlaBackend`]) and the asynchronous
 //!   [`engine::ShardedEngine`] (N shards, least-loaded dispatch,
-//!   out-of-order completion) behind the [`engine::EngineSpec::build`]
-//!   registry.
+//!   out-of-order completion, rolling weight swaps through the
+//!   [`engine::ShardState`] lifecycle) behind the
+//!   [`engine::EngineSpec::build`] registry.
 //! * [`coordinator`] — the L3 serving shell: request batching plus one
 //!   scheduler thread per engine, driving it purely through the
 //!   non-blocking `submit`/`poll` pair (spawned from
 //!   [`engine::BackendFactory`]), with per-shard telemetry in the
-//!   metrics.
+//!   metrics and rolling live weight updates
+//!   ([`coordinator::Coordinator::swap_network`]) that land their pulse
+//!   accounting in the metrics snapshot.
 //! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III, fabric
-//!   scaling) as a library function returning structured rows, shared by
-//!   benches, examples and the CLI.
+//!   scaling, sharded serving, live reprogramming) as a library function
+//!   returning structured rows, shared by benches, examples and the CLI.
 //!
 //! See `examples/quickstart.rs` for a runnable end-to-end tour.
 

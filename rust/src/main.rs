@@ -35,11 +35,16 @@ COMMANDS:
             --batch N (default 32)
   shards    sharded-serving exhibit: throughput + load balance over
             1|2|4 fabric shards  --images N (default 1024) --batch N
+  reprogram live-reprogramming exhibit: rolling shard drain → reprogram →
+            rejoin timeline, pulse counts, energy, throughput dip
+            --shards N (default 2) --waves N (default 6) --batch N
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
             [--shards N]          (N async engine shards per worker)
             [--placement roundrobin|locality] (fabric tile placement)
+            [--swap-to template|artifact|auto] (live-swap the network
+            mid-run: shards drain + reprogram one at a time)
             [--engine spec.json]  (declarative EngineSpec; flags override)
   help      this text
 ";
@@ -186,6 +191,15 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             print!("{}", report::shard_scaling_table(&rows).render());
             Ok(())
         }
+        Some("reprogram") => {
+            let shards = args.get_usize("shards", report::REPROGRAM_SHARDS)?;
+            let waves = args.get_usize("waves", report::REPROGRAM_WAVES)?;
+            let batch = args.get_usize("batch", 32)?;
+            let (rows, swap) = report::reprogram_timeline(shards, waves, batch)?;
+            print!("{}", report::reprogram_table(&rows).render());
+            println!("{}", report::reprogram_summary(&swap));
+            Ok(())
+        }
         Some("serve") => serve(args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -225,13 +239,25 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
     }
     println!("backend: {}", spec.describe());
 
+    // resolve the live-swap target up front: a bad --swap-to must fail
+    // before any traffic is served
+    let swap_target = spec.resolve_swap_layers()?;
+
     let backends = spec.build_factories()?;
     let mut coord = Coordinator::spawn(backends, spec.coordinator_config());
 
     let mut gen = DigitGen::new(TEST_SEED);
     let started = std::time::Instant::now();
     let mut receivers = Vec::with_capacity(n_images);
-    for _ in 0..n_images {
+    // with a swap target, the rolling update kicks in halfway through the
+    // stream — shards drain and reprogram one at a time under load
+    let swap_after = swap_target.as_ref().map(|_| n_images / 2);
+    for i in 0..n_images {
+        if Some(i) == swap_after {
+            let target = swap_target.clone().expect("target resolved");
+            eprintln!("(rolling swap to the --swap-to network at image {i})");
+            coord.swap_network(target)?;
+        }
         let s = gen.next_sample();
         receivers.push(coord.submit(s.pixels, Some(s.label))?);
     }
@@ -262,6 +288,16 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
     println!("energy/image:    {}", format_si(snap.energy_per_image, "J"));
     if let Some(acc) = snap.accuracy {
         println!("accuracy:        {}", format_pct(acc));
+    }
+    if swap_target.is_some() {
+        println!(
+            "live swaps:      {} ({} SET + {} RESET pulses, {} programming, {})",
+            snap.swaps,
+            snap.set_pulses,
+            snap.reset_pulses,
+            format_duration(snap.swap_time),
+            format_si(snap.swap_energy, "J"),
+        );
     }
     // per-shard breakdown (one line per engine shard, across all workers)
     if snap.shards.len() > 1 {

@@ -4,6 +4,7 @@
 
 pub mod exhibits;
 pub mod fabric;
+pub mod reprogram;
 pub mod sharding;
 pub mod table2;
 
@@ -12,5 +13,9 @@ pub use exhibits::{
     Fig13Series,
 };
 pub use fabric::{fabric_scaling_rows, fabric_scaling_table, FabricScalingRow, FABRIC_GRIDS};
+pub use reprogram::{
+    perturbed_workload, reprogram_summary, reprogram_table, reprogram_timeline,
+    ReprogramWaveRow, REPROGRAM_SHARDS, REPROGRAM_WAVES,
+};
 pub use sharding::{shard_scaling_rows, shard_scaling_table, ShardScalingRow, SHARD_SWEEP};
 pub use table2::{table2_rows, Table2Row, TABLE2_DESIGNS};

@@ -308,7 +308,7 @@ fn prop_spec_json_roundtrip_on_random_shapes() {
             BackendKind::Fabric => max_batch,
             BackendKind::Xla => XLA_GRAPH_BATCH,
         };
-        let spec = EngineSpec::new(kind)
+        let mut spec = EngineSpec::new(kind)
             .with_workers(rng.range(1, 8))
             .with_network(network)
             .with_array(ArraySpec {
@@ -327,6 +327,15 @@ fn prop_spec_json_roundtrip_on_random_shapes() {
             .with_tile(rng.range(1, 64), rng.range(1, 64))
             .with_fabric_max_batch(max_batch)
             .with_batching(rng.range(1, capacity_limit + 1), rng.range(1, 10_000) as u64);
+        // the reprogramming/swap section: any source (xla rejects swaps
+        // outright, so only the other kinds draw one)
+        if kind != BackendKind::Xla && rng.bernoulli(0.5) {
+            spec = spec.with_swap_to(*rng.choose(&[
+                NetworkSource::Auto,
+                NetworkSource::Template,
+                NetworkSource::Artifact,
+            ]));
+        }
         let text = spec.to_json();
         let parsed = EngineSpec::from_json(&text).map_err(|e| format!("parse: {e}"))?;
         if parsed != spec {

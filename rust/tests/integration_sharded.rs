@@ -260,6 +260,87 @@ fn serve_with_shards_matches_single_fabric_predictions() {
     );
 }
 
+/// Seeded fuzz/soak for the sharded scheduler: randomized submit/poll
+/// interleavings across shards ∈ {1, 2, 4}, checked against a single
+/// engine of the same spec. Covers the out-of-order redemption paths the
+/// tests above only spot-check: every completed batch is bit-exact with
+/// the single engine, every ticket completes exactly once, and redeemed
+/// tickets become typed `UnknownTicket` errors.
+#[test]
+fn seeded_soak_random_interleavings_are_bit_exact_with_a_single_engine() {
+    for seed in [0xf0a1u64, 0xf0a2, 0xf0a3] {
+        for shards in [1usize, 2, 4] {
+            let mut rng = Pcg32::seeded(seed);
+            let layer = random_layer(&mut rng, 10, 20, 3);
+            let base = EngineSpec::new(BackendKind::Ideal)
+                .with_array(ArraySpec {
+                    rows: 16,
+                    cols: 32,
+                    span: Some(20),
+                    ..ArraySpec::default()
+                })
+                .with_batching(16, 200)
+                .with_layers(vec![layer.clone()]);
+            let mut single = base.clone().build_engine().expect("single engine");
+            let mut engine = base
+                .with_shards(shards, BackendKind::Ideal)
+                .with_workers(1)
+                .build_engine()
+                .expect("sharded engine");
+
+            // Vec (not HashMap) keeps the interleaving seed-deterministic
+            let mut outstanding: Vec<(u64, Vec<Vec<bool>>)> = Vec::new();
+            let mut redeemed: Vec<u64> = Vec::new();
+            for _ in 0..200 {
+                if rng.bernoulli(0.5) {
+                    let m = rng.range(1, 8);
+                    let imgs = random_images(&mut rng, m, 20);
+                    let t = engine.submit(imgs.clone()).expect("submit");
+                    outstanding.push((t, imgs));
+                } else if !outstanding.is_empty() {
+                    let k = rng.range(0, outstanding.len());
+                    let t = outstanding[k].0;
+                    if let Some(res) = engine.poll(t).expect("poll") {
+                        let (t, imgs) = outstanding.swap_remove(k);
+                        let want = single.infer_batch(&imgs).expect("single batch");
+                        assert_eq!(res.bits, want.bits, "seed {seed:#x} shards {shards}");
+                        assert_eq!(res.classes, want.classes);
+                        redeemed.push(t);
+                    }
+                }
+            }
+            // drain the tail
+            while let Some((t, imgs)) = outstanding.pop() {
+                let res = loop {
+                    match engine.poll(t).expect("poll") {
+                        Some(res) => break res,
+                        None => std::thread::yield_now(),
+                    }
+                };
+                let want = single.infer_batch(&imgs).expect("single batch");
+                assert_eq!(res.bits, want.bits, "seed {seed:#x} shards {shards}");
+                redeemed.push(t);
+            }
+            // exactly-once per ticket
+            let mut unique = redeemed.clone();
+            unique.sort_unstable();
+            unique.dedup();
+            assert_eq!(unique.len(), redeemed.len(), "a ticket completed twice");
+            for &t in redeemed.iter().take(3) {
+                let err = engine.poll(t).expect_err("redeemed tickets are gone");
+                assert!(
+                    err.to_string().contains("never issued or already collected"),
+                    "{err}"
+                );
+            }
+            // the aggregate image count matches what the single engine saw
+            let agg = engine.telemetry();
+            assert_eq!(agg.images, single.telemetry().images);
+            assert_eq!(agg.batches, redeemed.len() as u64);
+        }
+    }
+}
+
 /// The locality placement changes only where tiles live: predictions are
 /// bit-identical to round-robin, while the serpentine walk moves the
 /// same traffic over no more interlink hops.

@@ -1,0 +1,145 @@
+//! Property tests for the fabric placement layer: the locality-aware
+//! serpentine keeps consecutive tiles (and therefore consecutive layers)
+//! at most one interlink hop apart for **arbitrary** grid dimensions, and
+//! placement strategy never changes what the fabric computes — only
+//! where the traffic flows.
+
+use xpoint_imc::fabric::{place_layers, FabricConfig, FabricExecutor, PlacementStrategy};
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize) -> BinaryLayer {
+    let theta = rng.range(1, 3);
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+/// A random layer chain: `l` layers with matching inner dimensions, each
+/// dimension drawn from `[lo, hi)`.
+fn random_chain(rng: &mut Pcg32, l: usize, lo: usize, hi: usize) -> Vec<BinaryLayer> {
+    let dims: Vec<usize> = (0..=l).map(|_| rng.range(lo, hi)).collect();
+    (0..l)
+        .map(|k| random_layer(rng, dims[k + 1], dims[k]))
+        .collect()
+}
+
+fn hops(cfg: &FabricConfig, a: usize, b: usize) -> usize {
+    let (r0, c0) = cfg.node_coords(a);
+    let (r1, c1) = cfg.node_coords(b);
+    r0.abs_diff(r1) + c0.abs_diff(c1)
+}
+
+/// The serpentine node order is a permutation of the grid in which every
+/// pair of consecutive entries is grid-adjacent — for arbitrary grid
+/// dimensions, not just the square cases the unit tests pin.
+#[test]
+fn locality_order_is_an_adjacent_permutation_for_arbitrary_grids() {
+    forall(
+        Config::default().cases(150),
+        "serpentine adjacency",
+        |rng: &mut Pcg32| {
+            let gr = rng.range(1, 8);
+            let gc = rng.range(1, 8);
+            let cfg = FabricConfig::new(gr, gc, 8, 8);
+            let order = PlacementStrategy::Locality.node_order(gr, gc);
+            let mut seen = vec![false; gr * gc];
+            for &n in &order {
+                if n >= gr * gc || seen[n] {
+                    return Err(format!("{gr}×{gc}: node {n} repeated or out of range"));
+                }
+                seen[n] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("{gr}×{gc}: not a permutation"));
+            }
+            for w in order.windows(2) {
+                let h = hops(&cfg, w[0], w[1]);
+                if h != 1 {
+                    return Err(format!(
+                        "{gr}×{gc}: consecutive order nodes {} -> {} are {h} hops apart",
+                        w[0], w[1]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// When the network's tiles fit the grid (no wrap-around), serpentine
+/// placement keeps every pair of consecutive tiles — including across
+/// layer boundaries — at most one interlink hop apart.
+#[test]
+fn locality_keeps_consecutive_tiles_and_layers_one_hop_apart() {
+    forall(
+        Config::default().cases(100),
+        "one-hop placement",
+        |rng: &mut Pcg32| {
+            let gr = rng.range(1, 6);
+            let gc = rng.range(1, 6);
+            let n_nodes = gr * gc;
+            // single-tile layers (dims ≤ the 8×8 tile), one per node at most
+            let l = rng.range(1, n_nodes + 1);
+            let layers = random_chain(rng, l, 2, 9);
+            let cfg = FabricConfig::new(gr, gc, 8, 8).with_strategy(PlacementStrategy::Locality);
+            let p = place_layers(&layers, &cfg).map_err(|e| format!("placement: {e:#}"))?;
+            if p.n_tiles() != l {
+                return Err(format!("expected {l} single-tile layers, got {}", p.n_tiles()));
+            }
+            for w in p.tiles.windows(2) {
+                let h = hops(&cfg, w[0].node, w[1].node);
+                if h > 1 {
+                    return Err(format!(
+                        "{gr}×{gc}, {l} layers: tiles (layer {}, {},{}) -> (layer {}, {},{}) \
+                         are {h} hops apart",
+                        w[0].layer, w[0].tile_row, w[0].tile_col,
+                        w[1].layer, w[1].tile_row, w[1].tile_col
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Placement is a performance decision, never a semantic one: for random
+/// multi-tile chains (wrap-around included), round-robin and locality
+/// produce bit-identical outputs and final counts.
+#[test]
+fn predictions_are_placement_invariant() {
+    forall(
+        Config::default().cases(30),
+        "placement invariance",
+        |rng: &mut Pcg32| {
+            let gr = rng.range(1, 4);
+            let gc = rng.range(1, 4);
+            let l = rng.range(1, 4);
+            // dims up to 20 over 8×8 tiles: layers tile and often wrap
+            let layers = random_chain(rng, l, 3, 21);
+            let m = rng.range(1, 6);
+            let n_in = layers[0].n_in();
+            let images: Vec<Vec<bool>> = (0..m)
+                .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+            let run = |strategy: PlacementStrategy| {
+                let cfg = FabricConfig::new(gr, gc, 8, 8).with_strategy(strategy);
+                let exec = FabricExecutor::new(layers.clone(), cfg).expect("placement");
+                exec.run_batch(&images).expect("run")
+            };
+            let rr = run(PlacementStrategy::RoundRobin);
+            let loc = run(PlacementStrategy::Locality);
+            if rr.outputs != loc.outputs {
+                return Err(format!("{gr}×{gc}, {l} layers: outputs differ"));
+            }
+            if rr.final_counts != loc.final_counts {
+                return Err(format!("{gr}×{gc}, {l} layers: final counts differ"));
+            }
+            Ok(())
+        },
+    );
+}
