@@ -93,6 +93,7 @@ fn main() -> xpoint_imc::Result<()> {
         CoordinatorConfig {
             batch_capacity: 64,
             linger: Duration::from_micros(200),
+            autoscale: None,
         },
     );
     let mut gen = DigitGen::new(TEST_SEED);

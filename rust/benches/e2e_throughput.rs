@@ -4,8 +4,9 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
-use harness::exhibit_header;
+use harness::{bench_case, emit_bench_json, exhibit_header};
 use std::time::{Duration, Instant};
+use xpoint_imc::util::json::Json;
 use xpoint_imc::array::TmvmMode;
 use xpoint_imc::coordinator::{BackendFactory, Coordinator, CoordinatorConfig};
 use xpoint_imc::engine::{ArraySpec, BackendKind, EngineSpec, NetworkSource};
@@ -30,12 +31,13 @@ fn factories(n: usize, n_row: usize, mode: TmvmMode) -> Vec<BackendFactory> {
         .expect("valid engine spec")
 }
 
-fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMode) {
+fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMode) -> Json {
     let mut coord = Coordinator::spawn(
         factories(workers, batch.max(64), mode),
         CoordinatorConfig {
             batch_capacity: batch,
             linger: Duration::from_micros(100),
+            autoscale: None,
         },
     );
     let mut gen = DigitGen::new(1);
@@ -56,6 +58,16 @@ fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMod
         format_duration(snap.mean_latency),
         format_si(snap.energy_per_image, "J"),
     );
+    // gate on *simulated* throughput (deterministic, machine-independent);
+    // host img/s rides along informationally
+    bench_case(
+        label,
+        n_images as f64 / snap.sim_time.max(1e-30),
+        &[
+            ("host_img_s", n_images as f64 / wall),
+            ("energy_per_image_j", snap.energy_per_image),
+        ],
+    )
 }
 
 /// Sharded fabric serving: one coordinator worker driving `shards`
@@ -63,13 +75,14 @@ fn run(label: &str, workers: usize, batch: usize, n_images: usize, mode: TmvmMod
 /// The sweep makes the sharding speedup visible in the perf trajectory:
 /// wall-clock throughput should scale with shards (simulated energy per
 /// image is shard-invariant).
-fn run_sharded(label: &str, shards: usize, batch: usize, n_images: usize) {
+fn run_sharded(label: &str, shards: usize, batch: usize, n_images: usize) -> Json {
     let spec = xpoint_imc::report::sharding::shard_scaling_spec(shards, batch);
     let mut coord = Coordinator::spawn(
         spec.build_factories().expect("sharded factories"),
         CoordinatorConfig {
             batch_capacity: batch,
             linger: Duration::from_micros(100),
+            autoscale: None,
         },
     );
     let mut gen = DigitGen::new(1);
@@ -90,6 +103,14 @@ fn run_sharded(label: &str, shards: usize, batch: usize, n_images: usize) {
         format_duration(snap.mean_latency),
         format_si(snap.energy_per_image, "J"),
     );
+    bench_case(
+        label,
+        n_images as f64 / snap.sim_time.max(1e-30),
+        &[
+            ("host_img_s", n_images as f64 / wall),
+            ("energy_per_image_j", snap.energy_per_image),
+        ],
+    )
 }
 
 fn main() {
@@ -97,14 +118,23 @@ fn main() {
     let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
     println!("host parallelism: {cores} core(s)\n");
 
-    run("ideal, 1 worker, batch 64", 1, 64, 8192, TmvmMode::Ideal);
-    run("ideal, 2 workers, batch 64", 2, 64, 8192, TmvmMode::Ideal);
-    run("ideal, 1 worker, batch 8 (latency-biased)", 1, 8, 2048, TmvmMode::Ideal);
-    run("parasitic, 1 worker, batch 64", 1, 64, 2048, TmvmMode::Parasitic);
-    run("parasitic, 2 workers, batch 64", 2, 64, 2048, TmvmMode::Parasitic);
+    let mut cases = Vec::new();
+    cases.push(run("ideal, 1 worker, batch 64", 1, 64, 8192, TmvmMode::Ideal));
+    cases.push(run("ideal, 2 workers, batch 64", 2, 64, 8192, TmvmMode::Ideal));
+    cases.push(run(
+        "ideal, 1 worker, batch 8 (latency-biased)",
+        1,
+        8,
+        2048,
+        TmvmMode::Ideal,
+    ));
+    cases.push(run("parasitic, 1 worker, batch 64", 1, 64, 2048, TmvmMode::Parasitic));
+    cases.push(run("parasitic, 2 workers, batch 64", 2, 64, 2048, TmvmMode::Parasitic));
 
     println!();
-    run_sharded("fabric, 1 shard, batch 64", 1, 64, 1024);
-    run_sharded("fabric, 2 shards, batch 64", 2, 64, 1024);
-    run_sharded("fabric, 4 shards, batch 64", 4, 64, 1024);
+    cases.push(run_sharded("fabric, 1 shard, batch 64", 1, 64, 1024));
+    cases.push(run_sharded("fabric, 2 shards, batch 64", 2, 64, 1024));
+    cases.push(run_sharded("fabric, 4 shards, batch 64", 4, 64, 1024));
+
+    emit_bench_json("e2e_throughput", cases);
 }

@@ -5,7 +5,7 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
-use harness::{bench, black_box, exhibit_header};
+use harness::{bench, bench_case, black_box, emit_bench_json, exhibit_header};
 use xpoint_imc::fabric::{FabricConfig, FabricExecutor};
 use xpoint_imc::report::fabric::{
     fabric_scaling_rows, fabric_scaling_table, fabric_workload, FABRIC_GRIDS,
@@ -22,6 +22,24 @@ fn main() {
         "simulated speedup {:.1}× from 1 to {} subarrays\n",
         tn / t1,
         rows.last().expect("rows").nodes
+    );
+    // machine-readable exhibit for the CI perf gate: simulated
+    // throughput is deterministic and hardware-independent
+    emit_bench_json(
+        "fabric_pipeline",
+        rows.iter()
+            .map(|r| {
+                bench_case(
+                    &format!("grid {}x{} batch {}", r.grid_rows, r.grid_cols, r.batch),
+                    r.throughput,
+                    &[
+                        ("cycles", r.cycles as f64),
+                        ("energy_per_image_j", r.energy_per_image),
+                        ("mean_util", r.mean_util),
+                    ],
+                )
+            })
+            .collect(),
     );
 
     // host-side hot path: the event-driven simulation itself

@@ -3,6 +3,12 @@
 //! Each `cargo bench` target regenerates one paper exhibit (printing the
 //! same rows/series the paper reports) and times its hot path with
 //! warmup + repeated measurement.
+//!
+//! When the `BENCH_JSON_DIR` environment variable is set, benches that
+//! call [`emit_bench_json`] additionally write machine-readable
+//! `BENCH_<name>.json` files there (one per bench, schema
+//! `{"bench": .., "cases": [{"name", "throughput", ..}]}`) — the input
+//! of the `bench_gate` CI perf-regression gate.
 
 use std::time::Instant;
 
@@ -74,4 +80,50 @@ pub fn exhibit_header(title: &str) {
     println!("\n================================================================");
     println!("{title}");
     println!("================================================================");
+}
+
+/// One gate-readable case: `name` + `throughput` (the gated metric —
+/// simulated images/s, machine-independent) + any extra metrics
+/// (cycles, energy, host img/s, …) recorded for the artifact.
+#[allow(dead_code)] // shared harness: not every bench emits JSON
+pub fn bench_case(
+    name: &str,
+    throughput: f64,
+    extra: &[(&str, f64)],
+) -> xpoint_imc::util::json::Json {
+    use xpoint_imc::util::json::Json;
+    let mut obj = vec![
+        ("name".to_string(), Json::Str(name.into())),
+        ("throughput".to_string(), Json::Num(throughput)),
+    ];
+    for (k, v) in extra {
+        obj.push(((*k).to_string(), Json::Num(*v)));
+    }
+    Json::Obj(obj)
+}
+
+/// Write `BENCH_<bench>.json` into `$BENCH_JSON_DIR` (no-op when the
+/// variable is unset — interactive `cargo bench` stays file-free).
+#[allow(dead_code)] // shared harness: not every bench emits JSON
+pub fn emit_bench_json(bench: &str, cases: Vec<xpoint_imc::util::json::Json>) {
+    use xpoint_imc::util::json::Json;
+    let Some(dir) = std::env::var_os("BENCH_JSON_DIR") else {
+        return;
+    };
+    let dir = std::path::PathBuf::from(dir);
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("bench-json: cannot create {}: {e}", dir.display());
+        return;
+    }
+    let doc = Json::Obj(vec![
+        ("bench".to_string(), Json::Str(bench.into())),
+        ("cases".to_string(), Json::Arr(cases)),
+    ]);
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let mut text = doc.pretty();
+    text.push('\n');
+    match std::fs::write(&path, text) {
+        Ok(()) => println!("bench-json: wrote {}", path.display()),
+        Err(e) => eprintln!("bench-json: cannot write {}: {e}", path.display()),
+    }
 }

@@ -1,0 +1,255 @@
+//! `bench_gate` — the CI perf-regression gate over the machine-readable
+//! bench output.
+//!
+//! The benches write `BENCH_<name>.json` files (throughput, cycles,
+//! energy per exhibit case) when `BENCH_JSON_DIR` is set; this gate
+//! compares each case's **throughput** against the checked-in baseline
+//! (`rust/benches/baseline.json`) and exits non-zero on a regression
+//! beyond the configured tolerance (default 20%). Gated throughputs are
+//! *simulated* images/s — deterministic and machine-independent, so one
+//! baseline serves every runner.
+//!
+//! Baseline schema:
+//!
+//! ```json
+//! {
+//!   "tolerance": 0.2,
+//!   "mode": "enforce",            // or "bootstrap"
+//!   "benches": {
+//!     "fabric_pipeline": { "grid 1x1 batch 32": { "throughput": 1.2e6 } }
+//!   }
+//! }
+//! ```
+//!
+//! In `bootstrap` mode (or for cases whose baseline throughput is
+//! `null`) the gate only sanity-checks the measurements and writes
+//! `baseline.calibrated.json` next to the measured JSON — check its
+//! values into `benches/baseline.json` and flip the mode to `enforce`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use xpoint_imc::cli::Args;
+use xpoint_imc::util::io::read_text;
+use xpoint_imc::util::json::Json;
+
+/// One measured case.
+struct Measured {
+    case: String,
+    throughput: f64,
+}
+
+/// The verdict for one baseline entry.
+enum Verdict {
+    Pass { ratio: f64 },
+    Regression { ratio: f64 },
+    Missing,
+    Unbaselined,
+}
+
+/// Core comparison (unit-tested below): measured vs baseline throughput
+/// under a relative tolerance. `None` baseline means "record only".
+fn compare(measured: Option<f64>, baseline: Option<f64>, tolerance: f64) -> Verdict {
+    match (measured, baseline) {
+        (None, _) => Verdict::Missing,
+        (Some(_), None) => Verdict::Unbaselined,
+        (Some(m), Some(b)) => {
+            let ratio = if b > 0.0 { m / b } else { f64::INFINITY };
+            if ratio < 1.0 - tolerance {
+                Verdict::Regression { ratio }
+            } else {
+                Verdict::Pass { ratio }
+            }
+        }
+    }
+}
+
+fn load_measured(dir: &Path, bench: &str) -> xpoint_imc::Result<Vec<Measured>> {
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let text = read_text(&path)?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let cases = match doc.get("cases") {
+        Some(Json::Arr(cases)) => cases,
+        _ => anyhow::bail!("{}: missing 'cases' array", path.display()),
+    };
+    let mut out = Vec::with_capacity(cases.len());
+    for c in cases {
+        let name = c
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{}: case without a name", path.display()))?;
+        let throughput = c
+            .get("throughput")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{}: case '{name}' has no throughput", path.display()))?;
+        anyhow::ensure!(
+            throughput.is_finite() && throughput > 0.0,
+            "{}: case '{name}' has degenerate throughput {throughput}",
+            path.display()
+        );
+        out.push(Measured {
+            case: name.to_string(),
+            throughput,
+        });
+    }
+    Ok(out)
+}
+
+fn run(args: &Args) -> xpoint_imc::Result<bool> {
+    let baseline_path = PathBuf::from(args.get_or("baseline", "benches/baseline.json"));
+    let dir = PathBuf::from(args.get_or("dir", "target/bench-json"));
+
+    let text = read_text(&baseline_path)?;
+    let baseline = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", baseline_path.display()))?;
+    let tolerance = baseline
+        .get("tolerance")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.2);
+    let bootstrap = baseline
+        .get("mode")
+        .and_then(Json::as_str)
+        .is_some_and(|m| m == "bootstrap");
+    let benches = match baseline.get("benches") {
+        Some(Json::Obj(entries)) => entries,
+        _ => anyhow::bail!("{}: missing 'benches' object", baseline_path.display()),
+    };
+
+    let mut ok = true;
+    let mut calibrated: Vec<(String, Json)> = Vec::new();
+    for (bench, expected) in benches {
+        let measured = load_measured(&dir, bench)?;
+        let expected = match expected {
+            Json::Obj(entries) => entries.as_slice(),
+            _ => anyhow::bail!("baseline bench '{bench}' must be an object"),
+        };
+        // every baselined case must be measured and fast enough
+        for (case, want) in expected {
+            let want_tp = want.get("throughput").and_then(Json::as_f64);
+            let got = measured
+                .iter()
+                .find(|m| &m.case == case)
+                .map(|m| m.throughput);
+            let verdict = compare(got, if bootstrap { None } else { want_tp }, tolerance);
+            match verdict {
+                Verdict::Pass { ratio } => {
+                    println!("PASS  {bench} :: {case}  ({:.0}% of baseline)", ratio * 100.0);
+                }
+                Verdict::Regression { ratio } => {
+                    ok = false;
+                    println!(
+                        "FAIL  {bench} :: {case}  throughput fell to {:.0}% of baseline \
+                         (tolerance {:.0}%)",
+                        ratio * 100.0,
+                        tolerance * 100.0
+                    );
+                }
+                Verdict::Missing => {
+                    ok = false;
+                    println!("FAIL  {bench} :: {case}  not measured (bench case renamed?)");
+                }
+                Verdict::Unbaselined => {
+                    println!(
+                        "REC   {bench} :: {case}  measured {:.6e} img/s (no baseline yet)",
+                        got.unwrap_or(0.0)
+                    );
+                }
+            }
+        }
+        // surface measured cases the baseline does not know about
+        for m in &measured {
+            if !expected.iter().any(|(case, _)| case == &m.case) {
+                println!(
+                    "NEW   {bench} :: {}  measured {:.6e} img/s (add it to the baseline)",
+                    m.case, m.throughput
+                );
+            }
+        }
+        calibrated.push((
+            bench.clone(),
+            Json::Obj(
+                measured
+                    .iter()
+                    .map(|m| {
+                        (
+                            m.case.clone(),
+                            Json::Obj(vec![(
+                                "throughput".to_string(),
+                                Json::Num(m.throughput),
+                            )]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+
+    // always leave a calibrated baseline next to the measurements — in
+    // bootstrap mode this is the file to check in (then flip to enforce)
+    let calibrated = Json::Obj(vec![
+        ("tolerance".to_string(), Json::Num(tolerance)),
+        ("mode".to_string(), Json::Str("enforce".into())),
+        ("benches".to_string(), Json::Obj(calibrated)),
+    ]);
+    let out = dir.join("baseline.calibrated.json");
+    let mut text = calibrated.pretty();
+    text.push('\n');
+    std::fs::write(&out, text)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", out.display()))?;
+    println!("calibrated baseline written to {}", out.display());
+    if bootstrap {
+        println!(
+            "bootstrap mode: measurements sanity-checked only — check the calibrated \
+             baseline into benches/baseline.json and set \"mode\": \"enforce\""
+        );
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => {
+            eprintln!("bench_gate: throughput regression detected");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench_gate: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_applies_the_tolerance_band() {
+        assert!(matches!(
+            compare(Some(100.0), Some(100.0), 0.2),
+            Verdict::Pass { .. }
+        ));
+        // 81% of baseline: inside the 20% band
+        assert!(matches!(
+            compare(Some(81.0), Some(100.0), 0.2),
+            Verdict::Pass { .. }
+        ));
+        // 79%: regression
+        assert!(matches!(
+            compare(Some(79.0), Some(100.0), 0.2),
+            Verdict::Regression { .. }
+        ));
+        // faster than baseline always passes
+        assert!(matches!(
+            compare(Some(250.0), Some(100.0), 0.2),
+            Verdict::Pass { .. }
+        ));
+        assert!(matches!(compare(None, Some(100.0), 0.2), Verdict::Missing));
+        assert!(matches!(
+            compare(Some(50.0), None, 0.2),
+            Verdict::Unbaselined
+        ));
+    }
+}

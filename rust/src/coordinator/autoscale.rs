@@ -1,0 +1,168 @@
+//! [`AutoscalePolicy`] — queue-driven shard autoscaling with hysteresis.
+//!
+//! The paper's §"system scalability" grows the accelerator by connecting
+//! more 3D XPoint arrays; this policy decides *when*: the coordinator's
+//! scheduler loop feeds it the engine's [`ScaleLoad`] every pass, and it
+//! answers spawn / retire / hold. Decisions are deliberately simple and
+//! fully deterministic — watermark thresholds on backlog per serving
+//! shard, bounded by `[min_shards, max_shards]`, with a cooldown
+//! (counted in evaluations) between consecutive scale events so a bursty
+//! queue doesn't flap the fleet. The *eligibility* side of scaling —
+//! which slot to program, and whether its pulse-endurance budget admits
+//! it — lives in the engine
+//! ([`ShardedEngine`](crate::engine::ShardedEngine)): the policy says
+//! "one more shard", the engine says which cells can still take the
+//! pulses.
+
+use crate::engine::{AutoscaleSpec, ScaleLoad};
+
+/// What the policy wants done right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Load is between the watermarks (or the cooldown is still
+    /// running): leave the fleet alone.
+    Hold,
+    /// Backlog per serving shard crossed the high watermark: spawn.
+    Up,
+    /// Backlog per serving shard fell below the low watermark: retire.
+    Down,
+}
+
+/// The evaluated policy: spec parameters plus the cooldown state.
+#[derive(Clone, Debug)]
+pub struct AutoscalePolicy {
+    min_shards: usize,
+    max_shards: usize,
+    high_watermark: usize,
+    low_watermark: usize,
+    cooldown: u64,
+    /// Evaluations since the last non-`Hold` decision (starts past the
+    /// cooldown so a cold engine can scale immediately).
+    since_event: u64,
+}
+
+impl AutoscalePolicy {
+    /// Build the runtime policy from its spec section.
+    pub fn from_spec(spec: &AutoscaleSpec) -> Self {
+        Self {
+            min_shards: spec.min_shards.max(1),
+            max_shards: spec.max_shards.max(spec.min_shards.max(1)),
+            high_watermark: spec.high_watermark,
+            low_watermark: spec.low_watermark,
+            cooldown: spec.cooldown,
+            since_event: spec.cooldown,
+        }
+    }
+
+    /// Serving-shard floor.
+    pub fn min_shards(&self) -> usize {
+        self.min_shards
+    }
+
+    /// Serving-shard ceiling.
+    pub fn max_shards(&self) -> usize {
+        self.max_shards
+    }
+
+    /// The engine rejected the last decision (walk in flight, budget
+    /// exhausted): give the cooldown back so the policy can retry at the
+    /// next evaluation instead of idling out a window for nothing.
+    pub fn rescind(&mut self) {
+        self.since_event = self.cooldown;
+    }
+
+    /// One evaluation: compare the engine's load against the watermarks.
+    /// Returns `Up`/`Down` at most once per cooldown window, and only
+    /// when the resulting shard count stays within `[min, max]` — so a
+    /// caller that applies every decision can never leave the bounds.
+    pub fn decide(&mut self, load: &ScaleLoad) -> ScaleDecision {
+        if self.since_event < self.cooldown {
+            self.since_event += 1;
+            return ScaleDecision::Hold;
+        }
+        if load.serving == 0 {
+            // nothing serving (transient mid-walk view): never pile on
+            return ScaleDecision::Hold;
+        }
+        let backlog = load.backlog_per_shard();
+        if backlog > self.high_watermark as f64 && load.serving < self.max_shards {
+            self.since_event = 0;
+            return ScaleDecision::Up;
+        }
+        if backlog < self.low_watermark as f64 && load.serving > self.min_shards {
+            self.since_event = 0;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(serving: usize, backlog: usize) -> ScaleLoad {
+        ScaleLoad {
+            serving,
+            parked: 0,
+            queued_images: 0,
+            in_flight_images: backlog,
+        }
+    }
+
+    fn policy(min: usize, max: usize, low: usize, high: usize, cooldown: u64) -> AutoscalePolicy {
+        AutoscalePolicy::from_spec(&AutoscaleSpec {
+            min_shards: min,
+            max_shards: max,
+            high_watermark: high,
+            low_watermark: low,
+            cooldown,
+            pulse_budget: 0,
+        })
+    }
+
+    #[test]
+    fn scales_up_above_high_and_down_below_low() {
+        let mut p = policy(1, 4, 4, 32, 0);
+        assert_eq!(p.decide(&load(1, 40)), ScaleDecision::Up);
+        assert_eq!(p.decide(&load(2, 40)), ScaleDecision::Hold, "20/shard is in band");
+        assert_eq!(p.decide(&load(2, 200)), ScaleDecision::Up);
+        assert_eq!(p.decide(&load(3, 0)), ScaleDecision::Down);
+        assert_eq!(p.decide(&load(1, 0)), ScaleDecision::Hold, "at the floor");
+        assert_eq!(p.decide(&load(4, 400)), ScaleDecision::Hold, "at the ceiling");
+    }
+
+    #[test]
+    fn cooldown_forces_holds_between_events() {
+        let mut p = policy(1, 4, 4, 32, 3);
+        assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Up, "cold start may act");
+        for k in 0..3 {
+            assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Hold, "cooldown tick {k}");
+        }
+        assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn zero_serving_is_a_hold() {
+        let mut p = policy(1, 4, 4, 32, 0);
+        assert_eq!(p.decide(&load(0, 500)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn rescind_returns_the_cooldown() {
+        let mut p = policy(1, 4, 4, 32, 3);
+        assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Up);
+        // the engine rejected it (e.g. ScaleBusy): no cooldown burned
+        p.rescind();
+        assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Up, "retry immediately");
+        // accepted this time: the cooldown applies as usual
+        assert_eq!(p.decide(&load(1, 100)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn bounds_accessors_clamp_degenerate_specs() {
+        let p = policy(3, 1, 4, 32, 0); // max < min (validate() rejects, but stay safe)
+        assert_eq!(p.min_shards(), 3);
+        assert_eq!(p.max_shards(), 3);
+    }
+}

@@ -17,8 +17,9 @@
 //! std-thread based — the build is offline and the workload is CPU-bound
 //! simulation, so threads + channels outperform an async reactor here.
 
-use crate::engine::BackendFactory;
+use crate::engine::{BackendFactory, EngineError};
 use crate::nn::BinaryLayer;
+use super::autoscale::{AutoscalePolicy, ScaleDecision};
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use std::sync::mpsc;
@@ -33,6 +34,9 @@ pub struct CoordinatorConfig {
     pub batch_capacity: usize,
     /// How long a partial batch may wait before shipping.
     pub linger: Duration,
+    /// Elastic autoscaling policy, evaluated in every scheduler's loop
+    /// (engines that cannot scale just hold their fleet).
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -40,6 +44,7 @@ impl Default for CoordinatorConfig {
         Self {
             batch_capacity: 64,
             linger: Duration::from_micros(200),
+            autoscale: None,
         }
     }
 }
@@ -74,10 +79,22 @@ enum Work {
     Swap(Vec<BinaryLayer>),
 }
 
-/// How often an idle scheduler re-polls its in-flight tickets. Small
-/// enough to keep completion latency negligible next to a simulated
-/// batch, large enough not to spin a host core.
-const POLL_INTERVAL: Duration = Duration::from_micros(50);
+/// Upper bound on how long a scheduler parks waiting for engine-side
+/// progress. Completions wake it immediately (asynchronous engines park
+/// on their completion channel — `Engine::wait_event`); the bound only
+/// caps how stale the intake check can get while nothing completes.
+const WAIT_INTERVAL: Duration = Duration::from_micros(200);
+
+/// How often an otherwise-idle scheduler wakes to evaluate the autoscale
+/// policy (idle = nothing in flight; the only reason to wake at all is a
+/// possible scale-down).
+const IDLE_EVAL_INTERVAL: Duration = Duration::from_millis(1);
+
+/// Minimum wall-clock gap between autoscale policy evaluations. Under
+/// load the scheduler loop spins in microseconds; pacing the policy
+/// keeps its cooldown (counted in evaluations) meaning real hysteresis
+/// instead of a handful of loop passes.
+const AUTOSCALE_EVAL_INTERVAL: Duration = Duration::from_millis(1);
 
 /// Deliver one completed batch: replies to every job, then one metrics
 /// record for the batch.
@@ -117,14 +134,24 @@ fn deliver(
 /// The scheduler loop: one per engine. Accepts job batches (and rolling
 /// weight-swap orders) from the leader, submits them, and drains
 /// completions out of order — the only engine surface it touches is
-/// `submit`/`poll`/`begin_swap`/`poll_swap` (+ introspection). A rolling
-/// swap on an asynchronous engine proceeds *while* the loop keeps
-/// submitting traffic, so aggregate throughput never hits zero.
+/// `submit`/`poll`/`begin_swap`/`poll_swap`/`wait_event` plus the elastic
+/// `scale_load`/`spawn_shard`/`retire_shard` trio (+ introspection). A
+/// rolling swap on an asynchronous engine proceeds *while* the loop keeps
+/// submitting traffic, so aggregate throughput never hits zero; the
+/// autoscale policy (when configured) is evaluated every pass against the
+/// engine's live load.
+///
+/// The loop never spins a host core: when a pass makes no progress it
+/// parks in `Engine::wait_event`, which blocks on the engine's completion
+/// channel (asynchronous engines) until something actually happens — the
+/// fix for the 100% CPU burn previously visible while a swap walk had
+/// every shard out of service.
 fn scheduler_main(
     wid: usize,
     factory: BackendFactory,
     wrx: mpsc::Receiver<Work>,
     metrics: Arc<Metrics>,
+    mut policy: Option<AutoscalePolicy>,
 ) {
     let mut engine = match factory() {
         Ok(b) => b,
@@ -133,28 +160,34 @@ fn scheduler_main(
             return;
         }
     };
-    // keep enough batches in flight to cover every shard plus one being
-    // formed; synchronous engines complete at submit, so for them this
-    // bound is never reached
-    let max_in_flight = engine.capabilities().shards.max(1) + 1;
     let mut in_flight: Vec<(u64, Vec<Job>, Instant)> = Vec::new();
     let mut swap_pending = false;
     let mut open = true;
+    let mut last_eval: Option<Instant> = None;
+    let mut last_scale_err = String::new();
 
     while open || !in_flight.is_empty() || swap_pending {
-        // 1. intake — block only when nothing is in flight and no swap
-        // needs driving
+        let mut progressed = false;
+        // keep enough batches in flight to cover every shard plus one
+        // being formed; re-read each pass — an elastic engine's pool
+        // grows and shrinks under the autoscaler. Synchronous engines
+        // complete at submit, so for them this bound is never reached.
+        // With autoscaling, allow extra backlog: the policy can only see
+        // work already submitted to the engine, so without headroom the
+        // high watermark would be unreachable past the first spawn.
+        let headroom = policy.as_ref().map(|p| p.max_shards()).unwrap_or(0);
+        let max_in_flight = engine.capabilities().shards.max(1) + 1 + headroom;
+
+        // 1. intake — block only when nothing needs driving engine-side
+        // (with autoscaling, wake periodically so an idle engine can
+        // still scale down)
         if open && in_flight.len() < max_in_flight {
             let next = if in_flight.is_empty() && !swap_pending {
-                match wrx.recv() {
-                    Ok(work) => Some(work),
-                    Err(_) => {
-                        open = false;
-                        None
-                    }
-                }
-            } else {
-                match wrx.recv_timeout(POLL_INTERVAL) {
+                let recv = match &policy {
+                    None => wrx.recv().map_err(mpsc::RecvTimeoutError::from),
+                    Some(_) => wrx.recv_timeout(IDLE_EVAL_INTERVAL),
+                };
+                match recv {
                     Ok(work) => Some(work),
                     Err(mpsc::RecvTimeoutError::Timeout) => None,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -162,9 +195,21 @@ fn scheduler_main(
                         None
                     }
                 }
+            } else {
+                // work is in flight: take whatever is already queued, but
+                // never block here — step 5 parks on the engine instead
+                match wrx.try_recv() {
+                    Ok(work) => Some(work),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                }
             };
             match next {
                 Some(Work::Jobs(jobs)) => {
+                    progressed = true;
                     let images: Vec<Vec<bool>> =
                         jobs.iter().map(|j| j.image.clone()).collect();
                     // stamp before submit: synchronous engines do the whole
@@ -180,18 +225,18 @@ fn scheduler_main(
                         }
                     }
                 }
-                Some(Work::Swap(target)) => match engine.begin_swap(target) {
-                    // synchronous engines rewrite inline
-                    Ok(Some(report)) => metrics.record_swap(&report),
-                    // a rolling swap is now walking the shards
-                    Ok(None) => swap_pending = true,
-                    Err(e) => eprintln!("worker {wid}: weight swap rejected: {e:#}"),
-                },
+                Some(Work::Swap(target)) => {
+                    progressed = true;
+                    match engine.begin_swap(target) {
+                        // synchronous engines rewrite inline
+                        Ok(Some(report)) => metrics.record_swap(&report),
+                        // a rolling swap is now walking the shards
+                        Ok(None) => swap_pending = true,
+                        Err(e) => eprintln!("worker {wid}: weight swap rejected: {e:#}"),
+                    }
+                }
                 None => {}
             }
-        } else if !in_flight.is_empty() || swap_pending {
-            // intake closed or full: wait for completions without spinning
-            std::thread::sleep(POLL_INTERVAL);
         }
 
         // 2. drain — redeem every ready ticket, in whatever order the
@@ -200,11 +245,13 @@ fn scheduler_main(
         while i < in_flight.len() {
             match engine.poll(in_flight[i].0) {
                 Ok(Some(res)) => {
+                    progressed = true;
                     let (_, jobs, submitted) = in_flight.swap_remove(i);
                     deliver(&metrics, jobs, res, submitted);
                 }
                 Ok(None) => i += 1,
                 Err(e) => {
+                    progressed = true;
                     let (ticket, jobs, _) = in_flight.swap_remove(i);
                     eprintln!(
                         "worker {wid}: batch (ticket {ticket}, {} jobs) failed: {e:#}",
@@ -219,6 +266,7 @@ fn scheduler_main(
         if swap_pending {
             match engine.poll_swap() {
                 Ok(Some(report)) => {
+                    progressed = true;
                     metrics.record_swap(&report);
                     swap_pending = false;
                 }
@@ -229,6 +277,69 @@ fn scheduler_main(
                 }
             }
         }
+
+        // 4. autoscale — evaluate the policy against the engine's live
+        // load (at most once per AUTOSCALE_EVAL_INTERVAL of wall clock)
+        // and fold completed scale events into the metrics
+        if let Some(p) = policy.as_mut() {
+            let due = match last_eval {
+                Some(t) => t.elapsed() >= AUTOSCALE_EVAL_INTERVAL,
+                None => true,
+            };
+            if due {
+                last_eval = Some(Instant::now());
+                // pump the engine first: an otherwise-idle loop would
+                // never drain a finishing walk's events (scale_load is a
+                // pure snapshot), leaving a spawned slot un-rejoined
+                engine.wait_event(Duration::ZERO);
+                let decision = p.decide(&engine.scale_load());
+                let acted = match decision {
+                    ScaleDecision::Up => engine.spawn_shard().map(|_| ()),
+                    ScaleDecision::Down => engine.retire_shard().map(|_| ()),
+                    ScaleDecision::Hold => Ok(()),
+                };
+                match acted {
+                    Ok(()) => last_scale_err.clear(),
+                    Err(e) => {
+                        // the engine rejected the decision — don't burn a
+                        // cooldown window on a shard that never happened
+                        p.rescind();
+                        // a walk already in flight is expected back-pressure
+                        // (EngineError::ScaleBusy — the vendored anyhow keeps
+                        // messages, not types); anything else (budget
+                        // exhausted, engine can't scale) is worth a line,
+                        // once per distinct cause
+                        let msg = format!("{e:#}");
+                        let busy = msg == EngineError::ScaleBusy.to_string();
+                        if !busy && msg != last_scale_err {
+                            eprintln!(
+                                "worker {wid}: autoscale {decision:?} rejected: {msg}"
+                            );
+                            last_scale_err = msg;
+                        }
+                    }
+                }
+            }
+        }
+        for event in engine.take_scale_events() {
+            metrics.record_scale(&event);
+        }
+
+        // 5. park — nothing moved this pass and the engine owes us
+        // progress: block on its completion channel instead of spinning
+        if !progressed && (!in_flight.is_empty() || swap_pending) {
+            engine.wait_event(WAIT_INTERVAL);
+        }
+    }
+    // let an in-flight lifecycle walk land (bounded) so its event — and
+    // the slot's final telemetry — aren't lost at shutdown
+    let mut settle_budget = 100u32;
+    while !engine.scale_settled() && settle_budget > 0 {
+        engine.wait_event(WAIT_INTERVAL);
+        settle_budget -= 1;
+    }
+    for event in engine.take_scale_events() {
+        metrics.record_scale(&event);
     }
     // final per-shard telemetry into the shared metrics (one entry per
     // shard; plain engines contribute a single entry)
@@ -259,9 +370,10 @@ impl Coordinator {
         for (wid, factory) in backends.into_iter().enumerate() {
             let (wtx, wrx) = mpsc::channel::<Work>();
             let m = Arc::clone(&metrics);
+            let policy = config.autoscale.clone();
             worker_txs.push(wtx);
             worker_handles.push(std::thread::spawn(move || {
-                scheduler_main(wid, factory, wrx, m)
+                scheduler_main(wid, factory, wrx, m, policy)
             }));
         }
 
@@ -410,6 +522,7 @@ mod tests {
             CoordinatorConfig {
                 batch_capacity: 8,
                 linger: Duration::from_micros(100),
+                autoscale: None,
             },
         );
         let mut rng = Pcg32::seeded(9);
@@ -442,6 +555,7 @@ mod tests {
             CoordinatorConfig {
                 batch_capacity: 4,
                 linger: Duration::from_micros(50),
+                autoscale: None,
             },
         );
         let mut rng = Pcg32::seeded(10);
@@ -488,6 +602,7 @@ mod tests {
             CoordinatorConfig {
                 batch_capacity: 8,
                 linger: Duration::from_micros(50),
+                autoscale: None,
             },
         );
         let images: Vec<Vec<bool>> = (0..64)
@@ -541,6 +656,7 @@ mod tests {
             CoordinatorConfig {
                 batch_capacity: 8,
                 linger: Duration::from_micros(50),
+                autoscale: None,
             },
         );
         let mut rng2 = Pcg32::seeded(32);
@@ -594,6 +710,72 @@ mod tests {
         assert_eq!(snap.images, 32);
     }
 
+    /// The autoscaler runs live in the scheduler loop: a sustained burst
+    /// over an elastic 1-shard engine crosses the (aggressively low) high
+    /// watermark, the fleet grows, and every prediction stays correct.
+    #[test]
+    fn scheduler_autoscales_an_elastic_engine_under_burst() {
+        use crate::engine::AutoscaleSpec;
+        let mut rng = Pcg32::seeded(41);
+        let layer = BinaryLayer::new(
+            (0..10)
+                .map(|_| (0..25).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            4,
+        );
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 32,
+                span: Some(32),
+                ..ArraySpec::default()
+            })
+            .with_batching(16, 100)
+            .with_layers(vec![layer.clone()])
+            .with_autoscale(AutoscaleSpec {
+                min_shards: 1,
+                max_shards: 3,
+                high_watermark: 1,
+                low_watermark: 0,
+                cooldown: 0,
+                pulse_budget: 0,
+            })
+            .with_workers(1);
+        // low_watermark 0 can never undercut (backlog is never < 0), so
+        // the fleet only grows — deterministic assertions below. The
+        // burst is large enough that several paced policy evaluations
+        // land while backlog is visible.
+        let mut coord = Coordinator::spawn(
+            spec.build_factories().expect("elastic factories"),
+            spec.coordinator_config(),
+        );
+        const N: usize = 4096;
+        let images: Vec<Vec<bool>> = (0..N)
+            .map(|_| (0..25).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
+            .collect();
+        for (img, rx) in images.iter().zip(rxs) {
+            let pred = rx.recv_timeout(Duration::from_secs(60)).expect("reply");
+            assert_eq!(pred.bits, layer.forward(img), "identity preserved");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.images, N as u64);
+        assert!(
+            snap.spawns >= 1,
+            "a {N}-image burst over a 1-shard engine with watermark 1 must scale up"
+        );
+        assert!(snap.spawn_pulses > 0, "spawns paid their programming");
+        assert_eq!(snap.retires, 0, "low watermark 0 never triggers");
+        // final telemetry covers every slot, and each carries its wear
+        assert!(snap.shards.len() >= 2);
+        assert!(snap.shards.iter().all(|t| t.wear_pulses > 0));
+        let spread: u64 = snap.shards.iter().map(|t| t.images).sum();
+        assert_eq!(spread, N as u64, "every image accounted to some slot");
+    }
+
     #[test]
     fn submit_after_leader_exit_errors_instead_of_panicking() {
         let (_, be) = make_backend(7);
@@ -617,6 +799,7 @@ mod tests {
             CoordinatorConfig {
                 batch_capacity: 1000,
                 linger: Duration::from_secs(60), // never ships on its own
+                autoscale: None,
             },
         );
         let mut rng = Pcg32::seeded(11);

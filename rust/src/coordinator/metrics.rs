@@ -1,6 +1,6 @@
 //! Lock-cheap metrics aggregation for the coordinator.
 
-use crate::engine::{SwapReport, Telemetry};
+use crate::engine::{ScaleEvent, ScaleEventKind, SwapReport, Telemetry};
 use crate::util::stats::Welford;
 use std::sync::Mutex;
 
@@ -26,6 +26,12 @@ struct Inner {
     reset_pulses: u64,      // RESET pulses across those swaps
     swap_time: f64,         // simulated programming time [s]
     swap_energy: f64,       // programming energy [J]
+    spawns: u64,            // shards spawned by the autoscaler
+    retires: u64,           // shards retired (drained → parked)
+    scale_vetoes: u64,      // spawns vetoed by the pulse-endurance budget
+    spawn_pulses: u64,      // programming pulses across those spawns
+    spawn_time: f64,        // simulated spawn-programming time [s]
+    spawn_energy: f64,      // spawn-programming energy [J]
 }
 
 /// A point-in-time copy of the aggregated metrics.
@@ -57,6 +63,22 @@ pub struct MetricsSnapshot {
     pub swap_time: f64,
     /// Programming energy across those swaps \[J\].
     pub swap_energy: f64,
+    /// Shards the autoscaler spawned into the serving pool.
+    pub spawns: u64,
+    /// Shards the autoscaler drained and parked.
+    pub retires: u64,
+    /// Slots vetoed because their pulse-endurance budget would be
+    /// exceeded — recorded once per slot per park / resident change, not
+    /// per spawn attempt (per-shard wear itself is in
+    /// `shards[..].wear_pulses`).
+    pub scale_vetoes: u64,
+    /// Programming pulses spent spawning shards (full images into fresh
+    /// cells + deltas into re-activated parked slots).
+    pub spawn_pulses: u64,
+    /// Simulated time spent on spawn programming \[s\].
+    pub spawn_time: f64,
+    /// Energy spent on spawn programming \[J\].
+    pub spawn_energy: f64,
 }
 
 impl Metrics {
@@ -107,6 +129,22 @@ impl Metrics {
         m.swap_energy += report.energy;
     }
 
+    /// Record one elastic lifecycle event (spawn / retire / budget veto)
+    /// drained from an autoscaling engine.
+    pub fn record_scale(&self, event: &ScaleEvent) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        match event.kind {
+            ScaleEventKind::Spawn { .. } => {
+                m.spawns += 1;
+                m.spawn_pulses += event.pulses;
+                m.spawn_time += event.time;
+                m.spawn_energy += event.energy;
+            }
+            ScaleEventKind::Retire => m.retires += 1,
+            ScaleEventKind::Veto => m.scale_vetoes += 1,
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics poisoned");
         MetricsSnapshot {
@@ -133,6 +171,12 @@ impl Metrics {
             reset_pulses: m.reset_pulses,
             swap_time: m.swap_time,
             swap_energy: m.swap_energy,
+            spawns: m.spawns,
+            retires: m.retires,
+            scale_vetoes: m.scale_vetoes,
+            spawn_pulses: m.spawn_pulses,
+            spawn_time: m.spawn_time,
+            spawn_energy: m.spawn_energy,
         }
     }
 }
@@ -165,6 +209,52 @@ mod tests {
         assert!(s.shards.is_empty());
         assert_eq!(s.swaps, 0);
         assert_eq!(s.swap_energy, 0.0);
+        assert_eq!((s.spawns, s.retires, s.scale_vetoes), (0, 0, 0));
+        assert_eq!(s.spawn_pulses, 0);
+    }
+
+    #[test]
+    fn scale_events_split_by_kind() {
+        let m = Metrics::new();
+        m.record_scale(&ScaleEvent {
+            kind: ScaleEventKind::Spawn { fresh: true },
+            shard: 1,
+            pulses: 64,
+            energy: 2e-12,
+            time: 1e-6,
+            serving_after: 2,
+        });
+        m.record_scale(&ScaleEvent {
+            kind: ScaleEventKind::Spawn { fresh: false },
+            shard: 2,
+            pulses: 16,
+            energy: 5e-13,
+            time: 2e-7,
+            serving_after: 3,
+        });
+        m.record_scale(&ScaleEvent {
+            kind: ScaleEventKind::Retire,
+            shard: 2,
+            pulses: 0,
+            energy: 0.0,
+            time: 0.0,
+            serving_after: 2,
+        });
+        m.record_scale(&ScaleEvent {
+            kind: ScaleEventKind::Veto,
+            shard: 0,
+            pulses: 128,
+            energy: 0.0,
+            time: 0.0,
+            serving_after: 2,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.spawns, 2);
+        assert_eq!(s.retires, 1);
+        assert_eq!(s.scale_vetoes, 1);
+        assert_eq!(s.spawn_pulses, 80, "veto pulses are projections, not spent");
+        assert!((s.spawn_energy - 2.5e-12).abs() < 1e-24);
+        assert!((s.spawn_time - 1.2e-6).abs() < 1e-18);
     }
 
     #[test]

@@ -15,10 +15,17 @@
 //! [`Telemetry`](crate::engine::Telemetry) flows into
 //! [`MetricsSnapshot::shards`].
 //!
+//! With an [`AutoscalePolicy`] configured ([`CoordinatorConfig`]), each
+//! scheduler also evaluates queue-driven elastic scaling every pass:
+//! backlog above the high watermark spawns a shard (endurance budgets
+//! veto worn slots), backlog below the low watermark retires one, and
+//! every completed scale event lands in the metrics.
+//!
 //! `Backend` is a re-export of `engine::Engine` (the engine API subsumed
 //! the old coordinator-local trait); the concrete backends live in
 //! [`crate::engine::backends`] and [`crate::engine::sharded`].
 
+pub mod autoscale;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -26,6 +33,7 @@ pub mod metrics;
 pub use crate::engine::{
     Engine as Backend, BackendFactory, InferenceResult, ShardedEngine, SimBackend, XlaBackend,
 };
+pub use autoscale::{AutoscalePolicy, ScaleDecision};
 pub use batcher::Batcher;
 pub use engine::{Coordinator, CoordinatorConfig, Prediction};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -88,6 +88,10 @@ pub struct Telemetry {
     /// weight-distribution traffic; separate from `energy` for the same
     /// reason).
     pub program_energy: f64,
+    /// Cumulative SET+RESET pulses programmed into this engine's cells
+    /// (swaps, plus spawn programming for elastic shards) — the endurance
+    /// wear the autoscaler budgets against.
+    pub wear_pulses: u64,
     /// Per-subarray busy fraction of the most recent batch.
     pub utilization: Vec<f64>,
 }
@@ -178,6 +182,75 @@ impl From<&ReprogramPlan> for SwapReport {
     }
 }
 
+/// Point-in-time load an autoscaling policy plans with: how many shards
+/// are serving, how many are parked, and how much work is waiting on or
+/// inside the engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScaleLoad {
+    /// Shards currently in the dispatch pool.
+    pub serving: usize,
+    /// Shards drained and parked (retired hardware, wear history kept).
+    pub parked: usize,
+    /// Images parked in the engine-level queue (not yet on any shard).
+    pub queued_images: usize,
+    /// Images submitted to shards and not yet drained.
+    pub in_flight_images: usize,
+}
+
+impl ScaleLoad {
+    /// Backlog (queued + in-flight images) per serving shard — the
+    /// queue-depth signal the watermarks compare against.
+    pub fn backlog_per_shard(&self) -> f64 {
+        if self.serving == 0 {
+            return 0.0;
+        }
+        (self.queued_images + self.in_flight_images) as f64 / self.serving as f64
+    }
+}
+
+/// What kind of elastic lifecycle event happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleEventKind {
+    /// A shard entered the dispatch pool: a parked slot reprogrammed back
+    /// (`fresh: false`) or a brand-new slot pulsed its first full weight
+    /// image into fresh cells (`fresh: true`).
+    Spawn { fresh: bool },
+    /// A serving shard drained and parked.
+    Retire,
+    /// A parked shard was skipped for spawn because reprogramming it
+    /// would exceed its pulse-endurance budget.
+    Veto,
+}
+
+impl ScaleEventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Spawn { fresh: true } => "spawn-fresh",
+            Self::Spawn { fresh: false } => "spawn-rejoin",
+            Self::Retire => "retire",
+            Self::Veto => "veto",
+        }
+    }
+}
+
+/// One completed elastic lifecycle event, with the programming cost it
+/// carried (zero for retires and no-op rejoins).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleEvent {
+    pub kind: ScaleEventKind,
+    /// Shard slot the event happened to.
+    pub shard: usize,
+    /// SET+RESET pulses the event programmed (projected pulses for a
+    /// `Veto`).
+    pub pulses: u64,
+    /// Programming energy \[J\].
+    pub energy: f64,
+    /// Serialized programming time \[s\].
+    pub time: f64,
+    /// Serving shards after the event took effect.
+    pub serving_after: usize,
+}
+
 /// A batched binary-NN inference engine at some fidelity.
 ///
 /// Not `Send`: PJRT handles are thread-affine, so the coordinator
@@ -252,6 +325,68 @@ pub trait Engine {
     /// [`EngineError::NoSwap`] when no swap is active.
     fn poll_swap(&mut self) -> crate::Result<Option<SwapReport>> {
         Err(EngineError::NoSwap.into())
+    }
+
+    /// Load snapshot for autoscaling decisions. Plain engines are one
+    /// always-serving shard with no engine-side backlog visibility.
+    fn scale_load(&self) -> ScaleLoad {
+        ScaleLoad {
+            serving: 1,
+            ..ScaleLoad::default()
+        }
+    }
+
+    /// Bring one more shard into the dispatch pool: reprogram a parked
+    /// slot whose pulse-endurance budget admits the delta, or construct a
+    /// fresh slot and pulse the full weight image into it. Non-blocking —
+    /// returns the shard index once the operation is underway; the shard
+    /// walks `Spawning → Programming → Rejoining → Serving` while traffic
+    /// keeps flowing. Typed failures: [`EngineError::ScaleUnsupported`]
+    /// (no elastic template), [`EngineError::ScaleBusy`],
+    /// [`EngineError::PulseBudget`].
+    fn spawn_shard(&mut self) -> crate::Result<usize> {
+        Err(EngineError::ScaleUnsupported {
+            kind: self.capabilities().kind.name(),
+        }
+        .into())
+    }
+
+    /// Take one shard out of the dispatch pool: it drains (`Serving →
+    /// Draining → Parked`) while its completed tickets stay redeemable.
+    /// Non-blocking; picks the most-worn serving shard so rest goes to
+    /// the cells that need it. Typed failures mirror
+    /// [`spawn_shard`](Engine::spawn_shard), plus
+    /// [`EngineError::LastServingShard`].
+    fn retire_shard(&mut self) -> crate::Result<usize> {
+        Err(EngineError::ScaleUnsupported {
+            kind: self.capabilities().kind.name(),
+        }
+        .into())
+    }
+
+    /// Drain the elastic lifecycle events completed since the last call
+    /// (spawns, retires, budget vetoes) — the coordinator folds these
+    /// into its metrics. Plain engines never produce any.
+    fn take_scale_events(&mut self) -> Vec<ScaleEvent> {
+        Vec::new()
+    }
+
+    /// Whether no elastic lifecycle walk (spawn/retire) is currently in
+    /// flight. Always true for engines that cannot scale; schedulers use
+    /// it to let an in-progress walk land (and publish its event) before
+    /// shutting down.
+    fn scale_settled(&self) -> bool {
+        true
+    }
+
+    /// Park the caller until the engine may have made progress (a
+    /// completion or lifecycle event arrived) or `timeout` elapsed.
+    /// Schedulers call this instead of spinning on `poll` — an
+    /// asynchronous engine blocks on its completion channel (waking the
+    /// moment a shard reports), while the synchronous engines, which
+    /// complete everything inside `submit`, simply sleep out the timeout.
+    fn wait_event(&mut self, timeout: std::time::Duration) {
+        std::thread::sleep(timeout);
     }
 }
 
@@ -345,6 +480,34 @@ mod tests {
         assert_eq!(a.shards, 2);
         assert!((a.time - 2e-6).abs() < 1e-18);
         assert!((a.energy - 4e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn scale_load_backlog_is_per_serving_shard() {
+        let load = ScaleLoad {
+            serving: 2,
+            parked: 1,
+            queued_images: 6,
+            in_flight_images: 10,
+        };
+        assert!((load.backlog_per_shard() - 8.0).abs() < 1e-12);
+        assert_eq!(
+            ScaleLoad {
+                serving: 0,
+                ..ScaleLoad::default()
+            }
+            .backlog_per_shard(),
+            0.0,
+            "no serving shards: no meaningful backlog signal"
+        );
+    }
+
+    #[test]
+    fn scale_event_kinds_have_names() {
+        assert_eq!(ScaleEventKind::Spawn { fresh: true }.name(), "spawn-fresh");
+        assert_eq!(ScaleEventKind::Spawn { fresh: false }.name(), "spawn-rejoin");
+        assert_eq!(ScaleEventKind::Retire.name(), "retire");
+        assert_eq!(ScaleEventKind::Veto.name(), "veto");
     }
 
     #[test]

@@ -165,6 +165,7 @@ impl Engine for SimBackend {
         self.telemetry.swaps += 1;
         self.telemetry.program_time += plan.time;
         self.telemetry.program_energy += plan.energy;
+        self.telemetry.wear_pulses += plan.cells_changed();
         Ok(SwapReport::from(&plan))
     }
 }
@@ -285,6 +286,7 @@ impl Engine for FabricBackend {
         self.telemetry.swaps += 1;
         self.telemetry.program_time += run.makespan;
         self.telemetry.program_energy += run.energy;
+        self.telemetry.wear_pulses += run.plan.cells_changed();
         let mut report = SwapReport::from(&run.plan);
         // the fabric's rewrite is spine-streamed and node-parallel: report
         // the simulated makespan and the full (pulse + link) energy

@@ -78,6 +78,16 @@ pub enum EngineError {
     SwapInProgress,
     /// `poll_swap` with no swap begun (or the report already collected).
     NoSwap,
+    /// The engine cannot spawn or retire shards (no elastic template).
+    ScaleUnsupported { kind: &'static str },
+    /// `spawn_shard`/`retire_shard` while another lifecycle walk (rolling
+    /// swap or scale operation) is still in progress.
+    ScaleBusy,
+    /// Retiring the last serving shard would stop serving entirely.
+    LastServingShard,
+    /// Programming the spawn target would exceed the per-shard
+    /// pulse-endurance budget on every candidate shard.
+    PulseBudget { needed: u64, budget: u64 },
 }
 
 impl fmt::Display for EngineError {
@@ -151,6 +161,25 @@ impl fmt::Display for EngineError {
                 write!(f, "a rolling swap is already in progress — poll it to completion first")
             }
             Self::NoSwap => write!(f, "no swap in progress — begin one before polling"),
+            Self::ScaleUnsupported { kind } => write!(
+                f,
+                "the {kind} engine cannot spawn or retire shards — elastic scaling \
+                 needs a sharded engine built from an autoscale spec"
+            ),
+            Self::ScaleBusy => write!(
+                f,
+                "a shard lifecycle walk (rolling swap or scale operation) is already \
+                 in progress — let it finish first"
+            ),
+            Self::LastServingShard => write!(
+                f,
+                "cannot retire the last serving shard — serving must never stop"
+            ),
+            Self::PulseBudget { needed, budget } => write!(
+                f,
+                "spawn vetoed: programming needs {needed} pulses but the per-shard \
+                 endurance budget is {budget}"
+            ),
         }
     }
 }
@@ -206,6 +235,21 @@ mod tests {
             "no swap in progress — begin one before polling"
         );
         assert!(EngineError::SwapInProgress.to_string().contains("already in progress"));
+        assert!(EngineError::ScaleUnsupported { kind: "ideal" }
+            .to_string()
+            .contains("cannot spawn or retire shards"));
+        assert!(EngineError::ScaleBusy.to_string().contains("already"));
+        assert!(EngineError::LastServingShard
+            .to_string()
+            .contains("last serving shard"));
+        let e = EngineError::PulseBudget {
+            needed: 120,
+            budget: 100,
+        };
+        assert!(
+            e.to_string().contains("120") && e.to_string().contains("100"),
+            "{e}"
+        );
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //!   threads behind an asynchronous, capability-aware least-loaded
 //!   submit/poll scheduler (the `Sharded` backend kind), with rolling
 //!   live weight swaps through the [`ShardState`] lifecycle
-//!   (`Serving → Draining → Reprogramming → Rejoining`).
+//!   (`Serving → Draining → Reprogramming → Rejoining`) and — when built
+//!   from an [`AutoscaleSpec`] — an elastic spawn/retire lifecycle
+//!   (`Serving → Draining → Parked` / `Spawning → Programming →
+//!   Rejoining`) with per-slot pulse-endurance wear budgets.
 //! * [`error`] — [`EngineError`], the typed error surface (implements
 //!   `std::error::Error`, lifts into `anyhow` via `?`).
 //!
@@ -38,12 +41,13 @@ pub mod sharded;
 pub mod spec;
 
 pub use api::{
-    BackendFactory, Capabilities, Completions, Engine, InferenceResult, SwapReport, Telemetry,
-    Ticket,
+    BackendFactory, Capabilities, Completions, Engine, InferenceResult, ScaleEvent,
+    ScaleEventKind, ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 pub use error::EngineError;
-pub use sharded::{ShardState, ShardedEngine};
+pub use sharded::{ShardBuilder, ShardState, ShardedEngine};
 pub use spec::{
-    ArraySpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource, ShardSpec,
+    ArraySpec, AutoscaleSpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource,
+    ShardSpec,
 };

@@ -42,30 +42,71 @@
 //! per-subarray utilization concatenates in shard order), and
 //! [`Engine::shard_telemetry`] exposes the per-shard breakdown so the
 //! coordinator's metrics and the report exhibits can show load balance.
+//!
+//! ## Elastic lifecycle: spawn / retire with wear budgets
+//!
+//! An engine built from an autoscale spec ([`ShardedEngine::elastic`])
+//! additionally owns a [`ShardBuilder`] — a reusable template that
+//! constructs one more inner engine on demand — and tracks, per shard
+//! slot, the weight image its cells physically hold and the cumulative
+//! SET/RESET pulses programmed into them (endurance wear):
+//!
+//! * [`Engine::retire_shard`] — the most-worn serving shard walks
+//!   `Serving → Draining → Parked`: it leaves the dispatch pool, its
+//!   outstanding completions drain (and stay redeemable), and the slot
+//!   parks with its cells and wear history intact.
+//! * [`Engine::spawn_shard`] — the reverse walk. A parked slot whose
+//!   pulse budget admits the *delta* back to the resident network
+//!   reprograms in place (`Parked → Programming → Rejoining → Serving`;
+//!   a slot that parked before a swap pays only the incremental diff);
+//!   a worn slot is **vetoed** and never selected. With no eligible
+//!   parked slot, a brand-new slot is constructed from the template and
+//!   pulses the full weight image into fresh cells
+//!   (`Spawning → Rejoining → Serving`) — the spawn cost the
+//!   [`ReprogramPlan`] machinery prices.
+//!
+//! At most one lifecycle walk (rolling swap *or* scale operation) is in
+//! flight at a time; every completed walk emits a
+//! [`ScaleEvent`](super::api::ScaleEvent) the coordinator folds into its
+//! metrics.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api::{
-    BackendFactory, Capabilities, Engine, InferenceResult, SwapReport, Telemetry, Ticket,
+    BackendFactory, Capabilities, Engine, InferenceResult, ScaleEvent, ScaleEventKind,
+    ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 use super::error::EngineError;
 use super::spec::BackendKind;
+use crate::device::{DeviceParams, ReprogramPlan};
 use crate::nn::BinaryLayer;
 
-/// Lifecycle of one shard under the rolling-swap scheduler.
+/// Lifecycle of one shard under the rolling-swap / elastic scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardState {
     /// In the dispatch pool, accepting batches.
     Serving,
     /// Out of the pool; outstanding completions are draining (and remain
-    /// redeemable through `poll`).
+    /// redeemable through `poll`). Ends in `Reprogramming` for a rolling
+    /// swap, `Parked` for a retire.
     Draining,
-    /// The shard thread is rewriting its engine's weights in place.
+    /// The shard thread is rewriting its engine's weights in place
+    /// (rolling swap).
     Reprogramming,
-    /// Reprogrammed, about to re-enter the dispatch pool.
+    /// Reprogrammed (or freshly constructed), about to re-enter the
+    /// dispatch pool.
     Rejoining,
+    /// Drained and retired from the pool; the slot keeps its cells and
+    /// wear history and can be re-activated by a later spawn.
+    Parked,
+    /// A brand-new slot's worker thread is constructing its engine.
+    Spawning,
+    /// A parked slot is reprogramming its cells back to the resident
+    /// network before rejoining (spawn of a parked slot).
+    Programming,
 }
 
 impl ShardState {
@@ -75,8 +116,52 @@ impl ShardState {
             Self::Draining => "draining",
             Self::Reprogramming => "reprogramming",
             Self::Rejoining => "rejoining",
+            Self::Parked => "parked",
+            Self::Spawning => "spawning",
+            Self::Programming => "programming",
         }
     }
+}
+
+/// Reusable shard template: constructs one inner engine serving the given
+/// layer stack, on whatever thread calls it. This is what makes an engine
+/// *elastic* — [`BackendFactory`] is one-shot, a builder is for the
+/// lifetime of the fleet.
+pub type ShardBuilder =
+    Arc<dyn Fn(Vec<BinaryLayer>) -> crate::Result<Box<dyn Engine>> + Send + Sync>;
+
+/// Programming cost of rewriting a slot's cells to `to`: the per-layer
+/// [`ReprogramPlan`] diffs, merged. `from: None` means fresh (all-RESET)
+/// cells — the full weight image costs one SET pulse per stored 1.
+fn image_plan(
+    from: Option<&[BinaryLayer]>,
+    to: &[BinaryLayer],
+) -> crate::Result<ReprogramPlan> {
+    let params = DeviceParams::default();
+    if let Some(from) = from {
+        anyhow::ensure!(
+            from.len() == to.len(),
+            "cell image has {} layers but the resident network has {}",
+            from.len(),
+            to.len()
+        );
+    }
+    let mut total = ReprogramPlan::default();
+    for (i, layer) in to.iter().enumerate() {
+        let plan = match from {
+            Some(f) => ReprogramPlan::diff(&f[i].weights, &layer.weights, &params)?,
+            None => {
+                let blank: Vec<Vec<bool>> = layer
+                    .weights
+                    .iter()
+                    .map(|row| vec![false; row.len()])
+                    .collect();
+                ReprogramPlan::diff(&blank, &layer.weights, &params)?
+            }
+        };
+        total.merge(&plan);
+    }
+    Ok(total)
 }
 
 /// Sentinel shard id for tickets parked behind a rolling swap (queued,
@@ -122,6 +207,17 @@ struct Shard {
     in_flight_images: usize,
     state: ShardState,
     alive: bool,
+    /// Cumulative SET+RESET pulses programmed into this slot's cells
+    /// (initial image, swaps, spawn programming) — endurance wear.
+    pulses: u64,
+    /// The weight image the slot's cells physically hold (tracked on
+    /// elastic engines so re-spawning a parked slot prices only the
+    /// delta back to the resident network).
+    cells: Option<Vec<BinaryLayer>>,
+    /// A budget veto was already recorded for this parked slot (reset
+    /// when it parks again or the resident network changes), so repeated
+    /// spawn attempts don't inflate the veto counter.
+    vetoed: bool,
 }
 
 /// Bookkeeping for one outstanding ticket.
@@ -138,6 +234,24 @@ struct RollingSwap {
     current: Option<usize>,
     report: SwapReport,
     failed: Option<String>,
+}
+
+/// The in-progress elastic lifecycle walk (at most one at a time, and
+/// mutually exclusive with a rolling swap).
+#[derive(Clone, Copy, Debug)]
+enum ScaleOp {
+    /// A slot is joining the pool; `pulses`/`energy`/`time` carry the
+    /// programming cost priced for it (updated to the actual report for
+    /// parked-slot reprogramming).
+    Spawn {
+        shard: usize,
+        fresh: bool,
+        pulses: u64,
+        energy: f64,
+        time: f64,
+    },
+    /// A serving slot is draining toward `Parked`.
+    Retire { shard: usize },
 }
 
 /// N engine shards behind one [`Engine`] — see the module docs.
@@ -157,6 +271,17 @@ pub struct ShardedEngine {
     swap: Option<RollingSwap>,
     /// A finished rolling swap awaiting redemption via `poll_swap`.
     swap_done: Option<Result<SwapReport, String>>,
+    /// Elastic template — `Some` only for autoscale-built engines.
+    builder: Option<ShardBuilder>,
+    /// The network the serving fleet holds (updated by successful rolling
+    /// swaps; what a spawned slot must be programmed to).
+    resident: Option<Vec<BinaryLayer>>,
+    /// Per-shard pulse-endurance budget (0 = unlimited).
+    pulse_budget: u64,
+    /// The lifecycle walk currently in flight, if any.
+    scale_op: Option<ScaleOp>,
+    /// Completed lifecycle events awaiting [`Engine::take_scale_events`].
+    events: Vec<ScaleEvent>,
 }
 
 fn shard_main(
@@ -195,8 +320,50 @@ fn shard_main(
 impl ShardedEngine {
     /// Spawn one worker thread per factory and construct each shard's
     /// engine on its own thread (builds run concurrently). Fails with the
-    /// first shard's construction error if any factory fails.
+    /// first shard's construction error if any factory fails. The shard
+    /// fleet is **fixed**: [`Engine::spawn_shard`]/[`Engine::retire_shard`]
+    /// are typed errors — use [`ShardedEngine::elastic`] for that.
     pub fn new(factories: Vec<BackendFactory>) -> crate::Result<Self> {
+        Self::assemble(factories)
+    }
+
+    /// Elastic construction: `initial` shards built from `builder` on the
+    /// `layers` network, with spawn/retire enabled. Every slot is charged
+    /// the full-image programming cost of pulsing `layers` into fresh
+    /// cells — endurance wear starts at deployment, not at the first
+    /// swap. `pulse_budget` is the per-slot endurance budget further
+    /// programming must fit in (0 = unlimited).
+    pub fn elastic(
+        builder: ShardBuilder,
+        layers: Vec<BinaryLayer>,
+        initial: usize,
+        pulse_budget: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            initial >= 1,
+            "elastic engine needs at least one initial shard"
+        );
+        anyhow::ensure!(!layers.is_empty(), "elastic engine needs a network");
+        let factories: Vec<BackendFactory> = (0..initial)
+            .map(|_| {
+                let b = builder.clone();
+                let l = layers.clone();
+                Box::new(move || (*b)(l)) as BackendFactory
+            })
+            .collect();
+        let mut engine = Self::assemble(factories)?;
+        let image = image_plan(None, &layers)?;
+        for s in &mut engine.shards {
+            s.pulses = image.cells_changed();
+            s.cells = Some(layers.clone());
+        }
+        engine.builder = Some(builder);
+        engine.resident = Some(layers);
+        engine.pulse_budget = pulse_budget;
+        Ok(engine)
+    }
+
+    fn assemble(factories: Vec<BackendFactory>) -> crate::Result<Self> {
         anyhow::ensure!(
             !factories.is_empty(),
             "sharded engine needs at least one shard"
@@ -235,6 +402,9 @@ impl ShardedEngine {
                 in_flight_images: 0,
                 state: ShardState::Serving,
                 alive: true,
+                pulses: 0,
+                cells: None,
+                vetoed: false,
             });
         }
 
@@ -262,6 +432,11 @@ impl ShardedEngine {
             queued: VecDeque::new(),
             swap: None,
             swap_done: None,
+            builder: None,
+            resident: None,
+            pulse_budget: 0,
+            scale_op: None,
+            events: Vec::new(),
         })
     }
 
@@ -284,6 +459,51 @@ impl ShardedEngine {
     /// Whether a rolling swap is currently walking the shards.
     pub fn swap_in_progress(&self) -> bool {
         self.swap.is_some()
+    }
+
+    /// Shards currently in the dispatch pool.
+    pub fn serving_shards(&self) -> usize {
+        self.serving_count()
+    }
+
+    /// Cumulative programming pulses per shard slot — the endurance wear
+    /// the autoscaler budgets against.
+    pub fn shard_wear(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.pulses).collect()
+    }
+
+    /// Drain completion channels and advance any in-flight lifecycle walk
+    /// without blocking (exhibit/test hook — `submit`/`poll` do this on
+    /// every call).
+    pub fn pump(&mut self) {
+        self.drain_events();
+    }
+
+    fn serving_count(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.alive && s.state == ShardState::Serving)
+            .count()
+    }
+
+    /// Re-derive the engine-level capabilities from the serving pool
+    /// (called whenever a scale operation changes the pool).
+    fn recompute_caps(&mut self) {
+        let serving: Vec<&Shard> = self
+            .shards
+            .iter()
+            .filter(|s| s.alive && s.state == ShardState::Serving)
+            .collect();
+        self.caps.shards = serving.len().max(1);
+        if !serving.is_empty() {
+            self.caps.nodes = serving.iter().map(|s| s.caps.nodes).sum();
+            self.caps.tiles = serving.iter().map(|s| s.caps.tiles).sum();
+            self.caps.max_batch = serving
+                .iter()
+                .map(|s| s.caps.max_batch)
+                .max()
+                .unwrap_or(self.caps.max_batch);
+        }
     }
 
     /// Fail every outstanding ticket on a shard whose thread is gone.
@@ -309,9 +529,32 @@ impl ShardedEngine {
 
     fn apply_event(&mut self, shard: usize, evt: ShardEvent) {
         match evt {
-            // Built is consumed in new(); afterwards the channel only
-            // carries completions
-            ShardEvent::Built(_) => {}
+            // the initial fleet's Built events are consumed in assemble();
+            // during operation one only arrives for a freshly spawned slot
+            ShardEvent::Built(res) => {
+                if self.shards[shard].state != ShardState::Spawning {
+                    return;
+                }
+                match res {
+                    Ok(caps) => {
+                        // constructed directly on the resident network —
+                        // the full-image cost was priced (and the wear
+                        // charged) when the spawn was ordered
+                        self.shards[shard].caps = caps;
+                        self.shards[shard].state = ShardState::Rejoining;
+                    }
+                    Err(e) => {
+                        // template validated eagerly at spec build; a
+                        // runtime construction failure kills only the slot
+                        // (and must not fail silently — the autoscaler
+                        // thinks it added capacity)
+                        eprintln!(
+                            "shard {shard}: spawned slot failed to construct: {e}"
+                        );
+                        self.shards[shard].alive = false;
+                    }
+                }
+            }
             ShardEvent::Done {
                 ticket,
                 result,
@@ -327,28 +570,77 @@ impl ShardedEngine {
             }
             ShardEvent::Swapped { result, telemetry } => {
                 self.shards[shard].telemetry = telemetry;
-                match result {
-                    Ok(report) => {
-                        if let Some(swap) = self.swap.as_mut() {
-                            swap.report.merge(&report);
+                let in_rolling_swap = self
+                    .swap
+                    .as_ref()
+                    .is_some_and(|s| s.current == Some(shard));
+                if in_rolling_swap {
+                    match result {
+                        Ok(report) => {
+                            self.shards[shard].pulses +=
+                                report.set_pulses + report.reset_pulses;
+                            if self.builder.is_some() {
+                                self.shards[shard].cells =
+                                    self.swap.as_ref().map(|s| s.target.clone());
+                            }
+                            if let Some(swap) = self.swap.as_mut() {
+                                swap.report.merge(&report);
+                            }
+                        }
+                        Err(e) => {
+                            // the inner engine validates before mutating, so a
+                            // failed shard rejoins still serving the old weights
+                            if let Some(swap) = self.swap.as_mut() {
+                                swap.failed
+                                    .get_or_insert_with(|| format!("shard {shard}: {e}"));
+                            }
                         }
                     }
-                    Err(e) => {
-                        // the inner engine validates before mutating, so a
-                        // failed shard rejoins still serving the old weights
-                        if let Some(swap) = self.swap.as_mut() {
-                            swap.failed
-                                .get_or_insert_with(|| format!("shard {shard}: {e}"));
+                    self.shards[shard].state = ShardState::Rejoining;
+                } else if matches!(
+                    self.scale_op,
+                    Some(ScaleOp::Spawn { shard: s, .. }) if s == shard
+                ) {
+                    // a parked slot finished reprogramming back to the
+                    // resident network
+                    match result {
+                        Ok(report) => {
+                            self.shards[shard].pulses +=
+                                report.set_pulses + report.reset_pulses;
+                            self.shards[shard].cells = self.resident.clone();
+                            self.shards[shard].state = ShardState::Rejoining;
+                            if let Some(ScaleOp::Spawn {
+                                pulses,
+                                energy,
+                                time,
+                                ..
+                            }) = self.scale_op.as_mut()
+                            {
+                                *pulses = report.set_pulses + report.reset_pulses;
+                                *energy = report.energy;
+                                *time = report.time;
+                            }
+                        }
+                        Err(e) => {
+                            // validate-then-mutate: the slot still holds its
+                            // old cells — back to the parking lot (loudly:
+                            // the autoscaler thinks it added capacity)
+                            eprintln!(
+                                "shard {shard}: spawn reprogramming failed ({e}); \
+                                 slot re-parked"
+                            );
+                            self.shards[shard].state = ShardState::Parked;
+                            self.scale_op = None;
                         }
                     }
                 }
-                self.shards[shard].state = ShardState::Rejoining;
             }
         }
     }
 
     /// Pull every completion that has already arrived, without blocking,
-    /// then advance the rolling swap (drain → reprogram → rejoin).
+    /// then advance the rolling swap (drain → reprogram → rejoin) and any
+    /// elastic lifecycle walk.
     fn drain_events(&mut self) {
         for i in 0..self.shards.len() {
             loop {
@@ -366,7 +658,75 @@ impl ShardedEngine {
                 }
             }
         }
+        self.advance();
+    }
+
+    /// Drive both lifecycle walks as far as they can go without blocking.
+    fn advance(&mut self) {
         self.advance_swap();
+        self.advance_scale();
+    }
+
+    /// Drive the elastic lifecycle walk forward: park a drained retiree,
+    /// return a rejoined spawn to the pool, and publish the completed
+    /// event.
+    fn advance_scale(&mut self) {
+        let Some(op) = self.scale_op else { return };
+        match op {
+            ScaleOp::Retire { shard } => {
+                if !self.shards[shard].alive {
+                    self.scale_op = None;
+                    self.recompute_caps();
+                    return;
+                }
+                if self.shards[shard].state == ShardState::Draining
+                    && self.shards[shard].in_flight_batches == 0
+                {
+                    self.shards[shard].state = ShardState::Parked;
+                    self.shards[shard].vetoed = false; // fresh park, fresh verdict
+                    self.scale_op = None;
+                    let serving_after = self.serving_count();
+                    self.events.push(ScaleEvent {
+                        kind: ScaleEventKind::Retire,
+                        shard,
+                        pulses: 0,
+                        energy: 0.0,
+                        time: 0.0,
+                        serving_after,
+                    });
+                    self.recompute_caps();
+                }
+            }
+            ScaleOp::Spawn {
+                shard,
+                fresh,
+                pulses,
+                energy,
+                time,
+            } => {
+                if !self.shards[shard].alive {
+                    self.scale_op = None;
+                    self.recompute_caps();
+                    return;
+                }
+                if self.shards[shard].state == ShardState::Rejoining {
+                    self.shards[shard].state = ShardState::Serving;
+                    self.scale_op = None;
+                    let serving_after = self.serving_count();
+                    self.events.push(ScaleEvent {
+                        kind: ScaleEventKind::Spawn { fresh },
+                        shard,
+                        pulses,
+                        energy,
+                        time,
+                        serving_after,
+                    });
+                    self.recompute_caps();
+                    self.flush_queued();
+                }
+                // Spawning/Programming: still waiting on the shard thread
+            }
+        }
     }
 
     /// Drive the rolling swap forward as far as it can go without
@@ -380,6 +740,17 @@ impl ShardedEngine {
                     let Some(i) = swap.pending.pop_front() else {
                         // walk complete: publish the aggregate report
                         let finished = self.swap.take().expect("active swap");
+                        if finished.failed.is_none() && self.builder.is_some() {
+                            // the serving fleet now holds the target — what
+                            // future spawns must program slots to. Parked
+                            // slots' spawn deltas changed with it, so their
+                            // budget verdicts are re-evaluated (and
+                            // re-reported) on the next spawn attempt.
+                            self.resident = Some(finished.target.clone());
+                            for s in &mut self.shards {
+                                s.vetoed = false;
+                            }
+                        }
                         self.swap_done = Some(match finished.failed {
                             Some(msg) => Err(msg),
                             None => Ok(finished.report),
@@ -434,7 +805,8 @@ impl ShardedEngine {
                             self.flush_queued();
                             continue;
                         }
-                        ShardState::Serving => return, // unreachable
+                        // unreachable: the walk only visits Serving shards
+                        _ => return,
                     }
                 }
             }
@@ -528,7 +900,7 @@ impl ShardedEngine {
             Ok(evt) => self.apply_event(shard, evt),
             Err(_) => self.mark_shard_dead(shard),
         }
-        self.advance_swap();
+        self.advance();
     }
 
     /// Block until the rolling swap makes progress (an event from the
@@ -541,7 +913,7 @@ impl ShardedEngine {
             Ok(evt) => self.apply_event(i, evt),
             Err(_) => self.mark_shard_dead(i),
         }
-        self.advance_swap();
+        self.advance();
     }
 }
 
@@ -585,13 +957,23 @@ impl Engine for ShardedEngine {
             total.swaps += t.swaps;
             total.program_time += t.program_time;
             total.program_energy += t.program_energy;
+            // host-tracked: includes the spawn programming a fresh slot's
+            // inner engine never saw (it was constructed on the image)
+            total.wear_pulses += s.pulses;
             total.utilization.extend(t.utilization.iter().copied());
         }
         total
     }
 
     fn shard_telemetry(&self) -> Vec<Telemetry> {
-        self.shards.iter().map(|s| s.telemetry.clone()).collect()
+        self.shards
+            .iter()
+            .map(|s| {
+                let mut t = s.telemetry.clone();
+                t.wear_pulses = s.pulses;
+                t
+            })
+            .collect()
     }
 
     fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
@@ -671,6 +1053,9 @@ impl Engine for ShardedEngine {
         if self.swap.is_some() || self.swap_done.is_some() {
             return Err(EngineError::SwapInProgress.into());
         }
+        if self.scale_op.is_some() {
+            return Err(EngineError::ScaleBusy.into());
+        }
         if target.is_empty() {
             return Err(EngineError::SwapShape {
                 detail: "target stack is empty".into(),
@@ -689,9 +1074,14 @@ impl Engine for ShardedEngine {
             }
             .into());
         }
+        // walk the serving pool only: parked slots keep their stale cells
+        // (a later spawn prices the delta back to the resident network)
+        let pending: VecDeque<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].alive && self.shards[i].state == ShardState::Serving)
+            .collect();
         self.swap = Some(RollingSwap {
             target,
-            pending: (0..self.shards.len()).collect(),
+            pending,
             current: None,
             report: SwapReport::default(),
             failed: None,
@@ -712,6 +1102,228 @@ impl Engine for ShardedEngine {
         }
         Err(EngineError::NoSwap.into())
     }
+
+    fn scale_load(&self) -> ScaleLoad {
+        ScaleLoad {
+            serving: self.serving_count(),
+            parked: self
+                .shards
+                .iter()
+                .filter(|s| s.alive && s.state == ShardState::Parked)
+                .count(),
+            queued_images: self.queued.iter().map(|(_, imgs)| imgs.len()).sum(),
+            in_flight_images: self.shards.iter().map(|s| s.in_flight_images).sum(),
+        }
+    }
+
+    /// Bring one more shard into the pool — see the module docs. Prefers
+    /// reprogramming the least-worn eligible parked slot (pricing only
+    /// the delta its stale cells need); worn slots are vetoed, and with
+    /// no eligible slot a fresh one is constructed and charged the full
+    /// weight image.
+    fn spawn_shard(&mut self) -> crate::Result<usize> {
+        self.drain_events();
+        let Some(builder) = self.builder.clone() else {
+            return Err(EngineError::ScaleUnsupported { kind: "sharded" }.into());
+        };
+        if self.swap.is_some() || self.swap_done.is_some() || self.scale_op.is_some() {
+            return Err(EngineError::ScaleBusy.into());
+        }
+        let resident = self
+            .resident
+            .clone()
+            .expect("elastic engines track the resident network");
+
+        // 1. least-worn parked slot whose endurance budget admits the
+        //    delta back to the resident network
+        let mut candidate: Option<(usize, ReprogramPlan)> = None;
+        for i in 0..self.shards.len() {
+            if !self.shards[i].alive || self.shards[i].state != ShardState::Parked {
+                continue;
+            }
+            let plan = image_plan(self.shards[i].cells.as_deref(), &resident)?;
+            if self.pulse_budget > 0
+                && self.shards[i].pulses + plan.cells_changed() > self.pulse_budget
+            {
+                // worn out: never selected for spawn. Record the veto
+                // once per park / resident change — repeated spawn
+                // attempts against the same worn slot are not news.
+                if !self.shards[i].vetoed {
+                    self.shards[i].vetoed = true;
+                    let serving_after = self.serving_count();
+                    self.events.push(ScaleEvent {
+                        kind: ScaleEventKind::Veto,
+                        shard: i,
+                        pulses: plan.cells_changed(),
+                        energy: plan.energy,
+                        time: plan.time,
+                        serving_after,
+                    });
+                }
+                continue;
+            }
+            let better = match &candidate {
+                Some((b, _)) => self.shards[i].pulses < self.shards[*b].pulses,
+                None => true,
+            };
+            if better {
+                candidate = Some((i, plan));
+            }
+        }
+        if let Some((i, plan)) = candidate {
+            if plan.cells_changed() == 0 {
+                // the cells already hold the resident image: rejoin free
+                self.shards[i].state = ShardState::Serving;
+                let serving_after = self.serving_count();
+                self.events.push(ScaleEvent {
+                    kind: ScaleEventKind::Spawn { fresh: false },
+                    shard: i,
+                    pulses: 0,
+                    energy: 0.0,
+                    time: 0.0,
+                    serving_after,
+                });
+                self.recompute_caps();
+                self.flush_queued();
+                return Ok(i);
+            }
+            let sent = self.shards[i]
+                .tx
+                .as_ref()
+                .expect("senders live until drop")
+                .send(ShardRequest::Swap { target: resident });
+            if sent.is_err() {
+                self.mark_shard_dead(i);
+                anyhow::bail!("shard {i} worker thread is down");
+            }
+            self.shards[i].state = ShardState::Programming;
+            self.scale_op = Some(ScaleOp::Spawn {
+                shard: i,
+                fresh: false,
+                pulses: plan.cells_changed(),
+                energy: plan.energy,
+                time: plan.time,
+            });
+            return Ok(i);
+        }
+
+        // 2. no parked slot is eligible: bring up a brand-new slot and
+        //    pulse the full weight image into fresh (all-RESET) cells
+        let plan = image_plan(None, &resident)?;
+        if self.pulse_budget > 0 && plan.cells_changed() > self.pulse_budget {
+            return Err(EngineError::PulseBudget {
+                needed: plan.cells_changed(),
+                budget: self.pulse_budget,
+            }
+            .into());
+        }
+        let i = self.shards.len();
+        let (req_tx, req_rx) = mpsc::channel::<ShardRequest>();
+        let (evt_tx, evt_rx) = mpsc::channel::<ShardEvent>();
+        let cells = resident.clone();
+        let factory: BackendFactory = Box::new(move || (*builder)(resident));
+        let join = std::thread::Builder::new()
+            .name(format!("xpoint-shard-{i}"))
+            .spawn(move || shard_main(factory, req_rx, evt_tx))
+            .map_err(|e| anyhow::anyhow!("spawning shard {i} thread: {e}"))?;
+        self.shards.push(Shard {
+            tx: Some(req_tx),
+            rx: evt_rx,
+            join: Some(join),
+            // placeholder until the slot's Built event arrives; the slot
+            // is not Serving, so dispatch never consults it before then
+            caps: self.shards[0].caps,
+            telemetry: Telemetry::default(),
+            in_flight_batches: 0,
+            in_flight_images: 0,
+            state: ShardState::Spawning,
+            alive: true,
+            pulses: plan.cells_changed(),
+            cells: Some(cells),
+            vetoed: false,
+        });
+        self.scale_op = Some(ScaleOp::Spawn {
+            shard: i,
+            fresh: true,
+            pulses: plan.cells_changed(),
+            energy: plan.energy,
+            time: plan.time,
+        });
+        Ok(i)
+    }
+
+    /// Park the most-worn serving shard — see the module docs. Its
+    /// completed tickets stay redeemable while it drains.
+    fn retire_shard(&mut self) -> crate::Result<usize> {
+        self.drain_events();
+        if self.builder.is_none() {
+            return Err(EngineError::ScaleUnsupported { kind: "sharded" }.into());
+        }
+        if self.swap.is_some() || self.swap_done.is_some() || self.scale_op.is_some() {
+            return Err(EngineError::ScaleBusy.into());
+        }
+        if self.serving_count() <= 1 {
+            return Err(EngineError::LastServingShard.into());
+        }
+        // wear-aware: the most-worn slot rests (ties break low index)
+        let mut pick: Option<usize> = None;
+        for i in 0..self.shards.len() {
+            if !self.shards[i].alive || self.shards[i].state != ShardState::Serving {
+                continue;
+            }
+            pick = match pick {
+                Some(b) if self.shards[b].pulses >= self.shards[i].pulses => Some(b),
+                _ => Some(i),
+            };
+        }
+        let i = pick.expect("serving_count > 1");
+        self.shards[i].state = ShardState::Draining;
+        self.scale_op = Some(ScaleOp::Retire { shard: i });
+        self.recompute_caps(); // it left the dispatch pool immediately
+        self.advance_scale(); // may already be drained
+        Ok(i)
+    }
+
+    fn take_scale_events(&mut self) -> Vec<ScaleEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    fn scale_settled(&self) -> bool {
+        self.scale_op.is_none()
+    }
+
+    /// Park on the completion channel of the shard most likely to report
+    /// next (the one a lifecycle walk waits on, else any shard with work
+    /// in flight) — the scheduler's alternative to spinning on `poll`.
+    fn wait_event(&mut self, timeout: std::time::Duration) {
+        self.drain_events();
+        if !self.ready.is_empty() || self.swap_done.is_some() {
+            return; // progress is already redeemable
+        }
+        let target = self
+            .swap
+            .as_ref()
+            .and_then(|s| s.current)
+            .or(match self.scale_op {
+                Some(ScaleOp::Spawn { shard, .. }) => Some(shard),
+                _ => None,
+            })
+            .or_else(|| {
+                (0..self.shards.len())
+                    .find(|&i| self.shards[i].alive && self.shards[i].in_flight_batches > 0)
+            });
+        match target {
+            Some(i) => {
+                match self.shards[i].rx.recv_timeout(timeout) {
+                    Ok(evt) => self.apply_event(i, evt),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => self.mark_shard_dead(i),
+                }
+                self.advance();
+            }
+            None => std::thread::sleep(timeout),
+        }
+    }
 }
 
 impl Drop for ShardedEngine {
@@ -730,7 +1342,7 @@ impl Drop for ShardedEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{ArraySpec, EngineSpec};
+    use crate::engine::{ArraySpec, AutoscaleSpec, EngineSpec};
     use crate::nn::BinaryLayer;
     use crate::util::Pcg32;
 
@@ -957,6 +1569,258 @@ mod tests {
         };
         assert_eq!(report.shards, 1);
         assert!(e.poll_swap().is_err(), "report redeems once");
+    }
+
+    /// An elastic engine on an explicit 8×16 layer (`with_layers`), so
+    /// the tests can account wear pulses exactly.
+    fn elastic_on(layer: BinaryLayer, min: usize, budget: u64) -> ShardedEngine {
+        EngineSpec::new(BackendKind::Ideal)
+            .with_array(ArraySpec {
+                rows: 32,
+                cols: 32,
+                span: Some(16),
+                ..ArraySpec::default()
+            })
+            .with_batching(32, 200)
+            .with_layers(vec![layer])
+            .with_autoscale(AutoscaleSpec {
+                min_shards: min,
+                max_shards: 4,
+                pulse_budget: budget,
+                ..AutoscaleSpec::default()
+            })
+            .build_sharded()
+            .expect("elastic engine")
+    }
+
+    /// Drive an in-flight scale operation to completion (parks on the
+    /// walking shard's channel via `wait_event`, so this also exercises
+    /// the no-spin path).
+    fn settle(e: &mut ShardedEngine) {
+        for _ in 0..10_000 {
+            if e.scale_settled() {
+                return;
+            }
+            e.wait_event(std::time::Duration::from_millis(1));
+        }
+        panic!("scale operation never settled");
+    }
+
+    fn ones(l: &BinaryLayer) -> u64 {
+        l.weights
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|&&w| w)
+            .count() as u64
+    }
+
+    /// Deterministic 8×16 layer: cell `r*16+c` is true iff its flat index
+    /// is in `on`.
+    fn patterned(on: impl Fn(usize) -> bool) -> BinaryLayer {
+        BinaryLayer::new(
+            (0..8)
+                .map(|r| (0..16).map(|c| on(r * 16 + c)).collect())
+                .collect(),
+            3,
+        )
+    }
+
+    #[test]
+    fn spawn_and_retire_walk_the_elastic_lifecycle() {
+        let l = layer(3);
+        let image = ones(&l);
+        let mut e = elastic_on(l.clone(), 1, 0);
+        assert_eq!(e.serving_shards(), 1);
+        assert_eq!(e.shard_wear(), vec![image], "deployment pulses the image");
+
+        // scale up: a fresh slot pays the full image
+        let i = e.spawn_shard().expect("spawn");
+        assert_eq!(i, 1);
+        settle(&mut e);
+        assert_eq!(e.serving_shards(), 2);
+        assert_eq!(e.shard_wear(), vec![image, image]);
+        let events = e.take_scale_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, ScaleEventKind::Spawn { fresh: true });
+        assert_eq!(events[0].pulses, image);
+        assert_eq!(events[0].serving_after, 2);
+        assert!(events[0].energy > 0.0 && events[0].time > 0.0);
+
+        // both shards serve, bit-exact
+        let imgs = images(31, 6);
+        let res = e.infer_batch(&imgs).unwrap();
+        for (img, bits) in imgs.iter().zip(&res.bits) {
+            assert_eq!(bits, &l.forward(img));
+        }
+
+        // scale down: drain → park, ticket redeemable, pool shrinks
+        let t = e.submit(images(32, 3)).unwrap();
+        let r = e.retire_shard().expect("retire");
+        settle(&mut e);
+        assert_eq!(e.serving_shards(), 1);
+        assert_eq!(e.shard_states()[r], ShardState::Parked);
+        let res = loop {
+            match e.poll(t).expect("ticket survives the retire") {
+                Some(res) => break res,
+                None => e.block_on_owner(t),
+            }
+        };
+        assert_eq!(res.bits.len(), 3);
+        let events = e.take_scale_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, ScaleEventKind::Retire);
+        assert_eq!(events[0].serving_after, 1);
+
+        // scale up again: the parked slot's cells already hold the
+        // resident image — rejoin is pulse-free
+        let j = e.spawn_shard().expect("respawn");
+        assert_eq!(j, r, "parked slot re-activated, not a new one");
+        settle(&mut e);
+        assert_eq!(e.serving_shards(), 2);
+        let events = e.take_scale_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, ScaleEventKind::Spawn { fresh: false });
+        assert_eq!(events[0].pulses, 0, "no delta: free rejoin");
+        // telemetry carries the per-slot wear
+        let wear: Vec<u64> = e.shard_telemetry().iter().map(|t| t.wear_pulses).collect();
+        assert_eq!(wear, vec![image, image]);
+        assert_eq!(e.telemetry().wear_pulses, 2 * image);
+    }
+
+    #[test]
+    fn retiring_the_last_serving_shard_is_a_typed_error() {
+        let mut e = elastic_on(layer(3), 1, 0);
+        let err = e.retire_shard().unwrap_err();
+        assert!(err.to_string().contains("last serving shard"), "{err}");
+    }
+
+    #[test]
+    fn fixed_fleet_engines_cannot_scale() {
+        let mut e = sharded(2, 32);
+        let err = e.spawn_shard().unwrap_err();
+        assert!(
+            err.to_string().contains("cannot spawn or retire shards"),
+            "{err}"
+        );
+        let err = e.retire_shard().unwrap_err();
+        assert!(
+            err.to_string().contains("cannot spawn or retire shards"),
+            "{err}"
+        );
+        assert!(e.take_scale_events().is_empty());
+    }
+
+    #[test]
+    fn scale_ops_and_rolling_swaps_are_mutually_exclusive() {
+        let mut e = elastic_on(layer(3), 2, 0);
+        assert!(e.begin_swap(vec![layer(4)]).unwrap().is_none());
+        let err = e.spawn_shard().unwrap_err();
+        assert!(err.to_string().contains("already in progress"), "{err}");
+        let err = e.retire_shard().unwrap_err();
+        assert!(err.to_string().contains("already in progress"), "{err}");
+        // drive the swap home; scaling unblocks
+        loop {
+            match e.poll_swap().unwrap() {
+                Some(_) => break,
+                None => e.block_on_swap(),
+            }
+        }
+        e.spawn_shard().expect("spawn after the swap settled");
+        settle(&mut e);
+        assert_eq!(e.serving_shards(), 3);
+    }
+
+    /// The wear-budget contract: a parked slot whose cumulative pulses
+    /// would exceed the budget is vetoed (never selected), and the spawn
+    /// falls through to a fresh slot.
+    #[test]
+    fn worn_parked_slot_is_vetoed_and_a_fresh_slot_spawns() {
+        // old: 20 ones; new = old with 30 SETs (20..50) + 10 RESETs (0..10)
+        let old = patterned(|i| i < 20);
+        let new = patterned(|i| (10..20).contains(&i) || (20..50).contains(&i));
+        assert_eq!(ones(&old), 20);
+        assert_eq!(ones(&new), 40);
+        // swap cost: 30 + 10 = 40 pulses → post-swap wear 20 + 40 = 60
+        let budget = 55;
+        let mut e = elastic_on(old.clone(), 2, budget);
+        assert_eq!(e.shard_wear(), vec![20, 20]);
+
+        let report = e.swap_network(vec![new.clone()]).expect("rolling swap");
+        assert_eq!(report.set_pulses, 2 * 30);
+        assert_eq!(report.reset_pulses, 2 * 10);
+        assert_eq!(e.shard_wear(), vec![60, 60], "both slots over the 55 budget");
+
+        let r = e.retire_shard().expect("retire");
+        settle(&mut e);
+        e.take_scale_events();
+        assert_eq!(e.shard_states()[r], ShardState::Parked);
+
+        // the parked slot is worn out (60 > 55): vetoed, fresh slot spawns
+        // and pays the full 40-pulse image of the *current* network
+        let i = e.spawn_shard().expect("spawn");
+        assert_eq!(i, 2, "a new slot, not the worn one");
+        settle(&mut e);
+        assert_eq!(e.shard_states()[r], ShardState::Parked, "never selected");
+        assert_eq!(e.serving_shards(), 2);
+        let events = e.take_scale_events();
+        let kinds: Vec<ScaleEventKind> = events.iter().map(|ev| ev.kind).collect();
+        assert!(
+            kinds.contains(&ScaleEventKind::Veto),
+            "worn slot produced a veto: {kinds:?}"
+        );
+        let spawn = events
+            .iter()
+            .find(|ev| ev.kind == (ScaleEventKind::Spawn { fresh: true }))
+            .expect("fresh spawn event");
+        assert_eq!(spawn.pulses, 40);
+        assert_eq!(e.shard_wear(), vec![60, 60, 40]);
+
+        // the spawned slot serves the resident (post-swap) network
+        let imgs = images(33, 6);
+        let res = e.infer_batch(&imgs).unwrap();
+        for (img, bits) in imgs.iter().zip(&res.bits) {
+            assert_eq!(bits, &new.forward(img), "spawned slot is wholly-new");
+        }
+    }
+
+    #[test]
+    fn spawn_with_no_eligible_slot_at_all_is_a_typed_pulse_budget_error() {
+        // budget below even the fresh image: nothing can ever spawn
+        let l = patterned(|i| i < 20);
+        let mut e = elastic_on(l, 1, 10);
+        let err = e.spawn_shard().unwrap_err();
+        assert!(
+            err.to_string().contains("endurance budget"),
+            "{err}"
+        );
+        assert_eq!(e.serving_shards(), 1, "fleet unchanged");
+    }
+
+    /// Satellite regression (busy-spin fix): `wait_event` parks on the
+    /// completion channel — it returns as soon as the shard reports, not
+    /// after the timeout — and times out quietly when idle.
+    #[test]
+    fn wait_event_wakes_on_completions_and_times_out_idle() {
+        let mut e = sharded(1, 32);
+        let t = e.submit(images(40, 4)).unwrap();
+        let started = std::time::Instant::now();
+        let res = loop {
+            match e.poll(t).unwrap() {
+                Some(res) => break res,
+                // generous timeout: if wait_event slept it out instead of
+                // waking on the completion, this test would take >10 s
+                None => e.wait_event(std::time::Duration::from_secs(10)),
+            }
+        };
+        assert_eq!(res.bits.len(), 4);
+        assert!(
+            started.elapsed() < std::time::Duration::from_secs(5),
+            "wait_event failed to wake on the completion"
+        );
+        // idle: nothing to wait on — sleeps out the (short) timeout
+        let started = std::time::Instant::now();
+        e.wait_event(std::time::Duration::from_millis(5));
+        assert!(started.elapsed() >= std::time::Duration::from_millis(4));
     }
 
     #[test]

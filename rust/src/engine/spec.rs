@@ -24,10 +24,11 @@ use std::time::Duration;
 use super::api::{BackendFactory, Engine};
 use super::backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 use super::error::EngineError;
-use super::sharded::ShardedEngine;
+use super::sharded::{ShardBuilder, ShardedEngine};
 use crate::analysis::ArrayDesign;
 use crate::array::TmvmMode;
 use crate::cli::Args;
+use crate::coordinator::autoscale::AutoscalePolicy;
 use crate::coordinator::CoordinatorConfig;
 use crate::fabric::{place_layers, FabricConfig, PlacementStrategy};
 use crate::interconnect::LineConfig;
@@ -114,6 +115,125 @@ impl ShardSpec {
         Json::Obj(vec![
             ("shards".into(), Json::Num(self.shards as f64)),
             ("inner".into(), Json::Str(self.inner.name().into())),
+        ])
+    }
+}
+
+/// Autoscaling section of the spec: queue-driven elastic shard lifecycle
+/// (the `Sharded` backend grows and shrinks its fleet between
+/// `min_shards` and `max_shards` as backlog crosses the watermarks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoscaleSpec {
+    /// Serving shards the engine starts with and never drops below.
+    pub min_shards: usize,
+    /// Serving shards the policy never exceeds.
+    pub max_shards: usize,
+    /// Backlog (queued + in-flight images) per serving shard above which
+    /// the policy spawns a shard.
+    pub high_watermark: usize,
+    /// Backlog per serving shard below which the policy retires one.
+    pub low_watermark: usize,
+    /// Policy evaluations that must pass between consecutive scale
+    /// events (hysteresis against flapping).
+    pub cooldown: u64,
+    /// Per-shard pulse-endurance budget (0 = unlimited): cumulative
+    /// SET/RESET pulses a slot may absorb across its lifetime; spawns
+    /// that would push a slot past it are vetoed.
+    pub pulse_budget: u64,
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> Self {
+        Self {
+            min_shards: 1,
+            max_shards: 4,
+            high_watermark: 96,
+            low_watermark: 16,
+            cooldown: 2,
+            pulse_budget: 0,
+        }
+    }
+}
+
+impl AutoscaleSpec {
+    /// The serve-path policy for a coordinator batch capacity: spawn
+    /// above ~1.5 waiting batches per serving shard, retire below a
+    /// quarter batch. One formula, shared by `--autoscale` and the
+    /// `xpoint autoscale` exhibit, so they replay the same policy.
+    pub fn for_batch(min_shards: usize, max_shards: usize, batch_capacity: usize) -> Self {
+        let cap = batch_capacity.max(1);
+        let low = (cap / 4).max(1);
+        Self {
+            min_shards,
+            max_shards,
+            // tiny capacities would collapse the band (cap=1 → high ==
+            // low == 1); keep the watermarks strictly ordered
+            high_watermark: (cap + cap / 2).max(low + 1),
+            low_watermark: low,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.min_shards == 0 {
+            return Err(EngineError::ZeroShards);
+        }
+        if self.min_shards > self.max_shards {
+            return Err(EngineError::Spec {
+                field: "autoscale",
+                detail: format!(
+                    "min_shards {} exceeds max_shards {}",
+                    self.min_shards, self.max_shards
+                ),
+            });
+        }
+        if self.low_watermark >= self.high_watermark {
+            return Err(EngineError::Spec {
+                field: "autoscale",
+                detail: format!(
+                    "low watermark {} must be below the high watermark {}",
+                    self.low_watermark, self.high_watermark
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "autoscale")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "min_shards" => spec.min_shards = json_usize(val, "autoscale.min_shards")?,
+                "max_shards" => spec.max_shards = json_usize(val, "autoscale.max_shards")?,
+                "high_watermark" => {
+                    spec.high_watermark = json_usize(val, "autoscale.high_watermark")?
+                }
+                "low_watermark" => {
+                    spec.low_watermark = json_usize(val, "autoscale.low_watermark")?
+                }
+                "cooldown" => spec.cooldown = json_usize(val, "autoscale.cooldown")? as u64,
+                "pulse_budget" => {
+                    spec.pulse_budget = json_usize(val, "autoscale.pulse_budget")? as u64
+                }
+                other => {
+                    return Err(EngineError::Json(format!(
+                        "unknown field 'autoscale.{other}'"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("min_shards".into(), Json::Num(self.min_shards as f64)),
+            ("max_shards".into(), Json::Num(self.max_shards as f64)),
+            ("high_watermark".into(), Json::Num(self.high_watermark as f64)),
+            ("low_watermark".into(), Json::Num(self.low_watermark as f64)),
+            ("cooldown".into(), Json::Num(self.cooldown as f64)),
+            ("pulse_budget".into(), Json::Num(self.pulse_budget as f64)),
         ])
     }
 }
@@ -437,6 +557,10 @@ pub struct EngineSpec {
     pub fabric: FabricSpec,
     /// Sharding topology (`Sharded`).
     pub sharding: ShardSpec,
+    /// Elastic autoscaling (`Sharded` only): when present, the shard
+    /// fleet starts at `min_shards` and the coordinator's scheduler
+    /// evaluates the policy live (`--autoscale min,max`).
+    pub autoscale: Option<AutoscaleSpec>,
     /// Coordinator batching policy.
     pub batching: BatchPolicy,
     /// Explicit layer stack (code-level override; never serialized).
@@ -459,6 +583,7 @@ impl EngineSpec {
             array: ArraySpec::default(),
             fabric: FabricSpec::default(),
             sharding: ShardSpec::default(),
+            autoscale: None,
             batching: BatchPolicy::default(),
             layers: None,
         }
@@ -523,6 +648,20 @@ impl EngineSpec {
         self
     }
 
+    /// Make the sharded fleet elastic: the currently selected backend
+    /// becomes the shard template, the engine starts at
+    /// `auto.min_shards`, and spawn/retire follow the policy parameters.
+    pub fn with_autoscale(mut self, auto: AutoscaleSpec) -> Self {
+        let inner = self.effective_kind();
+        self.kind = BackendKind::Sharded;
+        self.sharding = ShardSpec {
+            shards: auto.min_shards.max(1),
+            inner,
+        };
+        self.autoscale = Some(auto);
+        self
+    }
+
     /// Select the fabric's tile [`PlacementStrategy`].
     pub fn with_placement(mut self, placement: PlacementStrategy) -> Self {
         self.fabric.placement = placement;
@@ -558,6 +697,32 @@ impl EngineSpec {
         }
         if self.batching.capacity == 0 {
             return Err(EngineError::ZeroBatch);
+        }
+        if let Some(auto) = &self.autoscale {
+            if self.kind != BackendKind::Sharded {
+                return Err(EngineError::Spec {
+                    field: "autoscale",
+                    detail: format!(
+                        "autoscaling scales shards — it needs the sharded backend, \
+                         not {}",
+                        self.kind.name()
+                    ),
+                });
+            }
+            auto.validate()?;
+            // the elastic fleet starts at min_shards; a disagreeing fixed
+            // shard count would be silently ignored — reject it instead
+            if self.sharding.shards != auto.min_shards {
+                return Err(EngineError::Spec {
+                    field: "autoscale",
+                    detail: format!(
+                        "the elastic fleet starts at autoscale.min_shards ({}) but \
+                         sharding.shards is {} — set them equal (or drop the \
+                         sharding count and let autoscale govern it)",
+                        auto.min_shards, self.sharding.shards
+                    ),
+                });
+            }
         }
         if self.kind == BackendKind::Sharded {
             if self.sharding.shards == 0 {
@@ -764,6 +929,35 @@ impl EngineSpec {
                 self.array.rows = b.max(XLA_GRAPH_BATCH);
             }
         }
+        if let Some(bounds) = args.get("autoscale") {
+            if xla {
+                return Err(EngineError::Conflict {
+                    first: "--autoscale",
+                    second: "--xla",
+                });
+            }
+            if args.get("shards").is_some() {
+                return Err(EngineError::Conflict {
+                    first: "--autoscale",
+                    second: "--shards",
+                });
+            }
+            let (min, max) = parse_autoscale_bounds(bounds)?;
+            // watermarks track the (final) coordinator batch capacity
+            let auto = AutoscaleSpec::for_batch(min, max, self.batching.capacity);
+            let inner = self.effective_kind();
+            self.sharding = ShardSpec {
+                shards: min.max(1),
+                inner,
+            };
+            self.kind = BackendKind::Sharded;
+            self.autoscale = Some(auto);
+            // like --shards: the elastic fleet parallelizes on its own
+            // threads, so one coordinator worker drives it by default
+            if !json_base && args.get("workers").is_none() {
+                self.workers = 1;
+            }
+        }
         if let Some(g) = parse_opt_usize(args, "grid")? {
             if self.effective_kind() != BackendKind::Fabric {
                 return Err(EngineError::Requires {
@@ -818,6 +1012,13 @@ impl EngineSpec {
             ("array".into(), self.array.to_json()),
             ("fabric".into(), self.fabric.to_json()),
             ("sharding".into(), self.sharding.to_json()),
+            (
+                "autoscale".into(),
+                match &self.autoscale {
+                    Some(a) => a.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("batching".into(), self.batching.to_json()),
         ]);
         let mut s = obj.pretty();
@@ -831,6 +1032,7 @@ impl EngineSpec {
         let v = Json::parse(text).map_err(EngineError::Json)?;
         let entries = obj_entries(&v, "engine spec")?;
         let mut spec = Self::default();
+        let mut saw_sharding = false;
         for (key, val) in entries {
             match key.as_str() {
                 "backend" => spec.kind = BackendKind::parse(json_str(val, "backend")?)?,
@@ -845,9 +1047,27 @@ impl EngineSpec {
                 }
                 "array" => spec.array = ArraySpec::from_json(val)?,
                 "fabric" => spec.fabric = FabricSpec::from_json(val)?,
-                "sharding" => spec.sharding = ShardSpec::from_json(val)?,
+                "sharding" => {
+                    spec.sharding = ShardSpec::from_json(val)?;
+                    saw_sharding = true;
+                }
+                "autoscale" => {
+                    spec.autoscale = if val.is_null() {
+                        None
+                    } else {
+                        Some(AutoscaleSpec::from_json(val)?)
+                    }
+                }
                 "batching" => spec.batching = BatchPolicy::from_json(val)?,
                 other => return Err(EngineError::Json(format!("unknown field '{other}'"))),
+            }
+        }
+        // a spec that only gives the autoscale section lets it govern the
+        // fleet size; an *explicit* disagreeing sharding count is rejected
+        // by validate() below
+        if let Some(auto) = &spec.autoscale {
+            if !saw_sharding {
+                spec.sharding.shards = auto.min_shards;
             }
         }
         spec.validate()?;
@@ -883,20 +1103,32 @@ impl EngineSpec {
             BackendKind::Sharded => {
                 let mut inner = self.clone();
                 inner.kind = self.sharding.inner;
-                format!(
-                    "async sharded engine: {} shard(s), each a {}",
-                    self.sharding.shards,
-                    inner.describe()
-                )
+                inner.autoscale = None;
+                match &self.autoscale {
+                    Some(a) => format!(
+                        "elastic sharded engine: {}..={} shard(s) (queue-driven \
+                         autoscale), each a {}",
+                        a.min_shards,
+                        a.max_shards,
+                        inner.describe()
+                    ),
+                    None => format!(
+                        "async sharded engine: {} shard(s), each a {}",
+                        self.sharding.shards,
+                        inner.describe()
+                    ),
+                }
             }
         }
     }
 
-    /// The coordinator configuration this spec's batching policy implies.
+    /// The coordinator configuration this spec's batching and autoscale
+    /// policies imply.
     pub fn coordinator_config(&self) -> CoordinatorConfig {
         CoordinatorConfig {
             batch_capacity: self.batching.capacity,
             linger: Duration::from_micros(self.batching.linger_us),
+            autoscale: self.autoscale.as_ref().map(AutoscalePolicy::from_spec),
         }
     }
 
@@ -1012,6 +1244,29 @@ impl EngineSpec {
                     .collect())
             }
             BackendKind::Sharded => {
+                if let Some(auto) = &self.autoscale {
+                    // elastic fleet: every coordinator worker owns an
+                    // independent elastic engine that starts at
+                    // min_shards and spawns/retires from the template
+                    let mut inner = self.clone();
+                    inner.kind = self.sharding.inner;
+                    inner.autoscale = None;
+                    let layers = inner.resolve_layers()?;
+                    let builder = self.build_shard_builder(&layers)?;
+                    let initial = auto.min_shards;
+                    let budget = auto.pulse_budget;
+                    return Ok((0..n)
+                        .map(|_| {
+                            let builder = builder.clone();
+                            let layers = layers.clone();
+                            Box::new(move || {
+                                Ok(Box::new(ShardedEngine::elastic(
+                                    builder, layers, initial, budget,
+                                )?) as Box<dyn Engine>)
+                            }) as BackendFactory
+                        })
+                        .collect());
+                }
                 // resolve the inner spec once for all n·shards engines
                 // (keeping the once-per-spec contract above), then chunk
                 // the factories so every coordinator worker owns an
@@ -1061,12 +1316,106 @@ impl EngineSpec {
         }
     }
 
+    /// The reusable elastic shard template this spec describes: builds
+    /// one inner engine for a given layer stack (the autoscaler programs
+    /// spawned slots to whatever network is resident at spawn time).
+    /// Eager validation — placement and shape errors surface here, on
+    /// the calling thread, exactly like [`build`](EngineSpec::build).
+    fn build_shard_builder(&self, initial: &[BinaryLayer]) -> Result<ShardBuilder, EngineError> {
+        match self.sharding.inner {
+            BackendKind::Ideal | BackendKind::Parasitic => {
+                let mode = match self.sharding.inner {
+                    BackendKind::Ideal => TmvmMode::Ideal,
+                    _ => TmvmMode::Parasitic,
+                };
+                if initial.len() != 1 {
+                    return Err(EngineError::Spec {
+                        field: "layers",
+                        detail: format!(
+                            "the {} backend serves exactly one layer, got {}",
+                            self.sharding.inner.name(),
+                            initial.len()
+                        ),
+                    });
+                }
+                let layer = &initial[0];
+                let mut design = self.array.design()?;
+                SimBackend::validate_shapes(layer, &design)?;
+                if self.array.span.is_none() {
+                    design = design.with_span(layer.n_in().clamp(1, design.n_col));
+                }
+                let builder: ShardBuilder =
+                    std::sync::Arc::new(move |layers: Vec<BinaryLayer>| {
+                        anyhow::ensure!(layers.len() == 1, "sim shards serve one layer");
+                        let layer = layers.into_iter().next().expect("one layer");
+                        Ok(Box::new(SimBackend::new(layer, design.clone(), mode)?)
+                            as Box<dyn Engine>)
+                    });
+                Ok(builder)
+            }
+            BackendKind::Fabric => {
+                let cfg = self.fabric.config();
+                place_layers(initial, &cfg)
+                    .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
+                let max_batch = self.fabric.max_batch;
+                let builder: ShardBuilder =
+                    std::sync::Arc::new(move |layers: Vec<BinaryLayer>| {
+                        Ok(Box::new(FabricBackend::new(layers, cfg.clone(), max_batch)?)
+                            as Box<dyn Engine>)
+                    });
+                Ok(builder)
+            }
+            // validate() rejected these inner kinds already
+            BackendKind::Xla | BackendKind::Sharded => Err(EngineError::Spec {
+                field: "autoscale",
+                detail: "autoscale shards must be ideal|parasitic|fabric".into(),
+            }),
+        }
+    }
+
+    /// Build the concrete [`ShardedEngine`] this spec describes, on the
+    /// current thread — for exhibits and tests that need shard-level
+    /// introspection beyond the `Engine` trait. Elastic when an
+    /// autoscale section is present, fixed-fleet otherwise.
+    pub fn build_sharded(&self) -> crate::Result<ShardedEngine> {
+        self.validate()?;
+        anyhow::ensure!(
+            self.kind == BackendKind::Sharded,
+            "build_sharded needs a sharded spec (got backend '{}')",
+            self.kind.name()
+        );
+        if let Some(auto) = &self.autoscale {
+            let mut inner = self.clone();
+            inner.kind = self.sharding.inner;
+            inner.autoscale = None;
+            let layers = inner.resolve_layers()?;
+            let builder = self.build_shard_builder(&layers)?;
+            ShardedEngine::elastic(builder, layers, auto.min_shards, auto.pulse_budget)
+        } else {
+            let mut inner = self.clone();
+            inner.kind = self.sharding.inner;
+            inner.workers = self.sharding.shards;
+            ShardedEngine::new(inner.build_factories()?)
+        }
+    }
+
     /// Build and construct an engine on the current thread (examples,
     /// exhibits and tests that don't need the coordinator).
     pub fn build_engine(&self) -> crate::Result<Box<dyn Engine>> {
         let factory = self.build()?;
         factory()
     }
+}
+
+fn parse_autoscale_bounds(s: &str) -> Result<(usize, usize), EngineError> {
+    let bad = || EngineError::Spec {
+        field: "autoscale",
+        detail: format!("--autoscale expects min,max shard bounds (e.g. 1,4), got '{s}'"),
+    };
+    let (a, b) = s.split_once(',').ok_or_else(bad)?;
+    let min: usize = a.trim().parse().map_err(|_| bad())?;
+    let max: usize = b.trim().parse().map_err(|_| bad())?;
+    Ok((min, max))
 }
 
 fn parse_opt_usize(args: &Args, key: &'static str) -> Result<Option<usize>, EngineError> {
@@ -1329,6 +1678,117 @@ mod tests {
         assert_eq!(spec.effective_kind(), BackendKind::Fabric);
         let err = EngineSpec::from_json(r#"{"fabric":{"placement":"diag"}}"#).unwrap_err();
         assert!(err.to_string().contains("placement"), "{err}");
+    }
+
+    #[test]
+    fn autoscale_flag_builds_an_elastic_sharded_spec() {
+        let spec = EngineSpec::from_args(&args("serve --autoscale 1,4")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(spec.sharding.inner, BackendKind::Ideal);
+        let auto = spec.autoscale.expect("autoscale section attached");
+        assert_eq!((auto.min_shards, auto.max_shards), (1, 4));
+        // watermarks track the default batch capacity (64)
+        assert_eq!(auto.high_watermark, 96);
+        assert_eq!(auto.low_watermark, 16);
+        assert_eq!(spec.workers, 1, "elastic fleet defaults to one worker");
+        // wraps whatever backend the other flags selected
+        let spec = EngineSpec::from_args(&args("serve --fabric --autoscale 2,3")).unwrap();
+        assert_eq!(spec.sharding.inner, BackendKind::Fabric);
+        assert_eq!(spec.sharding.shards, 2, "fleet starts at min");
+        // watermarks follow an explicit --batch
+        let spec = EngineSpec::from_args(&args("serve --batch 16 --autoscale 1,2")).unwrap();
+        assert_eq!(spec.autoscale.unwrap().high_watermark, 24);
+    }
+
+    #[test]
+    fn autoscale_conflicts_and_malformed_bounds_are_typed_errors() {
+        let err = EngineSpec::from_args(&args("serve --xla --autoscale 1,4")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--autoscale and --xla are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --shards 2 --autoscale 1,4")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--autoscale and --shards are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --autoscale four")).unwrap_err();
+        assert!(
+            err.to_string().contains("min,max") && err.to_string().contains("four"),
+            "{err}"
+        );
+        let err = EngineSpec::from_args(&args("serve --autoscale 0,4")).unwrap_err();
+        assert_eq!(err, EngineError::ZeroShards);
+        let err = EngineSpec::from_args(&args("serve --autoscale 4,2")).unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "autoscale", .. })
+                && err.to_string().contains("exceeds"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn autoscale_section_survives_json_roundtrip() {
+        let spec = EngineSpec::new(BackendKind::Fabric)
+            .with_grid(2, 2)
+            .with_batching(32, 100)
+            .with_autoscale(AutoscaleSpec {
+                min_shards: 2,
+                max_shards: 6,
+                high_watermark: 48,
+                low_watermark: 8,
+                cooldown: 3,
+                pulse_budget: 5000,
+            });
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).expect("roundtrip parse");
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json(), text, "serialization is a fixed point");
+        // absent section stays None (and renders as null)
+        let none = EngineSpec::from_json(r#"{"autoscale": null}"#).unwrap();
+        assert_eq!(none.autoscale, None);
+        // sparse section takes defaults for the rest
+        let spec = EngineSpec::from_json(
+            r#"{"backend":"sharded","autoscale":{"min_shards":2,"max_shards":3}}"#,
+        )
+        .unwrap();
+        let auto = spec.autoscale.unwrap();
+        assert_eq!((auto.min_shards, auto.max_shards), (2, 3));
+        assert_eq!(auto.cooldown, AutoscaleSpec::default().cooldown);
+        // unknown subfields rejected
+        let err =
+            EngineSpec::from_json(r#"{"backend":"sharded","autoscale":{"watermark":9}}"#)
+                .unwrap_err();
+        assert!(err.to_string().contains("autoscale.watermark"), "{err}");
+        // autoscale on a non-sharded backend is rejected
+        let err = EngineSpec::from_json(r#"{"backend":"ideal","autoscale":{}}"#).unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "autoscale", .. })
+                && err.to_string().contains("sharded"),
+            "{err}"
+        );
+        // degenerate watermarks rejected
+        let err = EngineSpec::from_json(
+            r#"{"backend":"sharded","autoscale":{"high_watermark":4,"low_watermark":4}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("watermark"), "{err}");
+        // an explicit fixed shard count that disagrees with the elastic
+        // floor would be silently ignored — rejected instead
+        let err = EngineSpec::from_json(
+            r#"{"backend":"sharded","sharding":{"shards":3},
+                "autoscale":{"min_shards":1,"max_shards":4}}"#,
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "autoscale", .. })
+                && err.to_string().contains("min_shards"),
+            "{err}"
+        );
+        // watermark band stays valid even for a 1-image batch capacity
+        let tiny = AutoscaleSpec::for_batch(1, 2, 1);
+        assert!(tiny.validate().is_ok());
+        assert!(tiny.low_watermark < tiny.high_watermark);
     }
 
     #[test]

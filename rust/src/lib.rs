@@ -33,7 +33,7 @@
 //! | `Parasitic` | one subarray + the Appendix-A Thevenin ladder | electrical fidelity: attenuation, noise-margin-limited behavior |
 //! | `Fabric` | event-driven grid of subarrays, tiled + pipelined | multi-layer networks, scaling studies, utilization/interlink traffic |
 //! | `Xla` | AOT-compiled JAX/Pallas graph on PJRT (needs `make artifacts`) | golden-model verification, host-speed inference |
-//! | `Sharded` | N shards of any kind above, each on its own thread behind an async least-loaded scheduler | serving throughput: scale one engine to many arrays (`--shards N`) |
+//! | `Sharded` | N shards of any kind above, each on its own thread behind an async least-loaded scheduler | serving throughput: scale one engine to many arrays (`--shards N`); elastic with `--autoscale min,max` |
 //!
 //! All five present the same [`engine::Engine`] trait: batched inference,
 //! [`engine::Capabilities`] introspection, typed [`engine::Telemetry`]
@@ -62,6 +62,32 @@
 //! `xpoint reprogram` exhibit shows the drain/reprogram timeline. The XLA
 //! golden model cannot swap (its weights are baked into the AOT graph) and
 //! fails with the typed [`engine::EngineError::SwapUnsupported`].
+//!
+//! ## Shard autoscaling
+//!
+//! A `Sharded` engine built from an [`engine::AutoscaleSpec`]
+//! (`--autoscale min,max`, builder, or the JSON `autoscale` section) is
+//! **elastic**: the coordinator's scheduler evaluates an
+//! [`coordinator::AutoscalePolicy`] (queue-depth watermarks, cooldown)
+//! against the engine's live load every pass, and the fleet walks
+//!
+//! ```text
+//!           retire                           spawn (parked slot)
+//! Serving ─────────▶ Draining ─▶ Parked ─────────▶ Programming ─▶ Rejoining ─▶ Serving
+//!                    (tickets     (cells + wear     (delta back to the
+//!                     redeemable)  history kept)     resident network)
+//!                                    └─ every slot worn/vetoed? a fresh slot instead:
+//!                                       Spawning ─▶ Rejoining ─▶ Serving
+//!                                       (full weight image into blank cells)
+//! ```
+//!
+//! Capacity decisions price endurance: every programming pulse (deploy,
+//! swap, spawn) accrues per-slot wear ([`engine::Telemetry`]'s
+//! `wear_pulses`), and a slot whose pulse-endurance budget would be
+//! exceeded is **vetoed** — never selected for spawn. Scale events, wear
+//! and programming costs land in [`coordinator::MetricsSnapshot`]; the
+//! `xpoint autoscale` exhibit replays a bursty trace (with `--json`
+//! output for CI diffing), and `serve --autoscale min,max` runs it live.
 //!
 //! ## Layer map (bottom-up)
 //!
@@ -112,18 +138,24 @@
 //!   [`engine::XlaBackend`]) and the asynchronous
 //!   [`engine::ShardedEngine`] (N shards, least-loaded dispatch,
 //!   out-of-order completion, rolling weight swaps through the
-//!   [`engine::ShardState`] lifecycle) behind the
+//!   [`engine::ShardState`] lifecycle, elastic spawn/retire with
+//!   pulse-endurance wear budgets when built from an
+//!   [`engine::AutoscaleSpec`]) behind the
 //!   [`engine::EngineSpec::build`] registry.
 //! * [`coordinator`] — the L3 serving shell: request batching plus one
 //!   scheduler thread per engine, driving it purely through the
 //!   non-blocking `submit`/`poll` pair (spawned from
-//!   [`engine::BackendFactory`]), with per-shard telemetry in the
-//!   metrics and rolling live weight updates
-//!   ([`coordinator::Coordinator::swap_network`]) that land their pulse
-//!   accounting in the metrics snapshot.
+//!   [`engine::BackendFactory`]) without ever spinning a host core
+//!   (idle waits park on the engine's completion channel), with
+//!   per-shard telemetry in the metrics, rolling live weight updates
+//!   ([`coordinator::Coordinator::swap_network`]) and the
+//!   [`coordinator::AutoscalePolicy`] evaluated live in the scheduler
+//!   loop — spawns, retires, vetoes and wear all land in the metrics
+//!   snapshot.
 //! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III, fabric
-//!   scaling, sharded serving, live reprogramming) as a library function
-//!   returning structured rows, shared by benches, examples and the CLI.
+//!   scaling, sharded serving, live reprogramming, shard autoscaling) as
+//!   a library function returning structured rows, shared by benches,
+//!   examples and the CLI.
 //!
 //! See `examples/quickstart.rs` for a runnable end-to-end tour.
 

@@ -38,10 +38,16 @@ COMMANDS:
   reprogram live-reprogramming exhibit: rolling shard drain → reprogram →
             rejoin timeline, pulse counts, energy, throughput dip
             --shards N (default 2) --waves N (default 6) --batch N
+  autoscale shard-autoscaling exhibit: replay a bursty trace against an
+            elastic engine — scale-up/down decisions, spawn/retire events,
+            wear budgets   --min N --max N --batch N --budget PULSES
+            [--json] (machine-readable timeline via util::json)
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
             [--shards N]          (N async engine shards per worker)
+            [--autoscale MIN,MAX] (elastic shards: queue-driven
+            spawn/retire between MIN and MAX, evaluated live)
             [--placement roundrobin|locality] (fabric tile placement)
             [--swap-to template|artifact|auto] (live-swap the network
             mid-run: shards drain + reprogram one at a time)
@@ -200,6 +206,20 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             println!("{}", report::reprogram_summary(&swap));
             Ok(())
         }
+        Some("autoscale") => {
+            let min = args.get_usize("min", report::AUTOSCALE_MIN)?;
+            let max = args.get_usize("max", report::AUTOSCALE_MAX)?;
+            let batch = args.get_usize("batch", 32)?;
+            let budget = args.get_usize("budget", 0)? as u64;
+            let (rows, summary) = report::autoscale_timeline(min, max, batch, budget)?;
+            if args.has_flag("json") {
+                println!("{}", report::autoscale_json(&rows, &summary).pretty());
+            } else {
+                print!("{}", report::autoscale_table(&rows).render());
+                println!("{}", report::autoscale_summary_line(&summary));
+            }
+            Ok(())
+        }
         Some("serve") => serve(args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -297,6 +317,18 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
             snap.reset_pulses,
             format_duration(snap.swap_time),
             format_si(snap.swap_energy, "J"),
+        );
+    }
+    if spec.autoscale.is_some() {
+        println!(
+            "autoscale:       {} spawn(s) ({} pulses, {} programming, {}), \
+             {} retire(s), {} wear veto(es)",
+            snap.spawns,
+            snap.spawn_pulses,
+            format_duration(snap.spawn_time),
+            format_si(snap.spawn_energy, "J"),
+            snap.retires,
+            snap.scale_vetoes,
         );
     }
     // per-shard breakdown (one line per engine shard, across all workers)

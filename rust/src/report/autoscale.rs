@@ -1,0 +1,407 @@
+//! Autoscaling exhibit (beyond the paper's fixed-size tables): replay a
+//! bursty offered-load trace against an elastic sharded engine and show
+//! the queue-driven scale-up/scale-down decisions wave by wave — serving
+//! shard count, backlog, the policy's decision, and every completed
+//! lifecycle event (spawn / retire / budget veto) with its programming
+//! cost.
+//!
+//! The replay is fully deterministic: offered load follows a fixed
+//! trace, every wave drains completely, and in-flight lifecycle walks
+//! are settled before the wave is recorded — so the timeline (and its
+//! `--json` form, which round-trips through [`crate::util::json`]) can
+//! be diffed across runs and machines in CI.
+
+use crate::coordinator::autoscale::{AutoscalePolicy, ScaleDecision};
+use crate::engine::{
+    AutoscaleSpec, BackendKind, Engine, EngineSpec, ScaleEvent, ScaleEventKind, ShardState,
+    ShardedEngine,
+};
+use crate::nn::dataset::{DigitGen, TEST_SEED};
+use crate::util::json::Json;
+use crate::util::si::{format_duration, format_si};
+use crate::util::Table;
+
+/// Default serving-shard floor of the exhibit.
+pub const AUTOSCALE_MIN: usize = 1;
+
+/// Default serving-shard ceiling of the exhibit.
+pub const AUTOSCALE_MAX: usize = 4;
+
+/// Offered load per wave, in batches — a burst that ramps, plateaus and
+/// decays to silence, so the timeline crosses both watermarks (the
+/// trailing idle waves are what lets the low watermark retire shards).
+pub const AUTOSCALE_TRACE: [usize; 14] = [1, 1, 2, 5, 8, 8, 6, 4, 2, 1, 0, 0, 0, 0];
+
+/// One wave of the autoscale timeline.
+#[derive(Clone, Debug)]
+pub struct AutoscaleWaveRow {
+    pub wave: usize,
+    /// Images submitted this wave.
+    pub offered: usize,
+    /// Backlog (queued + in-flight images) at decision time.
+    pub backlog: usize,
+    /// Serving shards when the policy decided.
+    pub serving_before: usize,
+    /// The policy's decision ("up" | "down" | "hold").
+    pub decision: &'static str,
+    /// Lifecycle events completed during the wave.
+    pub events: Vec<ScaleEvent>,
+    /// Serving shards after the wave settled.
+    pub serving_after: usize,
+    /// Lifecycle state of every slot after the wave.
+    pub states: Vec<ShardState>,
+    /// Images drained this wave (every wave drains fully).
+    pub images_done: usize,
+}
+
+/// Aggregate of the whole replay.
+#[derive(Clone, Debug, Default)]
+pub struct AutoscaleSummary {
+    pub spawns: u64,
+    pub retires: u64,
+    pub vetoes: u64,
+    /// Programming pulses spent on spawns.
+    pub spawn_pulses: u64,
+    /// Spawn-programming energy \[J\].
+    pub spawn_energy: f64,
+    /// Spawn-programming time \[s\].
+    pub spawn_time: f64,
+    /// Final cumulative wear per shard slot.
+    pub wear: Vec<u64>,
+}
+
+fn decision_name(d: ScaleDecision) -> &'static str {
+    match d {
+        ScaleDecision::Hold => "hold",
+        ScaleDecision::Up => "up",
+        ScaleDecision::Down => "down",
+    }
+}
+
+/// Drive any in-flight lifecycle walk to completion (deterministic
+/// settling — live serving would keep going instead).
+fn settle(engine: &mut ShardedEngine) -> crate::Result<()> {
+    for _ in 0..100_000 {
+        if engine.scale_settled() {
+            return Ok(());
+        }
+        engine.wait_event(std::time::Duration::from_millis(1));
+    }
+    anyhow::bail!("autoscale exhibit: lifecycle walk never settled")
+}
+
+/// Run the exhibit: replay [`AUTOSCALE_TRACE`] (scaled by `batch` images
+/// per offered batch) against an elastic engine bounded to
+/// `[min, max]` serving shards, evaluating the policy once per wave.
+/// `pulse_budget` is the per-slot endurance budget (0 = unlimited).
+pub fn autoscale_timeline(
+    min: usize,
+    max: usize,
+    batch: usize,
+    pulse_budget: u64,
+) -> crate::Result<(Vec<AutoscaleWaveRow>, AutoscaleSummary)> {
+    anyhow::ensure!(min >= 1 && min <= max, "need 1 <= min <= max shards");
+    // the exhibit's Ideal shards store one batch per subarray row set
+    // (64 rows) — clamp like `serve --batch` does
+    let batch = batch.clamp(1, 64);
+    // the same watermark policy `serve --autoscale` derives, with a
+    // 1-wave cooldown so the short trace shows both directions
+    let auto = AutoscaleSpec {
+        cooldown: 1,
+        pulse_budget,
+        ..AutoscaleSpec::for_batch(min, max, batch)
+    };
+    let spec = EngineSpec::new(BackendKind::Ideal)
+        .with_layers(vec![super::table2::template_layer()])
+        .with_batching(batch, 200)
+        .with_autoscale(auto);
+    let mut engine = spec.build_sharded()?;
+    let mut policy = AutoscalePolicy::from_spec(&auto);
+
+    let mut gen = DigitGen::new(TEST_SEED);
+    let mut rows = Vec::with_capacity(AUTOSCALE_TRACE.len());
+    let mut summary = AutoscaleSummary::default();
+    for (wave, &offered_batches) in AUTOSCALE_TRACE.iter().enumerate() {
+        // offer the wave's burst
+        let mut tickets = Vec::with_capacity(offered_batches);
+        for _ in 0..offered_batches {
+            let images: Vec<Vec<bool>> =
+                (0..batch).map(|_| gen.next_sample().pixels).collect();
+            tickets.push(engine.submit(images)?);
+        }
+        // evaluate the policy against the live backlog
+        let load = engine.scale_load();
+        let backlog = load.queued_images + load.in_flight_images;
+        let serving_before = load.serving;
+        let decision = policy.decide(&load);
+        match decision {
+            ScaleDecision::Up => {
+                // a budget-exhausted fleet keeps serving at its size
+                let _ = engine.spawn_shard();
+            }
+            ScaleDecision::Down => {
+                let _ = engine.retire_shard();
+            }
+            ScaleDecision::Hold => {}
+        }
+        settle(&mut engine)?;
+        // drain the wave fully (the replay is deterministic; live serving
+        // overlaps waves instead)
+        let mut images_done = 0usize;
+        for t in tickets {
+            let res = loop {
+                match engine.poll(t)? {
+                    Some(res) => break res,
+                    None => engine.wait_event(std::time::Duration::from_millis(1)),
+                }
+            };
+            images_done += res.bits.len();
+        }
+        let events = engine.take_scale_events();
+        for ev in &events {
+            match ev.kind {
+                ScaleEventKind::Spawn { .. } => {
+                    summary.spawns += 1;
+                    summary.spawn_pulses += ev.pulses;
+                    summary.spawn_energy += ev.energy;
+                    summary.spawn_time += ev.time;
+                }
+                ScaleEventKind::Retire => summary.retires += 1,
+                ScaleEventKind::Veto => summary.vetoes += 1,
+            }
+        }
+        rows.push(AutoscaleWaveRow {
+            wave,
+            offered: offered_batches * batch,
+            backlog,
+            serving_before,
+            decision: decision_name(decision),
+            events,
+            serving_after: engine.serving_shards(),
+            states: engine.shard_states(),
+            images_done,
+        });
+    }
+    summary.wear = engine.shard_wear();
+    Ok((rows, summary))
+}
+
+/// Render the timeline table.
+pub fn autoscale_table(rows: &[AutoscaleWaveRow]) -> Table {
+    let mut t = Table::new("Shard autoscaling — bursty trace, queue-driven spawn/retire")
+        .header(&[
+            "Wave", "Offered", "Backlog", "Serving", "Decision", "Events", "Done", "States",
+        ]);
+    for r in rows {
+        let events = if r.events.is_empty() {
+            "—".to_string()
+        } else {
+            r.events
+                .iter()
+                .map(|e| format!("{}#{}", e.kind.name(), e.shard))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        let states = r
+            .states
+            .iter()
+            .map(|s| s.name())
+            .collect::<Vec<_>>()
+            .join("/");
+        t.row(&[
+            r.wave.to_string(),
+            r.offered.to_string(),
+            r.backlog.to_string(),
+            format!("{}→{}", r.serving_before, r.serving_after),
+            r.decision.to_string(),
+            events,
+            r.images_done.to_string(),
+            states,
+        ]);
+    }
+    t
+}
+
+/// One-line summary of what the elasticity cost.
+pub fn autoscale_summary_line(s: &AutoscaleSummary) -> String {
+    let wear = s
+        .wear
+        .iter()
+        .map(|w| w.to_string())
+        .collect::<Vec<_>>()
+        .join("/");
+    format!(
+        "{} spawn(s) ({} pulses, {}, {}), {} retire(s), {} veto(es); wear per slot: {}",
+        s.spawns,
+        s.spawn_pulses,
+        format_duration(s.spawn_time),
+        format_si(s.spawn_energy, "J"),
+        s.retires,
+        s.vetoes,
+        wear,
+    )
+}
+
+/// The `--json` form: the whole timeline as a [`Json`] tree (stable key
+/// order, so CI can diff scale-event timelines across runs).
+pub fn autoscale_json(rows: &[AutoscaleWaveRow], summary: &AutoscaleSummary) -> Json {
+    let waves = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("wave".into(), Json::Num(r.wave as f64)),
+                ("offered".into(), Json::Num(r.offered as f64)),
+                ("backlog".into(), Json::Num(r.backlog as f64)),
+                ("serving_before".into(), Json::Num(r.serving_before as f64)),
+                ("decision".into(), Json::Str(r.decision.into())),
+                (
+                    "events".into(),
+                    Json::Arr(
+                        r.events
+                            .iter()
+                            .map(|e| {
+                                Json::Obj(vec![
+                                    ("kind".into(), Json::Str(e.kind.name().into())),
+                                    ("shard".into(), Json::Num(e.shard as f64)),
+                                    ("pulses".into(), Json::Num(e.pulses as f64)),
+                                    (
+                                        "serving_after".into(),
+                                        Json::Num(e.serving_after as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("serving_after".into(), Json::Num(r.serving_after as f64)),
+                (
+                    "states".into(),
+                    Json::Arr(
+                        r.states
+                            .iter()
+                            .map(|s| Json::Str(s.name().into()))
+                            .collect(),
+                    ),
+                ),
+                ("images_done".into(), Json::Num(r.images_done as f64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("exhibit".into(), Json::Str("autoscale".into())),
+        ("waves".into(), Json::Arr(waves)),
+        (
+            "summary".into(),
+            Json::Obj(vec![
+                ("spawns".into(), Json::Num(summary.spawns as f64)),
+                ("retires".into(), Json::Num(summary.retires as f64)),
+                ("vetoes".into(), Json::Num(summary.vetoes as f64)),
+                ("spawn_pulses".into(), Json::Num(summary.spawn_pulses as f64)),
+                ("spawn_energy_j".into(), Json::Num(summary.spawn_energy)),
+                ("spawn_time_s".into(), Json::Num(summary.spawn_time)),
+                (
+                    "wear".into(),
+                    Json::Arr(summary.wear.iter().map(|&w| Json::Num(w as f64)).collect()),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_scales_up_on_the_burst_and_back_down() {
+        let (rows, summary) = autoscale_timeline(1, 3, 16, 0).unwrap();
+        assert_eq!(rows.len(), AUTOSCALE_TRACE.len());
+        for r in &rows {
+            assert_eq!(r.images_done, r.offered, "every wave drains fully");
+            assert!(
+                (1..=3).contains(&r.serving_after),
+                "wave {}: serving {} out of bounds",
+                r.wave,
+                r.serving_after
+            );
+        }
+        let peak = rows.iter().map(|r| r.serving_after).max().unwrap();
+        assert!(peak > 1, "the burst never scaled the fleet up");
+        assert!(summary.spawns >= 1);
+        assert!(summary.retires >= 1, "the decay never scaled back down");
+        assert!(summary.spawn_pulses > 0 && summary.spawn_energy > 0.0);
+        assert!(!summary.wear.is_empty());
+        assert_eq!(
+            rows.last().unwrap().serving_after,
+            rows.last().unwrap().states.iter().filter(|&&s| s == ShardState::Serving).count()
+        );
+    }
+
+    #[test]
+    fn table_renders_every_wave() {
+        let (rows, summary) = autoscale_timeline(1, 2, 8, 0).unwrap();
+        let t = autoscale_table(&rows);
+        assert_eq!(t.n_rows(), rows.len());
+        let s = t.render();
+        assert!(s.contains("Decision"), "{s}");
+        let line = autoscale_summary_line(&summary);
+        assert!(line.contains("spawn") && line.contains("wear"), "{line}");
+    }
+
+    /// Satellite pin: the `--json` exhibit output round-trips through
+    /// `util::json` bit-for-bit (parse ∘ render is the identity, and
+    /// rendering is a fixed point), and its schema is stable — this is
+    /// what lets the CI bench job diff scale-event timelines across runs.
+    #[test]
+    fn json_snapshot_roundtrips_and_pins_the_schema() {
+        let (rows, summary) = autoscale_timeline(1, 3, 16, 0).unwrap();
+        let v = autoscale_json(&rows, &summary);
+        let text = v.pretty();
+        let parsed = Json::parse(&text).expect("exhibit JSON parses");
+        assert_eq!(parsed, v, "parse ∘ pretty is the identity");
+        assert_eq!(
+            Json::parse(&parsed.render()).unwrap(),
+            v,
+            "compact form round-trips too"
+        );
+        // schema snapshot: exact top-level and per-wave key order
+        match &v {
+            Json::Obj(entries) => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(keys, vec!["exhibit", "waves", "summary"]);
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        let wave0 = match v.get("waves") {
+            Some(Json::Arr(waves)) => &waves[0],
+            other => panic!("expected waves array, got {other:?}"),
+        };
+        match wave0 {
+            Json::Obj(entries) => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(
+                    keys,
+                    vec![
+                        "wave",
+                        "offered",
+                        "backlog",
+                        "serving_before",
+                        "decision",
+                        "events",
+                        "serving_after",
+                        "states",
+                        "images_done"
+                    ]
+                );
+            }
+            other => panic!("expected wave object, got {other:?}"),
+        }
+        // deterministic replay: a second run produces the identical JSON
+        let (rows2, summary2) = autoscale_timeline(1, 3, 16, 0).unwrap();
+        assert_eq!(
+            autoscale_json(&rows2, &summary2).pretty(),
+            text,
+            "the replay is bit-deterministic"
+        );
+    }
+}

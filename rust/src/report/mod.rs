@@ -2,12 +2,17 @@
 //! shared by `cargo bench`, the examples and the CLI so the numbers are
 //! generated from exactly one code path.
 
+pub mod autoscale;
 pub mod exhibits;
 pub mod fabric;
 pub mod reprogram;
 pub mod sharding;
 pub mod table2;
 
+pub use autoscale::{
+    autoscale_json, autoscale_summary_line, autoscale_table, autoscale_timeline,
+    AutoscaleSummary, AutoscaleWaveRow, AUTOSCALE_MAX, AUTOSCALE_MIN, AUTOSCALE_TRACE,
+};
 pub use exhibits::{
     fig10_series, fig11_regions, fig13_sweeps, table1_rows, table3_rows, Fig10Row, Fig11Data,
     Fig13Series,

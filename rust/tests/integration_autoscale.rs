@@ -1,0 +1,287 @@
+//! Integration: shard-aware autoscaling. Pins the tentpole acceptance —
+//! under a deterministic seeded burst trace the elastic engine scales up
+//! at the high watermark and back down at the low watermark, serving
+//! never stops, no ticket is ever dropped or duplicated, outputs stay
+//! bit-exact with a fixed-`max`-shard engine fed the identical batches,
+//! and a slot whose pulse-endurance budget is exhausted is never
+//! selected for spawn.
+
+use std::time::Duration;
+
+use xpoint_imc::coordinator::{AutoscalePolicy, ScaleDecision};
+use xpoint_imc::engine::{
+    ArraySpec, AutoscaleSpec, BackendKind, Engine, EngineSpec, ScaleEvent, ScaleEventKind,
+    ShardState, ShardedEngine,
+};
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.45)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+fn random_images(rng: &mut Pcg32, m: usize, n_in: usize) -> Vec<Vec<bool>> {
+    (0..m)
+        .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+        .collect()
+}
+
+fn base_spec(layer: BinaryLayer) -> EngineSpec {
+    EngineSpec::new(BackendKind::Ideal)
+        .with_array(ArraySpec {
+            rows: 32,
+            cols: 32,
+            span: Some(16),
+            ..ArraySpec::default()
+        })
+        .with_batching(32, 200)
+        .with_layers(vec![layer])
+}
+
+fn redeem(engine: &mut ShardedEngine, ticket: u64) -> xpoint_imc::engine::InferenceResult {
+    loop {
+        match engine.poll(ticket).expect("poll") {
+            Some(res) => return res,
+            None => engine.wait_event(Duration::from_millis(1)),
+        }
+    }
+}
+
+/// The deterministic seeded burst soak: three phases (burst → mixed →
+/// drain) driven by one PRNG, the policy ticked every op. The elastic
+/// engine and a fixed-`max`-shard mirror receive identical batches.
+fn soak(seed: u64) {
+    let mut rng = Pcg32::seeded(seed);
+    let layer = random_layer(&mut rng, 8, 16, 3);
+    let auto = AutoscaleSpec {
+        min_shards: 1,
+        max_shards: 3,
+        high_watermark: 12,
+        low_watermark: 2,
+        cooldown: 2,
+        pulse_budget: 0,
+    };
+    let mut elastic = base_spec(layer.clone())
+        .with_autoscale(auto)
+        .build_sharded()
+        .expect("elastic engine");
+    let mut fixed = base_spec(layer.clone())
+        .with_shards(3, BackendKind::Ideal)
+        .build_sharded()
+        .expect("fixed mirror");
+    let mut policy = AutoscalePolicy::from_spec(&auto);
+
+    // (elastic ticket, fixed ticket, batch)
+    let mut outstanding: Vec<(u64, u64, Vec<Vec<bool>>)> = Vec::new();
+    let mut redeemed: Vec<u64> = Vec::new();
+    let mut events: Vec<ScaleEvent> = Vec::new();
+
+    for op in 0..300u32 {
+        // burst phase floods; mixed phase balances; drain phase only polls
+        let submit_p = match op {
+            0..=99 => 0.9,
+            100..=199 => 0.4,
+            _ => 0.0,
+        };
+        if rng.bernoulli(submit_p) {
+            let m = rng.range(1, 6);
+            let imgs = random_images(&mut rng, m, 16);
+            let te = elastic.submit(imgs.clone()).expect("elastic submit");
+            let tf = fixed.submit(imgs.clone()).expect("fixed submit");
+            outstanding.push((te, tf, imgs));
+        } else if !outstanding.is_empty() && rng.bernoulli(0.8) {
+            let k = rng.range(0, outstanding.len());
+            let te = outstanding[k].0;
+            if let Some(res) = elastic.poll(te).expect("elastic poll") {
+                let (te, tf, imgs) = outstanding.swap_remove(k);
+                let want = redeem(&mut fixed, tf);
+                assert_eq!(res.bits, want.bits, "bit-exact vs the fixed fleet");
+                assert_eq!(res.classes, want.classes);
+                for (img, bits) in imgs.iter().zip(&res.bits) {
+                    assert_eq!(bits, &layer.forward(img), "functional identity");
+                }
+                redeemed.push(te);
+            }
+        }
+
+        // the policy runs every op, exactly like the scheduler loop
+        match policy.decide(&elastic.scale_load()) {
+            ScaleDecision::Up => {
+                let _ = elastic.spawn_shard(); // ScaleBusy mid-walk is fine
+            }
+            ScaleDecision::Down => {
+                let _ = elastic.retire_shard();
+            }
+            ScaleDecision::Hold => {}
+        }
+        events.extend(elastic.take_scale_events());
+
+        let serving = elastic.serving_shards();
+        assert!(
+            (1..=3).contains(&serving),
+            "op {op} (seed {seed:#x}): serving {serving} left [min, max]"
+        );
+    }
+
+    // drain every outstanding ticket — serving never stopped, nothing lost
+    while let Some((te, tf, imgs)) = outstanding.pop() {
+        let res = redeem(&mut elastic, te);
+        let want = redeem(&mut fixed, tf);
+        assert_eq!(res.bits, want.bits, "drained ticket bit-exact (seed {seed:#x})");
+        for (img, bits) in imgs.iter().zip(&res.bits) {
+            assert_eq!(bits, &layer.forward(img));
+        }
+        redeemed.push(te);
+    }
+
+    // idle: the policy must walk the fleet back to the floor (waiting out
+    // any lifecycle walk still in flight from the mixed phase)
+    let mut guard = 0u32;
+    while elastic.serving_shards() != 1 || !elastic.scale_settled() {
+        guard += 1;
+        assert!(
+            guard < 10_000,
+            "seed {seed:#x}: the drained fleet never settled at min_shards"
+        );
+        if let ScaleDecision::Down = policy.decide(&elastic.scale_load()) {
+            let _ = elastic.retire_shard();
+        }
+        elastic.wait_event(Duration::from_millis(1));
+        events.extend(elastic.take_scale_events());
+    }
+    events.extend(elastic.take_scale_events());
+
+    let spawns = events
+        .iter()
+        .filter(|e| matches!(e.kind, ScaleEventKind::Spawn { .. }))
+        .count();
+    let retires = events
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::Retire)
+        .count();
+    assert!(spawns >= 1, "seed {seed:#x}: the burst never scaled up");
+    assert!(retires >= 1, "seed {seed:#x}: the drain never scaled down");
+    assert_eq!(
+        spawns, retires,
+        "seed {seed:#x}: the fleet is back at the floor, so spawns balance retires"
+    );
+
+    // exactly-once: every ticket redeemed once, and re-polling is typed
+    let mut unique = redeemed.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), redeemed.len(), "a ticket completed twice");
+    for &t in redeemed.iter().take(5) {
+        let err = elastic.poll(t).expect_err("redeemed tickets are gone");
+        assert!(
+            err.to_string().contains("never issued or already collected"),
+            "{err}"
+        );
+    }
+}
+
+#[test]
+fn soak_seed_a_bursty_autoscale() {
+    soak(0xa5c0);
+}
+
+#[test]
+fn soak_seed_b_bursty_autoscale() {
+    soak(0xa5c1);
+}
+
+#[test]
+fn soak_seed_c_bursty_autoscale() {
+    soak(0xa5c2);
+}
+
+/// 8×16 layer with exactly the flat indices in `on` set.
+fn patterned(on: impl Fn(usize) -> bool) -> BinaryLayer {
+    BinaryLayer::new(
+        (0..8)
+            .map(|r| (0..16).map(|c| on(r * 16 + c)).collect())
+            .collect(),
+        3,
+    )
+}
+
+/// Acceptance: a shard whose pulse budget is exhausted is never selected
+/// for spawn — the spawn is vetoed onto a fresh slot, and the worn slot
+/// stays parked forever.
+#[test]
+fn exhausted_pulse_budget_vetoes_the_worn_slot() {
+    // old: 20 ones. new: 30 SETs + 10 RESETs away → swap costs 40 pulses.
+    let old = patterned(|i| i < 20);
+    let new = patterned(|i| (10..20).contains(&i) || (20..50).contains(&i));
+    // deployment charges 20; the swap takes each slot to 60 — over the
+    // 55 budget, while a fresh slot's 40-pulse image still fits
+    let auto = AutoscaleSpec {
+        min_shards: 2,
+        max_shards: 4,
+        high_watermark: 12,
+        low_watermark: 2,
+        cooldown: 0,
+        pulse_budget: 55,
+    };
+    let mut engine = base_spec(old.clone())
+        .with_autoscale(auto)
+        .build_sharded()
+        .expect("elastic engine");
+    engine.swap_network(vec![new.clone()]).expect("rolling swap");
+    assert_eq!(engine.shard_wear(), vec![60, 60]);
+
+    let parked = engine.retire_shard().expect("retire");
+    while !engine.scale_settled() {
+        engine.wait_event(Duration::from_millis(1));
+    }
+    engine.take_scale_events();
+    assert_eq!(engine.shard_states()[parked], ShardState::Parked);
+
+    let spawned = engine.spawn_shard().expect("spawn");
+    while !engine.scale_settled() {
+        engine.wait_event(Duration::from_millis(1));
+    }
+    assert_ne!(spawned, parked, "the worn slot must never be selected");
+    assert_eq!(
+        engine.shard_states()[parked],
+        ShardState::Parked,
+        "worn slot untouched"
+    );
+    let events = engine.take_scale_events();
+    assert!(
+        events.iter().any(|e| e.kind == ScaleEventKind::Veto && e.shard == parked),
+        "the worn slot's veto is recorded: {events:?}"
+    );
+    let spawn = events
+        .iter()
+        .find(|e| e.kind == (ScaleEventKind::Spawn { fresh: true }))
+        .expect("fresh spawn");
+    assert_eq!(spawn.pulses, 40, "fresh slot pays the current network's image");
+
+    // the spawned slot serves the post-swap network, bit-exact
+    let mut rng = Pcg32::seeded(0xbeef);
+    let imgs = random_images(&mut rng, 8, 16);
+    let res = engine.infer_batch(&imgs).expect("serve after scale");
+    for (img, bits) in imgs.iter().zip(&res.bits) {
+        assert_eq!(bits, &new.forward(img));
+    }
+
+    // and when even a fresh image cannot fit the budget, the spawn is a
+    // typed PulseBudget error and the fleet is unchanged
+    let tiny = AutoscaleSpec {
+        pulse_budget: 10,
+        ..auto
+    };
+    let mut capped = base_spec(old.clone())
+        .with_autoscale(tiny)
+        .build_sharded()
+        .expect("elastic engine");
+    let err = capped.spawn_shard().expect_err("over budget");
+    assert!(err.to_string().contains("endurance budget"), "{err}");
+    assert_eq!(capped.serving_shards(), 2);
+}

@@ -33,6 +33,7 @@ fn serves_digit_corpus_with_accuracy_and_energy() {
         CoordinatorConfig {
             batch_capacity: 64,
             linger: Duration::from_micros(100),
+            autoscale: None,
         },
     );
     let layer = template_layer();
@@ -80,6 +81,7 @@ fn throughput_scales_with_workers() {
             CoordinatorConfig {
                 batch_capacity: 64,
                 linger: Duration::from_micros(50),
+                autoscale: None,
             },
         );
         let mut gen = DigitGen::new(1);
@@ -121,6 +123,7 @@ fn partial_batches_flush_on_linger() {
         CoordinatorConfig {
             batch_capacity: 64,
             linger: Duration::from_millis(1),
+            autoscale: None,
         },
     );
     let mut gen = DigitGen::new(2);

@@ -9,8 +9,8 @@ use xpoint_imc::array::TmvmMode;
 use xpoint_imc::cli::Args;
 use xpoint_imc::coordinator::{Coordinator, CoordinatorConfig};
 use xpoint_imc::engine::{
-    ArraySpec, BackendKind, Engine, EngineSpec, FabricBackend, NetworkSource, SimBackend,
-    XLA_GRAPH_BATCH,
+    ArraySpec, AutoscaleSpec, BackendKind, Engine, EngineSpec, FabricBackend, NetworkSource,
+    SimBackend, XLA_GRAPH_BATCH,
 };
 use xpoint_imc::fabric::FabricConfig;
 use xpoint_imc::interconnect::LineConfig;
@@ -218,6 +218,7 @@ fn serve_flags_reproduce_the_old_serve_construction() {
             // so energy/time compare exactly against one infer_batch call
             batch_capacity: 48,
             linger: Duration::from_secs(5),
+            autoscale: None,
         },
     );
     let rxs: Vec<_> = samples
@@ -335,6 +336,20 @@ fn prop_spec_json_roundtrip_on_random_shapes() {
                 NetworkSource::Template,
                 NetworkSource::Artifact,
             ]));
+        }
+        // the autoscale section (wraps the kind in an elastic sharded
+        // fleet; xla shards are rejected by validation)
+        if kind != BackendKind::Xla && rng.bernoulli(0.3) {
+            let min = rng.range(1, 4);
+            let low = rng.range(0, 50);
+            spec = spec.with_autoscale(AutoscaleSpec {
+                min_shards: min,
+                max_shards: min + rng.range(0, 4),
+                high_watermark: low + rng.range(1, 100),
+                low_watermark: low,
+                cooldown: rng.range(0, 9) as u64,
+                pulse_budget: rng.range(0, 10_000) as u64,
+            });
         }
         let text = spec.to_json();
         let parsed = EngineSpec::from_json(&text).map_err(|e| format!("parse: {e}"))?;

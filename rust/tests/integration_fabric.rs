@@ -162,6 +162,7 @@ fn coordinator_serves_fabric_backend() {
         CoordinatorConfig {
             batch_capacity: 32,
             linger: Duration::from_micros(100),
+            autoscale: None,
         },
     );
     let layer = template_layer();

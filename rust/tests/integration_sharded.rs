@@ -239,6 +239,7 @@ fn serve_with_shards_matches_single_fabric_predictions() {
         CoordinatorConfig {
             batch_capacity: 12, // 48 images → 4 batches over 4 shards
             linger: Duration::from_micros(100),
+            autoscale: None,
         },
     );
     let rxs: Vec<_> = images
