@@ -66,6 +66,20 @@ impl Args {
         }
     }
 
+    /// A comma-separated option value split into its items, trimmed, with
+    /// empties dropped (`--remote a:1,b:2` → `["a:1", "b:2"]`). `None`
+    /// when the option was not given; an empty vec when its value held no
+    /// items (`--remote ,`).
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect()
+        })
+    }
+
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -109,5 +123,21 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = parse("serve --demo");
         assert!(a.has_flag("demo"));
+    }
+
+    #[test]
+    fn comma_lists_split_trim_and_drop_empties() {
+        let a = parse("serve --remote a:1,b:2");
+        assert_eq!(
+            a.get_list("remote"),
+            Some(vec!["a:1".to_string(), "b:2".to_string()])
+        );
+        let a = parse("serve --remote host:9000");
+        assert_eq!(a.get_list("remote"), Some(vec!["host:9000".to_string()]));
+        // a dangling comma or pure separators yield an empty list, not
+        // empty-string items
+        let a = parse("serve --remote ,");
+        assert_eq!(a.get_list("remote"), Some(vec![]));
+        assert_eq!(parse("serve").get_list("remote"), None);
     }
 }

@@ -21,6 +21,14 @@
 //! veto worn slots), backlog below the low watermark retires one, and
 //! every completed scale event lands in the metrics.
 //!
+//! Nothing here knows whether a shard is local or remote: a
+//! [`RemoteBackend`](crate::net::RemoteBackend) (`--remote
+//! host:port|unix:/path`) is just another factory in the list, so the
+//! same batching, rolling swaps and autoscaling drive a mixed
+//! local+remote fleet; a shard whose host dies fails its in-flight
+//! tickets with typed [`EngineError::Remote`](crate::engine::EngineError)
+//! errors and drops out of the rotation.
+//!
 //! `Backend` is a re-export of `engine::Engine` (the engine API subsumed
 //! the old coordinator-local trait); the concrete backends live in
 //! [`crate::engine::backends`] and [`crate::engine::sharded`].

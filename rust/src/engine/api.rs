@@ -13,7 +13,7 @@ use crate::device::ReprogramPlan;
 use crate::nn::BinaryLayer;
 
 /// Output of a batched inference.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct InferenceResult {
     /// Hardware thresholded bits, `[image][neuron]`.
     pub bits: Vec<Vec<bool>>,
@@ -376,6 +376,16 @@ pub trait Engine {
     /// it to let an in-progress walk land (and publish its event) before
     /// shutting down.
     fn scale_settled(&self) -> bool {
+        true
+    }
+
+    /// Whether the engine can still serve. The in-process engines never
+    /// go unhealthy; a [`RemoteBackend`](crate::net::RemoteBackend) turns
+    /// false once its connection is lost (timeouts, resets, protocol
+    /// violations), at which point a sharded scheduler stops routing to
+    /// the shard and fails its in-flight tickets with typed
+    /// [`EngineError::Remote`] errors.
+    fn healthy(&self) -> bool {
         true
     }
 

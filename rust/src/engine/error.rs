@@ -88,6 +88,13 @@ pub enum EngineError {
     /// Programming the spawn target would exceed the per-shard
     /// pulse-endurance budget on every candidate shard.
     PulseBudget { needed: u64, budget: u64 },
+    /// A remote shard host refused a request or its connection failed
+    /// (connect/read/write timeouts, protocol violations, host-side
+    /// engine errors).
+    Remote { addr: String, detail: String },
+    /// A `--remote`/`remote.addrs` address that is neither `host:port`
+    /// nor `unix:/path`.
+    BadRemoteAddr(String),
 }
 
 impl fmt::Display for EngineError {
@@ -118,7 +125,7 @@ impl fmt::Display for EngineError {
             Self::Requires { option, requires } => write!(f, "{option} requires {requires}"),
             Self::UnknownBackend(s) => write!(
                 f,
-                "unknown backend kind '{s}' (expected ideal|parasitic|fabric|xla)"
+                "unknown backend kind '{s}' (expected ideal|parasitic|fabric|xla|remote)"
             ),
             Self::UnknownNetwork(s) => write!(
                 f,
@@ -180,7 +187,32 @@ impl fmt::Display for EngineError {
                 "spawn vetoed: programming needs {needed} pulses but the per-shard \
                  endurance budget is {budget}"
             ),
+            Self::Remote { addr, detail } => {
+                write!(f, "remote shard at {addr}: {detail}")
+            }
+            Self::BadRemoteAddr(s) => write!(
+                f,
+                "bad remote address '{s}' (expected host:port or unix:/path)"
+            ),
         }
+    }
+}
+
+impl EngineError {
+    /// Reconstruct a [`EngineError::Remote`] from its rendered message.
+    ///
+    /// Shard worker threads report failures as strings over their event
+    /// channel (the repo-wide pattern — cf. the coordinator recognizing
+    /// `ScaleBusy` by its rendering), so the sharded engine uses this to
+    /// lift a remote shard's failure back into the typed variant before
+    /// handing it to callers.
+    pub fn parse_remote(msg: &str) -> Option<Self> {
+        let rest = msg.strip_prefix("remote shard at ")?;
+        let (addr, detail) = rest.split_once(": ")?;
+        Some(Self::Remote {
+            addr: addr.to_string(),
+            detail: detail.to_string(),
+        })
     }
 }
 
@@ -250,6 +282,28 @@ mod tests {
             e.to_string().contains("120") && e.to_string().contains("100"),
             "{e}"
         );
+        assert_eq!(
+            EngineError::Remote {
+                addr: "unix:/tmp/s0.sock".into(),
+                detail: "connection closed mid-batch".into()
+            }
+            .to_string(),
+            "remote shard at unix:/tmp/s0.sock: connection closed mid-batch"
+        );
+        assert!(EngineError::BadRemoteAddr("nonsense".into())
+            .to_string()
+            .contains("host:port or unix:/path"));
+    }
+
+    #[test]
+    fn remote_errors_roundtrip_through_their_rendering() {
+        let e = EngineError::Remote {
+            addr: "10.0.0.7:9090".into(),
+            detail: "socket i/o failed: timed out".into(),
+        };
+        assert_eq!(EngineError::parse_remote(&e.to_string()), Some(e));
+        assert_eq!(EngineError::parse_remote("shard 3 worker thread died"), None);
+        assert_eq!(EngineError::parse_remote("remote shard at nowhere"), None);
     }
 
     #[test]

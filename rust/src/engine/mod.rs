@@ -31,6 +31,11 @@
 //! * [`error`] — [`EngineError`], the typed error surface (implements
 //!   `std::error::Error`, lifts into `anyhow` via `?`).
 //!
+//! A fifth fidelity lives out-of-process: [`crate::net`] contributes the
+//! `Remote` backend ([`RemoteSpec`], `--remote host:port|unix:/path`),
+//! one shard's worth of fabric served by an `xpoint shard-host` behind a
+//! socket — to the scheduler it is just another [`BackendFactory`].
+//!
 //! Adding a new backend fidelity = one [`BackendKind`] variant + one arm
 //! in [`EngineSpec::build`] — no new `main.rs` special case.
 
@@ -49,5 +54,5 @@ pub use error::EngineError;
 pub use sharded::{ShardBuilder, ShardState, ShardedEngine};
 pub use spec::{
     ArraySpec, AutoscaleSpec, BackendKind, BatchPolicy, EngineSpec, FabricSpec, NetworkSource,
-    ShardSpec,
+    RemoteSpec, ShardSpec,
 };

@@ -218,6 +218,11 @@ struct Shard {
     /// when it parks again or the resident network changes), so repeated
     /// spawn attempts don't inflate the veto counter.
     vetoed: bool,
+    /// The last failure this shard reported. When the worker thread dies
+    /// (a remote shard's connection was lost), tickets stranded on the
+    /// shard fail with this message — so callers see the typed
+    /// `EngineError::Remote` rendering, not a generic thread obituary.
+    last_error: Option<String>,
 }
 
 /// Bookkeeping for one outstanding ticket.
@@ -314,6 +319,12 @@ fn shard_main(
         if tx.send(evt).is_err() {
             break; // owner gone — nothing left to report to
         }
+        if !engine.healthy() {
+            // the engine lost its substrate (a remote shard's connection
+            // died) — end the thread so the scheduler sees the closed
+            // channel and routes around the dead shard
+            break;
+        }
     }
 }
 
@@ -339,18 +350,36 @@ impl ShardedEngine {
         initial: usize,
         pulse_budget: u64,
     ) -> crate::Result<Self> {
+        Self::elastic_with(builder, layers, initial, pulse_budget, Vec::new())
+    }
+
+    /// [`elastic`](ShardedEngine::elastic) plus `extras`: additional
+    /// shard slots built from their own one-shot factories (remote shard
+    /// hosts joining a local elastic fleet). Extras are full pool members
+    /// — dispatch, rolling swaps and retire/spawn treat them exactly like
+    /// builder-made slots, and they are charged the same deployment wear
+    /// (their cells hold the same image) — but a *new* slot spawned later
+    /// always comes from the local `builder`.
+    pub fn elastic_with(
+        builder: ShardBuilder,
+        layers: Vec<BinaryLayer>,
+        initial: usize,
+        pulse_budget: u64,
+        extras: Vec<BackendFactory>,
+    ) -> crate::Result<Self> {
         anyhow::ensure!(
-            initial >= 1,
+            initial + extras.len() >= 1,
             "elastic engine needs at least one initial shard"
         );
         anyhow::ensure!(!layers.is_empty(), "elastic engine needs a network");
-        let factories: Vec<BackendFactory> = (0..initial)
+        let mut factories: Vec<BackendFactory> = (0..initial)
             .map(|_| {
                 let b = builder.clone();
                 let l = layers.clone();
                 Box::new(move || (*b)(l)) as BackendFactory
             })
             .collect();
+        factories.extend(extras);
         let mut engine = Self::assemble(factories)?;
         let image = image_plan(None, &layers)?;
         for s in &mut engine.shards {
@@ -405,6 +434,7 @@ impl ShardedEngine {
                 pulses: 0,
                 cells: None,
                 vetoed: false,
+                last_error: None,
             });
         }
 
@@ -518,10 +548,15 @@ impl ShardedEngine {
             .filter(|(_, f)| f.shard == shard)
             .map(|(&t, _)| t)
             .collect();
+        // strand tickets with the shard's own failure when it reported
+        // one (the typed `remote shard at ..` rendering a poll can lift)
+        let cause = self.shards[shard]
+            .last_error
+            .clone()
+            .unwrap_or_else(|| format!("shard {shard} worker thread died"));
         for t in dead {
             self.in_flight.remove(&t);
-            self.ready
-                .push((t, Err(format!("shard {shard} worker thread died"))));
+            self.ready.push((t, Err(cause.clone())));
         }
         self.shards[shard].in_flight_batches = 0;
         self.shards[shard].in_flight_images = 0;
@@ -561,6 +596,9 @@ impl ShardedEngine {
                 telemetry,
             } => {
                 self.shards[shard].telemetry = telemetry;
+                if let Err(e) = &result {
+                    self.shards[shard].last_error = Some(e.clone());
+                }
                 if let Some(info) = self.in_flight.remove(&ticket) {
                     let s = &mut self.shards[info.shard];
                     s.in_flight_batches = s.in_flight_batches.saturating_sub(1);
@@ -1018,9 +1056,15 @@ impl Engine for ShardedEngine {
         // by the drain regression tests) — never a spurious `Empty`
         if let Some(pos) = self.ready.iter().position(|(t, _)| *t == ticket) {
             let (_, result) = self.ready.remove(pos);
-            return result
-                .map(Some)
-                .map_err(|e| anyhow::anyhow!("sharded batch failed: {e}"));
+            return result.map(Some).map_err(|e| {
+                // a remote shard's failure travels the worker channel as
+                // its rendering — lift it back into the typed variant so
+                // callers can match on EngineError::Remote
+                match EngineError::parse_remote(&e) {
+                    Some(typed) => typed.into(),
+                    None => anyhow::anyhow!("sharded batch failed: {e}"),
+                }
+            });
         }
         if self.in_flight.contains_key(&ticket) {
             return Ok(None);
@@ -1241,6 +1285,7 @@ impl Engine for ShardedEngine {
             pulses: plan.cells_changed(),
             cells: Some(cells),
             vetoed: false,
+            last_error: None,
         });
         self.scale_op = Some(ScaleOp::Spawn {
             shard: i,

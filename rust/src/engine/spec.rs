@@ -32,6 +32,7 @@ use crate::coordinator::autoscale::AutoscalePolicy;
 use crate::coordinator::CoordinatorConfig;
 use crate::fabric::{place_layers, FabricConfig, PlacementStrategy};
 use crate::interconnect::LineConfig;
+use crate::net::{remote_factory, RemoteAddr};
 use crate::nn::BinaryLayer;
 use crate::runtime::{ArtifactStore, Runtime};
 use crate::util::json::Json;
@@ -51,6 +52,11 @@ pub enum BackendKind {
     /// worker thread behind an asynchronous least-loaded scheduler
     /// ([`ShardedEngine`]). Configured by [`EngineSpec::sharding`].
     Sharded,
+    /// One shard's worth of fabric served by a remote `xpoint
+    /// shard-host` process, spoken to over TCP or a Unix socket
+    /// ([`RemoteBackend`](crate::net::RemoteBackend)). Configured by
+    /// [`EngineSpec::remote`] (`--remote host:port|unix:/path`).
+    Remote,
 }
 
 impl BackendKind {
@@ -61,6 +67,7 @@ impl BackendKind {
             Self::Fabric => "fabric",
             Self::Xla => "xla",
             Self::Sharded => "sharded",
+            Self::Remote => "remote",
         }
     }
 
@@ -71,6 +78,7 @@ impl BackendKind {
             "fabric" => Ok(Self::Fabric),
             "xla" => Ok(Self::Xla),
             "sharded" => Ok(Self::Sharded),
+            "remote" => Ok(Self::Remote),
             _ => Err(EngineError::UnknownBackend(s.to_string())),
         }
     }
@@ -115,6 +123,105 @@ impl ShardSpec {
         Json::Obj(vec![
             ("shards".into(), Json::Num(self.shards as f64)),
             ("inner".into(), Json::Str(self.inner.name().into())),
+        ])
+    }
+}
+
+/// Remote-fleet section of the spec: shard-host endpoints and socket
+/// timeouts. Empty `addrs` (the default) means an all-local fleet; for
+/// the `Remote` backend exactly one address drives the whole engine; for
+/// `Sharded` every address joins the fleet as one extra shard next to
+/// the local ones (`--remote host:port,unix:/path`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteSpec {
+    /// Shard-host endpoints (`host:port` or `unix:/path`).
+    pub addrs: Vec<String>,
+    /// How long a connect attempt may retry before giving up \[ms\].
+    pub connect_timeout_ms: u64,
+    /// Per-call socket read/write deadline \[ms\].
+    pub io_timeout_ms: u64,
+}
+
+impl Default for RemoteSpec {
+    fn default() -> Self {
+        Self {
+            addrs: Vec::new(),
+            connect_timeout_ms: 5_000,
+            io_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl RemoteSpec {
+    pub fn connect_timeout(&self) -> Duration {
+        Duration::from_millis(self.connect_timeout_ms)
+    }
+
+    pub fn io_timeout(&self) -> Duration {
+        Duration::from_millis(self.io_timeout_ms)
+    }
+
+    pub fn validate(&self) -> Result<(), EngineError> {
+        for addr in &self.addrs {
+            RemoteAddr::parse(addr)?;
+        }
+        if self.connect_timeout_ms == 0 || self.io_timeout_ms == 0 {
+            return Err(EngineError::Spec {
+                field: "remote",
+                detail: format!(
+                    "socket timeouts must be at least 1 ms, got connect={} io={}",
+                    self.connect_timeout_ms, self.io_timeout_ms
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<Self, EngineError> {
+        let entries = obj_entries(v, "remote")?;
+        let mut spec = Self::default();
+        for (key, val) in entries {
+            match key.as_str() {
+                "addrs" => {
+                    let items = match val {
+                        Json::Arr(items) => items,
+                        _ => {
+                            return Err(EngineError::Json(
+                                "field 'remote.addrs': expected an array of strings".into(),
+                            ))
+                        }
+                    };
+                    spec.addrs = items
+                        .iter()
+                        .map(|a| json_str(a, "remote.addrs").map(String::from))
+                        .collect::<Result<_, _>>()?;
+                }
+                "connect_timeout_ms" => {
+                    spec.connect_timeout_ms =
+                        json_usize(val, "remote.connect_timeout_ms")? as u64
+                }
+                "io_timeout_ms" => {
+                    spec.io_timeout_ms = json_usize(val, "remote.io_timeout_ms")? as u64
+                }
+                other => {
+                    return Err(EngineError::Json(format!("unknown field 'remote.{other}'")))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "addrs".into(),
+                Json::Arr(self.addrs.iter().map(|a| Json::Str(a.clone())).collect()),
+            ),
+            (
+                "connect_timeout_ms".into(),
+                Json::Num(self.connect_timeout_ms as f64),
+            ),
+            ("io_timeout_ms".into(), Json::Num(self.io_timeout_ms as f64)),
         ])
     }
 }
@@ -561,6 +668,9 @@ pub struct EngineSpec {
     /// fleet starts at `min_shards` and the coordinator's scheduler
     /// evaluates the policy live (`--autoscale min,max`).
     pub autoscale: Option<AutoscaleSpec>,
+    /// Remote shard hosts (`Remote` and `Sharded`): endpoints that join
+    /// the fleet over the wire protocol (`--remote host:port|unix:/path`).
+    pub remote: RemoteSpec,
     /// Coordinator batching policy.
     pub batching: BatchPolicy,
     /// Explicit layer stack (code-level override; never serialized).
@@ -584,6 +694,7 @@ impl EngineSpec {
             fabric: FabricSpec::default(),
             sharding: ShardSpec::default(),
             autoscale: None,
+            remote: RemoteSpec::default(),
             batching: BatchPolicy::default(),
             layers: None,
         }
@@ -662,6 +773,32 @@ impl EngineSpec {
         self
     }
 
+    /// Point the spec at remote shard hosts. One address on a
+    /// non-sharded spec selects the `Remote` backend outright; on a
+    /// `Sharded` spec (or with several addresses) every endpoint joins
+    /// the fleet as one extra shard next to the local ones.
+    pub fn with_remote<I, S>(mut self, addrs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.remote.addrs = addrs.into_iter().map(Into::into).collect();
+        if self.kind != BackendKind::Sharded {
+            if self.remote.addrs.len() == 1 {
+                self.kind = BackendKind::Remote;
+            } else {
+                // several hosts, no local shards: an all-remote fleet
+                self.kind = BackendKind::Sharded;
+                self.sharding = ShardSpec {
+                    shards: 0,
+                    inner: BackendKind::Ideal,
+                };
+            }
+        }
+        self.workers = 1;
+        self
+    }
+
     /// Select the fabric's tile [`PlacementStrategy`].
     pub fn with_placement(mut self, placement: PlacementStrategy) -> Self {
         self.fabric.placement = placement;
@@ -725,7 +862,8 @@ impl EngineSpec {
             }
         }
         if self.kind == BackendKind::Sharded {
-            if self.sharding.shards == 0 {
+            // a fleet of zero local shards is fine when remote hosts fill it
+            if self.sharding.shards == 0 && self.remote.addrs.is_empty() {
                 return Err(EngineError::ZeroShards);
             }
             match self.sharding.inner {
@@ -745,7 +883,63 @@ impl EngineSpec {
                             .into(),
                     });
                 }
+                BackendKind::Remote => {
+                    return Err(EngineError::Spec {
+                        field: "sharding",
+                        detail: "remote shards join the fleet through the remote.addrs \
+                                 section (--remote), not as the inner backend"
+                            .into(),
+                    });
+                }
                 _ => {}
+            }
+        }
+        if !self.remote.addrs.is_empty() || self.kind == BackendKind::Remote {
+            self.remote.validate()?;
+            match self.kind {
+                BackendKind::Remote => {
+                    if self.remote.addrs.len() != 1 {
+                        return Err(EngineError::Spec {
+                            field: "remote",
+                            detail: format!(
+                                "the remote backend drives exactly one shard host, got \
+                                 {} addresses (shard a fleet with --shards/--autoscale)",
+                                self.remote.addrs.len()
+                            ),
+                        });
+                    }
+                    if self.layers.is_some() {
+                        return Err(EngineError::Spec {
+                            field: "layers",
+                            detail: "a remote shard serves the network resident on its \
+                                     host — explicit layers have nowhere to go"
+                                .into(),
+                        });
+                    }
+                }
+                BackendKind::Sharded => {}
+                other => {
+                    return Err(EngineError::Spec {
+                        field: "remote",
+                        detail: format!(
+                            "remote shard addresses need the remote or sharded \
+                             backend, not {}",
+                            other.name()
+                        ),
+                    });
+                }
+            }
+            // a shard host serves one connection at a time, so a second
+            // coordinator worker would block in connect() forever
+            if self.workers != 1 {
+                return Err(EngineError::Spec {
+                    field: "workers",
+                    detail: format!(
+                        "a shard host serves one connection at a time — remote \
+                         fleets take exactly 1 coordinator worker, got {}",
+                        self.workers
+                    ),
+                });
             }
         }
         match self.effective_kind() {
@@ -771,6 +965,8 @@ impl EngineSpec {
                     });
                 }
             }
+            // the host validates its own spec; nothing local to check
+            BackendKind::Remote => {}
             // unreachable: nesting was rejected above
             BackendKind::Sharded => {}
         }
@@ -782,6 +978,8 @@ impl EngineSpec {
             BackendKind::Ideal | BackendKind::Parasitic => self.array.rows,
             BackendKind::Fabric => self.fabric.max_batch,
             BackendKind::Xla => XLA_GRAPH_BATCH,
+            // the host enforces its own limit per call, with a typed error
+            BackendKind::Remote => usize::MAX,
             BackendKind::Sharded => usize::MAX, // unreachable after the nest check
         };
         if self.batching.capacity > backend_max {
@@ -839,9 +1037,9 @@ impl EngineSpec {
 
     /// Build a spec from `xpoint serve` flags: an optional `--engine
     /// path.json` base overlaid with `--xla`/`--fabric`/`--parasitic`,
-    /// `--shards N`, `--grid N`, `--placement S`, `--batch N` and
-    /// `--workers N`. Conflicting flag combinations are rejected with one
-    /// typed error each.
+    /// `--shards N`, `--remote host:port|unix:/path[,..]`, `--grid N`,
+    /// `--placement S`, `--batch N` and `--workers N`. Conflicting flag
+    /// combinations are rejected with one typed error each.
     pub fn from_args(args: &Args) -> Result<Self, EngineError> {
         let json_base = args.get("engine").is_some();
         let mut spec = match args.get("engine") {
@@ -958,6 +1156,54 @@ impl EngineSpec {
                 self.workers = 1;
             }
         }
+        if let Some(addrs) = args.get_list("remote") {
+            if xla {
+                return Err(EngineError::Conflict {
+                    first: "--remote",
+                    second: "--xla",
+                });
+            }
+            if addrs.is_empty() {
+                return Err(EngineError::Spec {
+                    field: "remote",
+                    detail: "--remote expects host:port or unix:/path endpoints \
+                             (comma-separated)"
+                        .into(),
+                });
+            }
+            if self.kind != BackendKind::Sharded {
+                // without local shards the fidelity flags describe local
+                // fabric this spec doesn't have — the host owns its model
+                if fabric {
+                    return Err(EngineError::Conflict {
+                        first: "--remote",
+                        second: "--fabric",
+                    });
+                }
+                if parasitic {
+                    return Err(EngineError::Conflict {
+                        first: "--remote",
+                        second: "--parasitic",
+                    });
+                }
+                if addrs.len() == 1 {
+                    self.kind = BackendKind::Remote;
+                } else {
+                    // several hosts, no local shards: an all-remote fleet
+                    self.kind = BackendKind::Sharded;
+                    self.sharding = ShardSpec {
+                        shards: 0,
+                        inner: BackendKind::Ideal,
+                    };
+                }
+            }
+            self.remote.addrs = addrs;
+            // a shard host serves one connection at a time, so the fleet
+            // takes one coordinator worker (validate() rejects more)
+            if !json_base && args.get("workers").is_none() {
+                self.workers = 1;
+            }
+        }
         if let Some(g) = parse_opt_usize(args, "grid")? {
             if self.effective_kind() != BackendKind::Fabric {
                 return Err(EngineError::Requires {
@@ -1019,6 +1265,7 @@ impl EngineSpec {
                     None => Json::Null,
                 },
             ),
+            ("remote".into(), self.remote.to_json()),
             ("batching".into(), self.batching.to_json()),
         ]);
         let mut s = obj.pretty();
@@ -1058,6 +1305,7 @@ impl EngineSpec {
                         Some(AutoscaleSpec::from_json(val)?)
                     }
                 }
+                "remote" => spec.remote = RemoteSpec::from_json(val)?,
                 "batching" => spec.batching = BatchPolicy::from_json(val)?,
                 other => return Err(EngineError::Json(format!("unknown field '{other}'"))),
             }
@@ -1100,20 +1348,29 @@ impl EngineSpec {
             ),
             BackendKind::Ideal => "circuit-level simulator (Ideal)".to_string(),
             BackendKind::Parasitic => "circuit-level simulator (Parasitic)".to_string(),
+            BackendKind::Remote => format!(
+                "remote shard host at {}",
+                self.remote.addrs.first().map(String::as_str).unwrap_or("<unset>")
+            ),
             BackendKind::Sharded => {
                 let mut inner = self.clone();
                 inner.kind = self.sharding.inner;
                 inner.autoscale = None;
+                inner.remote = RemoteSpec::default();
+                let remote = match self.remote.addrs.len() {
+                    0 => String::new(),
+                    n => format!(" + {n} remote host(s)"),
+                };
                 match &self.autoscale {
                     Some(a) => format!(
                         "elastic sharded engine: {}..={} shard(s) (queue-driven \
-                         autoscale), each a {}",
+                         autoscale), each a {}{remote}",
                         a.min_shards,
                         a.max_shards,
                         inner.describe()
                     ),
                     None => format!(
-                        "async sharded engine: {} shard(s), each a {}",
+                        "async sharded engine: {} shard(s), each a {}{remote}",
                         self.sharding.shards,
                         inner.describe()
                     ),
@@ -1243,42 +1500,66 @@ impl EngineSpec {
                     })
                     .collect())
             }
+            BackendKind::Remote => {
+                // validate() pinned this to exactly one address and one
+                // worker — the host serves a single connection at a time
+                let addr = RemoteAddr::parse(&self.remote.addrs[0])?;
+                Ok((0..n)
+                    .map(|_| {
+                        remote_factory(
+                            addr.clone(),
+                            self.remote.connect_timeout(),
+                            self.remote.io_timeout(),
+                        )
+                    })
+                    .collect())
+            }
             BackendKind::Sharded => {
                 if let Some(auto) = &self.autoscale {
                     // elastic fleet: every coordinator worker owns an
                     // independent elastic engine that starts at
-                    // min_shards and spawns/retires from the template
+                    // min_shards and spawns/retires from the template;
+                    // remote hosts join the initial pool as extra slots
                     let mut inner = self.clone();
                     inner.kind = self.sharding.inner;
                     inner.autoscale = None;
+                    inner.remote = RemoteSpec::default();
                     let layers = inner.resolve_layers()?;
                     let builder = self.build_shard_builder(&layers)?;
                     let initial = auto.min_shards;
                     let budget = auto.pulse_budget;
-                    return Ok((0..n)
-                        .map(|_| {
-                            let builder = builder.clone();
-                            let layers = layers.clone();
-                            Box::new(move || {
-                                Ok(Box::new(ShardedEngine::elastic(
-                                    builder, layers, initial, budget,
-                                )?) as Box<dyn Engine>)
-                            }) as BackendFactory
-                        })
-                        .collect());
+                    let mut out: Vec<BackendFactory> = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let builder = builder.clone();
+                        let layers = layers.clone();
+                        let extras = self.remote_factories()?;
+                        out.push(Box::new(move || {
+                            Ok(Box::new(ShardedEngine::elastic_with(
+                                builder, layers, initial, budget, extras,
+                            )?) as Box<dyn Engine>)
+                        }) as BackendFactory);
+                    }
+                    return Ok(out);
                 }
                 // resolve the inner spec once for all n·shards engines
                 // (keeping the once-per-spec contract above), then chunk
                 // the factories so every coordinator worker owns an
-                // independent sharded engine of `shards` shards
+                // independent sharded engine of `shards` local shards
+                // plus one shard per remote host
                 let mut inner = self.clone();
                 inner.kind = self.sharding.inner;
+                inner.remote = RemoteSpec::default();
                 let shards = self.sharding.shards;
-                let mut inner_factories = inner.build_many(n * shards)?;
+                let mut inner_factories = if shards == 0 {
+                    Vec::new()
+                } else {
+                    inner.build_many(n * shards)?
+                };
                 let mut out: Vec<BackendFactory> = Vec::with_capacity(n);
                 for _ in 0..n {
-                    let group: Vec<BackendFactory> =
+                    let mut group: Vec<BackendFactory> =
                         inner_factories.drain(..shards).collect();
+                    group.extend(self.remote_factories()?);
                     out.push(Box::new(move || {
                         Ok(Box::new(ShardedEngine::new(group)?) as Box<dyn Engine>)
                     }) as BackendFactory);
@@ -1314,6 +1595,26 @@ impl EngineSpec {
                     .collect())
             }
         }
+    }
+
+    /// One [`BackendFactory`] per configured remote shard host — each
+    /// connects lazily on its worker/shard thread, exactly like a local
+    /// engine builds there. Addresses were validated by
+    /// [`validate`](EngineSpec::validate); re-parsing here keeps the
+    /// helper usable on its own.
+    fn remote_factories(&self) -> Result<Vec<BackendFactory>, EngineError> {
+        self.remote
+            .addrs
+            .iter()
+            .map(|a| {
+                let addr = RemoteAddr::parse(a)?;
+                Ok(remote_factory(
+                    addr,
+                    self.remote.connect_timeout(),
+                    self.remote.io_timeout(),
+                ))
+            })
+            .collect()
     }
 
     /// The reusable elastic shard template this spec describes: builds
@@ -1366,10 +1667,12 @@ impl EngineSpec {
                 Ok(builder)
             }
             // validate() rejected these inner kinds already
-            BackendKind::Xla | BackendKind::Sharded => Err(EngineError::Spec {
-                field: "autoscale",
-                detail: "autoscale shards must be ideal|parasitic|fabric".into(),
-            }),
+            BackendKind::Xla | BackendKind::Sharded | BackendKind::Remote => {
+                Err(EngineError::Spec {
+                    field: "autoscale",
+                    detail: "autoscale shards must be ideal|parasitic|fabric".into(),
+                })
+            }
         }
     }
 
@@ -1388,14 +1691,28 @@ impl EngineSpec {
             let mut inner = self.clone();
             inner.kind = self.sharding.inner;
             inner.autoscale = None;
+            inner.remote = RemoteSpec::default();
             let layers = inner.resolve_layers()?;
             let builder = self.build_shard_builder(&layers)?;
-            ShardedEngine::elastic(builder, layers, auto.min_shards, auto.pulse_budget)
+            ShardedEngine::elastic_with(
+                builder,
+                layers,
+                auto.min_shards,
+                auto.pulse_budget,
+                self.remote_factories()?,
+            )
         } else {
             let mut inner = self.clone();
             inner.kind = self.sharding.inner;
             inner.workers = self.sharding.shards;
-            ShardedEngine::new(inner.build_factories()?)
+            inner.remote = RemoteSpec::default();
+            let mut factories = if self.sharding.shards == 0 {
+                Vec::new()
+            } else {
+                inner.build_factories()?
+            };
+            factories.extend(self.remote_factories()?);
+            ShardedEngine::new(factories)
         }
     }
 
@@ -1597,6 +1914,173 @@ mod tests {
             err.to_string().contains("'shards'") && err.to_string().contains("two"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn remote_flag_selects_the_remote_backend() {
+        let spec = EngineSpec::from_args(&args("serve --remote 10.0.0.1:9000")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Remote);
+        assert_eq!(spec.remote.addrs, vec!["10.0.0.1:9000".to_string()]);
+        assert_eq!(spec.workers, 1, "a shard host serves one connection");
+        assert_eq!(
+            spec.remote.connect_timeout_ms,
+            RemoteSpec::default().connect_timeout_ms
+        );
+        // several hosts and no local shards: an all-remote sharded fleet
+        let spec = EngineSpec::from_args(&args(
+            "serve --remote 10.0.0.1:9000,10.0.0.2:9000",
+        ))
+        .unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(spec.sharding.shards, 0, "no local shards");
+        assert_eq!(spec.remote.addrs.len(), 2);
+        // the builder mirrors the flags
+        let spec = EngineSpec::new(BackendKind::Ideal).with_remote(["unix:/tmp/s.sock"]);
+        assert_eq!(spec.kind, BackendKind::Remote);
+        assert_eq!(spec.workers, 1);
+    }
+
+    #[test]
+    fn remote_addresses_join_a_sharded_fleet() {
+        let spec =
+            EngineSpec::from_args(&args("serve --shards 1 --remote 10.0.0.1:9000")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(spec.sharding.shards, 1, "one local shard");
+        assert_eq!(spec.sharding.inner, BackendKind::Ideal);
+        assert_eq!(spec.remote.addrs, vec!["10.0.0.1:9000".to_string()]);
+        // ...and the elastic fleet takes remote extras too
+        let spec = EngineSpec::from_args(&args(
+            "serve --autoscale 1,4 --remote unix:/tmp/shard.sock",
+        ))
+        .unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert!(spec.autoscale.is_some());
+        assert_eq!(spec.remote.addrs.len(), 1);
+    }
+
+    #[test]
+    fn remote_flag_conflicts_and_misuse_are_typed_errors() {
+        let err = EngineSpec::from_args(&args("serve --xla --remote h:1")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--remote and --xla are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --fabric --remote h:1")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--remote and --fabric are mutually exclusive — pick one backend"
+        );
+        let err = EngineSpec::from_args(&args("serve --parasitic --remote h:1")).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "--remote and --parasitic are mutually exclusive — pick one backend"
+        );
+        // ...but through the sharded wrapper the fidelity flag shapes the
+        // *local* shards, so it composes
+        let spec =
+            EngineSpec::from_args(&args("serve --fabric --shards 2 --remote h:1")).unwrap();
+        assert_eq!(spec.sharding.inner, BackendKind::Fabric);
+        // an explicitly zero-shard fleet is still an error, remote or not
+        let err = EngineSpec::from_args(&args("serve --shards 0 --remote h:1")).unwrap_err();
+        assert_eq!(err, EngineError::ZeroShards);
+        // malformed endpoints are typed, with the offender named
+        let err = EngineSpec::from_args(&args("serve --remote nonsense")).unwrap_err();
+        assert_eq!(err, EngineError::BadRemoteAddr("nonsense".into()));
+        let err = EngineSpec::from_args(&args("serve --remote host:notaport")).unwrap_err();
+        assert!(matches!(err, EngineError::BadRemoteAddr(_)), "{err}");
+        // a remote fleet takes exactly one coordinator worker
+        let err =
+            EngineSpec::from_args(&args("serve --remote h:1 --workers 2")).unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "workers", .. })
+                && err.to_string().contains("one connection at a time"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn remote_spec_validation_pins_the_shapes() {
+        // the remote backend drives exactly one host
+        let mut spec = EngineSpec::new(BackendKind::Remote);
+        spec.workers = 1;
+        let err = spec.clone().validate().unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "remote", .. })
+                && err.to_string().contains("exactly one shard host"),
+            "{err}"
+        );
+        spec.remote.addrs = vec!["h:1".into()];
+        assert!(spec.validate().is_ok());
+        // explicit layers have nowhere to go — the host owns the network
+        let err = spec
+            .clone()
+            .with_layers(vec![crate::report::table2::template_layer()])
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "layers", .. }),
+            "{err}"
+        );
+        // addresses on a plain local backend are a contradiction
+        let mut stray = EngineSpec::new(BackendKind::Ideal);
+        stray.remote.addrs = vec!["h:1".into()];
+        stray.workers = 1;
+        let err = stray.validate().unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "remote", .. })
+                && err.to_string().contains("remote or sharded"),
+            "{err}"
+        );
+        // zero timeouts would hang or spin — rejected
+        let mut spec = EngineSpec::new(BackendKind::Remote);
+        spec.workers = 1;
+        spec.remote.addrs = vec!["h:1".into()];
+        spec.remote.io_timeout_ms = 0;
+        let err = spec.validate().unwrap_err();
+        assert!(err.to_string().contains("timeouts"), "{err}");
+        // remote cannot be the sharded *inner* (it joins via addrs)
+        let err = EngineSpec::new(BackendKind::Ideal)
+            .with_shards(2, BackendKind::Remote)
+            .validate()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::Spec { field: "sharding", .. })
+                && err.to_string().contains("remote.addrs"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn remote_section_survives_json_roundtrip() {
+        let mut spec = EngineSpec::new(BackendKind::Ideal).with_shards(1, BackendKind::Ideal);
+        spec.remote = RemoteSpec {
+            addrs: vec!["10.0.0.1:9000".into(), "unix:/tmp/shard.sock".into()],
+            connect_timeout_ms: 250,
+            io_timeout_ms: 1_000,
+        };
+        spec.workers = 1;
+        let text = spec.to_json();
+        let parsed = EngineSpec::from_json(&text).expect("roundtrip parse");
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json(), text, "serialization is a fixed point");
+        // sparse section takes defaults for the rest
+        let spec = EngineSpec::from_json(
+            r#"{"backend":"remote","workers":1,"remote":{"addrs":["h:1"]}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.kind, BackendKind::Remote);
+        assert_eq!(spec.remote.io_timeout_ms, RemoteSpec::default().io_timeout_ms);
+        // unknown subfields and ill-typed addrs are rejected
+        let err = EngineSpec::from_json(r#"{"remote":{"adrs":["h:1"]}}"#).unwrap_err();
+        assert!(err.to_string().contains("remote.adrs"), "{err}");
+        let err = EngineSpec::from_json(r#"{"remote":{"addrs":"h:1"}}"#).unwrap_err();
+        assert!(err.to_string().contains("remote.addrs"), "{err}");
+        // a bad endpoint in a JSON spec is the same typed error the CLI gets
+        let err = EngineSpec::from_json(
+            r#"{"backend":"remote","workers":1,"remote":{"addrs":["nope"]}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err, EngineError::BadRemoteAddr("nope".into()));
     }
 
     #[test]

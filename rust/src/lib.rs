@@ -34,8 +34,9 @@
 //! | `Fabric` | event-driven grid of subarrays, tiled + pipelined | multi-layer networks, scaling studies, utilization/interlink traffic |
 //! | `Xla` | AOT-compiled JAX/Pallas graph on PJRT (needs `make artifacts`) | golden-model verification, host-speed inference |
 //! | `Sharded` | N shards of any kind above, each on its own thread behind an async least-loaded scheduler | serving throughput: scale one engine to many arrays (`--shards N`); elastic with `--autoscale min,max` |
+//! | `Remote` | one shard's worth of fabric served by an `xpoint shard-host` process behind a TCP or Unix socket | multi-host serving: `--remote host:port\|unix:/path`; mixes with local shards into one fleet (`--shards N --remote …`) |
 //!
-//! All five present the same [`engine::Engine`] trait: batched inference,
+//! All six present the same [`engine::Engine`] trait: batched inference,
 //! [`engine::Capabilities`] introspection, typed [`engine::Telemetry`]
 //! (energy/time/steps/utilization) and a non-blocking `submit`/`poll`
 //! pair — genuinely asynchronous for `Sharded` (tickets complete out of
@@ -142,6 +143,14 @@
 //!   pulse-endurance wear budgets when built from an
 //!   [`engine::AutoscaleSpec`]) behind the
 //!   [`engine::EngineSpec::build`] registry.
+//! * [`net`] — multi-host serving: a length-prefixed, versioned wire
+//!   protocol ([`net::Msg`]) for everything that drives a shard
+//!   (inference, live swaps, telemetry, shutdown), the `xpoint
+//!   shard-host` socket server ([`net::Listener`], [`net::serve_factory`])
+//!   and [`net::RemoteBackend`] — an [`engine::Engine`] whose substrate
+//!   lives behind a socket, with connect/io timeouts, typed
+//!   [`engine::EngineError::Remote`] failures and a `healthy()` signal
+//!   the sharded scheduler uses to route around a dead host.
 //! * [`coordinator`] — the L3 serving shell: request batching plus one
 //!   scheduler thread per engine, driving it purely through the
 //!   non-blocking `submit`/`poll` pair (spawned from
@@ -171,6 +180,7 @@ pub mod fabric;
 pub mod nn;
 pub mod runtime;
 pub mod engine;
+pub mod net;
 pub mod coordinator;
 pub mod report;
 pub mod cli;

@@ -7,8 +7,9 @@
 use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
 use xpoint_imc::cli::Args;
 use xpoint_imc::coordinator::Coordinator;
-use xpoint_imc::engine::{BackendKind, EngineSpec, NetworkSource};
+use xpoint_imc::engine::{BackendKind, EngineError, EngineSpec, NetworkSource};
 use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::net::{serve_factory, Listener, RemoteAddr};
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
 use xpoint_imc::report;
 use xpoint_imc::runtime::artifact::artifacts_available;
@@ -48,10 +49,21 @@ COMMANDS:
             [--shards N]          (N async engine shards per worker)
             [--autoscale MIN,MAX] (elastic shards: queue-driven
             spawn/retire between MIN and MAX, evaluated live)
+            [--remote ADDR[,ADDR..]] (remote shard hosts, host:port or
+            unix:/path — alone: the whole engine; with --shards or
+            --autoscale: extra shards joining the local fleet)
             [--placement roundrobin|locality] (fabric tile placement)
             [--swap-to template|artifact|auto] (live-swap the network
             mid-run: shards drain + reprogram one at a time)
             [--engine spec.json]  (declarative EngineSpec; flags override)
+  shard-host serve one shard's worth of fabric behind a socket
+            --listen host:port|unix:/path (required; TCP port 0 picks a
+            free port, printed as `listening on ...`)
+            [--conns N] (exit after N connections; default: serve until
+            a shutdown order arrives)
+            backend flags as for serve (--parasitic --fabric --grid
+            --batch --engine ...); --shards/--autoscale/--remote are
+            rejected — fleets are composed on the serve side
   help      this text
 ";
 
@@ -221,6 +233,7 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             Ok(())
         }
         Some("serve") => serve(args),
+        Some("shard-host") => shard_host(args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -240,6 +253,45 @@ fn load_layer_or_template(
             Ok((report::table2::template_layer(), None))
         }
     }
+}
+
+/// `xpoint shard-host` — one shard's worth of fabric behind a socket.
+/// The remote end (`serve --remote`) drives it over the wire protocol;
+/// killing the process mid-serve is the failure mode the sharded
+/// scheduler's dead-shard routing is built for.
+fn shard_host(args: &Args) -> xpoint_imc::Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("shard-host needs --listen host:port or unix:/path"))?;
+    let addr = RemoteAddr::parse(listen)?;
+    let mut spec = EngineSpec::from_args(args)?;
+    if matches!(spec.kind, BackendKind::Sharded | BackendKind::Remote) {
+        return Err(EngineError::Spec {
+            field: "backend",
+            detail: "shard-host serves one shard's worth of fabric — compose \
+                     fleets with --shards/--remote on the serve side"
+                .into(),
+        }
+        .into());
+    }
+    // the socket is this host's one client; a worker pool has nothing to do
+    spec.workers = 1;
+    if spec.network == NetworkSource::Auto && !artifacts_available() {
+        eprintln!("(artifacts missing — using template weights)");
+    }
+    let max_conns = match args.get("conns") {
+        None => None,
+        Some(_) => Some(args.get_usize("conns", 0)?),
+    };
+    let factory = spec.build()?;
+    let listener = Listener::bind(&addr)?;
+    println!("shard-host: {}", spec.describe());
+    // the resolved address (port 0 → the actual port) goes out before the
+    // accept loop so a launcher can read it and point --remote at it
+    println!("listening on {}", listener.local_addr_string());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    serve_factory(factory, listener, max_conns)
 }
 
 fn serve(args: &Args) -> xpoint_imc::Result<()> {

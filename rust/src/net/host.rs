@@ -1,0 +1,371 @@
+//! The serving side of the wire protocol: bind a socket, build one
+//! shard's engine, answer [`Msg`] requests — the library behind the
+//! `xpoint shard-host` subcommand.
+//!
+//! One engine, one connection at a time: engines are deliberately not
+//! `Send` (PJRT thread-affinity), so the host builds its engine on the
+//! serving thread and multiplexing is left to the *fleet* layer — a
+//! cluster runs one `shard-host` process per shard, exactly like the
+//! in-process fleet runs one worker thread per shard.
+
+use std::io::Write as _;
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::PathBuf;
+
+use crate::engine::{BackendFactory, Engine};
+
+use super::remote::{RemoteAddr, Stream};
+use super::wire::{read_frame, write_frame, Msg, WireError, MAGIC};
+
+/// A bound serving socket (TCP or Unix).
+pub enum Listener {
+    Tcp(TcpListener),
+    /// Keeps the socket path so `Drop` can unlink it.
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind `addr`. A stale Unix socket file (a previous host that died
+    /// without cleanup) is removed first — the common crash-restart case.
+    pub fn bind(addr: &RemoteAddr) -> crate::Result<Self> {
+        match addr {
+            RemoteAddr::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport.as_str())
+                    .map_err(|e| addr.error(format!("bind failed: {e}")))?;
+                Ok(Self::Tcp(l))
+            }
+            #[cfg(unix)]
+            RemoteAddr::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .map_err(|e| addr.error(format!("removing stale socket: {e}")))?;
+                }
+                let l = UnixListener::bind(path)
+                    .map_err(|e| addr.error(format!("bind failed: {e}")))?;
+                Ok(Self::Unix(l, path.clone()))
+            }
+        }
+    }
+
+    /// The bound address as a connectable string (resolves `:0` TCP binds
+    /// to the actual port).
+    pub fn local_addr_string(&self) -> String {
+        match self {
+            Self::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:?".into()),
+            #[cfg(unix)]
+            Self::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Self::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Self::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Self::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+enum ConnOutcome {
+    /// The client went away (clean EOF or a poisoned stream).
+    Closed,
+    /// The client ordered the host to exit.
+    Shutdown,
+}
+
+/// Build the engine from `factory` and serve connections until a
+/// [`Msg::Shutdown`] arrives or `max_conns` connections have come and
+/// gone (`None` = serve forever). Connections are served one at a time;
+/// a decode failure on untrusted bytes answers with [`Msg::Err`] and
+/// drops that connection, never the host.
+pub fn serve_factory(
+    factory: BackendFactory,
+    listener: Listener,
+    max_conns: Option<usize>,
+) -> crate::Result<()> {
+    let mut engine = factory()?;
+    let mut served = 0usize;
+    loop {
+        if let Some(max) = max_conns {
+            if served >= max {
+                return Ok(());
+            }
+        }
+        let stream = match listener.accept() {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow::anyhow!("accept failed: {e}")),
+        };
+        served += 1;
+        if let ConnOutcome::Shutdown = serve_conn(engine.as_mut(), stream) {
+            return Ok(());
+        }
+    }
+}
+
+fn serve_conn(engine: &mut dyn Engine, mut stream: Stream) -> ConnOutcome {
+    loop {
+        let msg = match read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return ConnOutcome::Closed,
+            Err(e) => {
+                // tell the peer why before hanging up; if even that write
+                // fails the connection was already gone
+                let _ = reply(&mut stream, &Msg::Err { detail: e.to_string() });
+                return ConnOutcome::Closed;
+            }
+        };
+        let (response, outcome) = handle(engine, msg);
+        if reply(&mut stream, &response).is_err() {
+            return ConnOutcome::Closed;
+        }
+        match outcome {
+            Some(o) => return o,
+            None => continue,
+        }
+    }
+}
+
+/// Map one request to its reply; `Some(outcome)` ends the connection
+/// after the reply is written.
+fn handle(engine: &mut dyn Engine, msg: Msg) -> (Msg, Option<ConnOutcome>) {
+    match msg {
+        Msg::Hello { magic } => {
+            if magic != MAGIC {
+                let detail = WireError::BadMagic(magic).to_string();
+                return (Msg::Err { detail }, Some(ConnOutcome::Closed));
+            }
+            (
+                Msg::HelloOk {
+                    caps: engine.capabilities(),
+                    telemetry: engine.telemetry(),
+                },
+                None,
+            )
+        }
+        Msg::Infer { id, images } => match engine.infer_batch(&images) {
+            Ok(result) => (
+                Msg::InferOk {
+                    id,
+                    result,
+                    telemetry: engine.telemetry(),
+                },
+                None,
+            ),
+            Err(e) => (Msg::Err { detail: e.to_string() }, None),
+        },
+        Msg::Swap { target } => match engine.swap_network(target) {
+            Ok(report) => (
+                Msg::SwapOk {
+                    report,
+                    telemetry: engine.telemetry(),
+                },
+                None,
+            ),
+            Err(e) => (Msg::Err { detail: e.to_string() }, None),
+        },
+        Msg::Telemetry => (
+            Msg::TelemetryOk {
+                telemetry: engine.telemetry(),
+            },
+            None,
+        ),
+        Msg::Shutdown => (Msg::ShutdownOk, Some(ConnOutcome::Shutdown)),
+        // replies arriving as requests mean the peer is desynchronized —
+        // answer typed and hang up so it can reconnect cleanly
+        other => (
+            Msg::Err {
+                detail: format!("unexpected {} — this end serves requests", other.name()),
+            },
+            Some(ConnOutcome::Closed),
+        ),
+    }
+}
+
+fn reply(stream: &mut Stream, msg: &Msg) -> Result<(), WireError> {
+    write_frame(stream, msg)?;
+    stream.flush().map_err(|e| WireError::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{BackendKind, EngineSpec, EngineError, ShardedEngine};
+    use crate::net::RemoteBackend;
+    use std::time::Duration;
+
+    const CONNECT: Duration = Duration::from_secs(5);
+    const IO: Duration = Duration::from_secs(10);
+
+    /// One factory for a small deterministic ideal-backend shard.
+    fn shard_spec() -> EngineSpec {
+        EngineSpec::new(BackendKind::Ideal)
+            .with_workers(1)
+            .with_array(crate::engine::ArraySpec {
+                rows: 64,
+                cols: 32,
+                span: Some(16),
+                ..Default::default()
+            })
+            .with_batching(16, 200)
+            .with_layers(vec![test_layer()])
+    }
+
+    fn test_layer() -> crate::nn::BinaryLayer {
+        let mut rng = crate::util::Pcg32::seeded(3);
+        crate::nn::BinaryLayer::new(
+            (0..8)
+                .map(|_| (0..16).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            3,
+        )
+    }
+
+    fn images(seed: u64, n: usize) -> Vec<Vec<bool>> {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| (0..16).map(|_| rng.bernoulli(0.4)).collect())
+            .collect()
+    }
+
+    /// Bind on an ephemeral TCP port and serve `conns` connections on a
+    /// background thread; returns the connectable address.
+    fn spawn_host(conns: usize) -> (RemoteAddr, std::thread::JoinHandle<crate::Result<()>>) {
+        let listener = Listener::bind(&RemoteAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = RemoteAddr::Tcp(listener.local_addr_string());
+        let factory = shard_spec().build_factories().unwrap().pop().unwrap();
+        let join = std::thread::spawn(move || serve_factory(factory, listener, Some(conns)));
+        (addr, join)
+    }
+
+    #[test]
+    fn remote_backend_matches_the_local_engine_bit_for_bit() {
+        let (addr, join) = spawn_host(1);
+        let mut remote = RemoteBackend::connect(addr, CONNECT, IO).unwrap();
+        let mut local = shard_spec().build_factories().unwrap().pop().unwrap()().unwrap();
+        assert_eq!(remote.capabilities().kind, BackendKind::Remote);
+        assert_eq!(remote.capabilities().n_out, local.capabilities().n_out);
+        for round in 0..3 {
+            let batch = images(round + 10, 12);
+            let r = remote.infer_batch(&batch).unwrap();
+            let l = local.infer_batch(&batch).unwrap();
+            assert_eq!(r, l, "round {round}");
+        }
+        let t = remote.telemetry();
+        assert_eq!(t.batches, 3);
+        assert_eq!(t.images, 36);
+        assert_eq!(t, local.telemetry());
+        drop(remote);
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn swaps_propagate_and_application_errors_keep_the_connection() {
+        let (addr, join) = spawn_host(1);
+        let mut remote = RemoteBackend::connect(addr, CONNECT, IO).unwrap();
+        let mut local = shard_spec().build_factories().unwrap().pop().unwrap()().unwrap();
+
+        // an oversized batch is refused by the host's engine (application
+        // error): typed, and the connection survives
+        let err = remote.infer_batch(&images(1, 1000)).unwrap_err();
+        let typed = EngineError::parse_remote(&err.to_string()).expect("typed remote error");
+        assert!(matches!(typed, EngineError::Remote { .. }));
+        assert!(remote.healthy(), "application errors must not poison the link");
+
+        // rolling-swap order: flip the resident network on both sides
+        let mut target = vec![test_layer()];
+        for row in &mut target[0].weights {
+            for b in row.iter_mut().take(4) {
+                *b = !*b;
+            }
+        }
+        let rr = remote.swap_network(target.clone()).unwrap();
+        let lr = local.swap_network(target).unwrap();
+        assert_eq!(rr, lr);
+        let batch = images(77, 8);
+        assert_eq!(
+            remote.infer_batch(&batch).unwrap(),
+            local.infer_batch(&batch).unwrap()
+        );
+        assert_eq!(remote.telemetry().swaps, 1);
+        drop(remote);
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn shutdown_order_stops_the_host() {
+        let (addr, join) = spawn_host(99);
+        let mut remote = RemoteBackend::connect(addr, CONNECT, IO).unwrap();
+        remote.shutdown_host().unwrap();
+        assert!(!remote.healthy(), "a shut-down host must leave the pool");
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn sharded_engine_drives_a_mixed_local_and_remote_fleet() {
+        let (addr, join) = spawn_host(1);
+        let spec = shard_spec();
+        let mut factories = spec.build_factories().unwrap();
+        factories.push(crate::net::remote_factory(addr, CONNECT, IO));
+        let mut mixed = ShardedEngine::new(factories).unwrap();
+        assert_eq!(mixed.capabilities().shards, 2);
+
+        let mut reference = shard_spec().build_factories().unwrap().pop().unwrap()().unwrap();
+        let mut tickets = Vec::new();
+        for round in 0..6 {
+            tickets.push((mixed.submit(images(round + 40, 8)).unwrap(), round + 40));
+        }
+        for (ticket, seed) in tickets {
+            let got = loop {
+                if let Some(r) = mixed.poll(ticket).unwrap() {
+                    break r;
+                }
+                mixed.wait_event(Duration::from_millis(5));
+            };
+            let want = reference.infer_batch(&images(seed, 8)).unwrap();
+            assert_eq!((got.bits, got.classes), (want.bits, want.classes));
+        }
+        // both shards actually served work
+        let per_shard = mixed.shard_telemetry();
+        assert_eq!(per_shard.len(), 2);
+        assert!(per_shard.iter().all(|t| t.images > 0), "{per_shard:?}");
+        drop(mixed);
+        join.join().unwrap().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_hosts_serve_and_clean_up_their_socket_file() {
+        let path = std::env::temp_dir().join(format!(
+            "xpoint-host-test-{}.sock",
+            std::process::id()
+        ));
+        let addr = RemoteAddr::Unix(path.clone());
+        let listener = Listener::bind(&addr).unwrap();
+        let factory = shard_spec().build_factories().unwrap().pop().unwrap();
+        let join = std::thread::spawn(move || serve_factory(factory, listener, Some(1)));
+        let mut remote = RemoteBackend::connect(addr, CONNECT, IO).unwrap();
+        let batch = images(5, 4);
+        let r = remote.infer_batch(&batch).unwrap();
+        assert_eq!(r.bits.len(), 4);
+        drop(remote);
+        join.join().unwrap().unwrap();
+        assert!(!path.exists(), "socket file must be unlinked on shutdown");
+    }
+}

@@ -1,0 +1,34 @@
+//! Multi-host serving: the wire protocol and socket plumbing that turn a
+//! shard fleet into a cluster.
+//!
+//! Three pieces, layered bottom-up:
+//!
+//! * [`wire`] — a small length-prefixed, versioned frame format and the
+//!   [`Msg`] vocabulary for everything that already drives a shard:
+//!   inference batches, live weight swaps, telemetry snapshots and
+//!   orderly shutdown. Decoding never panics on untrusted bytes — every
+//!   malformed frame is a typed [`WireError`].
+//! * [`host`] — `xpoint shard-host`: a [`Listener`] (TCP or Unix socket)
+//!   and [`serve_factory`], which puts one shard's worth of fabric
+//!   behind it, one connection at a time.
+//! * [`remote`] — [`RemoteBackend`], an [`Engine`](crate::engine::Engine)
+//!   whose substrate lives behind a socket. It speaks the wire protocol
+//!   with connect/read timeouts, surfaces application failures as typed
+//!   [`EngineError::Remote`](crate::engine::EngineError::Remote) errors,
+//!   and reports `healthy() == false` once the transport itself dies so
+//!   the sharded scheduler routes around the dead host.
+//!
+//! The scheduler, rolling reprogramming swaps and autoscaling in
+//! [`coordinator`](crate::coordinator) and
+//! [`ShardedEngine`](crate::engine::ShardedEngine) run unchanged against
+//! a mixed local+remote fleet: a remote shard is just another
+//! [`BackendFactory`](crate::engine::BackendFactory) (see
+//! [`remote_factory`]), built on a worker thread like any local engine.
+
+pub mod host;
+pub mod remote;
+pub mod wire;
+
+pub use host::{serve_factory, Listener};
+pub use remote::{remote_factory, RemoteAddr, RemoteBackend};
+pub use wire::{read_frame, write_frame, Msg, WireError, MAGIC, MAX_FRAME, PROTOCOL_VERSION};

@@ -1,0 +1,814 @@
+//! Length-prefixed, versioned wire protocol for driving one shard over a
+//! socket — the messages that already drive a shard in process (infer
+//! orders, rolling-swap orders, telemetry reads) made portable so a
+//! [`RemoteBackend`](super::RemoteBackend) can speak them to an `xpoint
+//! shard-host` on another machine.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! u32 len | u8 version | u8 tag | payload (len - 2 bytes)
+//! ```
+//!
+//! `len` counts everything after itself and is capped at [`MAX_FRAME`]
+//! *before* any allocation, so a hostile or corrupt peer cannot make the
+//! decoder balloon memory. Every decode path returns a typed
+//! [`WireError`] — never a panic — on truncated frames, oversized
+//! lengths, version mismatches, unknown tags or inconsistent payloads.
+//! Bit vectors (images, weight rows) travel bit-packed (LSB-first), and
+//! floats travel as IEEE-754 bits so a roundtrip is bit-exact.
+
+use std::io::Read;
+
+use crate::engine::{BackendKind, Capabilities, InferenceResult, SwapReport, Telemetry};
+use crate::nn::BinaryLayer;
+
+/// Protocol version carried in every frame.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on one frame's body (version + tag + payload) \[bytes\].
+pub const MAX_FRAME: u64 = 16 * 1024 * 1024;
+
+/// Handshake magic ("XPNT"): a [`Msg::Hello`] carrying anything else is
+/// some other protocol that happened to land on our port.
+pub const MAGIC: u32 = 0x5850_4e54;
+
+/// Typed decode/transport failure. Decoding untrusted bytes can fail in
+/// exactly these ways and in no case panics or over-allocates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The stream ended inside a frame (header or body).
+    Truncated { needed: usize, got: usize },
+    /// The announced frame length exceeds [`MAX_FRAME`].
+    Oversized { len: u64, max: u64 },
+    /// The peer speaks a different protocol version.
+    Version { got: u8, want: u8 },
+    /// The frame tag is not one we know.
+    UnknownTag(u8),
+    /// A [`Msg::Hello`] carried the wrong magic.
+    BadMagic(u32),
+    /// The payload is internally inconsistent (bad counts, bad UTF-8,
+    /// trailing bytes, out-of-range values).
+    Malformed(String),
+    /// The underlying socket read/write failed.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            Self::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds the {max}-byte cap")
+            }
+            Self::Version { got, want } => {
+                write!(f, "protocol version mismatch: peer speaks v{got}, we speak v{want}")
+            }
+            Self::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+            Self::BadMagic(m) => {
+                write!(f, "bad handshake magic {m:#010x} (expected {MAGIC:#010x})")
+            }
+            Self::Malformed(d) => write!(f, "malformed payload: {d}"),
+            Self::Io(d) => write!(f, "socket i/o failed: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One protocol message. Requests flow client → host, the matching `*Ok`
+/// (or [`Msg::Err`] for an application-level failure) flows back.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Client handshake: carries [`MAGIC`].
+    Hello { magic: u32 },
+    /// Host handshake reply: what the served shard is, plus its telemetry
+    /// at connect time (the client baselines its deltas against it).
+    HelloOk { caps: Capabilities, telemetry: Telemetry },
+    /// Infer a batch; `id` is echoed in the reply so a client can detect
+    /// a desynchronized stream.
+    Infer { id: u64, images: Vec<Vec<bool>> },
+    InferOk { id: u64, result: InferenceResult, telemetry: Telemetry },
+    /// Reprogram the resident network in place (a rolling swap's
+    /// per-shard order).
+    Swap { target: Vec<BinaryLayer> },
+    SwapOk { report: SwapReport, telemetry: Telemetry },
+    /// Read the host's cumulative telemetry.
+    Telemetry,
+    TelemetryOk { telemetry: Telemetry },
+    /// Application-level failure (the request was understood but the
+    /// engine refused it); the connection stays usable.
+    Err { detail: String },
+    /// Ask the host process to stop serving and exit.
+    Shutdown,
+    ShutdownOk,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_OK: u8 = 2;
+const TAG_INFER: u8 = 3;
+const TAG_INFER_OK: u8 = 4;
+const TAG_SWAP: u8 = 5;
+const TAG_SWAP_OK: u8 = 6;
+const TAG_TELEMETRY: u8 = 7;
+const TAG_TELEMETRY_OK: u8 = 8;
+const TAG_ERR: u8 = 9;
+const TAG_SHUTDOWN: u8 = 10;
+const TAG_SHUTDOWN_OK: u8 = 11;
+
+// ------------------------------------------------------------- encoding
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_usize(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bit-pack `bits` LSB-first into `ceil(n/8)` bytes (count *not* written —
+/// callers that need it write it first).
+fn put_bits(out: &mut Vec<u8>, bits: &[bool]) {
+    let mut byte = 0u8;
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if bits.len() % 8 != 0 {
+        out.push(byte);
+    }
+}
+
+fn put_bool_rows(out: &mut Vec<u8>, rows: &[Vec<bool>]) {
+    put_usize(out, rows.len());
+    for row in rows {
+        put_usize(out, row.len());
+        put_bits(out, row);
+    }
+}
+
+fn put_telemetry(out: &mut Vec<u8>, t: &Telemetry) {
+    put_u64(out, t.batches);
+    put_u64(out, t.images);
+    put_u64(out, t.steps);
+    put_f64(out, t.sim_time);
+    put_f64(out, t.energy);
+    put_f64(out, t.compute_energy);
+    put_f64(out, t.link_energy);
+    put_u64(out, t.cycles);
+    put_u64(out, t.link_transfers);
+    put_u64(out, t.link_lines);
+    put_u64(out, t.swaps);
+    put_f64(out, t.program_time);
+    put_f64(out, t.program_energy);
+    put_u64(out, t.wear_pulses);
+    put_usize(out, t.utilization.len());
+    for &u in &t.utilization {
+        put_f64(out, u);
+    }
+}
+
+fn put_caps(out: &mut Vec<u8>, c: &Capabilities) {
+    out.push(kind_code(c.kind));
+    put_usize(out, c.n_in);
+    put_usize(out, c.n_out);
+    put_usize(out, c.max_batch);
+    put_usize(out, c.nodes);
+    put_usize(out, c.tiles);
+    put_usize(out, c.shards);
+    out.push(u8::from(c.reports_energy) | (u8::from(c.pipelined) << 1));
+}
+
+fn put_result(out: &mut Vec<u8>, r: &InferenceResult) {
+    put_bool_rows(out, &r.bits);
+    put_usize(out, r.classes.len());
+    for &c in &r.classes {
+        put_usize(out, c);
+    }
+    put_f64(out, r.sim_time);
+    put_f64(out, r.energy);
+    put_u64(out, r.steps);
+}
+
+fn put_swap_report(out: &mut Vec<u8>, s: &SwapReport) {
+    put_u64(out, s.set_pulses);
+    put_u64(out, s.reset_pulses);
+    put_u64(out, s.cells_changed);
+    put_u64(out, s.cells_total);
+    put_f64(out, s.time);
+    put_f64(out, s.energy);
+    put_usize(out, s.shards);
+}
+
+fn put_layers(out: &mut Vec<u8>, layers: &[BinaryLayer]) {
+    put_usize(out, layers.len());
+    for l in layers {
+        put_usize(out, l.n_out());
+        put_usize(out, l.n_in());
+        put_usize(out, l.theta);
+        for row in &l.weights {
+            put_bits(out, row);
+        }
+    }
+}
+
+fn kind_code(k: BackendKind) -> u8 {
+    match k {
+        BackendKind::Ideal => 0,
+        BackendKind::Parasitic => 1,
+        BackendKind::Fabric => 2,
+        BackendKind::Xla => 3,
+        BackendKind::Sharded => 4,
+        BackendKind::Remote => 5,
+    }
+}
+
+fn kind_from_code(c: u8) -> Result<BackendKind, WireError> {
+    Ok(match c {
+        0 => BackendKind::Ideal,
+        1 => BackendKind::Parasitic,
+        2 => BackendKind::Fabric,
+        3 => BackendKind::Xla,
+        4 => BackendKind::Sharded,
+        5 => BackendKind::Remote,
+        _ => return Err(WireError::Malformed(format!("unknown backend code {c}"))),
+    })
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor over one frame's payload. Every read verifies
+/// the bytes exist before touching them, and every count is sanity-capped
+/// against the bytes remaining so a forged count cannot drive a huge
+/// allocation.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                needed: n,
+                got: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn usize_(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError::Malformed(format!("value {v} overflows usize")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read an element count whose elements each occupy at least
+    /// `min_bytes` of payload; a count that could not possibly fit in the
+    /// remaining bytes is rejected *before* any allocation.
+    fn count(&mut self, min_bytes: usize) -> Result<usize, WireError> {
+        let n = self.usize_()?;
+        let fits = self.remaining() / min_bytes.max(1);
+        if n > fits {
+            return Err(WireError::Malformed(format!(
+                "count {n} cannot fit in {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Read `n` bit-packed bits (the inverse of [`put_bits`]).
+    fn bits(&mut self, n: usize) -> Result<Vec<bool>, WireError> {
+        let packed = self.bytes(n.div_ceil(8))?;
+        Ok((0..n).map(|i| packed[i / 8] & (1 << (i % 8)) != 0).collect())
+    }
+
+    fn bool_rows(&mut self) -> Result<Vec<Vec<bool>>, WireError> {
+        let n = self.count(8)?;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let bits = self.usize_()?;
+            if bits.div_ceil(8) > self.remaining() {
+                return Err(WireError::Truncated {
+                    needed: bits.div_ceil(8),
+                    got: self.remaining(),
+                });
+            }
+            rows.push(self.bits(bits)?);
+        }
+        Ok(rows)
+    }
+
+    fn str_(&mut self) -> Result<String, WireError> {
+        let n = self.count(1)?;
+        let bytes = self.bytes(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
+    }
+
+    fn telemetry(&mut self) -> Result<Telemetry, WireError> {
+        let mut t = Telemetry {
+            batches: self.u64()?,
+            images: self.u64()?,
+            steps: self.u64()?,
+            sim_time: self.f64()?,
+            energy: self.f64()?,
+            compute_energy: self.f64()?,
+            link_energy: self.f64()?,
+            cycles: self.u64()?,
+            link_transfers: self.u64()?,
+            link_lines: self.u64()?,
+            swaps: self.u64()?,
+            program_time: self.f64()?,
+            program_energy: self.f64()?,
+            wear_pulses: self.u64()?,
+            utilization: Vec::new(),
+        };
+        let n = self.count(8)?;
+        t.utilization = (0..n).map(|_| self.f64()).collect::<Result<_, _>>()?;
+        Ok(t)
+    }
+
+    fn caps(&mut self) -> Result<Capabilities, WireError> {
+        let kind = kind_from_code(self.u8()?)?;
+        let n_in = self.usize_()?;
+        let n_out = self.usize_()?;
+        let max_batch = self.usize_()?;
+        let nodes = self.usize_()?;
+        let tiles = self.usize_()?;
+        let shards = self.usize_()?;
+        let flags = self.u8()?;
+        Ok(Capabilities {
+            kind,
+            n_in,
+            n_out,
+            max_batch,
+            nodes,
+            tiles,
+            shards,
+            reports_energy: flags & 1 != 0,
+            pipelined: flags & 2 != 0,
+        })
+    }
+
+    fn result(&mut self) -> Result<InferenceResult, WireError> {
+        let bits = self.bool_rows()?;
+        let n = self.count(8)?;
+        let classes = (0..n).map(|_| self.usize_()).collect::<Result<_, _>>()?;
+        Ok(InferenceResult {
+            bits,
+            classes,
+            sim_time: self.f64()?,
+            energy: self.f64()?,
+            steps: self.u64()?,
+        })
+    }
+
+    fn swap_report(&mut self) -> Result<SwapReport, WireError> {
+        Ok(SwapReport {
+            set_pulses: self.u64()?,
+            reset_pulses: self.u64()?,
+            cells_changed: self.u64()?,
+            cells_total: self.u64()?,
+            time: self.f64()?,
+            energy: self.f64()?,
+            shards: self.usize_()?,
+        })
+    }
+
+    fn layers(&mut self) -> Result<Vec<BinaryLayer>, WireError> {
+        let n = self.count(24)?;
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let n_out = self.usize_()?;
+            let n_in = self.usize_()?;
+            let theta = self.usize_()?;
+            // BinaryLayer::new asserts on these — validate first so a
+            // hostile frame errors instead of panicking
+            if n_out == 0 || n_in == 0 || theta == 0 {
+                return Err(WireError::Malformed(format!(
+                    "layer shape {n_out}x{n_in} theta {theta} (all must be >= 1)"
+                )));
+            }
+            let row_bytes = n_in.div_ceil(8);
+            if n_out > self.remaining() / row_bytes {
+                return Err(WireError::Truncated {
+                    needed: n_out * row_bytes,
+                    got: self.remaining(),
+                });
+            }
+            let weights = (0..n_out).map(|_| self.bits(n_in)).collect::<Result<_, _>>()?;
+            layers.push(BinaryLayer::new(weights, theta));
+        }
+        Ok(layers)
+    }
+
+    /// The payload must be fully consumed — trailing bytes mean the peer
+    /// and we disagree about the message shape.
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    /// Short message name for diagnostics (a full `Debug` render could
+    /// carry megabytes of weights).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hello { .. } => "hello",
+            Self::HelloOk { .. } => "hello-ok",
+            Self::Infer { .. } => "infer",
+            Self::InferOk { .. } => "infer-ok",
+            Self::Swap { .. } => "swap",
+            Self::SwapOk { .. } => "swap-ok",
+            Self::Telemetry => "telemetry",
+            Self::TelemetryOk { .. } => "telemetry-ok",
+            Self::Err { .. } => "err",
+            Self::Shutdown => "shutdown",
+            Self::ShutdownOk => "shutdown-ok",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Self::Hello { .. } => TAG_HELLO,
+            Self::HelloOk { .. } => TAG_HELLO_OK,
+            Self::Infer { .. } => TAG_INFER,
+            Self::InferOk { .. } => TAG_INFER_OK,
+            Self::Swap { .. } => TAG_SWAP,
+            Self::SwapOk { .. } => TAG_SWAP_OK,
+            Self::Telemetry => TAG_TELEMETRY,
+            Self::TelemetryOk { .. } => TAG_TELEMETRY_OK,
+            Self::Err { .. } => TAG_ERR,
+            Self::Shutdown => TAG_SHUTDOWN,
+            Self::ShutdownOk => TAG_SHUTDOWN_OK,
+        }
+    }
+
+    /// Encode to a complete frame (length prefix included). Fails with
+    /// [`WireError::Oversized`] if the message would exceed [`MAX_FRAME`].
+    pub fn to_frame(&self) -> Result<Vec<u8>, WireError> {
+        let mut out = vec![0, 0, 0, 0, PROTOCOL_VERSION, self.tag()];
+        match self {
+            Self::Hello { magic } => put_u32(&mut out, *magic),
+            Self::HelloOk { caps, telemetry } => {
+                put_caps(&mut out, caps);
+                put_telemetry(&mut out, telemetry);
+            }
+            Self::Infer { id, images } => {
+                put_u64(&mut out, *id);
+                put_bool_rows(&mut out, images);
+            }
+            Self::InferOk { id, result, telemetry } => {
+                put_u64(&mut out, *id);
+                put_result(&mut out, result);
+                put_telemetry(&mut out, telemetry);
+            }
+            Self::Swap { target } => put_layers(&mut out, target),
+            Self::SwapOk { report, telemetry } => {
+                put_swap_report(&mut out, report);
+                put_telemetry(&mut out, telemetry);
+            }
+            Self::TelemetryOk { telemetry } => put_telemetry(&mut out, telemetry),
+            Self::Err { detail } => put_str(&mut out, detail),
+            Self::Telemetry | Self::Shutdown | Self::ShutdownOk => {}
+        }
+        let body_len = (out.len() - 4) as u64;
+        if body_len > MAX_FRAME {
+            return Err(WireError::Oversized {
+                len: body_len,
+                max: MAX_FRAME,
+            });
+        }
+        out[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode one frame body (version + tag + payload, without the length
+    /// prefix).
+    pub fn decode_body(body: &[u8]) -> Result<Self, WireError> {
+        if body.len() < 2 {
+            return Err(WireError::Truncated {
+                needed: 2,
+                got: body.len(),
+            });
+        }
+        if body[0] != PROTOCOL_VERSION {
+            return Err(WireError::Version {
+                got: body[0],
+                want: PROTOCOL_VERSION,
+            });
+        }
+        let tag = body[1];
+        let mut r = Reader::new(&body[2..]);
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello { magic: r.u32()? },
+            TAG_HELLO_OK => Msg::HelloOk {
+                caps: r.caps()?,
+                telemetry: r.telemetry()?,
+            },
+            TAG_INFER => Msg::Infer {
+                id: r.u64()?,
+                images: r.bool_rows()?,
+            },
+            TAG_INFER_OK => Msg::InferOk {
+                id: r.u64()?,
+                result: r.result()?,
+                telemetry: r.telemetry()?,
+            },
+            TAG_SWAP => Msg::Swap { target: r.layers()? },
+            TAG_SWAP_OK => Msg::SwapOk {
+                report: r.swap_report()?,
+                telemetry: r.telemetry()?,
+            },
+            TAG_TELEMETRY => Msg::Telemetry,
+            TAG_TELEMETRY_OK => Msg::TelemetryOk {
+                telemetry: r.telemetry()?,
+            },
+            TAG_ERR => Msg::Err { detail: r.str_()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_SHUTDOWN_OK => Msg::ShutdownOk,
+            t => return Err(WireError::UnknownTag(t)),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Read until `buf` is full or the stream ends; returns bytes read.
+/// `Interrupted` reads are retried, any other i/o failure is
+/// [`WireError::Io`].
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(got)
+}
+
+/// Read one frame. `Ok(None)` is a clean end-of-stream (the peer closed
+/// between frames); a stream that ends *inside* a frame is
+/// [`WireError::Truncated`]. The length prefix is validated against
+/// [`MAX_FRAME`] before the body is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Msg>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let got = read_full(r, &mut len_buf)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < 4 {
+        return Err(WireError::Truncated { needed: 4, got });
+    }
+    let len = u32::from_le_bytes(len_buf) as u64;
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized {
+            len,
+            max: MAX_FRAME,
+        });
+    }
+    let mut body = vec![0u8; len as usize];
+    let got = read_full(r, &mut body)?;
+    if got < body.len() {
+        return Err(WireError::Truncated {
+            needed: body.len(),
+            got,
+        });
+    }
+    Msg::decode_body(&body).map(Some)
+}
+
+/// Write one frame.
+pub fn write_frame<W: std::io::Write>(w: &mut W, msg: &Msg) -> Result<(), WireError> {
+    let frame = msg.to_frame()?;
+    w.write_all(&frame).map_err(|e| WireError::Io(e.to_string()))?;
+    w.flush().map_err(|e| WireError::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let frame = msg.to_frame().unwrap();
+        let got = read_frame(&mut Cursor::new(frame)).unwrap().unwrap();
+        assert_eq!(&got, msg);
+        got
+    }
+
+    fn sample_telemetry() -> Telemetry {
+        Telemetry {
+            batches: 3,
+            images: 42,
+            steps: 17,
+            sim_time: 1.5e-6,
+            energy: 2.5e-12,
+            swaps: 1,
+            wear_pulses: 99,
+            utilization: vec![0.25, 0.75],
+            ..Telemetry::default()
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_bit_exactly() {
+        roundtrip(&Msg::Hello { magic: MAGIC });
+        roundtrip(&Msg::Telemetry);
+        roundtrip(&Msg::Shutdown);
+        roundtrip(&Msg::ShutdownOk);
+        roundtrip(&Msg::Err {
+            detail: "θ out of range".into(),
+        });
+        roundtrip(&Msg::Infer {
+            id: 7,
+            images: vec![vec![true, false, true], vec![false; 9]],
+        });
+        roundtrip(&Msg::InferOk {
+            id: 7,
+            result: InferenceResult {
+                bits: vec![vec![true; 5], vec![false, true, false, true, true]],
+                classes: vec![4, 1],
+                sim_time: 3.25e-7,
+                energy: 1.125e-13,
+                steps: 10,
+            },
+            telemetry: sample_telemetry(),
+        });
+        roundtrip(&Msg::Swap {
+            target: vec![BinaryLayer::new(vec![vec![true, false], vec![false, true]], 1)],
+        });
+        roundtrip(&Msg::SwapOk {
+            report: SwapReport {
+                set_pulses: 5,
+                reset_pulses: 3,
+                cells_changed: 8,
+                cells_total: 20,
+                time: 1e-6,
+                energy: 4e-12,
+                shards: 1,
+            },
+            telemetry: sample_telemetry(),
+        });
+        roundtrip(&Msg::TelemetryOk {
+            telemetry: Telemetry::default(),
+        });
+        roundtrip(&Msg::HelloOk {
+            caps: Capabilities {
+                kind: BackendKind::Remote,
+                n_in: 256,
+                n_out: 10,
+                max_batch: 64,
+                nodes: 4,
+                tiles: 3,
+                shards: 1,
+                reports_energy: true,
+                pipelined: false,
+            },
+            telemetry: sample_telemetry(),
+        });
+    }
+
+    #[test]
+    fn clean_eof_is_none_but_midframe_eof_is_truncated() {
+        assert_eq!(read_frame(&mut Cursor::new(Vec::new())).unwrap(), None);
+        let frame = Msg::Hello { magic: MAGIC }.to_frame().unwrap();
+        for cut in 1..frame.len() {
+            let err = read_frame(&mut Cursor::new(frame[..cut].to_vec())).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        put_u32(&mut bytes, u32::MAX);
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert_eq!(
+            err,
+            WireError::Oversized {
+                len: u32::MAX as u64,
+                max: MAX_FRAME
+            }
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let mut frame = Msg::Telemetry.to_frame().unwrap();
+        frame[4] = PROTOCOL_VERSION + 1;
+        let err = read_frame(&mut Cursor::new(frame)).unwrap_err();
+        assert_eq!(
+            err,
+            WireError::Version {
+                got: PROTOCOL_VERSION + 1,
+                want: PROTOCOL_VERSION
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_tags_and_trailing_bytes_are_rejected() {
+        assert_eq!(
+            Msg::decode_body(&[PROTOCOL_VERSION, 200]).unwrap_err(),
+            WireError::UnknownTag(200)
+        );
+        assert!(matches!(
+            Msg::decode_body(&[PROTOCOL_VERSION, TAG_SHUTDOWN, 0xFF]).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn forged_counts_cannot_force_allocation() {
+        // an Infer frame claiming u64::MAX images in a 16-byte payload
+        let mut body = vec![PROTOCOL_VERSION, TAG_INFER];
+        put_u64(&mut body, 1);
+        put_u64(&mut body, u64::MAX);
+        assert!(matches!(
+            Msg::decode_body(&body).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn degenerate_layer_shapes_error_instead_of_panicking() {
+        for (n_out, n_in, theta) in [(0u64, 4u64, 1u64), (2, 0, 1), (2, 4, 0)] {
+            let mut body = vec![PROTOCOL_VERSION, TAG_SWAP];
+            put_u64(&mut body, 1);
+            put_u64(&mut body, n_out);
+            put_u64(&mut body, n_in);
+            put_u64(&mut body, theta);
+            assert!(
+                matches!(
+                    Msg::decode_body(&body).unwrap_err(),
+                    WireError::Malformed(_) | WireError::Truncated { .. }
+                ),
+                "shape {n_out}x{n_in} theta {theta}"
+            );
+        }
+    }
+}

@@ -7,7 +7,11 @@
 //! arrays doing the same physical work), so the exhibit's claim is about
 //! the serving system: host wall-clock throughput scales with shards
 //! while the per-image physics stays fixed — the §IV "system scalability"
-//! story carried from one grid to a farm of grids.
+//! story carried from one grid to a farm of grids. The same invariance
+//! holds across machines: a shard served by a remote `xpoint shard-host`
+//! (`serve --shards N --remote host:port`) does identical physical work,
+//! so a mixed local+remote fleet is bit-exact with an all-local one
+//! (pinned by the `integration_remote` suite).
 
 use std::time::Instant;
 

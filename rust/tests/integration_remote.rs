@@ -1,0 +1,333 @@
+//! Integration: the multi-host serving path, end to end through a real
+//! `xpoint shard-host` process. Pins the tentpole contracts — a sharded
+//! fleet mixing local shards with a remote shard behind a socket is
+//! **bit-exact** with an all-local fleet on identical seeded traffic
+//! (bits/classes per batch; energy and simulated time sum across
+//! shards), including through a rolling weight swap and a
+//! retire → spawn autoscale cycle — and SIGKILLing the shard-host
+//! mid-soak resolves every in-flight ticket exactly once, as a correct
+//! result or a typed `remote shard at ..` error, while serving
+//! continues on the surviving local shard.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use xpoint_imc::engine::{
+    AutoscaleSpec, BackendKind, Engine, EngineSpec, InferenceResult, ScaleEventKind,
+    ShardedEngine, Ticket,
+};
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::util::Pcg32;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_xpoint")
+}
+
+/// A live `xpoint shard-host` child serving one shard's worth of fabric
+/// on a loopback TCP port the OS picked (`--listen 127.0.0.1:0`).
+struct Host {
+    child: Child,
+    addr: String,
+}
+
+impl Host {
+    fn spawn() -> Host {
+        let mut child = Command::new(bin())
+            .args(["shard-host", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn xpoint shard-host");
+        let stdout = child.stdout.take().expect("stdout is piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(a) = line.strip_prefix("listening on ") {
+                        break a.trim().to_string();
+                    }
+                }
+                _ => panic!("shard-host exited before announcing its address"),
+            }
+        };
+        // keep draining stdout so the child can never block on a full pipe
+        std::thread::spawn(move || {
+            for _ in lines {}
+        });
+        Host { child, addr }
+    }
+}
+
+impl Drop for Host {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn random_images(rng: &mut Pcg32, m: usize, n_in: usize) -> Vec<Vec<bool>> {
+    (0..m)
+        .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+        .collect()
+}
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.45)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+/// Redeem a ticket, panicking if it neither completes nor fails within
+/// the deadline — a ticket that pends forever is a lost ticket.
+fn redeem(e: &mut ShardedEngine, t: Ticket) -> xpoint_imc::Result<InferenceResult> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match e.poll(t) {
+            Ok(Some(res)) => return Ok(res),
+            Ok(None) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "ticket {t:?} still pending after 60 s — lost in the fleet"
+                );
+                e.wait_event(Duration::from_millis(1));
+            }
+            Err(err) => return Err(err),
+        }
+    }
+}
+
+fn settle(e: &mut ShardedEngine) {
+    for _ in 0..10_000 {
+        if e.scale_settled() {
+            return;
+        }
+        e.wait_event(Duration::from_millis(1));
+    }
+    panic!("scale operation never settled");
+}
+
+/// Drive one wave of seeded batches through both fleets and demand
+/// bit-exactness: identical bits, classes and per-batch physics (each
+/// batch runs complete on one shard of identical substrate, so energy,
+/// time and steps match exactly — not approximately).
+fn compare_wave(
+    rng: &mut Pcg32,
+    mixed: &mut ShardedEngine,
+    local: &mut ShardedEngine,
+    n_batches: usize,
+    n_in: usize,
+    tag: &str,
+) {
+    let batches: Vec<Vec<Vec<bool>>> = (0..n_batches)
+        .map(|i| random_images(rng, 3 + (i % 5), n_in))
+        .collect();
+    let mt: Vec<Ticket> = batches
+        .iter()
+        .map(|b| mixed.submit(b.clone()).expect("submit to mixed fleet"))
+        .collect();
+    let lt: Vec<Ticket> = batches
+        .iter()
+        .map(|b| local.submit(b.clone()).expect("submit to local fleet"))
+        .collect();
+    for (k, (m, l)) in mt.into_iter().zip(lt).enumerate() {
+        let got = redeem(mixed, m)
+            .unwrap_or_else(|e| panic!("{tag} batch {k} failed on the mixed fleet: {e:#}"));
+        let want = redeem(local, l)
+            .unwrap_or_else(|e| panic!("{tag} batch {k} failed on the local fleet: {e:#}"));
+        assert_eq!(got.bits, want.bits, "{tag} batch {k} bits");
+        assert_eq!(got.classes, want.classes, "{tag} batch {k} classes");
+        assert_eq!(got.energy, want.energy, "{tag} batch {k} energy");
+        assert_eq!(got.sim_time, want.sim_time, "{tag} batch {k} time");
+        assert_eq!(got.steps, want.steps, "{tag} batch {k} steps");
+    }
+}
+
+/// Tentpole: 1 local + 1 remote shard vs 2 local shards — identical
+/// seeded traffic, bit-exact results and summed telemetry, and the
+/// equivalence survives a rolling weight swap and a full
+/// retire → spawn autoscale cycle with the remote host in the fleet.
+#[test]
+fn mixed_local_and_remote_fleet_is_bit_exact_with_all_local() {
+    let host = Host::spawn();
+    let mut rng = Pcg32::seeded(0xc1a5);
+
+    // elastic fleet: one local shard from the builder + the remote host
+    let mut mixed = EngineSpec::new(BackendKind::Ideal)
+        .with_autoscale(AutoscaleSpec {
+            min_shards: 1,
+            max_shards: 3,
+            ..Default::default()
+        })
+        .with_remote([host.addr.as_str()])
+        .build_sharded()
+        .expect("mixed local+remote fleet");
+    let mut local = EngineSpec::new(BackendKind::Ideal)
+        .with_shards(2, BackendKind::Ideal)
+        .build_sharded()
+        .expect("all-local fleet");
+
+    let caps = mixed.capabilities();
+    assert_eq!(caps.shards, 2, "1 local + 1 remote serving shard");
+    let n_in = caps.n_in;
+    assert_eq!(local.capabilities().n_in, n_in, "same resident network");
+
+    // phase A — plain traffic, then the aggregate telemetry must agree:
+    // energy and simulated time sum across shards whichever side of the
+    // socket they live on
+    compare_wave(&mut rng, &mut mixed, &mut local, 12, n_in, "pre-swap");
+    let a = mixed.telemetry();
+    let b = local.telemetry();
+    assert_eq!(a.batches, b.batches, "batch totals");
+    assert_eq!(a.images, b.images, "image totals");
+    assert_eq!(a.steps, b.steps, "step totals");
+    assert!(
+        (a.energy - b.energy).abs() <= 1e-9 * b.energy.abs(),
+        "energy sums across the socket: {} vs {}",
+        a.energy,
+        b.energy
+    );
+    assert!(
+        (a.sim_time - b.sim_time).abs() <= 1e-9 * b.sim_time.abs(),
+        "sim time sums across the socket: {} vs {}",
+        a.sim_time,
+        b.sim_time
+    );
+    let per = mixed.shard_telemetry();
+    assert_eq!(per.len(), 2);
+    assert!(
+        per.iter().all(|t| t.batches > 0),
+        "both the local and the remote shard served work: {:?}",
+        per.iter().map(|t| t.batches).collect::<Vec<_>>()
+    );
+
+    // phase B — rolling reprogram to the same target on both fleets; the
+    // remote slot takes its swap over the wire
+    let target = vec![random_layer(&mut Pcg32::seeded(0x7e57), caps.n_out, n_in, 30)];
+    let mr = mixed.swap_network(target.clone()).expect("mixed swap");
+    let lr = local.swap_network(target).expect("local swap");
+    assert_eq!(mr.shards, 2, "the rolling walk covered the remote slot");
+    assert_eq!(lr.shards, 2);
+    assert_eq!(mr.set_pulses, lr.set_pulses, "identical programming diff");
+    assert_eq!(mr.reset_pulses, lr.reset_pulses);
+    assert_eq!(mr.cells_changed, lr.cells_changed);
+    compare_wave(&mut rng, &mut mixed, &mut local, 10, n_in, "post-swap");
+
+    // phase C — autoscale cycle: retire parks a slot (the fleet keeps
+    // serving through the remote host alone if the local slot rests),
+    // spawn reprograms it back onto the post-swap resident network
+    let parked = mixed.retire_shard().expect("retire");
+    settle(&mut mixed);
+    compare_wave(&mut rng, &mut mixed, &mut local, 8, n_in, "post-retire");
+    let woken = mixed.spawn_shard().expect("spawn");
+    settle(&mut mixed);
+    assert_eq!(woken, parked, "the parked slot rejoins, not a fresh one");
+    compare_wave(&mut rng, &mut mixed, &mut local, 8, n_in, "post-spawn");
+
+    let events = mixed.take_scale_events();
+    assert!(
+        events.iter().any(|e| matches!(e.kind, ScaleEventKind::Retire)),
+        "retire landed in the scale events"
+    );
+    assert!(
+        events.iter().any(|e| matches!(e.kind, ScaleEventKind::Spawn { fresh: false })),
+        "spawn reused the parked slot"
+    );
+}
+
+/// SIGKILL the shard-host with a wave in flight: every ticket resolves
+/// exactly once — drained with correct bits or failed with a typed
+/// `remote shard at ..` error — nothing pends forever, and the fleet
+/// keeps serving correct results on the surviving local shard.
+#[test]
+fn seeded_soak_shard_host_kill_resolves_every_ticket_with_typed_errors() {
+    let mut host = Host::spawn();
+    let mut rng = Pcg32::seeded(0x0dd5);
+
+    let mut fleet = EngineSpec::new(BackendKind::Ideal)
+        .with_shards(1, BackendKind::Ideal)
+        .with_remote([host.addr.as_str()])
+        .build_sharded()
+        .expect("mixed fixed fleet");
+    let mut truth = EngineSpec::new(BackendKind::Ideal)
+        .build_engine()
+        .expect("single-engine reference");
+    let n_in = fleet.capabilities().n_in;
+
+    // warm-up: both sides of the socket demonstrably serving
+    let warm: Vec<Vec<Vec<bool>>> = (0..12).map(|_| random_images(&mut rng, 4, n_in)).collect();
+    let wt: Vec<Ticket> = warm
+        .iter()
+        .map(|b| fleet.submit(b.clone()).expect("warm-up submit"))
+        .collect();
+    for (k, t) in wt.into_iter().enumerate() {
+        let got = redeem(&mut fleet, t).unwrap_or_else(|e| panic!("warm-up batch {k}: {e:#}"));
+        let want = truth.infer_batch(&warm[k]).expect("reference");
+        assert_eq!(got.bits, want.bits, "warm-up batch {k} bits");
+        assert_eq!(got.classes, want.classes, "warm-up batch {k} classes");
+    }
+    let per = fleet.shard_telemetry();
+    assert!(
+        per.iter().all(|t| t.batches > 0),
+        "warm-up load reached both shards: {:?}",
+        per.iter().map(|t| t.batches).collect::<Vec<_>>()
+    );
+
+    // soak: a full wave dispatched across both shards, then SIGKILL the
+    // host while its half sits in flight
+    let batches: Vec<Vec<Vec<bool>>> = (0..24).map(|_| random_images(&mut rng, 4, n_in)).collect();
+    let tickets: Vec<Ticket> = batches
+        .iter()
+        .map(|b| fleet.submit(b.clone()).expect("soak submit"))
+        .collect();
+    host.child.kill().expect("SIGKILL the shard-host");
+    host.child.wait().expect("reap the shard-host");
+
+    let mut okays = 0usize;
+    let mut typed_remote = 0usize;
+    for (k, t) in tickets.into_iter().enumerate() {
+        match redeem(&mut fleet, t) {
+            Ok(got) => {
+                let want = truth.infer_batch(&batches[k]).expect("reference");
+                assert_eq!(got.bits, want.bits, "soak batch {k} bits");
+                assert_eq!(got.classes, want.classes, "soak batch {k} classes");
+                okays += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("remote shard at") || msg.contains("worker thread"),
+                    "soak batch {k}: untyped failure leaked through: {msg}"
+                );
+                if msg.contains("remote shard at") {
+                    typed_remote += 1;
+                }
+            }
+        }
+    }
+    assert!(typed_remote > 0, "the dying host never surfaced a typed remote error");
+    assert!(okays > 0, "the local survivor completed nothing mid-kill");
+
+    // let the event channels drain so the dead shard leaves the rotation
+    for _ in 0..20 {
+        fleet.wait_event(Duration::from_millis(1));
+    }
+
+    // aftermath: the fleet still serves, bit-exact, on the survivor
+    let after: Vec<Vec<Vec<bool>>> = (0..8).map(|_| random_images(&mut rng, 4, n_in)).collect();
+    let at: Vec<Ticket> = after
+        .iter()
+        .map(|b| fleet.submit(b.clone()).expect("post-kill submit"))
+        .collect();
+    for (k, t) in at.into_iter().enumerate() {
+        let got = redeem(&mut fleet, t).unwrap_or_else(|e| {
+            panic!("aftermath batch {k} failed on the surviving shard: {e:#}")
+        });
+        let want = truth.infer_batch(&after[k]).expect("reference");
+        assert_eq!(got.bits, want.bits, "aftermath batch {k} bits");
+        assert_eq!(got.classes, want.classes, "aftermath batch {k} classes");
+    }
+}

@@ -1,0 +1,314 @@
+//! Property tests for the multi-host wire protocol: for **arbitrary**
+//! messages — any variant, any payload shape — a frame roundtrips
+//! bit-exactly through encode → decode, and no corruption of the bytes
+//! (truncation, oversized lengths, version skew, flipped bits, pure
+//! garbage) ever panics or over-allocates: every rejection is a typed
+//! [`WireError`].
+
+use xpoint_imc::engine::{
+    BackendKind, Capabilities, InferenceResult, SwapReport, Telemetry,
+};
+use xpoint_imc::net::{read_frame, Msg, WireError, MAGIC, MAX_FRAME, PROTOCOL_VERSION};
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+// ------------------------------------------------------- arbitrary data
+
+fn arbitrary_kind(rng: &mut Pcg32) -> BackendKind {
+    *rng.choose(&[
+        BackendKind::Ideal,
+        BackendKind::Parasitic,
+        BackendKind::Fabric,
+        BackendKind::Xla,
+        BackendKind::Sharded,
+        BackendKind::Remote,
+    ])
+}
+
+fn arbitrary_caps(rng: &mut Pcg32) -> Capabilities {
+    Capabilities {
+        kind: arbitrary_kind(rng),
+        n_in: rng.range(1, 200),
+        n_out: rng.range(1, 40),
+        max_batch: rng.range(1, 2000),
+        nodes: rng.range(1, 64),
+        tiles: rng.range(0, 64),
+        shards: rng.range(1, 8),
+        reports_energy: rng.bernoulli(0.5),
+        pipelined: rng.bernoulli(0.5),
+    }
+}
+
+fn arbitrary_telemetry(rng: &mut Pcg32) -> Telemetry {
+    Telemetry {
+        batches: rng.next_u64() >> 40,
+        images: rng.next_u64() >> 40,
+        steps: rng.next_u64() >> 40,
+        sim_time: rng.range_f64(0.0, 1e3),
+        energy: rng.range_f64(0.0, 1e3),
+        compute_energy: rng.range_f64(0.0, 1e3),
+        link_energy: rng.range_f64(0.0, 1e3),
+        cycles: rng.next_u64() >> 40,
+        link_transfers: rng.next_u64() >> 40,
+        link_lines: rng.next_u64() >> 40,
+        swaps: rng.range(0, 100) as u64,
+        program_time: rng.range_f64(0.0, 1e3),
+        program_energy: rng.range_f64(0.0, 1e3),
+        wear_pulses: rng.next_u64() >> 40,
+        utilization: (0..rng.range(0, 6)).map(|_| rng.range_f64(0.0, 1.0)).collect(),
+    }
+}
+
+fn arbitrary_bits(rng: &mut Pcg32, n: usize) -> Vec<bool> {
+    (0..n).map(|_| rng.bernoulli(0.5)).collect()
+}
+
+fn arbitrary_images(rng: &mut Pcg32) -> Vec<Vec<bool>> {
+    // ragged on purpose: the wire carries rows independently and the
+    // engine, not the protocol, owns shape policy
+    (0..rng.range(0, 6))
+        .map(|_| arbitrary_bits(rng, rng.range(0, 40)))
+        .collect()
+}
+
+fn arbitrary_result(rng: &mut Pcg32) -> InferenceResult {
+    let n = rng.range(0, 6);
+    InferenceResult {
+        bits: (0..n).map(|_| arbitrary_bits(rng, rng.range(0, 24))).collect(),
+        classes: (0..n).map(|_| rng.range(0, 10)).collect(),
+        sim_time: rng.range_f64(0.0, 1.0),
+        energy: rng.range_f64(0.0, 1.0),
+        steps: rng.range(0, 1000) as u64,
+    }
+}
+
+fn arbitrary_report(rng: &mut Pcg32) -> SwapReport {
+    SwapReport {
+        set_pulses: rng.next_u64() >> 40,
+        reset_pulses: rng.next_u64() >> 40,
+        cells_changed: rng.next_u64() >> 40,
+        cells_total: rng.next_u64() >> 40,
+        time: rng.range_f64(0.0, 10.0),
+        energy: rng.range_f64(0.0, 10.0),
+        shards: rng.range(1, 8),
+    }
+}
+
+fn arbitrary_layers(rng: &mut Pcg32) -> Vec<BinaryLayer> {
+    (0..rng.range(1, 4))
+        .map(|_| {
+            let n_out = rng.range(1, 8);
+            let n_in = rng.range(1, 24);
+            let weights = (0..n_out).map(|_| arbitrary_bits(rng, n_in)).collect();
+            BinaryLayer::new(weights, rng.range(1, n_in + 1))
+        })
+        .collect()
+}
+
+fn arbitrary_msg(rng: &mut Pcg32) -> Msg {
+    match rng.range(0, 11) {
+        0 => Msg::Hello { magic: MAGIC },
+        1 => Msg::HelloOk {
+            caps: arbitrary_caps(rng),
+            telemetry: arbitrary_telemetry(rng),
+        },
+        2 => Msg::Infer {
+            id: rng.next_u64(),
+            images: arbitrary_images(rng),
+        },
+        3 => Msg::InferOk {
+            id: rng.next_u64(),
+            result: arbitrary_result(rng),
+            telemetry: arbitrary_telemetry(rng),
+        },
+        4 => Msg::Swap {
+            target: arbitrary_layers(rng),
+        },
+        5 => Msg::SwapOk {
+            report: arbitrary_report(rng),
+            telemetry: arbitrary_telemetry(rng),
+        },
+        6 => Msg::Telemetry,
+        7 => Msg::TelemetryOk {
+            telemetry: arbitrary_telemetry(rng),
+        },
+        8 => Msg::Err {
+            detail: format!("remote shard exploded {}×", rng.range(0, 1_000_000)),
+        },
+        9 => Msg::Shutdown,
+        _ => Msg::ShutdownOk,
+    }
+}
+
+// ------------------------------------------------------------ properties
+
+#[test]
+fn every_message_roundtrips_bit_exactly() {
+    forall(
+        Config::default().cases(400),
+        "wire roundtrip",
+        |rng: &mut Pcg32| {
+            let msg = arbitrary_msg(rng);
+            let frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            let decoded = read_frame(&mut &frame[..])
+                .map_err(|e| format!("decode {}: {e}", msg.name()))?
+                .ok_or_else(|| "decode: clean EOF on a full frame".to_string())?;
+            if decoded == msg {
+                Ok(())
+            } else {
+                Err(format!("{} changed across the wire", msg.name()))
+            }
+        },
+    );
+}
+
+#[test]
+fn truncation_at_any_byte_is_a_typed_error_never_a_panic() {
+    forall(
+        Config::default().cases(200),
+        "wire truncation",
+        |rng: &mut Pcg32| {
+            let msg = arbitrary_msg(rng);
+            let frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            let cut = rng.range(0, frame.len()); // strictly shorter
+            match read_frame(&mut &frame[..cut]) {
+                // no bytes at all is a clean end-of-stream
+                Ok(None) if cut == 0 => Ok(()),
+                Ok(None) => Err(format!("cut at {cut}/{} read as clean EOF", frame.len())),
+                Ok(Some(m)) => Err(format!(
+                    "cut at {cut}/{} still decoded a {}",
+                    frame.len(),
+                    m.name()
+                )),
+                // Truncated is the honest answer; a cut that lands inside
+                // a length-prefixed payload may also surface as Malformed
+                Err(WireError::Truncated { .. }) | Err(WireError::Malformed(_)) => Ok(()),
+                Err(e) => Err(format!("cut at {cut}: unexpected error kind {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn random_garbage_never_panics_the_decoder() {
+    forall(
+        Config::default().cases(400),
+        "wire garbage",
+        |rng: &mut Pcg32| {
+            let n = rng.range(0, 96);
+            let mut bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            // keep announced lengths small so the property stays fast —
+            // hostile *large* lengths get their own test below
+            if bytes.len() >= 4 {
+                bytes[2] = 0;
+                bytes[3] = 0;
+            }
+            // must return *something* without panicking or allocating wild
+            let _ = read_frame(&mut &bytes[..]);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn corrupted_valid_frames_never_panic() {
+    forall(
+        Config::default().cases(400),
+        "wire bit flips",
+        |rng: &mut Pcg32| {
+            let msg = arbitrary_msg(rng);
+            let mut frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            // flip a handful of random bits anywhere in the frame; cap the
+            // length prefix so a flipped length cannot demand a huge body
+            for _ in 0..rng.range(1, 6) {
+                let i = rng.range(0, frame.len());
+                frame[i] ^= 1 << rng.range(0, 8);
+            }
+            frame[2] = 0;
+            frame[3] = 0;
+            let _ = read_frame(&mut &frame[..]);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversized_lengths_are_rejected_up_front() {
+    forall(
+        Config::default().cases(100),
+        "wire oversized",
+        |rng: &mut Pcg32| {
+            let over = MAX_FRAME + 1 + (rng.next_u64() % 1_000_000);
+            let mut bytes = (over.min(u32::MAX as u64) as u32).to_le_bytes().to_vec();
+            bytes.extend_from_slice(&[PROTOCOL_VERSION, 1]);
+            match read_frame(&mut &bytes[..]) {
+                Err(WireError::Oversized { len, max }) => {
+                    if len > max && max == MAX_FRAME {
+                        Ok(())
+                    } else {
+                        Err(format!("odd oversized report: len={len} max={max}"))
+                    }
+                }
+                other => Err(format!("expected Oversized, got {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn version_skew_is_reported_as_version_mismatch() {
+    forall(
+        Config::default().cases(100),
+        "wire version skew",
+        |rng: &mut Pcg32| {
+            let msg = arbitrary_msg(rng);
+            let mut frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            let bogus = loop {
+                let v = rng.next_u32() as u8;
+                if v != PROTOCOL_VERSION {
+                    break v;
+                }
+            };
+            frame[4] = bogus; // version byte sits right after the length
+            match read_frame(&mut &frame[..]) {
+                Err(WireError::Version { got, want }) => {
+                    if got == bogus && want == PROTOCOL_VERSION {
+                        Ok(())
+                    } else {
+                        Err(format!("wrong versions in report: got={got} want={want}"))
+                    }
+                }
+                other => Err(format!("expected Version error, got {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn trailing_bytes_after_a_payload_are_malformed() {
+    forall(
+        Config::default().cases(100),
+        "wire trailing bytes",
+        |rng: &mut Pcg32| {
+            let msg = arbitrary_msg(rng);
+            let mut frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            // graft extra payload bytes on and fix the length prefix
+            let extra = rng.range(1, 9);
+            frame.extend((0..extra).map(|_| rng.next_u32() as u8));
+            let body_len = (frame.len() - 4) as u32;
+            frame[..4].copy_from_slice(&body_len.to_le_bytes());
+            match read_frame(&mut &frame[..]) {
+                Err(WireError::Malformed(_)) => Ok(()),
+                // a grafted byte can also masquerade as a longer inner
+                // count and then run out of bytes — still typed, still fine
+                Err(WireError::Truncated { .. }) => Ok(()),
+                Ok(Some(m)) => Err(format!(
+                    "{extra} trailing bytes silently accepted on {}",
+                    m.name()
+                )),
+                other => Err(format!("unexpected outcome: {other:?}")),
+            }
+        },
+    );
+}
