@@ -6,7 +6,9 @@
 mod harness;
 
 use harness::{bench, bench_case, black_box, emit_bench_json, exhibit_header};
-use xpoint_imc::fabric::{FabricConfig, FabricExecutor};
+use xpoint_imc::device::DeviceParams;
+use xpoint_imc::fabric::{tile_step, tile_step_packed, vdd_for_theta, FabricConfig, FabricExecutor};
+use xpoint_imc::nn::{BitMatrix, BitVec};
 use xpoint_imc::report::fabric::{
     fabric_scaling_rows, fabric_scaling_table, fabric_workload, FABRIC_GRIDS,
 };
@@ -25,22 +27,20 @@ fn main() {
     );
     // machine-readable exhibit for the CI perf gate: simulated
     // throughput is deterministic and hardware-independent
-    emit_bench_json(
-        "fabric_pipeline",
-        rows.iter()
-            .map(|r| {
-                bench_case(
-                    &format!("grid {}x{} batch {}", r.grid_rows, r.grid_cols, r.batch),
-                    r.throughput,
-                    &[
-                        ("cycles", r.cycles as f64),
-                        ("energy_per_image_j", r.energy_per_image),
-                        ("mean_util", r.mean_util),
-                    ],
-                )
-            })
-            .collect(),
-    );
+    let mut cases: Vec<_> = rows
+        .iter()
+        .map(|r| {
+            bench_case(
+                &format!("grid {}x{} batch {}", r.grid_rows, r.grid_cols, r.batch),
+                r.throughput,
+                &[
+                    ("cycles", r.cycles as f64),
+                    ("energy_per_image_j", r.energy_per_image),
+                    ("mean_util", r.mean_util),
+                ],
+            )
+        })
+        .collect();
 
     // host-side hot path: the event-driven simulation itself
     let layers = fabric_workload();
@@ -71,4 +71,41 @@ fn main() {
         black_box(run.plan.cells_changed());
         to_b = !to_b;
     });
+
+    // packed-vs-scalar tile kernel: the executor's per-tile inner loop,
+    // bool-matrix walk vs `AND + count_ones` over pre-packed lanes. The
+    // gated throughput is the SIMULATED tile rate (t_SET per step —
+    // deterministic, identical for both); `host_img_s` carries the
+    // measured host kernel rate, where the packed speedup shows up.
+    let p = DeviceParams::default();
+    let tile: Vec<Vec<bool>> = (0..64)
+        .map(|_| (0..256).map(|_| rng.bernoulli(0.5)).collect())
+        .collect();
+    let x: Vec<bool> = (0..256).map(|_| rng.bernoulli(0.5)).collect();
+    let wm = BitMatrix::from_rows(&tile);
+    let xv = BitVec::from_bools(&x);
+    let v_dd = vdd_for_theta(64, &p);
+    let scalar = bench("tile_step scalar, 64x256", || {
+        black_box(tile_step(&tile, &x, v_dd, &p).current_sum);
+    });
+    let packed = bench("tile_step packed, 64x256", || {
+        black_box(tile_step_packed(&wm, &xv, v_dd, &p).current_sum);
+    });
+    println!(
+        "packed tile kernel speedup: {:.1}× (host)",
+        scalar.min_s / packed.min_s
+    );
+    let sim_rate = 64.0 / p.t_set;
+    cases.push(bench_case(
+        "tile_step scalar, 64x256",
+        sim_rate,
+        &[("host_img_s", 64.0 / scalar.min_s)],
+    ));
+    cases.push(bench_case(
+        "tile_step packed, 64x256",
+        sim_rate,
+        &[("host_img_s", 64.0 / packed.min_s)],
+    ));
+
+    emit_bench_json("fabric_pipeline", cases);
 }

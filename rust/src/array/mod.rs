@@ -10,4 +10,4 @@ pub mod multibit;
 pub use energy::EnergyLedger;
 pub use multibit::{multibit_tmvm_cost, MultibitCost, MultibitScheme};
 pub use subarray::{Level, Subarray};
-pub use tmvm::{TmvmMode, TmvmOutcome, TmvmReport};
+pub use tmvm::{ideal_row_current, TmvmMode, TmvmOutcome, TmvmReport};

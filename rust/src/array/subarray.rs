@@ -4,6 +4,7 @@
 use super::energy::EnergyLedger;
 use crate::analysis::ArrayDesign;
 use crate::device::PcmCell;
+use crate::nn::packed::BitMatrix;
 
 /// The two PCM levels of a (two-deck) 3D XPoint subarray.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,6 +24,12 @@ pub struct Subarray {
     design: ArrayDesign,
     top: Vec<PcmCell>,
     bottom: Vec<PcmCell>,
+    /// Packed shadow of the top level's logical bits. Every top-level
+    /// mutation goes through `write_bit(bool)`, which lands cells exactly
+    /// at the crystalline/amorphous endpoints, so this mirror is always
+    /// faithful — it is what the ideal-mode TMVM popcount path reads
+    /// instead of walking per-cell conductances.
+    top_bits: BitMatrix,
     /// Energy/latency ledger for all operations on this subarray.
     pub ledger: EnergyLedger,
     /// Per-row `(α_th, R_th)` cache for parasitic-mode TMVM — the design
@@ -36,6 +43,7 @@ impl Subarray {
     pub fn new(design: ArrayDesign) -> Self {
         let n = design.n_row * design.n_col;
         Self {
+            top_bits: BitMatrix::zeros(design.n_row, design.n_col),
             design,
             top: vec![PcmCell::new(); n],
             bottom: vec![PcmCell::new(); n],
@@ -101,6 +109,9 @@ impl Subarray {
         // programming voltage ~ the threshold-switched cell drop
         self.ledger.book_write(p.v_switch, amp, dur);
         self.level_mut(level)[i].write_bit(bit);
+        if level == Level::Top {
+            self.top_bits.set(row, col, bit);
+        }
     }
 
     /// Program a whole level from a row-major bit matrix
@@ -114,6 +125,9 @@ impl Subarray {
             for (c, &b) in row_bits.iter().enumerate() {
                 let i = self.idx(r, c);
                 self.level_mut(level)[i].write_bit(b);
+                if level == Level::Top {
+                    self.top_bits.set(r, c, b);
+                }
             }
             // one parallel write pulse per row (worst-case RESET timing)
             self.ledger
@@ -160,6 +174,14 @@ impl Subarray {
     pub(crate) fn force_top(&mut self, row: usize, col: usize, bit: bool) {
         let i = self.idx(row, col);
         self.top[i].write_bit(bit);
+        self.top_bits.set(row, col, bit);
+    }
+
+    /// Packed lanes of one top-level row — the ideal-mode TMVM hot path
+    /// (tail bits past `n_col` are always zero).
+    #[inline]
+    pub fn top_row_words(&self, row: usize) -> &[u64] {
+        self.top_bits.row(row)
     }
 
     /// Borrow the top level bits of one row as booleans (no energy).
@@ -234,6 +256,25 @@ mod tests {
         assert!((sa.top_conductance(0, 0) - p.g_a).abs() / p.g_a < 1e-9);
         sa.write(Level::Top, 0, 0, true);
         assert!((sa.top_conductance(0, 0) - p.g_c).abs() / p.g_c < 1e-9);
+    }
+
+    #[test]
+    fn packed_shadow_tracks_every_top_mutation() {
+        let mut sa = small();
+        let bits: Vec<Vec<bool>> = (0..4)
+            .map(|r| (0..6).map(|c| (r * c) % 3 == 0).collect())
+            .collect();
+        sa.program_level(Level::Top, &bits);
+        sa.write(Level::Top, 1, 5, true);
+        sa.force_top(3, 0, true);
+        sa.write(Level::Bottom, 0, 0, true); // must not touch the shadow
+        for r in 0..4 {
+            let from_words: Vec<bool> = (0..6)
+                .map(|c| sa.top_row_words(r)[0] & (1 << c) != 0)
+                .collect();
+            assert_eq!(from_words, sa.top_row_bits(r), "row {r}");
+            assert_eq!(sa.top_row_words(r)[0] >> 6, 0, "tail masked");
+        }
     }
 
     #[test]

@@ -18,6 +18,23 @@
 
 use super::subarray::Subarray;
 use crate::analysis::thevenin::ladder_thevenin;
+use crate::device::DeviceParams;
+use crate::nn::packed::{and_count, BitVec};
+
+/// Eq. 3 at the crystalline endpoint, in **count space**: with `count`
+/// crystalline products among `active` driven inputs the conductance sum
+/// is exactly `count·G_C + (active−count)·G_A` (a binary-programmed level
+/// has no intermediate states), so the row current needs a popcount, not
+/// a per-cell walk. The fabric node's `row_current` delegates here, which
+/// keeps the two layers bit-identical in f64.
+#[inline]
+pub fn ideal_row_current(count: u32, active: u32, v_dd: f64, p: &DeviceParams) -> f64 {
+    if active == 0 {
+        return 0.0;
+    }
+    let g_sum = f64::from(count) * p.g_c + f64::from(active - count) * p.g_a;
+    p.g_c * v_dd * g_sum / (g_sum + p.g_c)
+}
 
 /// Electrical fidelity of a TMVM execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,7 +96,95 @@ impl Subarray {
     /// engaged in the computation"), so they carry no current and burn no
     /// energy. The coordinator uses this when a batch only fills part of
     /// the subarray.
+    ///
+    /// In [`TmvmMode::Ideal`] this takes the packed popcount fast path
+    /// (row sums from `count_ones` over the top level's `u64` shadow —
+    /// the full report, violations included, derives from the counts);
+    /// [`TmvmMode::Parasitic`] needs the per-cell electrical walk and
+    /// falls back to [`Subarray::tmvm_rows_scalar`].
     pub fn tmvm_rows(
+        &mut self,
+        inputs: &[bool],
+        out_col: usize,
+        v_dd: f64,
+        mode: TmvmMode,
+        active_rows: usize,
+    ) -> TmvmReport {
+        match mode {
+            TmvmMode::Ideal => self.tmvm_rows_ideal_packed(inputs, out_col, v_dd, active_rows),
+            TmvmMode::Parasitic => self.tmvm_rows_scalar(inputs, out_col, v_dd, mode, active_rows),
+        }
+    }
+
+    /// The ideal-mode popcount hot path: one `AND + count_ones` pass per
+    /// lane instead of a conductance sum per cell. Bit-exact in outputs
+    /// and outcomes with [`Subarray::tmvm_rows_scalar`] (pinned by
+    /// `tests/prop_packed.rs`); currents agree to f64 rounding because
+    /// the count-space conductance sum reassociates the addition.
+    fn tmvm_rows_ideal_packed(
+        &mut self,
+        inputs: &[bool],
+        out_col: usize,
+        v_dd: f64,
+        active_rows: usize,
+    ) -> TmvmReport {
+        assert_eq!(inputs.len(), self.n_col(), "one input bit per column");
+        assert!(out_col < self.n_col());
+        assert!(v_dd > 0.0);
+        assert!(active_rows <= self.n_row());
+        let p = self.design().device;
+
+        self.preset_output_column(out_col, true);
+
+        let x = BitVec::from_bools(inputs);
+        let active = x.count_ones();
+        let n_row = self.n_row();
+        let mut outputs = Vec::with_capacity(n_row);
+        let mut currents = Vec::with_capacity(n_row);
+        let mut outcomes = Vec::with_capacity(n_row);
+        let mut current_sum = 0.0;
+
+        for row in 0..n_row {
+            if row >= active_rows {
+                // floated WLB: no current path through this row
+                self.force_bottom(row, out_col, false);
+                outputs.push(false);
+                currents.push(0.0);
+                outcomes.push(TmvmOutcome::Held);
+                continue;
+            }
+            let count = and_count(self.top_row_words(row), x.words());
+            let i_t = ideal_row_current(count, active, v_dd, &p);
+            let (bit, outcome) = if i_t >= p.i_reset {
+                (false, TmvmOutcome::ResetViolation)
+            } else if i_t >= p.i_set {
+                (true, TmvmOutcome::Set)
+            } else {
+                (false, TmvmOutcome::Held)
+            };
+            self.force_bottom(row, out_col, bit);
+            outputs.push(bit);
+            currents.push(i_t);
+            outcomes.push(outcome);
+            current_sum += i_t;
+        }
+
+        let e_before = self.ledger.energy;
+        self.ledger.book_step(v_dd, current_sum, p.t_set);
+        TmvmReport {
+            outputs,
+            currents,
+            outcomes,
+            v_dd,
+            energy: self.ledger.energy - e_before,
+        }
+    }
+
+    /// The per-cell electrical walk — the **reference oracle** for the
+    /// packed path, and the only implementation of the parasitic ladder
+    /// model. Handles both modes; kept public so property tests and the
+    /// benches can pit the packed path against it on the same subarray.
+    pub fn tmvm_rows_scalar(
         &mut self,
         inputs: &[bool],
         out_col: usize,
@@ -323,6 +428,32 @@ mod tests {
         assert!(rep.outputs.iter().all(|&b| !b));
         assert!(rep.currents.iter().all(|&i| i < p.i_set));
         assert!(rep.currents[0] > 0.0, "leakage is nonzero");
+    }
+
+    #[test]
+    fn packed_ideal_path_matches_scalar_oracle() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(77);
+        let shapes = [(5usize, 7usize, 5usize), (8, 64, 6), (6, 65, 3), (4, 121, 4)];
+        for &(n_row, n_col, active_rows) in &shapes {
+            let mut fast = array(n_row, n_col);
+            let mut oracle = array(n_row, n_col);
+            let bits: Vec<Vec<bool>> = (0..n_row)
+                .map(|_| (0..n_col).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+            fast.program_level(Level::Top, &bits);
+            oracle.program_level(Level::Top, &bits);
+            let x: Vec<bool> = (0..n_col).map(|_| rng.bernoulli(0.6)).collect();
+            let v = fast.vdd_for_threshold(3);
+            let a = fast.tmvm_rows(&x, 0, v, TmvmMode::Ideal, active_rows);
+            let b = oracle.tmvm_rows_scalar(&x, 0, v, TmvmMode::Ideal, active_rows);
+            assert_eq!(a.outputs, b.outputs, "{n_row}x{n_col}");
+            assert_eq!(a.outcomes, b.outcomes);
+            for (ia, ib) in a.currents.iter().zip(&b.currents) {
+                assert!((ia - ib).abs() <= 1e-12 * ib.abs() + 1e-18);
+            }
+            assert!((a.energy - b.energy).abs() <= 1e-9 * b.energy.abs() + 1e-24);
+        }
     }
 
     #[test]

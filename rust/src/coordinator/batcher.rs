@@ -5,6 +5,11 @@
 //! accounting). The batcher drains greedily: a full batch ships
 //! immediately; a partial batch ships when `linger` expires, trading
 //! latency for step efficiency exactly like a serving-system batcher.
+//!
+//! A shipped batch is packed **once** by the scheduler at intake into an
+//! `Arc`-shared [`PackedBatch`](crate::nn::packed::PackedBatch); every
+//! hop after that — dispatch to a shard thread, reroute off a dead shard
+//! — moves indices over the one shared bit buffer, never image clones.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

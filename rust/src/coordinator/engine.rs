@@ -17,7 +17,8 @@
 //! std-thread based — the build is offline and the workload is CPU-bound
 //! simulation, so threads + channels outperform an async reactor here.
 
-use crate::engine::{BackendFactory, EngineError};
+use crate::engine::{BackendFactory, EngineError, Ticket};
+use crate::nn::packed::PackedBatch;
 use crate::nn::BinaryLayer;
 use super::autoscale::{AutoscalePolicy, ScaleDecision};
 use super::batcher::Batcher;
@@ -96,6 +97,19 @@ const IDLE_EVAL_INTERVAL: Duration = Duration::from_millis(1);
 /// instead of a handful of loop passes.
 const AUTOSCALE_EVAL_INTERVAL: Duration = Duration::from_millis(1);
 
+/// One submitted batch the scheduler is waiting on. The packed buffer is
+/// retained (`None` for ragged batches that went down the scalar path) so
+/// an engine-side failure — a shard dying with the batch in flight — can
+/// re-dispatch the *shared* buffer instead of recloning every image.
+struct Pending {
+    ticket: Ticket,
+    jobs: Vec<Job>,
+    batch: Option<PackedBatch>,
+    submitted: Instant,
+    /// One retry only: a second failure fails the batch for real.
+    retried: bool,
+}
+
 /// Deliver one completed batch: replies to every job, then one metrics
 /// record for the batch.
 fn deliver(
@@ -160,7 +174,7 @@ fn scheduler_main(
             return;
         }
     };
-    let mut in_flight: Vec<(u64, Vec<Job>, Instant)> = Vec::new();
+    let mut in_flight: Vec<Pending> = Vec::new();
     let mut swap_pending = false;
     let mut open = true;
     let mut last_eval: Option<Instant> = None;
@@ -210,13 +224,31 @@ fn scheduler_main(
             match next {
                 Some(Work::Jobs(jobs)) => {
                     progressed = true;
-                    let images: Vec<Vec<bool>> =
-                        jobs.iter().map(|j| j.image.clone()).collect();
+                    // pack once at ingest: the jobs' bits land in one
+                    // contiguous buffer, and every later hop — dispatch to
+                    // a shard thread, reroute off a dead one — moves an
+                    // `Arc`, not cloned images. Ragged job batches (mixed
+                    // image widths) stay scalar; engines own shape policy.
+                    let rows: Vec<&[bool]> = jobs.iter().map(|j| j.image.as_slice()).collect();
                     // stamp before submit: synchronous engines do the whole
                     // inference inside it, and that time is the latency
                     let submitted = Instant::now();
-                    match engine.submit(images) {
-                        Ok(ticket) => in_flight.push((ticket, jobs, submitted)),
+                    let (issued, batch) = match PackedBatch::from_rows(&rows) {
+                        Some(b) => (engine.submit_packed(b.clone()), Some(b)),
+                        None => {
+                            let images: Vec<Vec<bool>> =
+                                jobs.iter().map(|j| j.image.clone()).collect();
+                            (engine.submit(images), None)
+                        }
+                    };
+                    match issued {
+                        Ok(ticket) => in_flight.push(Pending {
+                            ticket,
+                            jobs,
+                            batch,
+                            submitted,
+                            retried: false,
+                        }),
                         Err(e) => {
                             eprintln!(
                                 "worker {wid}: submit of {} jobs failed: {e:#}",
@@ -243,20 +275,53 @@ fn scheduler_main(
         // engine finished them
         let mut i = 0;
         while i < in_flight.len() {
-            match engine.poll(in_flight[i].0) {
+            match engine.poll(in_flight[i].ticket) {
                 Ok(Some(res)) => {
                     progressed = true;
-                    let (_, jobs, submitted) = in_flight.swap_remove(i);
-                    deliver(&metrics, jobs, res, submitted);
+                    let p = in_flight.swap_remove(i);
+                    deliver(&metrics, p.jobs, res, p.submitted);
                 }
                 Ok(None) => i += 1,
                 Err(e) => {
                     progressed = true;
-                    let (ticket, jobs, _) = in_flight.swap_remove(i);
-                    eprintln!(
-                        "worker {wid}: batch (ticket {ticket}, {} jobs) failed: {e:#}",
-                        jobs.len()
-                    );
+                    let mut p = in_flight.swap_remove(i);
+                    // one retry when the packed buffer was retained (the
+                    // shard owning the batch died mid-flight): the
+                    // re-dispatch shares the buffer — an `Arc` clone,
+                    // never a fresh copy of the images
+                    let resubmit = match (&p.batch, p.retried) {
+                        (Some(b), false) => Some(engine.submit_packed(b.clone())),
+                        _ => None,
+                    };
+                    match resubmit {
+                        Some(Ok(ticket)) => {
+                            eprintln!(
+                                "worker {wid}: batch (ticket {}, {} jobs) failed: {e:#}; \
+                                 re-dispatched the shared buffer as ticket {ticket}",
+                                p.ticket,
+                                p.jobs.len()
+                            );
+                            p.ticket = ticket;
+                            p.retried = true;
+                            p.submitted = Instant::now();
+                            in_flight.push(p);
+                        }
+                        Some(Err(re)) => {
+                            eprintln!(
+                                "worker {wid}: batch (ticket {}, {} jobs) failed: {e:#}; \
+                                 retry also failed: {re:#}",
+                                p.ticket,
+                                p.jobs.len()
+                            );
+                        }
+                        None => {
+                            eprintln!(
+                                "worker {wid}: batch (ticket {}, {} jobs) failed: {e:#}",
+                                p.ticket,
+                                p.jobs.len()
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -774,6 +839,131 @@ mod tests {
         assert!(snap.shards.iter().all(|t| t.wear_pulses > 0));
         let spread: u64 = snap.shards.iter().map(|t| t.images).sum();
         assert_eq!(spread, N as u64, "every image accounted to some slot");
+    }
+
+    /// Regression: an engine-side batch failure (the shard owning it
+    /// died mid-flight) re-dispatches the *same* shared packed buffer
+    /// once — the jobs still answer, and the reroute moves an `Arc`,
+    /// never a fresh copy of the images.
+    #[test]
+    fn dead_shard_retry_redispatches_the_shared_buffer() {
+        use crate::engine::{Capabilities, Engine, InferenceResult, Telemetry};
+        use crate::nn::packed::PackedBatch;
+        use std::sync::Mutex;
+
+        struct Flaky {
+            layer: BinaryLayer,
+            next: Ticket,
+            pending: Vec<(Ticket, PackedBatch)>,
+            failed_once: bool,
+            /// Buffer addresses of every packed submission, shared with
+            /// the test thread.
+            seen: Arc<Mutex<Vec<usize>>>,
+        }
+        impl Engine for Flaky {
+            fn infer_batch(&mut self, images: &[Vec<bool>]) -> crate::Result<InferenceResult> {
+                Ok(InferenceResult {
+                    bits: images.iter().map(|x| self.layer.forward(x)).collect(),
+                    classes: images.iter().map(|x| self.layer.argmax(x)).collect(),
+                    sim_time: 0.0,
+                    energy: 0.0,
+                    steps: images.len() as u64,
+                })
+            }
+            fn max_batch(&self) -> usize {
+                64
+            }
+            fn capabilities(&self) -> Capabilities {
+                Capabilities {
+                    kind: BackendKind::Ideal,
+                    n_in: self.layer.n_in(),
+                    n_out: self.layer.n_out(),
+                    max_batch: 64,
+                    nodes: 1,
+                    tiles: 1,
+                    shards: 1,
+                    reports_energy: false,
+                    pipelined: false,
+                }
+            }
+            fn telemetry(&self) -> Telemetry {
+                Telemetry::default()
+            }
+            fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
+                let b = PackedBatch::from_images(&images).expect("uniform batch");
+                self.submit_packed(b)
+            }
+            fn submit_packed(&mut self, batch: PackedBatch) -> crate::Result<Ticket> {
+                self.seen
+                    .lock()
+                    .unwrap()
+                    .push(batch.row_words(0).as_ptr() as usize);
+                self.next += 1;
+                self.pending.push((self.next, batch));
+                Ok(self.next)
+            }
+            fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
+                let Some(pos) = self.pending.iter().position(|(t, _)| *t == ticket) else {
+                    return Ok(None);
+                };
+                let (_, batch) = self.pending.remove(pos);
+                if !self.failed_once {
+                    // first completion "dies" the way a shard thread does:
+                    // the ticket fails and the batch is gone engine-side
+                    self.failed_once = true;
+                    anyhow::bail!("shard 0 worker thread is down");
+                }
+                self.infer_batch(&batch.to_images()).map(Some)
+            }
+        }
+
+        let mut rng = Pcg32::seeded(51);
+        let layer = BinaryLayer::new(
+            (0..6)
+                .map(|_| (0..12).map(|_| rng.bernoulli(0.5)).collect())
+                .collect(),
+            2,
+        );
+        let seen: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let (l2, s2) = (layer.clone(), Arc::clone(&seen));
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(Flaky {
+                layer: l2,
+                next: 0,
+                pending: Vec::new(),
+                failed_once: false,
+                seen: s2,
+            }) as Box<dyn Engine>)
+        });
+        let mut coord = Coordinator::spawn(
+            vec![factory],
+            CoordinatorConfig {
+                batch_capacity: 4,
+                // long linger: the batch must ship only once all 4 jobs
+                // are queued, so exactly one engine submission happens
+                // (plus exactly one retry — the addresses pin that)
+                linger: Duration::from_secs(5),
+                autoscale: None,
+            },
+        );
+        let mut rng2 = Pcg32::seeded(52);
+        let imgs: Vec<Vec<bool>> = (0..4)
+            .map(|_| (0..12).map(|_| rng2.bernoulli(0.4)).collect())
+            .collect();
+        let rxs: Vec<_> = imgs
+            .iter()
+            .map(|img| coord.submit(img.clone(), None).expect("submit"))
+            .collect();
+        for (img, rx) in imgs.iter().zip(rxs) {
+            let pred = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("the retried batch still answers its jobs");
+            assert_eq!(pred.bits, layer.forward(img), "answered after the retry");
+        }
+        drop(coord);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2, "original submission plus exactly one retry");
+        assert_eq!(seen[0], seen[1], "the retry shared the packed buffer");
     }
 
     #[test]

@@ -10,7 +10,52 @@
 use super::error::EngineError;
 use super::spec::BackendKind;
 use crate::device::ReprogramPlan;
+use crate::nn::packed::PackedBatch;
 use crate::nn::BinaryLayer;
+
+/// A batch in flight through submit → dispatch → complete. The packed
+/// form is the hot path: an `Arc`-shared [`PackedBatch`] moves as an
+/// index range over one shared bit buffer, so handing it to a shard
+/// thread (or rerouting it off a dead one) clones a pointer, never the
+/// images. The scalar form remains for ragged batches — engines own the
+/// shape policy, so the dispatcher must not reject them early.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// Legacy scalar images (ragged batches land here).
+    Bools(Vec<Vec<bool>>),
+    /// `Arc`-shared packed buffer + index range (zero-copy dispatch).
+    Packed(PackedBatch),
+}
+
+impl Batch {
+    /// Pack when uniform, fall back to the scalar form when ragged.
+    pub fn from_images(images: Vec<Vec<bool>>) -> Self {
+        match PackedBatch::from_images(&images) {
+            Some(p) => Batch::Packed(p),
+            None => Batch::Bools(images),
+        }
+    }
+
+    /// Images in the batch.
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Bools(imgs) => imgs.len(),
+            Batch::Packed(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize scalar images (allocates for the packed form).
+    pub fn to_images(&self) -> Vec<Vec<bool>> {
+        match self {
+            Batch::Bools(imgs) => imgs.clone(),
+            Batch::Packed(p) => p.to_images(),
+        }
+    }
+}
 
 /// Output of a batched inference.
 #[derive(Clone, Debug, PartialEq)]
@@ -286,6 +331,22 @@ pub trait Engine {
     /// ([`ShardedEngine`](super::sharded::ShardedEngine), whose batches
     /// complete later on shard worker threads).
     fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket>;
+
+    /// [`infer_batch`](Engine::infer_batch) over an `Arc`-shared packed
+    /// batch — the zero-copy hot path. Engines with a packed kernel
+    /// (simulation, fabric, sharded) override this to skip the scalar
+    /// materialization; the default unpacks once and delegates, so every
+    /// backend accepts packed input.
+    fn infer_packed(&mut self, batch: &PackedBatch) -> crate::Result<InferenceResult> {
+        self.infer_batch(&batch.to_images())
+    }
+
+    /// [`submit`](Engine::submit) over an `Arc`-shared packed batch:
+    /// dispatch moves the `(Arc, range)` pair, not cloned images. The
+    /// default unpacks once and delegates.
+    fn submit_packed(&mut self, batch: PackedBatch) -> crate::Result<Ticket> {
+        self.submit(batch.to_images())
+    }
 
     /// Redeem a ticket: `Ok(Some(..))` once the batch is done (at most
     /// once per ticket), `Ok(None)` while still in flight. Errors are

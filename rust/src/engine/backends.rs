@@ -20,6 +20,7 @@ use crate::analysis::ArrayDesign;
 use crate::array::{Subarray, TmvmMode};
 use crate::device::ReprogramPlan;
 use crate::fabric::{FabricConfig, FabricExecutor, FabricRun};
+use crate::nn::packed::{PackedBatch, PackedLayer};
 use crate::nn::{argmax_counts, BinaryLayer};
 use crate::runtime::{Executable, Runtime, TensorF32};
 
@@ -31,6 +32,9 @@ pub const XLA_GRAPH_BATCH: usize = 64;
 /// Circuit-level engine: one subarray running the single-layer network.
 pub struct SimBackend {
     layer: BinaryLayer,
+    /// The resident layer packed once (rebuilt on swap) — classification
+    /// on the packed path runs popcount argmax against it.
+    packed: PackedLayer,
     subarray: Subarray,
     mode: TmvmMode,
     telemetry: Telemetry,
@@ -63,6 +67,7 @@ impl SimBackend {
     ) -> Result<Self, EngineError> {
         Self::validate_shapes(&layer, &design)?;
         Ok(Self {
+            packed: PackedLayer::from(&layer),
             layer,
             subarray: Subarray::new(design),
             mode,
@@ -124,6 +129,29 @@ impl Engine for SimBackend {
         Ok(self.completions.push(res))
     }
 
+    fn infer_packed(&mut self, batch: &PackedBatch) -> crate::Result<InferenceResult> {
+        let run = self.layer.run_batch_packed(&mut self.subarray, batch, self.mode);
+        // popcount argmax over the shared buffer — no scalar images built
+        let classes = (0..batch.len())
+            .map(|i| self.packed.argmax_words(batch.row_words(i)))
+            .collect();
+        let compute_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        let res = InferenceResult {
+            bits: run.outputs,
+            classes,
+            sim_time: run.time,
+            energy: compute_energy,
+            steps: self.layer.n_out() as u64,
+        };
+        self.telemetry.record(&res);
+        Ok(res)
+    }
+
+    fn submit_packed(&mut self, batch: PackedBatch) -> crate::Result<Ticket> {
+        let res = self.infer_packed(&batch)?;
+        Ok(self.completions.push(res))
+    }
+
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
         Ok(Some(self.completions.take(ticket)?))
     }
@@ -161,6 +189,7 @@ impl Engine for SimBackend {
             &new.weights,
             &self.subarray.design().device,
         )?;
+        self.packed = PackedLayer::from(&new);
         self.layer = new;
         self.telemetry.swaps += 1;
         self.telemetry.program_time += plan.time;
@@ -670,6 +699,28 @@ mod tests {
         assert_eq!(got.bits, want.bits);
         assert_eq!(got.classes, want.classes);
         assert_eq!(fab.telemetry().swaps, 1);
+    }
+
+    /// The packed submit path must be bit-exact with the scalar one —
+    /// same outputs, classes, and telemetry accounting.
+    #[test]
+    fn packed_inference_matches_scalar_inference() {
+        let mut rng = Pcg32::seeded(68);
+        let layer = random_layer(&mut rng, 10, 21, 4);
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let mut scalar = SimBackend::new(layer.clone(), design.clone(), TmvmMode::Ideal).unwrap();
+        let mut packed = SimBackend::new(layer, design, TmvmMode::Ideal).unwrap();
+        let images: Vec<Vec<bool>> = (0..8)
+            .map(|_| (0..21).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let want = scalar.infer_batch(&images).unwrap();
+        let batch = PackedBatch::from_images(&images).expect("uniform");
+        let t = packed.submit_packed(batch).unwrap();
+        let got = packed.poll(t).unwrap().expect("sync completion");
+        assert_eq!(got.bits, want.bits);
+        assert_eq!(got.classes, want.classes);
+        assert_eq!(got.steps, want.steps);
+        assert!((got.energy - want.energy).abs() <= 1e-9 * want.energy.abs() + 1e-24);
     }
 
     #[test]

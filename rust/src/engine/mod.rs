@@ -46,7 +46,7 @@ pub mod sharded;
 pub mod spec;
 
 pub use api::{
-    BackendFactory, Capabilities, Completions, Engine, InferenceResult, ScaleEvent,
+    BackendFactory, Batch, Capabilities, Completions, Engine, InferenceResult, ScaleEvent,
     ScaleEventKind, ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};

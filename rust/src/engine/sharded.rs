@@ -76,7 +76,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api::{
-    BackendFactory, Capabilities, Engine, InferenceResult, ScaleEvent, ScaleEventKind,
+    BackendFactory, Batch, Capabilities, Engine, InferenceResult, ScaleEvent, ScaleEventKind,
     ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 use super::error::EngineError;
@@ -168,9 +168,11 @@ fn image_plan(
 /// not yet dispatched to any shard).
 const QUEUED: usize = usize::MAX;
 
-/// Work order for a shard thread.
+/// Work order for a shard thread. Inference carries a [`Batch`], so a
+/// packed submission crosses the channel as an `Arc`-shared buffer plus
+/// an index range — cloning it for dispatch copies indices, not bits.
 enum ShardRequest {
-    Infer { ticket: Ticket, images: Vec<Vec<bool>> },
+    Infer { ticket: Ticket, batch: Batch },
     Swap { target: Vec<BinaryLayer> },
 }
 
@@ -272,7 +274,7 @@ pub struct ShardedEngine {
     ready: Vec<(Ticket, Result<InferenceResult, String>)>,
     /// Batches parked while every fitting shard is out of service
     /// (only reachable mid-swap on a 1-shard engine).
-    queued: VecDeque<(Ticket, Vec<Vec<bool>>)>,
+    queued: VecDeque<(Ticket, Batch)>,
     swap: Option<RollingSwap>,
     /// A finished rolling swap awaiting redemption via `poll_swap`.
     swap_done: Option<Result<SwapReport, String>>,
@@ -306,9 +308,13 @@ fn shard_main(
     };
     while let Ok(req) = rx.recv() {
         let evt = match req {
-            ShardRequest::Infer { ticket, images } => ShardEvent::Done {
+            ShardRequest::Infer { ticket, batch } => ShardEvent::Done {
                 ticket,
-                result: engine.infer_batch(&images).map_err(|e| format!("{e:#}")),
+                result: match &batch {
+                    Batch::Bools(images) => engine.infer_batch(images),
+                    Batch::Packed(packed) => engine.infer_packed(packed),
+                }
+                .map_err(|e| format!("{e:#}")),
                 telemetry: engine.telemetry(),
             },
             ShardRequest::Swap { target } => ShardEvent::Swapped {
@@ -872,14 +878,14 @@ impl ShardedEngine {
     }
 
     /// Hand `ticket`'s batch to shard `i` and account it in flight.
-    fn send_to(&mut self, i: usize, ticket: Ticket, images: Vec<Vec<bool>>) -> crate::Result<()> {
-        let n = images.len();
+    fn send_to(&mut self, i: usize, ticket: Ticket, batch: Batch) -> crate::Result<()> {
+        let n = batch.len();
         self.next_pref = (i + 1) % self.shards.len();
         self.shards[i]
             .tx
             .as_ref()
             .expect("senders live until drop")
-            .send(ShardRequest::Infer { ticket, images })
+            .send(ShardRequest::Infer { ticket, batch })
             .map_err(|_| anyhow::anyhow!("shard {i} worker thread is down"))?;
         self.shards[i].in_flight_batches += 1;
         self.shards[i].in_flight_images += n;
@@ -887,15 +893,54 @@ impl ShardedEngine {
         Ok(())
     }
 
+    /// Common dispatch behind [`Engine::submit`] and
+    /// [`Engine::submit_packed`]: least-loaded shard choice, the mid-swap
+    /// park path, and ticket issue — the batch representation only
+    /// decides what crosses the worker channel.
+    fn submit_any(&mut self, batch: Batch) -> crate::Result<Ticket> {
+        self.drain_events();
+        let n = batch.len();
+        match self.pick_shard(n) {
+            Some(i) => {
+                self.next_ticket += 1;
+                let ticket = self.next_ticket;
+                self.send_to(i, ticket, batch)?;
+                Ok(ticket)
+            }
+            None => {
+                // a rolling swap can take every fitting shard out of
+                // service at once only on a 1-shard engine; park the
+                // batch and flush it when the shard rejoins
+                let fits = self
+                    .shards
+                    .iter()
+                    .any(|s| s.alive && n <= s.caps.max_batch);
+                if self.swap.is_some() && fits {
+                    self.next_ticket += 1;
+                    let ticket = self.next_ticket;
+                    self.in_flight
+                        .insert(ticket, InFlight { shard: QUEUED, images: n });
+                    self.queued.push_back((ticket, batch));
+                    return Ok(ticket);
+                }
+                Err(EngineError::NoShardFits {
+                    batch: n,
+                    max_batch: self.caps.max_batch,
+                }
+                .into())
+            }
+        }
+    }
+
     /// Dispatch parked batches now that a shard may have rejoined the
     /// pool. Tickets whose batch no longer fits any living shard fail
     /// instead of waiting forever.
     fn flush_queued(&mut self) {
-        while let Some((ticket, images)) = self.queued.pop_front() {
-            let n = images.len();
+        while let Some((ticket, batch)) = self.queued.pop_front() {
+            let n = batch.len();
             match self.pick_shard(n) {
                 Some(i) => {
-                    if let Err(e) = self.send_to(i, ticket, images) {
+                    if let Err(e) = self.send_to(i, ticket, batch) {
                         self.in_flight.remove(&ticket);
                         self.ready.push((ticket, Err(format!("{e:#}"))));
                     }
@@ -907,7 +952,7 @@ impl ShardedEngine {
                         .any(|s| s.alive && n <= s.caps.max_batch)
                     {
                         // a fitting shard is just out of service; keep waiting
-                        self.queued.push_front((ticket, images));
+                        self.queued.push_front((ticket, batch));
                         return;
                     }
                     self.in_flight.remove(&ticket);
@@ -966,6 +1011,19 @@ impl Engine for ShardedEngine {
         }
     }
 
+    fn infer_packed(
+        &mut self,
+        batch: &crate::nn::packed::PackedBatch,
+    ) -> crate::Result<InferenceResult> {
+        let ticket = self.submit_packed(batch.clone())?;
+        loop {
+            if let Some(res) = self.poll(ticket)? {
+                return Ok(res);
+            }
+            self.block_on_owner(ticket);
+        }
+    }
+
     fn max_batch(&self) -> usize {
         self.caps.max_batch
     }
@@ -1015,38 +1073,11 @@ impl Engine for ShardedEngine {
     }
 
     fn submit(&mut self, images: Vec<Vec<bool>>) -> crate::Result<Ticket> {
-        self.drain_events();
-        let n = images.len();
-        match self.pick_shard(n) {
-            Some(i) => {
-                self.next_ticket += 1;
-                let ticket = self.next_ticket;
-                self.send_to(i, ticket, images)?;
-                Ok(ticket)
-            }
-            None => {
-                // a rolling swap can take every fitting shard out of
-                // service at once only on a 1-shard engine; park the
-                // batch and flush it when the shard rejoins
-                let fits = self
-                    .shards
-                    .iter()
-                    .any(|s| s.alive && n <= s.caps.max_batch);
-                if self.swap.is_some() && fits {
-                    self.next_ticket += 1;
-                    let ticket = self.next_ticket;
-                    self.in_flight
-                        .insert(ticket, InFlight { shard: QUEUED, images: n });
-                    self.queued.push_back((ticket, images));
-                    return Ok(ticket);
-                }
-                Err(EngineError::NoShardFits {
-                    batch: n,
-                    max_batch: self.caps.max_batch,
-                }
-                .into())
-            }
-        }
+        self.submit_any(Batch::Bools(images))
+    }
+
+    fn submit_packed(&mut self, batch: crate::nn::packed::PackedBatch) -> crate::Result<Ticket> {
+        self.submit_any(Batch::Packed(batch))
     }
 
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
@@ -1155,7 +1186,7 @@ impl Engine for ShardedEngine {
                 .iter()
                 .filter(|s| s.alive && s.state == ShardState::Parked)
                 .count(),
-            queued_images: self.queued.iter().map(|(_, imgs)| imgs.len()).sum(),
+            queued_images: self.queued.iter().map(|(_, b)| b.len()).sum(),
             in_flight_images: self.shards.iter().map(|s| s.in_flight_images).sum(),
         }
     }
@@ -1444,6 +1475,29 @@ mod tests {
         assert!(tel.energy > 0.0);
         assert_eq!(e.shard_telemetry().len(), 3);
         assert!(e.shard_states().iter().all(|&s| s == ShardState::Serving));
+    }
+
+    #[test]
+    fn packed_submission_matches_scalar_dispatch() {
+        use crate::nn::packed::PackedBatch;
+        let l = layer(3);
+        let mut e = sharded(2, 32);
+        let imgs = images(11, 5);
+        let packed = PackedBatch::from_images(&imgs).expect("uniform widths");
+        let t = e.submit_packed(packed.clone()).unwrap();
+        let res = loop {
+            match e.poll(t).unwrap() {
+                Some(r) => break r,
+                None => e.block_on_owner(t),
+            }
+        };
+        let scalar = e.infer_batch(&imgs).unwrap();
+        assert_eq!(res.bits, scalar.bits, "packed dispatch parity");
+        assert_eq!(res.classes, scalar.classes);
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(res.bits[i], l.forward(img), "image {i}");
+            assert_eq!(res.classes[i], l.argmax(img), "image {i}");
+        }
     }
 
     #[test]

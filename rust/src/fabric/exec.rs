@@ -25,10 +25,11 @@
 
 use super::event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 use super::link::{LinkFabric, LinkTraffic};
-use super::node::{tile_step, vdd_for_theta, SubarrayNode, TileStep};
+use super::node::{tile_step_packed, vdd_for_theta, SubarrayNode, TileStep};
 use super::placement::{place_layers, FabricConfig, Placement};
 use super::reprogram::{simulate_reprogram, target_slice, ReprogramRun};
 use crate::engine::EngineError;
+use crate::nn::packed::{BitMatrix, BitVec};
 use crate::nn::BinaryLayer;
 use std::ops::Range;
 
@@ -114,6 +115,11 @@ pub struct FabricExecutor {
     group_width: Vec<usize>,
     /// Input pieces each tile waits for (per image).
     init_pieces: Vec<usize>,
+    /// Each placed tile's weights packed once at placement (index-aligned
+    /// with `placement.tiles`) and reused by every event, instead of
+    /// re-walking the tile's `Vec<Vec<bool>>` slice per step. Rebuilt on
+    /// `reprogram`, the only thing that mutates placed weights.
+    packed_tiles: Vec<BitMatrix>,
 }
 
 impl FabricExecutor {
@@ -152,6 +158,12 @@ impl FabricExecutor {
             })
             .collect();
 
+        let packed_tiles = placement
+            .tiles
+            .iter()
+            .map(|tile| BitMatrix::from_rows(&tile.weights))
+            .collect();
+
         Ok(Self {
             cfg,
             layers,
@@ -161,6 +173,7 @@ impl FabricExecutor {
             group_rows,
             group_width,
             init_pieces,
+            packed_tiles,
         })
     }
 
@@ -218,6 +231,12 @@ impl FabricExecutor {
         for tile in &mut self.placement.tiles {
             tile.weights = target_slice(tile, &target);
         }
+        self.packed_tiles = self
+            .placement
+            .tiles
+            .iter()
+            .map(|tile| BitMatrix::from_rows(&tile.weights))
+            .collect();
         self.v_dd = target
             .iter()
             .map(|l| vdd_for_theta(l.theta, &self.cfg.device))
@@ -290,15 +309,16 @@ impl FabricExecutor {
                     }
                     let t = &placement.tiles[tile];
                     // all input pieces arrived: run the tile's TMVM step
+                    // against the tile packed at placement time
                     let step = {
                         let x_full: &[bool] = if t.layer == 0 {
                             &images[image]
                         } else {
                             &outputs[image][t.layer - 1]
                         };
-                        tile_step(
-                            &t.weights,
-                            &x_full[t.col_range.clone()],
+                        tile_step_packed(
+                            &self.packed_tiles[tile],
+                            &BitVec::from_bools(&x_full[t.col_range.clone()]),
                             self.v_dd[t.layer],
                             &p,
                         )

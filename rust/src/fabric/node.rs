@@ -14,6 +14,7 @@
 use super::event::Time;
 use crate::array::EnergyLedger;
 use crate::device::DeviceParams;
+use crate::nn::packed::{BitMatrix, BitVec};
 
 /// The operating voltage realizing integer firing threshold `theta` —
 /// delegates to the shared [`DeviceParams::vdd_for_threshold`], the same
@@ -29,11 +30,9 @@ pub fn vdd_for_theta(theta: usize, p: &DeviceParams) -> f64 {
 /// word lines still leak `G_A`, exactly as in the cell-level engine.
 pub fn row_current(count: u32, active: u32, v_dd: f64, p: &DeviceParams) -> f64 {
     debug_assert!(count <= active);
-    if active == 0 {
-        return 0.0;
-    }
-    let g_sum = count as f64 * p.g_c + (active - count) as f64 * p.g_a;
-    p.g_c * v_dd * g_sum / (g_sum + p.g_c)
+    // the shared count-space formula — one definition keeps the fabric
+    // and the cell-level packed path bit-identical in f64
+    crate::array::ideal_row_current(count, active, v_dd, p)
 }
 
 /// Result of one tile step: partial dot-product counts for the tile's
@@ -56,6 +55,28 @@ pub fn tile_step(weights: &[Vec<bool>], x: &[bool], v_dd: f64, p: &DeviceParams)
     for row in weights {
         debug_assert_eq!(row.len(), x.len(), "input slice width");
         let c = row.iter().zip(x).filter(|(&w, &xi)| w && xi).count() as u32;
+        current_sum += row_current(c, active, v_dd, p);
+        counts.push(c);
+    }
+    TileStep {
+        counts,
+        active,
+        current_sum,
+    }
+}
+
+/// [`tile_step`] over pre-packed tile weights: counts come from
+/// `popcount(row & x)` per lane, currents accumulate in the same row
+/// order through the same [`row_current`], so the result — `counts`,
+/// `active` and the f64 `current_sum` — is bit-identical to the scalar
+/// form (the executor's determinism test depends on that).
+pub fn tile_step_packed(weights: &BitMatrix, x: &BitVec, v_dd: f64, p: &DeviceParams) -> TileStep {
+    debug_assert_eq!(weights.n_cols(), x.len(), "input slice width");
+    let active = x.count_ones();
+    let mut counts = Vec::with_capacity(weights.n_rows());
+    let mut current_sum = 0.0;
+    for row in 0..weights.n_rows() {
+        let c = weights.row_and_count(row, x);
         current_sum += row_current(c, active, v_dd, p);
         counts.push(c);
     }
@@ -183,6 +204,25 @@ mod tests {
         // the all-zero row still leaks through its amorphous cells
         let leak = row_current(0, 3, vdd_for_theta(2, &p), &p);
         assert!(leak > 0.0 && leak < p.i_set);
+    }
+
+    #[test]
+    fn packed_tile_step_is_bit_identical_to_scalar() {
+        let mut rng = Pcg32::seeded(97);
+        let p = DeviceParams::default();
+        for &(rows, cols) in &[(3usize, 4usize), (12, 64), (7, 65), (5, 130)] {
+            let w: Vec<Vec<bool>> = (0..rows)
+                .map(|_| (0..cols).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+            let x: Vec<bool> = (0..cols).map(|_| rng.bernoulli(0.4)).collect();
+            let v = vdd_for_theta(2, &p);
+            let a = tile_step(&w, &x, v, &p);
+            let b = tile_step_packed(&BitMatrix::from_rows(&w), &BitVec::from_bools(&x), v, &p);
+            assert_eq!(a.counts, b.counts, "{rows}x{cols}");
+            assert_eq!(a.active, b.active);
+            // same formula, same accumulation order — exact, not approximate
+            assert_eq!(a.current_sum.to_bits(), b.current_sum.to_bits());
+        }
     }
 
     #[test]

@@ -125,7 +125,16 @@
 //!   [`fabric::FabricExecutor::reprogram`] rewrites the placed weights in
 //!   place (program traffic over the same spine and write drivers).
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
-//!   synthetic 11×11 digit workload, and a conv2d-as-TMVM lowering.
+//!   synthetic 11×11 digit workload, a conv2d-as-TMVM lowering, and
+//!   [`nn::packed`] — the bit-packed hot-path currency: row-major `u64`
+//!   lanes ([`nn::BitMatrix`]/[`nn::BitVec`], tail bits always masked),
+//!   `XOR/AND + count_ones` forward kernels
+//!   ([`nn::PackedLayer`]/[`nn::PackedMlp`]) and the `Arc`-shared
+//!   [`nn::PackedBatch`] the batching/dispatch layers move instead of
+//!   cloning `Vec<Vec<bool>>`. The scalar kernels stay as the reference
+//!   oracle, pinned bit-exact by `tests/prop_packed.rs`; the subarray's
+//!   ideal-mode TMVM and the fabric's tile step take the packed popcount
+//!   fast path, while parasitic mode keeps the per-cell electrical walk.
 //! * [`runtime`] — PJRT client wrapper (via the `xla` crate) that loads the
 //!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and serves as
 //!   the functional golden model on the rust side.

@@ -31,4 +31,7 @@ pub mod wire;
 
 pub use host::{serve_factory, Listener};
 pub use remote::{remote_factory, RemoteAddr, RemoteBackend};
-pub use wire::{read_frame, write_frame, Msg, WireError, MAGIC, MAX_FRAME, PROTOCOL_VERSION};
+pub use wire::{
+    read_frame, write_frame, Msg, WireError, MAGIC, MAX_FRAME, MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
+};

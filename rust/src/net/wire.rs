@@ -17,14 +17,27 @@
 //! lengths, version mismatches, unknown tags or inconsistent payloads.
 //! Bit vectors (images, weight rows) travel bit-packed (LSB-first), and
 //! floats travel as IEEE-754 bits so a roundtrip is bit-exact.
+//!
+//! **Version 2** adds [`TAG_INFER_PACKED`]: a uniform-width infer batch
+//! ships as one contiguous LSB-first bit buffer (`id | n_images | width |
+//! bits`) instead of per-image `len + bytes` rows — no per-image length
+//! words, no per-image byte padding, ~8× smaller for small images.
+//! Decoders accept [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`];
+//! the packed tag inside a v1 frame is a typed [`WireError::Malformed`]
+//! (v1 never defined it). Ragged, empty and zero-width batches keep the
+//! legacy [`TAG_INFER`] encoding — engines own the shape policy.
 
 use std::io::Read;
 
 use crate::engine::{BackendKind, Capabilities, InferenceResult, SwapReport, Telemetry};
 use crate::nn::BinaryLayer;
 
-/// Protocol version carried in every frame.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// Protocol version carried in every frame we encode.
+pub const PROTOCOL_VERSION: u8 = 2;
+
+/// Oldest protocol version this decoder still accepts (v1 frames differ
+/// only by not carrying [`TAG_INFER_PACKED`]).
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
 
 /// Hard cap on one frame's body (version + tag + payload) \[bytes\].
 pub const MAX_FRAME: u64 = 16 * 1024 * 1024;
@@ -117,6 +130,8 @@ const TAG_TELEMETRY_OK: u8 = 8;
 const TAG_ERR: u8 = 9;
 const TAG_SHUTDOWN: u8 = 10;
 const TAG_SHUTDOWN_OK: u8 = 11;
+/// v2: a uniform-width [`Msg::Infer`] batch as one contiguous bit buffer.
+pub const TAG_INFER_PACKED: u8 = 12;
 
 // ------------------------------------------------------------- encoding
 
@@ -164,6 +179,40 @@ fn put_bool_rows(out: &mut Vec<u8>, rows: &[Vec<bool>]) {
     for row in rows {
         put_usize(out, row.len());
         put_bits(out, row);
+    }
+}
+
+/// Width shared by every image when the batch can take the packed
+/// encoding: non-empty, rectangular, width ≥ 1. Anything else stays on
+/// the legacy per-row encoding.
+fn uniform_width(images: &[Vec<bool>]) -> Option<usize> {
+    let w = images.first()?.len();
+    if w == 0 || images.iter().any(|img| img.len() != w) {
+        return None;
+    }
+    Some(w)
+}
+
+/// Bit-pack every image contiguously LSB-first with **no per-image
+/// padding** — the [`TAG_INFER_PACKED`] payload body ([`put_bits`] pads
+/// each call to a byte; this must not).
+fn put_packed_bits(out: &mut Vec<u8>, images: &[Vec<bool>]) {
+    let mut byte = 0u8;
+    let mut n = 0usize;
+    for img in images {
+        for &b in img {
+            if b {
+                byte |= 1 << (n % 8);
+            }
+            n += 1;
+            if n % 8 == 0 {
+                out.push(byte);
+                byte = 0;
+            }
+        }
+    }
+    if n % 8 != 0 {
+        out.push(byte);
     }
 }
 
@@ -511,10 +560,21 @@ impl Msg {
                 put_caps(&mut out, caps);
                 put_telemetry(&mut out, telemetry);
             }
-            Self::Infer { id, images } => {
-                put_u64(&mut out, *id);
-                put_bool_rows(&mut out, images);
-            }
+            Self::Infer { id, images } => match uniform_width(images) {
+                // hot path: one contiguous bit buffer, no per-image
+                // length words or byte padding (v2 encoding)
+                Some(w) => {
+                    out[5] = TAG_INFER_PACKED;
+                    put_u64(&mut out, *id);
+                    put_usize(&mut out, images.len());
+                    put_usize(&mut out, w);
+                    put_packed_bits(&mut out, images);
+                }
+                None => {
+                    put_u64(&mut out, *id);
+                    put_bool_rows(&mut out, images);
+                }
+            },
             Self::InferOk { id, result, telemetry } => {
                 put_u64(&mut out, *id);
                 put_result(&mut out, result);
@@ -549,9 +609,10 @@ impl Msg {
                 got: body.len(),
             });
         }
-        if body[0] != PROTOCOL_VERSION {
+        let version = body[0];
+        if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
             return Err(WireError::Version {
-                got: body[0],
+                got: version,
                 want: PROTOCOL_VERSION,
             });
         }
@@ -567,6 +628,31 @@ impl Msg {
                 id: r.u64()?,
                 images: r.bool_rows()?,
             },
+            TAG_INFER_PACKED => {
+                if version < 2 {
+                    // v1 never defined this tag — a v1 frame carrying it
+                    // is corrupt, not merely old
+                    return Err(WireError::Malformed(
+                        "packed infer frame under protocol v1".into(),
+                    ));
+                }
+                let id = r.u64()?;
+                let n = r.usize_()?;
+                let width = r.usize_()?;
+                if width == 0 {
+                    return Err(WireError::Malformed(
+                        "packed infer frame with zero image width".into(),
+                    ));
+                }
+                let total = n.checked_mul(width).ok_or_else(|| {
+                    WireError::Malformed(format!("{n} images x {width} bits overflows"))
+                })?;
+                // Reader::bits bounds-checks the byte count before any
+                // allocation, so a forged n cannot balloon memory
+                let bits = r.bits(total)?;
+                let images = bits.chunks(width).map(<[bool]>::to_vec).collect();
+                Msg::Infer { id, images }
+            }
             TAG_INFER_OK => Msg::InferOk {
                 id: r.u64()?,
                 result: r.result()?,
@@ -788,6 +874,126 @@ mod tests {
         let mut body = vec![PROTOCOL_VERSION, TAG_INFER];
         put_u64(&mut body, 1);
         put_u64(&mut body, u64::MAX);
+        assert!(matches!(
+            Msg::decode_body(&body).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn uniform_infer_takes_the_packed_tag_and_shrinks_the_frame() {
+        let images: Vec<Vec<bool>> = (0..64)
+            .map(|i| (0..25).map(|j| (i + j) % 3 == 0).collect())
+            .collect();
+        let msg = Msg::Infer { id: 9, images };
+        let frame = msg.to_frame().unwrap();
+        assert_eq!(frame[5], TAG_INFER_PACKED, "uniform batch packs");
+        roundtrip(&msg);
+        // header(6) + id(8) + n(8) + width(8) + ceil(64*25/8) bits
+        assert_eq!(frame.len(), 6 + 24 + (64 * 25usize).div_ceil(8));
+        // the legacy encoding spends 8 length bytes + byte-padded bits
+        // per image; the packed frame must be several times smaller
+        let legacy = 6 + 8 + 8 + 64 * (8 + 25usize.div_ceil(8));
+        assert!(
+            frame.len() * 3 < legacy,
+            "packed {} vs legacy {legacy}",
+            frame.len()
+        );
+    }
+
+    #[test]
+    fn ragged_empty_and_zero_width_batches_keep_the_legacy_tag() {
+        let cases = [
+            vec![vec![true, false, true], vec![false; 9]], // ragged
+            Vec::new(),                                    // empty batch
+            vec![Vec::new(), Vec::new()],                  // zero-width
+        ];
+        for images in cases {
+            let msg = Msg::Infer { id: 3, images };
+            let frame = msg.to_frame().unwrap();
+            assert_eq!(frame[5], TAG_INFER, "{msg:?}");
+            roundtrip(&msg);
+        }
+    }
+
+    #[test]
+    fn packed_frames_truncate_cleanly_at_every_cut() {
+        let msg = Msg::Infer {
+            id: 1,
+            images: vec![vec![true; 13]; 5],
+        };
+        let frame = msg.to_frame().unwrap();
+        assert_eq!(frame[5], TAG_INFER_PACKED);
+        for cut in 1..frame.len() {
+            let err = read_frame(&mut Cursor::new(frame[..cut].to_vec())).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn v1_frames_still_decode() {
+        assert_eq!(
+            Msg::decode_body(&[MIN_PROTOCOL_VERSION, TAG_TELEMETRY]).unwrap(),
+            Msg::Telemetry
+        );
+        // a v1 legacy-encoded infer body decodes identically
+        let mut body = vec![MIN_PROTOCOL_VERSION, TAG_INFER];
+        put_u64(&mut body, 5);
+        put_bool_rows(&mut body, &[vec![true, false, true]]);
+        assert_eq!(
+            Msg::decode_body(&body).unwrap(),
+            Msg::Infer {
+                id: 5,
+                images: vec![vec![true, false, true]],
+            }
+        );
+    }
+
+    #[test]
+    fn packed_tag_under_v1_is_typed_malformed() {
+        let frame = Msg::Infer {
+            id: 2,
+            images: vec![vec![true; 8]; 2],
+        }
+        .to_frame()
+        .unwrap();
+        assert_eq!(frame[5], TAG_INFER_PACKED);
+        let mut body = frame[4..].to_vec();
+        body[0] = MIN_PROTOCOL_VERSION;
+        assert!(matches!(
+            Msg::decode_body(&body).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn forged_packed_counts_cannot_force_allocation() {
+        // n * width overflows usize
+        let mut body = vec![PROTOCOL_VERSION, TAG_INFER_PACKED];
+        put_u64(&mut body, 1);
+        put_u64(&mut body, u64::MAX);
+        put_u64(&mut body, u64::MAX);
+        assert!(matches!(
+            Msg::decode_body(&body).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+        // a forged huge n with width 1 dies on the byte bounds check
+        let mut body = vec![PROTOCOL_VERSION, TAG_INFER_PACKED];
+        put_u64(&mut body, 1);
+        put_u64(&mut body, 1 << 40);
+        put_u64(&mut body, 1);
+        assert!(matches!(
+            Msg::decode_body(&body).unwrap_err(),
+            WireError::Truncated { .. }
+        ));
+        // zero width is typed malformed, not a divide-by-zero
+        let mut body = vec![PROTOCOL_VERSION, TAG_INFER_PACKED];
+        put_u64(&mut body, 1);
+        put_u64(&mut body, 4);
+        put_u64(&mut body, 0);
         assert!(matches!(
             Msg::decode_body(&body).unwrap_err(),
             WireError::Malformed(_)

@@ -138,6 +138,22 @@ impl BinaryLayer {
             energy: sa.ledger.energy - e0,
         }
     }
+
+    /// [`BinaryLayer::run_batch`] over an `Arc`-shared packed batch. The
+    /// images are unpacked once here to program the top level (cell
+    /// programming is inherently per-bit); the per-neuron TMVM steps then
+    /// run on the subarray's packed shadow, so the compute stays in
+    /// popcount space end to end.
+    pub fn run_batch_packed(
+        &self,
+        sa: &mut Subarray,
+        batch: &crate::nn::packed::PackedBatch,
+        mode: TmvmMode,
+    ) -> BatchRun {
+        assert_eq!(batch.width(), self.n_in(), "image width");
+        let images = batch.to_images();
+        self.run_batch(sa, &images, mode)
+    }
 }
 
 #[cfg(test)]

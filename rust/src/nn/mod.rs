@@ -5,7 +5,9 @@ pub mod dataset;
 pub mod layer;
 pub mod mlp;
 pub mod conv;
+pub mod packed;
 
 pub use dataset::{Dataset, DigitGen, IMAGE_PIXELS, IMAGE_SIDE, N_CLASSES};
 pub use layer::{argmax_counts, BinaryLayer};
 pub use mlp::{BinaryMlp, MlpOnSubarrays};
+pub use packed::{BitMatrix, BitVec, PackedBatch, PackedLayer, PackedMlp};

@@ -1,0 +1,509 @@
+//! Bit-packed hot-path representation for binary networks.
+//!
+//! The paper's TMVM is binary end-to-end — weights, inputs and thresholded
+//! outputs are single bits — so the hot-path currency is `u64` lanes, not
+//! `Vec<bool>`: a dot-product count is `count_ones(weights & inputs)`
+//! summed per lane (word-parallel popcount, 64 products per instruction),
+//! the same layout XNOR/binary inference engines use.
+//!
+//! Two invariants every container here maintains:
+//!
+//! * **row-major lanes** — a row of `n` bits occupies `⌈n/64⌉` words, bit
+//!   `i` lives in word `i / 64` at position `i % 64` (LSB-first);
+//! * **tail masking** — bits past the logical width of the last word are
+//!   always zero, so popcount over whole words never over-counts and two
+//!   equal bit patterns are equal as word slices.
+//!
+//! The scalar `Vec<bool>` kernels ([`BinaryLayer::counts`],
+//! [`BinaryLayer::forward`], `Subarray::tmvm_rows_scalar`,
+//! `fabric::node::tile_step`) remain the reference oracle —
+//! `tests/prop_packed.rs` pins bit-exactness between the two forms,
+//! including widths that are not multiples of 64.
+//!
+//! [`BinaryLayer::counts`]: super::BinaryLayer::counts
+//! [`BinaryLayer::forward`]: super::BinaryLayer::forward
+
+use super::layer::{argmax_counts, BinaryLayer};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Words needed to hold `n_bits` bits.
+#[inline]
+pub fn words_for(n_bits: usize) -> usize {
+    n_bits.div_ceil(64)
+}
+
+/// Mask selecting the valid bits of the *last* word of an `n_bits`-wide
+/// row (`!0` when the width is lane-aligned).
+#[inline]
+pub fn tail_mask(n_bits: usize) -> u64 {
+    match n_bits % 64 {
+        0 => !0u64,
+        r => (1u64 << r) - 1,
+    }
+}
+
+/// Popcount of the lane-wise AND of two equally-wide bit rows — the
+/// packed dot-product count. Both slices must respect the tail-mask
+/// invariant for the count to be exact.
+#[inline]
+pub fn and_count(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "lane count mismatch");
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones()).sum()
+}
+
+/// A packed bit vector: `n_bits` logical bits in `⌈n_bits/64⌉` words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    n_bits: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zero vector of `n_bits` bits.
+    pub fn zeros(n_bits: usize) -> Self {
+        Self {
+            n_bits,
+            words: vec![0; words_for(n_bits)],
+        }
+    }
+
+    /// Pack a `&[bool]` row.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_bits == 0
+    }
+
+    /// The backing lanes (tail bits always zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.n_bits);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    pub fn set(&mut self, i: usize, bit: bool) {
+        assert!(i < self.n_bits);
+        let (w, m) = (i / 64, 1u64 << (i % 64));
+        if bit {
+            self.words[w] |= m;
+        } else {
+            self.words[w] &= !m;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Unpack to the scalar form.
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.n_bits).map(|i| self.get(i)).collect()
+    }
+}
+
+/// A packed row-major bit matrix: `n_rows` rows of `n_cols` bits, each
+/// row padded to whole words with a masked tail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-zero matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        let words_per_row = words_for(n_cols);
+        Self {
+            n_rows,
+            n_cols,
+            words_per_row,
+            words: vec![0; n_rows * words_per_row],
+        }
+    }
+
+    /// Pack a rectangular `rows[r][c]` matrix (all rows equally wide).
+    pub fn from_rows(rows: &[Vec<bool>]) -> Self {
+        let n_cols = rows.first().map_or(0, Vec::len);
+        let mut m = Self::zeros(rows.len(), n_cols);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), n_cols, "row {r} width");
+            for (c, &b) in row.iter().enumerate() {
+                if b {
+                    m.words[r * m.words_per_row + c / 64] |= 1u64 << (c % 64);
+                }
+            }
+        }
+        m
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// One row's lanes (tail bits always zero).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        debug_assert!(r < self.n_rows);
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        assert!(r < self.n_rows && c < self.n_cols);
+        self.words[r * self.words_per_row + c / 64] & (1u64 << (c % 64)) != 0
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, bit: bool) {
+        assert!(r < self.n_rows && c < self.n_cols);
+        let (w, m) = (r * self.words_per_row + c / 64, 1u64 << (c % 64));
+        if bit {
+            self.words[w] |= m;
+        } else {
+            self.words[w] &= !m;
+        }
+    }
+
+    /// Packed dot-product count of row `r` against `x`
+    /// (`popcount(row & x)` per lane).
+    #[inline]
+    pub fn row_and_count(&self, r: usize, x: &BitVec) -> u32 {
+        debug_assert_eq!(x.len(), self.n_cols, "input width");
+        and_count(self.row(r), x.words())
+    }
+
+    /// Set bits in row `r`.
+    pub fn row_count_ones(&self, r: usize) -> u32 {
+        self.row(r).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Unpack one row.
+    pub fn row_bools(&self, r: usize) -> Vec<bool> {
+        (0..self.n_cols).map(|c| self.get(r, c)).collect()
+    }
+
+    /// Unpack to the scalar form.
+    pub fn to_rows(&self) -> Vec<Vec<bool>> {
+        (0..self.n_rows).map(|r| self.row_bools(r)).collect()
+    }
+}
+
+/// Packed form of a [`BinaryLayer`]: weights as a [`BitMatrix`], counts
+/// as per-lane popcounts. Bit-exact with the scalar layer by
+/// construction (`tests/prop_packed.rs` pins it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedLayer {
+    /// `weights[out][in]` packed row-major.
+    pub weights: BitMatrix,
+    /// Shared firing threshold θ (see [`BinaryLayer::theta`]).
+    pub theta: usize,
+}
+
+impl PackedLayer {
+    pub fn new(weights: BitMatrix, theta: usize) -> Self {
+        assert!(weights.n_rows() >= 1 && theta >= 1);
+        Self { weights, theta }
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.weights.n_rows()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.weights.n_cols()
+    }
+
+    /// Packed dot-product counts — the popcount kernel.
+    pub fn counts(&self, x: &BitVec) -> Vec<u32> {
+        assert_eq!(x.len(), self.n_in(), "input width");
+        self.counts_words(x.words())
+    }
+
+    /// [`PackedLayer::counts`] straight over borrowed lanes (e.g. one
+    /// [`PackedBatch`] row) — no `BitVec` materialization.
+    pub fn counts_words(&self, words: &[u64]) -> Vec<u32> {
+        debug_assert_eq!(words.len(), self.weights.words_per_row(), "lane count");
+        (0..self.n_out())
+            .map(|r| and_count(self.weights.row(r), words))
+            .collect()
+    }
+
+    /// [`PackedLayer::argmax`] over borrowed lanes.
+    pub fn argmax_words(&self, words: &[u64]) -> usize {
+        argmax_counts(&self.counts_words(words))
+    }
+
+    /// Thresholded forward pass, staying packed for layer chaining.
+    pub fn forward(&self, x: &BitVec) -> BitVec {
+        let mut out = BitVec::zeros(self.n_out());
+        for (r, c) in self.counts(x).into_iter().enumerate() {
+            if c as usize >= self.theta {
+                out.set(r, true);
+            }
+        }
+        out
+    }
+
+    /// Packed classification — same first-max-wins tie-break as the
+    /// scalar stack ([`argmax_counts`]).
+    pub fn argmax(&self, x: &BitVec) -> usize {
+        argmax_counts(&self.counts(x))
+    }
+}
+
+impl From<&BinaryLayer> for PackedLayer {
+    fn from(l: &BinaryLayer) -> Self {
+        Self::new(BitMatrix::from_rows(&l.weights), l.theta)
+    }
+}
+
+/// Packed form of a layer stack (the MLP runner's hot path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedMlp {
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedMlp {
+    pub fn from_layers(layers: &[BinaryLayer]) -> Self {
+        assert!(!layers.is_empty());
+        Self {
+            layers: layers.iter().map(PackedLayer::from).collect(),
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].n_out()
+    }
+
+    /// Chained packed forward pass.
+    pub fn forward(&self, x: &BitVec) -> BitVec {
+        let mut v = self.layers[0].forward(x);
+        for l in &self.layers[1..] {
+            v = l.forward(&v);
+        }
+        v
+    }
+
+    /// Final-layer counts after chaining the hidden layers.
+    pub fn final_counts(&self, x: &BitVec) -> Vec<u32> {
+        let mut v = x.clone();
+        for l in &self.layers[..self.layers.len() - 1] {
+            v = l.forward(&v);
+        }
+        self.layers[self.layers.len() - 1].counts(&v)
+    }
+}
+
+/// An `Arc`-shared packed batch of equally-wide images, with a per-ticket
+/// index range — the zero-copy dispatch currency: submit → dispatch →
+/// complete moves `(Arc, Range)` pairs, never cloned `Vec<Vec<bool>>`.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    data: Arc<BitMatrix>,
+    range: Range<usize>,
+}
+
+impl PackedBatch {
+    /// Pack a uniform-width batch; `None` when the rows are ragged (the
+    /// scalar path keeps owning shape policy for those).
+    pub fn from_images(images: &[Vec<bool>]) -> Option<Self> {
+        let refs: Vec<&[bool]> = images.iter().map(Vec::as_slice).collect();
+        Self::from_rows(&refs)
+    }
+
+    /// Pack a uniform-width batch of borrowed rows.
+    pub fn from_rows(rows: &[&[bool]]) -> Option<Self> {
+        let width = rows.first().map_or(0, |r| r.len());
+        if rows.iter().any(|r| r.len() != width) {
+            return None;
+        }
+        let mut m = BitMatrix::zeros(rows.len(), width);
+        for (r, row) in rows.iter().enumerate() {
+            for (c, &b) in row.iter().enumerate() {
+                if b {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        Some(Self::from_matrix(m))
+    }
+
+    /// Wrap an already-packed matrix (one image per row).
+    pub fn from_matrix(m: BitMatrix) -> Self {
+        let n = m.n_rows();
+        Self {
+            data: Arc::new(m),
+            range: 0..n,
+        }
+    }
+
+    /// Images in this view.
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    /// Bits per image.
+    pub fn width(&self) -> usize {
+        self.data.n_cols()
+    }
+
+    /// A sub-range view sharing the same buffer (`Arc` clone — no bit is
+    /// copied). `range` is relative to this view.
+    pub fn slice(&self, range: Range<usize>) -> Self {
+        assert!(range.end <= self.len(), "slice out of range");
+        Self {
+            data: Arc::clone(&self.data),
+            range: self.range.start + range.start..self.range.start + range.end,
+        }
+    }
+
+    /// Lanes of image `i` (relative to this view).
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        assert!(i < self.len());
+        self.data.row(self.range.start + i)
+    }
+
+    /// Unpack image `i`.
+    pub fn image_bools(&self, i: usize) -> Vec<bool> {
+        assert!(i < self.len());
+        self.data.row_bools(self.range.start + i)
+    }
+
+    /// Unpack the whole view to the scalar form (the compatibility
+    /// fallback for engines without a packed kernel).
+    pub fn to_images(&self) -> Vec<Vec<bool>> {
+        (0..self.len()).map(|i| self.image_bools(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_bools(rng: &mut Pcg32, n: usize, p: f64) -> Vec<bool> {
+        (0..n).map(|_| rng.bernoulli(p)).collect()
+    }
+
+    #[test]
+    fn bitvec_roundtrips_across_lane_boundaries() {
+        let mut rng = Pcg32::seeded(11);
+        for n in [0usize, 1, 63, 64, 65, 127, 128, 130, 121] {
+            let bits = random_bools(&mut rng, n, 0.5);
+            let v = BitVec::from_bools(&bits);
+            assert_eq!(v.len(), n);
+            assert_eq!(v.to_bools(), bits, "width {n}");
+            assert_eq!(v.count_ones() as usize, bits.iter().filter(|&&b| b).count());
+        }
+    }
+
+    #[test]
+    fn tail_bits_stay_masked() {
+        let mut v = BitVec::from_bools(&[true; 70]);
+        v.set(69, false);
+        v.set(69, true);
+        let tail = v.words()[1];
+        assert_eq!(tail & !tail_mask(70), 0, "tail bits must stay zero");
+        let m = BitMatrix::from_rows(&vec![vec![true; 70]; 3]);
+        for r in 0..3 {
+            assert_eq!(m.row(r)[1] & !tail_mask(70), 0);
+        }
+    }
+
+    #[test]
+    fn matrix_get_set_roundtrip() {
+        let mut m = BitMatrix::zeros(4, 67);
+        m.set(2, 66, true);
+        m.set(0, 0, true);
+        assert!(m.get(2, 66) && m.get(0, 0) && !m.get(1, 33));
+        m.set(2, 66, false);
+        assert!(!m.get(2, 66));
+        assert_eq!(m.row_count_ones(0), 1);
+    }
+
+    #[test]
+    fn packed_layer_matches_scalar_layer() {
+        let mut rng = Pcg32::seeded(12);
+        let rows: Vec<Vec<bool>> = (0..7).map(|_| random_bools(&mut rng, 100, 0.5)).collect();
+        let layer = BinaryLayer::new(rows, 3);
+        let packed = PackedLayer::from(&layer);
+        for _ in 0..20 {
+            let x = random_bools(&mut rng, 100, 0.4);
+            let px = BitVec::from_bools(&x);
+            assert_eq!(packed.counts(&px), layer.counts(&x));
+            assert_eq!(packed.forward(&px).to_bools(), layer.forward(&x));
+            assert_eq!(packed.argmax(&px), layer.argmax(&x));
+        }
+    }
+
+    #[test]
+    fn packed_mlp_chains_like_scalar_layers() {
+        let mut rng = Pcg32::seeded(13);
+        let hidden: Vec<Vec<bool>> = (0..9).map(|_| random_bools(&mut rng, 20, 0.5)).collect();
+        let out: Vec<Vec<bool>> = (0..5).map(|_| random_bools(&mut rng, 9, 0.5)).collect();
+        let layers = vec![BinaryLayer::new(hidden, 2), BinaryLayer::new(out, 1)];
+        let mlp = PackedMlp::from_layers(&layers);
+        for _ in 0..10 {
+            let x = random_bools(&mut rng, 20, 0.5);
+            let mut want = x.clone();
+            for l in &layers {
+                want = l.forward(&want);
+            }
+            assert_eq!(mlp.forward(&BitVec::from_bools(&x)).to_bools(), want);
+            let want_counts = layers[1].counts(&layers[0].forward(&x));
+            assert_eq!(mlp.final_counts(&BitVec::from_bools(&x)), want_counts);
+        }
+    }
+
+    #[test]
+    fn packed_batch_is_a_shared_view() {
+        let images: Vec<Vec<bool>> = (0..6).map(|i| vec![i % 2 == 0; 10]).collect();
+        let batch = PackedBatch::from_images(&images).expect("uniform");
+        assert_eq!((batch.len(), batch.width()), (6, 10));
+        assert_eq!(batch.to_images(), images);
+        let half = batch.slice(2..5);
+        assert_eq!(half.len(), 3);
+        assert_eq!(half.image_bools(0), images[2]);
+        // the slice shares the buffer — no bits were copied
+        assert!(Arc::ptr_eq(&batch.data, &half.data));
+    }
+
+    #[test]
+    fn ragged_batches_stay_scalar() {
+        let ragged = vec![vec![true; 4], vec![false; 5]];
+        assert!(PackedBatch::from_images(&ragged).is_none());
+    }
+}

@@ -8,7 +8,10 @@
 use xpoint_imc::engine::{
     BackendKind, Capabilities, InferenceResult, SwapReport, Telemetry,
 };
-use xpoint_imc::net::{read_frame, Msg, WireError, MAGIC, MAX_FRAME, PROTOCOL_VERSION};
+use xpoint_imc::net::wire::TAG_INFER_PACKED;
+use xpoint_imc::net::{
+    read_frame, Msg, WireError, MAGIC, MAX_FRAME, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION,
+};
 use xpoint_imc::nn::BinaryLayer;
 use xpoint_imc::testing::{forall, Config};
 use xpoint_imc::util::Pcg32;
@@ -70,6 +73,14 @@ fn arbitrary_images(rng: &mut Pcg32) -> Vec<Vec<bool>> {
     (0..rng.range(0, 6))
         .map(|_| arbitrary_bits(rng, rng.range(0, 40)))
         .collect()
+}
+
+fn arbitrary_uniform_images(rng: &mut Pcg32) -> Vec<Vec<bool>> {
+    // rectangular with width >= 1: the shape the v2 packed infer
+    // encoding applies to (widths straddle the u64-lane and byte
+    // boundaries the packers must mask correctly)
+    let w = rng.range(1, 80);
+    (0..rng.range(1, 8)).map(|_| arbitrary_bits(rng, w)).collect()
 }
 
 fn arbitrary_result(rng: &mut Pcg32) -> InferenceResult {
@@ -158,6 +169,62 @@ fn every_message_roundtrips_bit_exactly() {
                 Ok(())
             } else {
                 Err(format!("{} changed across the wire", msg.name()))
+            }
+        },
+    );
+}
+
+#[test]
+fn uniform_batches_roundtrip_through_the_packed_encoding() {
+    forall(
+        Config::default().cases(300),
+        "wire packed roundtrip",
+        |rng: &mut Pcg32| {
+            let images = arbitrary_uniform_images(rng);
+            let (n, w) = (images.len(), images[0].len());
+            let msg = Msg::Infer {
+                id: rng.next_u64(),
+                images,
+            };
+            let frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            if frame[5] != TAG_INFER_PACKED {
+                return Err(format!("uniform {n}x{w} batch took tag {}", frame[5]));
+            }
+            // header + id + n + width + the bits themselves, nothing more
+            let want = 6 + 24 + (n * w).div_ceil(8);
+            if frame.len() != want {
+                return Err(format!(
+                    "packed frame is {} bytes for {n}x{w} bits (want {want})",
+                    frame.len()
+                ));
+            }
+            let decoded = read_frame(&mut &frame[..])
+                .map_err(|e| format!("decode: {e}"))?
+                .ok_or_else(|| "clean EOF on a full frame".to_string())?;
+            if decoded == msg {
+                Ok(())
+            } else {
+                Err(format!("packed {n}x{w} infer changed across the wire"))
+            }
+        },
+    );
+}
+
+#[test]
+fn packed_frames_truncate_to_typed_errors() {
+    forall(
+        Config::default().cases(200),
+        "wire packed truncation",
+        |rng: &mut Pcg32| {
+            let msg = Msg::Infer {
+                id: rng.next_u64(),
+                images: arbitrary_uniform_images(rng),
+            };
+            let frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
+            let cut = rng.range(1, frame.len()); // strictly inside the frame
+            match read_frame(&mut &frame[..cut]) {
+                Err(WireError::Truncated { .. }) => Ok(()),
+                other => Err(format!("cut {cut}/{}: {other:?}", frame.len())),
             }
         },
     );
@@ -266,7 +333,9 @@ fn version_skew_is_reported_as_version_mismatch() {
             let mut frame = msg.to_frame().map_err(|e| format!("encode: {e}"))?;
             let bogus = loop {
                 let v = rng.next_u32() as u8;
-                if v != PROTOCOL_VERSION {
+                // both accepted versions must be excluded: v1 frames
+                // still decode, they are not version skew
+                if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&v) {
                     break v;
                 }
             };

@@ -1,0 +1,320 @@
+//! Property tests pinning the packed hot path to the scalar reference
+//! oracle: every packed kernel (`BitVec`/`BitMatrix` plumbing, the
+//! `PackedLayer`/`PackedMlp` forward passes, the fabric tile step and the
+//! subarray's ideal-mode TMVM fast path) must be bit-exact with the
+//! per-cell scalar walk it replaced, for arbitrary shapes — including
+//! widths that are not multiples of 64 and all-zero / all-one tail lanes.
+
+use xpoint_imc::analysis::ArrayDesign;
+use xpoint_imc::array::{Level, Subarray, TmvmMode};
+use xpoint_imc::device::DeviceParams;
+use xpoint_imc::fabric::{tile_step, tile_step_packed, vdd_for_theta};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::packed::{tail_mask, words_for};
+use xpoint_imc::nn::{BinaryLayer, BitMatrix, BitVec, PackedBatch, PackedLayer, PackedMlp};
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+/// Widths biased toward the u64 lane boundary: exact multiples of 64 and
+/// their ±1 neighbours show up often, so the tail-lane masking is
+/// exercised at every alignment.
+fn arbitrary_width(rng: &mut Pcg32) -> usize {
+    if rng.bernoulli(0.35) {
+        *rng.choose(&[1, 2, 63, 64, 65, 127, 128, 129])
+    } else {
+        rng.range(1, 200)
+    }
+}
+
+/// Bit rows with densities including the 0.0 / 1.0 extremes, so tail
+/// lanes come out all-zero and all-one, not just mixed.
+fn arbitrary_bits(rng: &mut Pcg32, n: usize) -> Vec<bool> {
+    let p = *rng.choose(&[0.0, 0.15, 0.5, 0.85, 1.0]);
+    (0..n).map(|_| rng.bernoulli(p)).collect()
+}
+
+fn tail_is_masked(words: &[u64], n_bits: usize) -> bool {
+    match words.last() {
+        Some(&w) => w & !tail_mask(n_bits) == 0,
+        None => n_bits == 0,
+    }
+}
+
+#[test]
+fn bitvec_roundtrips_and_keeps_the_tail_invariant() {
+    forall(
+        Config::default().cases(400),
+        "BitVec roundtrips through bools with a masked tail",
+        |rng: &mut Pcg32| {
+            let n = arbitrary_width(rng);
+            let bits = arbitrary_bits(rng, n);
+            let mut v = BitVec::from_bools(&bits);
+            if v.len() != n || v.words().len() != words_for(n) {
+                return Err(format!("shape: len {} words {}", v.len(), v.words().len()));
+            }
+            if !tail_is_masked(v.words(), n) {
+                return Err(format!("tail lane has bits past width {n}"));
+            }
+            let ones = bits.iter().filter(|&&b| b).count() as u32;
+            if v.count_ones() != ones {
+                return Err(format!("count_ones {} != {ones}", v.count_ones()));
+            }
+            if v.to_bools() != bits {
+                return Err("to_bools mismatch".into());
+            }
+            let i = rng.range(0, n);
+            if v.get(i) != bits[i] {
+                return Err(format!("get({i}) mismatch"));
+            }
+            // flipping one bit keeps the tail invariant and roundtrips
+            v.set(i, !bits[i]);
+            let mut flipped = bits.clone();
+            flipped[i] = !bits[i];
+            if v.to_bools() != flipped || !tail_is_masked(v.words(), n) {
+                return Err(format!("set({i}) broke the representation"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bitmatrix_rows_are_bit_exact_views() {
+    forall(
+        Config::default().cases(250),
+        "BitMatrix rows roundtrip and popcount like the bool rows",
+        |rng: &mut Pcg32| {
+            let n_rows = rng.range(1, 8);
+            let n_cols = arbitrary_width(rng);
+            let rows: Vec<Vec<bool>> = (0..n_rows).map(|_| arbitrary_bits(rng, n_cols)).collect();
+            let m = BitMatrix::from_rows(&rows);
+            if m.n_rows() != n_rows || m.n_cols() != n_cols {
+                return Err("shape mismatch".into());
+            }
+            if m.to_rows() != rows {
+                return Err("to_rows mismatch".into());
+            }
+            let x = arbitrary_bits(rng, n_cols);
+            let xv = BitVec::from_bools(&x);
+            for (r, row) in rows.iter().enumerate() {
+                if !tail_is_masked(m.row(r), n_cols) {
+                    return Err(format!("row {r} tail lane unmasked"));
+                }
+                if m.row_bools(r) != *row {
+                    return Err(format!("row_bools({r}) mismatch"));
+                }
+                let ones = row.iter().filter(|&&b| b).count() as u32;
+                if m.row_count_ones(r) != ones {
+                    return Err(format!("row_count_ones({r}) != {ones}"));
+                }
+                let and = row.iter().zip(&x).filter(|(&w, &xi)| w && xi).count() as u32;
+                if m.row_and_count(r, &xv) != and {
+                    return Err(format!("row_and_count({r}) != {and}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_layer_matches_the_scalar_oracle() {
+    forall(
+        Config::default().cases(300),
+        "PackedLayer counts/forward/argmax == BinaryLayer",
+        |rng: &mut Pcg32| {
+            let n_out = rng.range(1, 12);
+            let n_in = arbitrary_width(rng);
+            let theta = rng.range(1, n_in + 1);
+            let weights: Vec<Vec<bool>> = (0..n_out).map(|_| arbitrary_bits(rng, n_in)).collect();
+            let layer = BinaryLayer::new(weights, theta);
+            let packed = PackedLayer::from(&layer);
+            let x = arbitrary_bits(rng, n_in);
+            let xv = BitVec::from_bools(&x);
+            let want = layer.counts(&x);
+            if packed.counts(&xv) != want {
+                return Err(format!("counts mismatch ({n_out}x{n_in}, theta {theta})"));
+            }
+            if packed.counts_words(xv.words()) != want {
+                return Err("counts_words disagrees with counts".into());
+            }
+            if packed.forward(&xv).to_bools() != layer.forward(&x) {
+                return Err(format!("forward mismatch ({n_out}x{n_in}, theta {theta})"));
+            }
+            if packed.argmax(&xv) != layer.argmax(&x)
+                || packed.argmax_words(xv.words()) != layer.argmax(&x)
+            {
+                return Err("argmax mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_mlp_chains_bit_exactly() {
+    forall(
+        Config::default().cases(150),
+        "PackedMlp forward/final_counts == chained BinaryLayers",
+        |rng: &mut Pcg32| {
+            let n_in = arbitrary_width(rng);
+            let hidden = rng.range(1, 40);
+            let n_out = rng.range(1, 12);
+            let l1 = BinaryLayer::new(
+                (0..hidden).map(|_| arbitrary_bits(rng, n_in)).collect(),
+                rng.range(1, n_in + 1),
+            );
+            let l2 = BinaryLayer::new(
+                (0..n_out).map(|_| arbitrary_bits(rng, hidden)).collect(),
+                rng.range(1, hidden + 1),
+            );
+            let x = arbitrary_bits(rng, n_in);
+            let y1 = l1.forward(&x);
+            let mlp = PackedMlp::from_layers(&[l1, l2.clone()]);
+            if mlp.n_in() != n_in || mlp.n_out() != n_out {
+                return Err("shape mismatch".into());
+            }
+            let xv = BitVec::from_bools(&x);
+            if mlp.forward(&xv).to_bools() != l2.forward(&y1) {
+                return Err(format!("forward mismatch ({n_in}->{hidden}->{n_out})"));
+            }
+            if mlp.final_counts(&xv) != l2.counts(&y1) {
+                return Err("final_counts mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_batch_views_share_one_buffer() {
+    forall(
+        Config::default().cases(200),
+        "PackedBatch packs, slices and unpacks without copying bits",
+        |rng: &mut Pcg32| {
+            let n = rng.range(1, 10);
+            let w = arbitrary_width(rng);
+            let images: Vec<Vec<bool>> = (0..n).map(|_| arbitrary_bits(rng, w)).collect();
+            let batch = match PackedBatch::from_images(&images) {
+                Some(b) => b,
+                None => return Err("uniform batch refused to pack".into()),
+            };
+            if batch.len() != n || batch.width() != w {
+                return Err("shape mismatch".into());
+            }
+            if batch.to_images() != images {
+                return Err("to_images mismatch".into());
+            }
+            let i = rng.range(0, n);
+            if batch.image_bools(i) != images[i] {
+                return Err(format!("image_bools({i}) mismatch"));
+            }
+            // a sub-view aliases the parent's lanes (Arc share, no copy)
+            let lo = rng.range(0, n);
+            let hi = rng.range(lo, n) + 1;
+            let view = batch.slice(lo..hi);
+            if view.to_images() != images[lo..hi] {
+                return Err(format!("slice({lo}..{hi}) mismatch"));
+            }
+            if view.row_words(0).as_ptr() != batch.row_words(lo).as_ptr() {
+                return Err("slice copied the buffer".into());
+            }
+            // ragged batches stay scalar (one row of a different width is
+            // still uniform when it's the only row, so need n >= 2)
+            if w >= 2 && n >= 2 {
+                let mut ragged = images;
+                ragged[n - 1].pop();
+                if PackedBatch::from_images(&ragged).is_some() {
+                    return Err("ragged batch must not pack".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tile_step_packed_is_bit_identical() {
+    forall(
+        Config::default().cases(250),
+        "tile_step_packed == tile_step to the last f64 bit",
+        |rng: &mut Pcg32| {
+            let n_rows = rng.range(1, 12);
+            let n_cols = arbitrary_width(rng);
+            let weights: Vec<Vec<bool>> =
+                (0..n_rows).map(|_| arbitrary_bits(rng, n_cols)).collect();
+            let x = arbitrary_bits(rng, n_cols);
+            let p = DeviceParams::default();
+            let theta = rng.range(1, n_cols + 1);
+            let v_dd = vdd_for_theta(theta, &p) * rng.range_f64(0.8, 1.2);
+            let scalar = tile_step(&weights, &x, v_dd, &p);
+            let packed = tile_step_packed(
+                &BitMatrix::from_rows(&weights),
+                &BitVec::from_bools(&x),
+                v_dd,
+                &p,
+            );
+            if packed.counts != scalar.counts || packed.active != scalar.active {
+                return Err(format!("counts mismatch ({n_rows}x{n_cols})"));
+            }
+            if packed.current_sum.to_bits() != scalar.current_sum.to_bits() {
+                return Err(format!(
+                    "current_sum drifted: {:e} vs {:e}",
+                    packed.current_sum, scalar.current_sum
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ideal_tmvm_fast_path_matches_the_per_cell_walk() {
+    forall(
+        Config::default().cases(60),
+        "Subarray::tmvm_rows (Ideal) == tmvm_rows_scalar oracle",
+        |rng: &mut Pcg32| {
+            let n_row = rng.range(2, 14);
+            let n_col = rng.range(4, 80);
+            let mut fast =
+                Subarray::new(ArrayDesign::new(n_row, n_col, LineConfig::config3(), 3.0, 1.0));
+            let mut oracle =
+                Subarray::new(ArrayDesign::new(n_row, n_col, LineConfig::config3(), 3.0, 1.0));
+            let grid: Vec<Vec<bool>> = (0..n_row).map(|_| arbitrary_bits(rng, n_col)).collect();
+            fast.program_level(Level::Top, &grid);
+            oracle.program_level(Level::Top, &grid);
+            let x = arbitrary_bits(rng, n_col);
+            let active_rows = rng.range(0, n_row + 1);
+            let out_col = rng.range(0, n_col);
+            let theta = rng.range(1, n_col + 1);
+            // off-boundary voltage: outputs/outcomes must agree exactly,
+            // currents to f64 rounding (the count-space sum reassociates)
+            let v = fast.vdd_for_threshold(theta) * rng.range_f64(0.9, 1.25);
+            let a = fast.tmvm_rows(&x, out_col, v, TmvmMode::Ideal, active_rows);
+            let b = oracle.tmvm_rows_scalar(&x, out_col, v, TmvmMode::Ideal, active_rows);
+            if a.outputs != b.outputs || a.outcomes != b.outcomes {
+                return Err(format!(
+                    "decision mismatch ({n_row}x{n_col}, active {active_rows}, theta {theta})"
+                ));
+            }
+            for (row, (ia, ib)) in a.currents.iter().zip(&b.currents).enumerate() {
+                if (ia - ib).abs() > 1e-12 * ib.abs() + 1e-18 {
+                    return Err(format!("row {row} current {ia:e} vs {ib:e}"));
+                }
+            }
+            if (a.energy - b.energy).abs() > 1e-9 * b.energy.abs() + 1e-24 {
+                return Err(format!("energy {:e} vs {:e}", a.energy, b.energy));
+            }
+            for row in 0..n_row {
+                let (fa, or) = (
+                    fast.peek(Level::Bottom, row, out_col),
+                    oracle.peek(Level::Bottom, row, out_col),
+                );
+                if fa != or {
+                    return Err(format!("bottom-level bit differs at row {row}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
