@@ -5,14 +5,18 @@
 //!
 //! The analytic ladder recursion here is validated against full MNA circuit
 //! simulation (see [`corner_circuit`] and `rust/tests/prop_analysis.rs`).
+//! [`montecarlo`] carries the point analyses to distributions: seeded
+//! device-corner sweeps of noise margin and workload accuracy.
 
 pub mod design;
 pub mod voltage;
 pub mod thevenin;
 pub mod corner_circuit;
 pub mod noise_margin;
+pub mod montecarlo;
 
 pub use design::{ArrayDesign, OutputLoading};
+pub use montecarlo::{perturbed_design, variability_sweep, McConfig, McSizeResult};
 pub use noise_margin::{max_rows_for_nm, noise_margin, region_boundary_alpha, NmAnalysis};
 pub use thevenin::{ladder_thevenin, LadderThevenin};
 pub use voltage::{ideal_window, IdealWindow};

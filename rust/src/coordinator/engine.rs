@@ -409,6 +409,10 @@ fn scheduler_main(
     // final per-shard telemetry into the shared metrics (one entry per
     // shard; plain engines contribute a single entry)
     metrics.record_shards(engine.shard_telemetry());
+    // canary-carrying engines also fold their divergence tallies
+    if let Some(report) = engine.canary_report() {
+        metrics.record_canary(report);
+    }
 }
 
 /// The running coordinator.

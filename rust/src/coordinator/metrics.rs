@@ -1,6 +1,6 @@
 //! Lock-cheap metrics aggregation for the coordinator.
 
-use crate::engine::{ScaleEvent, ScaleEventKind, SwapReport, Telemetry};
+use crate::engine::{CanaryReport, ScaleEvent, ScaleEventKind, SwapReport, Telemetry};
 use crate::util::stats::Welford;
 use std::sync::Mutex;
 
@@ -32,6 +32,7 @@ struct Inner {
     spawn_pulses: u64,      // programming pulses across those spawns
     spawn_time: f64,        // simulated spawn-programming time [s]
     spawn_energy: f64,      // spawn-programming energy [J]
+    canary: Option<CanaryReport>, // folded canary divergence telemetry
 }
 
 /// A point-in-time copy of the aggregated metrics.
@@ -79,6 +80,10 @@ pub struct MetricsSnapshot {
     pub spawn_time: f64,
     /// Energy spent on spawn programming \[J\].
     pub spawn_energy: f64,
+    /// Canary fidelity sampling: divergence tallies and the canary's
+    /// worst noise margin, folded across worker engines (counters sum,
+    /// margins min-merge). `None` when no worker carried a canary.
+    pub canary: Option<CanaryReport>,
 }
 
 impl Metrics {
@@ -129,6 +134,18 @@ impl Metrics {
         m.swap_energy += report.energy;
     }
 
+    /// Fold a worker engine's canary divergence report (recorded once
+    /// per scheduler thread at exit, alongside the final shard
+    /// telemetry): counters sum, margins min-merge.
+    pub fn record_canary(&self, report: CanaryReport) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        let c = m.canary.get_or_insert_with(CanaryReport::default);
+        c.sampled_images += report.sampled_images;
+        c.compared_batches += report.compared_batches;
+        c.divergent_images += report.divergent_images;
+        c.margin_min = c.margin_min.min(report.margin_min);
+    }
+
     /// Record one elastic lifecycle event (spawn / retire / budget veto)
     /// drained from an autoscaling engine.
     pub fn record_scale(&self, event: &ScaleEvent) {
@@ -177,6 +194,7 @@ impl Metrics {
             spawn_pulses: m.spawn_pulses,
             spawn_time: m.spawn_time,
             spawn_energy: m.spawn_energy,
+            canary: m.canary,
         }
     }
 }
@@ -284,6 +302,30 @@ mod tests {
         assert_eq!(s.reset_pulses, 5);
         assert!((s.swap_time - 1.1e-6).abs() < 1e-18);
         assert!((s.swap_energy - 3.1e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn canary_reports_fold_across_workers() {
+        let m = Metrics::new();
+        assert!(m.snapshot().canary.is_none(), "no canary → None");
+        m.record_canary(CanaryReport {
+            sampled_images: 10,
+            compared_batches: 3,
+            divergent_images: 1,
+            margin_min: 0.2,
+        });
+        m.record_canary(CanaryReport {
+            sampled_images: 4,
+            compared_batches: 2,
+            divergent_images: 0,
+            margin_min: 0.1,
+        });
+        let c = m.snapshot().canary.expect("folded");
+        assert_eq!(c.sampled_images, 14);
+        assert_eq!(c.compared_batches, 5);
+        assert_eq!(c.divergent_images, 1);
+        assert_eq!(c.margin_min, 0.1, "min-merge");
+        assert!((c.divergence_rate() - 1.0 / 14.0).abs() < 1e-12);
     }
 
     #[test]

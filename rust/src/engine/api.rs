@@ -103,7 +103,7 @@ pub struct Capabilities {
 /// (and therefore by `submit`). Counters accumulate since construction;
 /// `utilization` is the per-subarray busy fraction of the *most recent*
 /// batch (single-subarray engines report an empty vector).
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Telemetry {
     pub batches: u64,
     pub images: u64,
@@ -139,6 +139,37 @@ pub struct Telemetry {
     pub wear_pulses: u64,
     /// Per-subarray busy fraction of the most recent batch.
     pub utilization: Vec<f64>,
+    /// Worst (minimum) noise margin across the engine's arrays, for
+    /// engines that model parasitics — `+∞` when the engine runs at ideal
+    /// fidelity and margins are not evaluated (so min-merging across a
+    /// mixed fleet surfaces exactly the parasitic shards' margins).
+    pub margin_min: f64,
+}
+
+/// Hand-written (not derived) so the no-margin-reported state is `+∞`,
+/// the identity of the min-merge — a derived `0.0` would read as "margin
+/// fully closed" on every ideal engine.
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self {
+            batches: 0,
+            images: 0,
+            steps: 0,
+            sim_time: 0.0,
+            energy: 0.0,
+            compute_energy: 0.0,
+            link_energy: 0.0,
+            cycles: 0,
+            link_transfers: 0,
+            link_lines: 0,
+            swaps: 0,
+            program_time: 0.0,
+            program_energy: 0.0,
+            wear_pulses: 0,
+            utilization: Vec::new(),
+            margin_min: f64::INFINITY,
+        }
+    }
 }
 
 impl Telemetry {
@@ -296,6 +327,48 @@ pub struct ScaleEvent {
     pub serving_after: usize,
 }
 
+/// What a canary-carrying fleet observed: a parasitic-fidelity shard
+/// shadows a sample of live traffic behind the ideal shards, and the
+/// engine compares the two fidelities' *electrical* outputs
+/// ([`InferenceResult::bits`] — the classes are functional and identical
+/// by construction) batch by batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CanaryReport {
+    /// Images mirrored through the canary shard.
+    pub sampled_images: u64,
+    /// Mirrored batches whose primary/canary pair both completed and were
+    /// compared.
+    pub compared_batches: u64,
+    /// Sampled images whose electrical bits diverged between the ideal
+    /// primary and the parasitic canary.
+    pub divergent_images: u64,
+    /// Worst noise margin the canary's arrays report (`+∞` until the
+    /// canary shard publishes telemetry).
+    pub margin_min: f64,
+}
+
+impl Default for CanaryReport {
+    fn default() -> Self {
+        Self {
+            sampled_images: 0,
+            compared_batches: 0,
+            divergent_images: 0,
+            margin_min: f64::INFINITY,
+        }
+    }
+}
+
+impl CanaryReport {
+    /// Divergent fraction of the sampled images (0 when nothing sampled).
+    pub fn divergence_rate(&self) -> f64 {
+        if self.sampled_images == 0 {
+            0.0
+        } else {
+            self.divergent_images as f64 / self.sampled_images as f64
+        }
+    }
+}
+
 /// A batched binary-NN inference engine at some fidelity.
 ///
 /// Not `Send`: PJRT handles are thread-affine, so the coordinator
@@ -430,6 +503,14 @@ pub trait Engine {
     /// into its metrics. Plain engines never produce any.
     fn take_scale_events(&mut self) -> Vec<ScaleEvent> {
         Vec::new()
+    }
+
+    /// What the fleet's canary observed so far, for engines carrying one
+    /// (a [`ShardedEngine`](super::sharded::ShardedEngine) built with a
+    /// canary slot). `None` for every engine without a canary — the
+    /// coordinator only surfaces canary telemetry when it exists.
+    fn canary_report(&self) -> Option<CanaryReport> {
+        None
     }
 
     /// Whether no elastic lifecycle walk (spawn/retire) is currently in

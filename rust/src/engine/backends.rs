@@ -19,7 +19,7 @@ use super::spec::BackendKind;
 use crate::analysis::ArrayDesign;
 use crate::array::{Subarray, TmvmMode};
 use crate::device::ReprogramPlan;
-use crate::fabric::{FabricConfig, FabricExecutor, FabricRun};
+use crate::fabric::{FabricConfig, FabricExecutor, FabricRun, Fidelity};
 use crate::nn::packed::{PackedBatch, PackedLayer};
 use crate::nn::{argmax_counts, BinaryLayer};
 use crate::runtime::{Executable, Runtime, TensorF32};
@@ -66,12 +66,19 @@ impl SimBackend {
         mode: TmvmMode,
     ) -> Result<Self, EngineError> {
         Self::validate_shapes(&layer, &design)?;
+        let mut telemetry = Telemetry::default();
+        if mode == TmvmMode::Parasitic {
+            // margin telemetry is what the parasitic fidelity is *for* —
+            // evaluated once at construction (it is a property of the
+            // design, not of the traffic)
+            telemetry.margin_min = crate::analysis::noise_margin(&design).noise_margin();
+        }
         Ok(Self {
             packed: PackedLayer::from(&layer),
             layer,
             subarray: Subarray::new(design),
             mode,
-            telemetry: Telemetry::default(),
+            telemetry,
             completions: Completions::default(),
         })
     }
@@ -129,7 +136,19 @@ impl Engine for SimBackend {
         Ok(self.completions.push(res))
     }
 
+    /// The packed popcount fast path — **ideal fidelity only**. At
+    /// parasitic fidelity the per-cell electrical walk is the model, so
+    /// packed dispatch is refused with the typed
+    /// [`EngineError::PackedFidelity`] instead of silently serving
+    /// ideal-mode results (callers that hold packed batches — e.g. the
+    /// canary mirror — unpack and take the scalar path).
     fn infer_packed(&mut self, batch: &PackedBatch) -> crate::Result<InferenceResult> {
+        if self.mode == TmvmMode::Parasitic {
+            return Err(EngineError::PackedFidelity {
+                kind: self.capabilities().kind.name(),
+            }
+            .into());
+        }
         let run = self.layer.run_batch_packed(&mut self.subarray, batch, self.mode);
         // popcount argmax over the shared buffer — no scalar images built
         let classes = (0..batch.len())
@@ -225,10 +244,15 @@ impl FabricBackend {
         }
         let exec = FabricExecutor::new(layers, cfg)
             .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
+        let telemetry = Telemetry {
+            // +∞ at ideal fidelity; the per-tile minimum at parasitic
+            margin_min: exec.margin_min(),
+            ..Telemetry::default()
+        };
         Ok(Self {
             exec,
             max_batch,
-            telemetry: Telemetry::default(),
+            telemetry,
             completions: Completions::default(),
         })
     }
@@ -304,6 +328,25 @@ impl Engine for FabricBackend {
 
     fn poll(&mut self, ticket: Ticket) -> crate::Result<Option<InferenceResult>> {
         Ok(Some(self.completions.take(ticket)?))
+    }
+
+    /// Packed dispatch on the fabric unpacks and takes the scalar pipeline
+    /// (the executor's popcount fast path is internal) — but only at ideal
+    /// fidelity. A parasitic-fidelity fabric refuses with the typed
+    /// [`EngineError::PackedFidelity`] so no caller can mistake an
+    /// unpack-and-delegate for the packed kernel it asked for.
+    fn infer_packed(&mut self, batch: &PackedBatch) -> crate::Result<InferenceResult> {
+        if self.exec.config().fidelity == Fidelity::Parasitic {
+            return Err(EngineError::PackedFidelity { kind: "fabric" }.into());
+        }
+        self.infer_batch(&batch.to_images())
+    }
+
+    fn submit_packed(&mut self, batch: PackedBatch) -> crate::Result<Ticket> {
+        if self.exec.config().fidelity == Fidelity::Parasitic {
+            return Err(EngineError::PackedFidelity { kind: "fabric" }.into());
+        }
+        self.submit(batch.to_images())
     }
 
     /// In-place swap of the whole placed stack: the executor streams the
@@ -721,6 +764,42 @@ mod tests {
         assert_eq!(got.classes, want.classes);
         assert_eq!(got.steps, want.steps);
         assert!((got.energy - want.energy).abs() <= 1e-9 * want.energy.abs() + 1e-24);
+    }
+
+    /// Satellite contract: packed dispatch on a parasitic-fidelity engine
+    /// is the typed [`EngineError::PackedFidelity`] — never a silent
+    /// fallback to the ideal kernel. The scalar path keeps serving.
+    #[test]
+    fn packed_dispatch_on_parasitic_engines_is_a_typed_error() {
+        let mut rng = Pcg32::seeded(69);
+        let layer = random_layer(&mut rng, 8, 16, 3);
+        let images: Vec<Vec<bool>> = (0..4)
+            .map(|_| (0..16).map(|_| rng.bernoulli(0.4)).collect())
+            .collect();
+        let batch = PackedBatch::from_images(&images).expect("uniform");
+
+        let design = ArrayDesign::new(32, 32, LineConfig::config3(), 3.0, 1.0);
+        let mut sim = SimBackend::new(layer.clone(), design, TmvmMode::Parasitic).unwrap();
+        // the vendored anyhow stub flattens errors to message chains, so
+        // the pin is the typed variant's exact Display text
+        let refused = |kind| EngineError::PackedFidelity { kind }.to_string();
+        let err = sim.infer_packed(&batch).unwrap_err();
+        assert_eq!(err.to_string(), refused("parasitic"));
+        let err = sim.submit_packed(batch.clone()).unwrap_err();
+        assert_eq!(err.to_string(), refused("parasitic"));
+        // the refusal is a routing decision, not a failure: scalar images
+        // still serve through the per-cell walk
+        let res = sim.infer_batch(&images).unwrap();
+        assert_eq!(res.bits.len(), 4);
+
+        let cfg = FabricConfig::new(2, 2, 8, 8).with_fidelity(Fidelity::Parasitic);
+        let mut fab = FabricBackend::new(vec![layer], cfg, 16).unwrap();
+        let err = fab.infer_packed(&batch).unwrap_err();
+        assert_eq!(err.to_string(), refused("fabric"));
+        let err = fab.submit_packed(batch).unwrap_err();
+        assert_eq!(err.to_string(), refused("fabric"));
+        let res = fab.infer_batch(&images).unwrap();
+        assert_eq!(res.bits.len(), 4);
     }
 
     #[test]

@@ -70,6 +70,12 @@ pub enum EngineError {
     Empty,
     /// A submitted batch exceeds every shard's per-call batch limit.
     NoShardFits { batch: usize, max_batch: usize },
+    /// Packed (popcount fast-path) dispatch requested on a
+    /// parasitic-fidelity engine, whose tile steps must run the per-cell
+    /// electrical walk. Refusing is deliberate: silently falling back to
+    /// the ideal-mode kernel would serve un-attenuated results at the
+    /// wrong fidelity.
+    PackedFidelity { kind: &'static str },
     /// The backend cannot reprogram its weights in place.
     SwapUnsupported { kind: &'static str },
     /// The swap target does not match the resident network's shape.
@@ -155,6 +161,11 @@ impl fmt::Display for EngineError {
             Self::NoShardFits { batch, max_batch } => write!(
                 f,
                 "batch of {batch} exceeds every shard's max batch {max_batch}"
+            ),
+            Self::PackedFidelity { kind } => write!(
+                f,
+                "packed dispatch is ideal-only: the {kind} engine runs the per-cell \
+                 parasitic walk — submit scalar images instead"
             ),
             Self::SwapUnsupported { kind } => write!(
                 f,
@@ -257,6 +268,9 @@ mod tests {
         assert!(EngineError::SwapUnsupported { kind: "xla" }
             .to_string()
             .contains("xla backend cannot reprogram"));
+        assert!(EngineError::PackedFidelity { kind: "parasitic" }
+            .to_string()
+            .contains("packed dispatch is ideal-only"));
         assert!(EngineError::SwapShape {
             detail: "layer 0 is 4×8 but the target is 4×9".into()
         }

@@ -46,8 +46,8 @@ pub mod sharded;
 pub mod spec;
 
 pub use api::{
-    BackendFactory, Batch, Capabilities, Completions, Engine, InferenceResult, ScaleEvent,
-    ScaleEventKind, ScaleLoad, SwapReport, Telemetry, Ticket,
+    BackendFactory, Batch, CanaryReport, Capabilities, Completions, Engine, InferenceResult,
+    ScaleEvent, ScaleEventKind, ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 pub use backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 pub use error::EngineError;

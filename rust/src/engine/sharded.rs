@@ -69,6 +69,23 @@
 //! flight at a time; every completed walk emits a
 //! [`ScaleEvent`](super::api::ScaleEvent) the coordinator folds into its
 //! metrics.
+//!
+//! ## Canary fidelity sampling
+//!
+//! A fleet built with [`ShardedEngine::with_canary`] designates its last
+//! slot a **canary**: a higher-fidelity (parasitic) shard that never
+//! serves primary traffic. A deterministic stride sampler mirrors a
+//! configured fraction of submissions onto it as *shadow* tickets —
+//! accounted in flight on the canary (drains and rolling swaps wait for
+//! them) but never redeemable through [`poll`](Engine::poll). When both
+//! halves of a mirrored batch complete, the scheduler compares the
+//! electrical row outputs ([`InferenceResult::bits`]) and tallies
+//! divergent images; [`Engine::canary_report`] surfaces the counts
+//! together with the canary's worst reported noise margin. Sampling is
+//! stride-based (`acc += fraction`, fire on wrap) in submission order,
+//! so an offline replay of the same trace selects exactly the same
+//! batches. Rolling swaps walk the canary like any serving shard, so its
+//! designation (a slot index) survives a live reprogram.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -76,8 +93,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api::{
-    BackendFactory, Batch, Capabilities, Engine, InferenceResult, ScaleEvent, ScaleEventKind,
-    ScaleLoad, SwapReport, Telemetry, Ticket,
+    BackendFactory, Batch, CanaryReport, Capabilities, Engine, InferenceResult, ScaleEvent,
+    ScaleEventKind, ScaleLoad, SwapReport, Telemetry, Ticket,
 };
 use super::error::EngineError;
 use super::spec::BackendKind;
@@ -243,6 +260,60 @@ struct RollingSwap {
     failed: Option<String>,
 }
 
+/// The canary slot and its divergence bookkeeping — see the module docs.
+struct CanaryState {
+    /// Slot index of the canary shard (the last factory handed to
+    /// [`ShardedEngine::with_canary`]).
+    shard: usize,
+    /// Fraction of submissions mirrored. Stride-sampled, not random:
+    /// the selection replays offline from the submission order alone.
+    fraction: f64,
+    /// Stride accumulator: `acc += fraction` per submission; a mirror
+    /// fires on every wrap past 1.0.
+    acc: f64,
+    /// Shadow ticket → the primary ticket it mirrors.
+    shadow_of: HashMap<Ticket, Ticket>,
+    /// Primary ticket → the pending comparison, filled from both sides
+    /// as completions drain and settled when the second half arrives.
+    compare: HashMap<Ticket, CanaryCompare>,
+    sampled_images: u64,
+    compared_batches: u64,
+    divergent_images: u64,
+}
+
+/// Both halves of one mirrored batch, captured as they complete.
+#[derive(Default)]
+struct CanaryCompare {
+    primary: Option<Vec<Vec<bool>>>,
+    canary: Option<Vec<Vec<bool>>>,
+}
+
+impl CanaryState {
+    /// Settle `primary`'s comparison if both halves have arrived: count
+    /// images whose electrical rows differ between the two fidelities.
+    fn settle(&mut self, primary: Ticket) {
+        let both = self
+            .compare
+            .get(&primary)
+            .is_some_and(|s| s.primary.is_some() && s.canary.is_some());
+        if !both {
+            return;
+        }
+        let slot = self.compare.remove(&primary).expect("checked above");
+        let (a, b) = (
+            slot.primary.expect("checked above"),
+            slot.canary.expect("checked above"),
+        );
+        self.compared_batches += 1;
+        self.divergent_images +=
+            a.iter().zip(b.iter()).filter(|(x, y)| x != y).count() as u64;
+        // same submission on both sides, so a length mismatch cannot
+        // happen — but if it ever did, count the tail as divergence
+        // rather than silently truncating the comparison
+        self.divergent_images += a.len().abs_diff(b.len()) as u64;
+    }
+}
+
 /// The in-progress elastic lifecycle walk (at most one at a time, and
 /// mutually exclusive with a rolling swap).
 #[derive(Clone, Copy, Debug)]
@@ -289,6 +360,9 @@ pub struct ShardedEngine {
     scale_op: Option<ScaleOp>,
     /// Completed lifecycle events awaiting [`Engine::take_scale_events`].
     events: Vec<ScaleEvent>,
+    /// Canary fidelity sampling — `Some` only for fleets built with
+    /// [`ShardedEngine::with_canary`].
+    canary: Option<CanaryState>,
 }
 
 fn shard_main(
@@ -342,6 +416,50 @@ impl ShardedEngine {
     /// are typed errors — use [`ShardedEngine::elastic`] for that.
     pub fn new(factories: Vec<BackendFactory>) -> crate::Result<Self> {
         Self::assemble(factories)
+    }
+
+    /// Fleet with a **canary**: the last factory becomes a
+    /// non-dispatching canary shard (normally a parasitic-fidelity twin
+    /// of the ideal primaries) and `fraction` of submissions are mirrored
+    /// onto it for divergence comparison — see the module docs. The
+    /// engine-level capabilities describe the primary pool only; the
+    /// canary observes, it never adds capacity.
+    pub fn with_canary(factories: Vec<BackendFactory>, fraction: f64) -> crate::Result<Self> {
+        anyhow::ensure!(
+            factories.len() >= 2,
+            "a canary fleet needs at least one primary shard plus the canary"
+        );
+        anyhow::ensure!(
+            fraction > 0.0 && fraction <= 1.0,
+            "canary sampling fraction must be in (0, 1], got {fraction}"
+        );
+        let mut engine = Self::assemble(factories)?;
+        let shard = engine.shards.len() - 1;
+        let primaries = &engine.shards[..shard];
+        engine.caps.shards = shard;
+        engine.caps.nodes = primaries.iter().map(|s| s.caps.nodes).sum();
+        engine.caps.tiles = primaries.iter().map(|s| s.caps.tiles).sum();
+        engine.caps.max_batch = primaries
+            .iter()
+            .map(|s| s.caps.max_batch)
+            .max()
+            .unwrap_or(0);
+        engine.canary = Some(CanaryState {
+            shard,
+            fraction,
+            acc: 0.0,
+            shadow_of: HashMap::new(),
+            compare: HashMap::new(),
+            sampled_images: 0,
+            compared_batches: 0,
+            divergent_images: 0,
+        });
+        Ok(engine)
+    }
+
+    /// Slot index of the canary shard, if one is designated.
+    pub fn canary_shard(&self) -> Option<usize> {
+        self.canary.as_ref().map(|c| c.shard)
     }
 
     /// Elastic construction: `initial` shards built from `builder` on the
@@ -473,6 +591,7 @@ impl ShardedEngine {
             pulse_budget: 0,
             scale_op: None,
             events: Vec::new(),
+            canary: None,
         })
     }
 
@@ -562,6 +681,16 @@ impl ShardedEngine {
             .unwrap_or_else(|| format!("shard {shard} worker thread died"));
         for t in dead {
             self.in_flight.remove(&t);
+            if let Some(c) = self.canary.as_mut() {
+                if let Some(primary) = c.shadow_of.remove(&t) {
+                    // a dead canary abandons its comparisons; the
+                    // primary's result stays redeemable on its own shard
+                    c.compare.remove(&primary);
+                    continue;
+                }
+                // a dead mirrored primary can never complete its half
+                c.compare.remove(&t);
+            }
             self.ready.push((t, Err(cause.clone())));
         }
         self.shards[shard].in_flight_batches = 0;
@@ -609,6 +738,40 @@ impl ShardedEngine {
                     let s = &mut self.shards[info.shard];
                     s.in_flight_batches = s.in_flight_batches.saturating_sub(1);
                     s.in_flight_images = s.in_flight_images.saturating_sub(info.images);
+                }
+                if let Some(c) = self.canary.as_mut() {
+                    if let Some(primary) = c.shadow_of.remove(&ticket) {
+                        // a shadow completion feeds the comparison and is
+                        // never redeemable — a failed mirror abandons it
+                        match result {
+                            Ok(res) => {
+                                if let Some(slot) = c.compare.get_mut(&primary) {
+                                    slot.canary = Some(res.bits);
+                                }
+                                c.settle(primary);
+                            }
+                            Err(_) => {
+                                c.compare.remove(&primary);
+                            }
+                        }
+                        return;
+                    }
+                    if c.compare.contains_key(&ticket) {
+                        // a mirrored primary: capture its rows for the
+                        // comparison before the caller redeems (and
+                        // consumes) the result through `poll`
+                        match &result {
+                            Ok(res) => {
+                                if let Some(slot) = c.compare.get_mut(&ticket) {
+                                    slot.primary = Some(res.bits.clone());
+                                }
+                                c.settle(ticket);
+                            }
+                            Err(_) => {
+                                c.compare.remove(&ticket);
+                            }
+                        }
+                    }
                 }
                 self.ready.push((ticket, result));
             }
@@ -865,6 +1028,11 @@ impl ShardedEngine {
         let mut best: Option<usize> = None;
         for k in 0..n_shards {
             let i = (self.next_pref + k) % n_shards;
+            // the canary observes mirrored samples only — it is never a
+            // primary dispatch target
+            if self.canary.as_ref().is_some_and(|c| c.shard == i) {
+                continue;
+            }
             let s = &self.shards[i];
             if !s.alive || s.state != ShardState::Serving || n > s.caps.max_batch {
                 continue;
@@ -893,6 +1061,62 @@ impl ShardedEngine {
         Ok(())
     }
 
+    /// Stride-sample `primary`'s batch onto the canary shard, if one is
+    /// designated and currently able to take it. The mirror travels as a
+    /// *shadow* ticket: real in-flight accounting on the canary (so
+    /// drains and swaps wait for it) but never redeemable through
+    /// `poll` — its result feeds the divergence comparison instead.
+    fn maybe_mirror(&mut self, primary: Ticket, batch: &Batch) {
+        let shard = match self.canary.as_mut() {
+            Some(c) => {
+                c.acc += c.fraction;
+                if c.acc < 1.0 {
+                    return;
+                }
+                c.acc -= 1.0;
+                c.shard
+            }
+            None => return,
+        };
+        let s = &self.shards[shard];
+        if !s.alive || s.state != ShardState::Serving || batch.len() > s.caps.max_batch {
+            // the canary is out of service (mid-swap, or dead): the
+            // sample is skipped, not queued — canarying is best-effort
+            // observation, never a serving dependency
+            return;
+        }
+        // the canary runs the per-cell parasitic walk, so a packed
+        // mirror is unpacked here: the sample rides the scalar path (a
+        // packed dispatch on the canary would be the typed
+        // `EngineError::PackedFidelity`)
+        let mirror = match batch {
+            Batch::Bools(images) => Batch::Bools(images.clone()),
+            Batch::Packed(packed) => Batch::Bools(packed.to_images()),
+        };
+        let n = mirror.len();
+        self.next_ticket += 1;
+        let shadow = self.next_ticket;
+        let sent = self.shards[shard]
+            .tx
+            .as_ref()
+            .expect("senders live until drop")
+            .send(ShardRequest::Infer {
+                ticket: shadow,
+                batch: mirror,
+            });
+        if sent.is_err() {
+            self.mark_shard_dead(shard);
+            return;
+        }
+        self.shards[shard].in_flight_batches += 1;
+        self.shards[shard].in_flight_images += n;
+        self.in_flight.insert(shadow, InFlight { shard, images: n });
+        let c = self.canary.as_mut().expect("canary checked above");
+        c.sampled_images += n as u64;
+        c.shadow_of.insert(shadow, primary);
+        c.compare.insert(primary, CanaryCompare::default());
+    }
+
     /// Common dispatch behind [`Engine::submit`] and
     /// [`Engine::submit_packed`]: least-loaded shard choice, the mid-swap
     /// park path, and ticket issue — the batch representation only
@@ -904,6 +1128,7 @@ impl ShardedEngine {
             Some(i) => {
                 self.next_ticket += 1;
                 let ticket = self.next_ticket;
+                self.maybe_mirror(ticket, &batch);
                 self.send_to(i, ticket, batch)?;
                 Ok(ticket)
             }
@@ -918,6 +1143,10 @@ impl ShardedEngine {
                 if self.swap.is_some() && fits {
                     self.next_ticket += 1;
                     let ticket = self.next_ticket;
+                    // sampling follows submission order, so a parked
+                    // primary still consumes its stride slot (the mirror
+                    // runs now; the comparison waits for the flush)
+                    self.maybe_mirror(ticket, &batch);
                     self.in_flight
                         .insert(ticket, InFlight { shard: QUEUED, images: n });
                     self.queued.push_back((ticket, batch));
@@ -1056,9 +1285,22 @@ impl Engine for ShardedEngine {
             // host-tracked: includes the spawn programming a fresh slot's
             // inner engine never saw (it was constructed on the image)
             total.wear_pulses += s.pulses;
+            // min-merge: the fleet's margin is its worst shard's (the
+            // no-report default is +∞, the identity of this fold)
+            total.margin_min = total.margin_min.min(t.margin_min);
             total.utilization.extend(t.utilization.iter().copied());
         }
         total
+    }
+
+    fn canary_report(&self) -> Option<CanaryReport> {
+        let c = self.canary.as_ref()?;
+        Some(CanaryReport {
+            sampled_images: c.sampled_images,
+            compared_batches: c.compared_batches,
+            divergent_images: c.divergent_images,
+            margin_min: self.shards[c.shard].telemetry.margin_min,
+        })
     }
 
     fn shard_telemetry(&self) -> Vec<Telemetry> {
@@ -1920,6 +2162,102 @@ mod tests {
         let started = std::time::Instant::now();
         e.wait_event(std::time::Duration::from_millis(5));
         assert!(started.elapsed() >= std::time::Duration::from_millis(4));
+    }
+
+    /// 2 ideal primaries + 1 parasitic canary on the same 8×16 layer and
+    /// 32×32 design, sampling `fraction` of submissions.
+    fn canary_fleet(primaries: usize, fraction: f64) -> ShardedEngine {
+        let array = ArraySpec {
+            rows: 32,
+            cols: 32,
+            span: Some(16),
+            ..ArraySpec::default()
+        };
+        let mut factories = EngineSpec::new(BackendKind::Ideal)
+            .with_workers(primaries)
+            .with_array(array.clone())
+            .with_batching(32, 200)
+            .with_layers(vec![layer(3)])
+            .build_factories()
+            .expect("ideal primaries");
+        factories.push(
+            EngineSpec::new(BackendKind::Parasitic)
+                .with_array(array)
+                .with_batching(32, 200)
+                .with_layers(vec![layer(3)])
+                .build()
+                .expect("parasitic canary"),
+        );
+        ShardedEngine::with_canary(factories, fraction).expect("canary fleet")
+    }
+
+    /// Pump until every mirrored batch has been compared (bounded).
+    fn settle_canary(e: &mut ShardedEngine, compared: u64) {
+        for _ in 0..10_000 {
+            if e.canary_report().expect("canary fleet").compared_batches >= compared {
+                return;
+            }
+            e.wait_event(std::time::Duration::from_millis(1));
+        }
+        panic!("canary comparisons never settled");
+    }
+
+    #[test]
+    fn canary_mirrors_a_deterministic_sample_and_reports_divergence() {
+        let l = layer(3);
+        let mut e = canary_fleet(2, 0.5);
+        let canary = e.canary_shard().expect("designated");
+        assert_eq!(canary, 2, "last slot is the canary");
+        // capabilities describe the primary pool only
+        assert_eq!(e.capabilities().shards, 2);
+        assert_eq!(e.capabilities().nodes, 2);
+
+        // stride 0.5: submissions 2 and 4 fire mirrors (acc wraps at 1.0)
+        let sizes = [3usize, 2, 4, 1];
+        for (k, &n) in sizes.iter().enumerate() {
+            let imgs = images(50 + k as u64, n);
+            let res = e.infer_batch(&imgs).unwrap();
+            for (img, bits) in imgs.iter().zip(&res.bits) {
+                assert_eq!(bits, &l.forward(img), "primary serving is ideal");
+            }
+        }
+        settle_canary(&mut e, 2);
+        let report = e.canary_report().expect("canary fleet");
+        assert_eq!(report.sampled_images, (sizes[1] + sizes[3]) as u64);
+        assert_eq!(report.compared_batches, 2);
+        assert!(report.divergent_images <= report.sampled_images);
+        // the canary published telemetry with its (finite) design margin
+        assert!(report.margin_min.is_finite());
+        assert_eq!(e.telemetry().margin_min, report.margin_min, "min-merge");
+
+        // the canary never took primary traffic: every submitted batch
+        // landed on a primary, the canary saw exactly the two mirrors
+        let per_shard = e.shard_telemetry();
+        assert_eq!(per_shard[canary].batches, 2, "mirrors only");
+        assert_eq!(
+            per_shard[..canary].iter().map(|t| t.batches).sum::<u64>(),
+            sizes.len() as u64
+        );
+    }
+
+    #[test]
+    fn packed_submits_on_a_canary_fleet_ride_the_scalar_mirror_path() {
+        use crate::nn::packed::PackedBatch;
+        let l = layer(3);
+        let mut e = canary_fleet(1, 1.0);
+        let imgs = images(60, 4);
+        let packed = PackedBatch::from_images(&imgs).expect("uniform widths");
+        // fraction 1.0: this packed submission is mirrored — the mirror
+        // must be unpacked to scalars, or the parasitic canary would
+        // reject it with the typed PackedFidelity error
+        let res = e.infer_packed(&packed).unwrap();
+        for (img, bits) in imgs.iter().zip(&res.bits) {
+            assert_eq!(bits, &l.forward(img));
+        }
+        settle_canary(&mut e, 1);
+        let report = e.canary_report().expect("canary fleet");
+        assert_eq!(report.sampled_images, 4);
+        assert_eq!(report.compared_batches, 1, "mirror completed scalar");
     }
 
     #[test]

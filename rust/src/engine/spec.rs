@@ -85,13 +85,18 @@ impl BackendKind {
 }
 
 /// Sharding section of the spec: how many shards and what each shard is.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ShardSpec {
     /// Independent engine shards (each is one full inner backend).
     pub shards: usize,
     /// The backend each shard runs. Must itself be non-sharded; `Xla` is
     /// rejected (PJRT clients are thread-affine — scale it with workers).
     pub inner: BackendKind,
+    /// Canary sampling fraction (`--canary F`). Non-zero adds one extra
+    /// parasitic-fidelity shard that never takes primary traffic; the
+    /// scheduler mirrors this fraction of submissions onto it and counts
+    /// fidelity divergences ([`Engine::canary_report`]). 0 = no canary.
+    pub canary: f64,
 }
 
 impl Default for ShardSpec {
@@ -99,6 +104,7 @@ impl Default for ShardSpec {
         Self {
             shards: 2,
             inner: BackendKind::Ideal,
+            canary: 0.0,
         }
     }
 }
@@ -111,6 +117,7 @@ impl ShardSpec {
             match key.as_str() {
                 "shards" => spec.shards = json_usize(val, "sharding.shards")?,
                 "inner" => spec.inner = BackendKind::parse(json_str(val, "sharding.inner")?)?,
+                "canary" => spec.canary = json_f64(val, "sharding.canary")?,
                 other => {
                     return Err(EngineError::Json(format!("unknown field 'sharding.{other}'")))
                 }
@@ -123,6 +130,7 @@ impl ShardSpec {
         Json::Obj(vec![
             ("shards".into(), Json::Num(self.shards as f64)),
             ("inner".into(), Json::Str(self.inner.name().into())),
+            ("canary".into(), Json::Num(self.canary)),
         ])
     }
 }
@@ -755,7 +763,11 @@ impl EngineSpec {
     /// of the `inner` backend behind the asynchronous scheduler.
     pub fn with_shards(mut self, shards: usize, inner: BackendKind) -> Self {
         self.kind = BackendKind::Sharded;
-        self.sharding = ShardSpec { shards, inner };
+        self.sharding = ShardSpec {
+            shards,
+            inner,
+            ..self.sharding
+        };
         self
     }
 
@@ -768,6 +780,7 @@ impl EngineSpec {
         self.sharding = ShardSpec {
             shards: auto.min_shards.max(1),
             inner,
+            ..ShardSpec::default()
         };
         self.autoscale = Some(auto);
         self
@@ -792,6 +805,7 @@ impl EngineSpec {
                 self.sharding = ShardSpec {
                     shards: 0,
                     inner: BackendKind::Ideal,
+                    ..ShardSpec::default()
                 };
             }
         }
@@ -892,6 +906,44 @@ impl EngineSpec {
                     });
                 }
                 _ => {}
+            }
+        }
+        if self.sharding.canary != 0.0 {
+            if self.kind != BackendKind::Sharded {
+                return Err(EngineError::Spec {
+                    field: "sharding",
+                    detail: "a canary shard rides a sharded fleet — select the \
+                             sharded backend (--shards N --canary F)"
+                        .into(),
+                });
+            }
+            if !(self.sharding.canary > 0.0 && self.sharding.canary <= 1.0) {
+                return Err(EngineError::Spec {
+                    field: "sharding",
+                    detail: format!(
+                        "canary sampling fraction must be in (0, 1], got {}",
+                        self.sharding.canary
+                    ),
+                });
+            }
+            if self.autoscale.is_some() {
+                return Err(EngineError::Spec {
+                    field: "sharding",
+                    detail: "canary and autoscale are mutually exclusive — the \
+                             canary is a pinned slot the elastic walk would \
+                             retire or clone"
+                        .into(),
+                });
+            }
+            if self.sharding.inner != BackendKind::Ideal {
+                return Err(EngineError::Spec {
+                    field: "sharding",
+                    detail: format!(
+                        "the canary shadows ideal primaries with its parasitic \
+                         fidelity — sharding.inner must be ideal, not {}",
+                        self.sharding.inner.name()
+                    ),
+                });
             }
         }
         if !self.remote.addrs.is_empty() || self.kind == BackendKind::Remote {
@@ -1097,6 +1149,7 @@ impl EngineSpec {
             self.sharding = ShardSpec {
                 shards: s,
                 inner: self.effective_kind(),
+                ..self.sharding
             };
             self.kind = BackendKind::Sharded;
             // the shards already parallelize across their own threads, so
@@ -1147,6 +1200,7 @@ impl EngineSpec {
             self.sharding = ShardSpec {
                 shards: min.max(1),
                 inner,
+                ..ShardSpec::default()
             };
             self.kind = BackendKind::Sharded;
             self.autoscale = Some(auto);
@@ -1155,6 +1209,28 @@ impl EngineSpec {
             if !json_base && args.get("workers").is_none() {
                 self.workers = 1;
             }
+        }
+        if let Some(f) = args.get("canary") {
+            if args.get("autoscale").is_some() {
+                return Err(EngineError::Conflict {
+                    first: "--canary",
+                    second: "--autoscale",
+                });
+            }
+            // a canary rides an explicit sharded fleet (--shards N, or a
+            // sharded --engine spec file)
+            if self.kind != BackendKind::Sharded {
+                return Err(EngineError::Requires {
+                    option: "--canary",
+                    requires: "--shards",
+                });
+            }
+            self.sharding.canary = f.trim().parse().map_err(|_| EngineError::Spec {
+                field: "sharding",
+                detail: format!(
+                    "--canary expects a sampling fraction in (0, 1], got '{f}'"
+                ),
+            })?;
         }
         if let Some(addrs) = args.get_list("remote") {
             if xla {
@@ -1194,6 +1270,7 @@ impl EngineSpec {
                     self.sharding = ShardSpec {
                         shards: 0,
                         inner: BackendKind::Ideal,
+                        ..ShardSpec::default()
                     };
                 }
             }
@@ -1369,11 +1446,21 @@ impl EngineSpec {
                         a.max_shards,
                         inner.describe()
                     ),
-                    None => format!(
-                        "async sharded engine: {} shard(s), each a {}{remote}",
-                        self.sharding.shards,
-                        inner.describe()
-                    ),
+                    None => {
+                        let canary = if self.sharding.canary > 0.0 {
+                            format!(
+                                " + parasitic canary sampling {:.0}% of traffic",
+                                self.sharding.canary * 100.0
+                            )
+                        } else {
+                            String::new()
+                        };
+                        format!(
+                            "async sharded engine: {} shard(s), each a {}{remote}{canary}",
+                            self.sharding.shards,
+                            inner.describe()
+                        )
+                    }
                 }
             }
         }
@@ -1545,9 +1632,11 @@ impl EngineSpec {
                 // (keeping the once-per-spec contract above), then chunk
                 // the factories so every coordinator worker owns an
                 // independent sharded engine of `shards` local shards
-                // plus one shard per remote host
+                // plus one shard per remote host (and, when configured,
+                // one parasitic canary slot appended last)
                 let mut inner = self.clone();
                 inner.kind = self.sharding.inner;
+                inner.sharding.canary = 0.0;
                 inner.remote = RemoteSpec::default();
                 let shards = self.sharding.shards;
                 let mut inner_factories = if shards == 0 {
@@ -1555,13 +1644,21 @@ impl EngineSpec {
                 } else {
                     inner.build_many(n * shards)?
                 };
+                let fraction = self.sharding.canary;
                 let mut out: Vec<BackendFactory> = Vec::with_capacity(n);
                 for _ in 0..n {
                     let mut group: Vec<BackendFactory> =
                         inner_factories.drain(..shards).collect();
                     group.extend(self.remote_factories()?);
+                    if fraction > 0.0 {
+                        group.push(self.canary_factory()?);
+                    }
                     out.push(Box::new(move || {
-                        Ok(Box::new(ShardedEngine::new(group)?) as Box<dyn Engine>)
+                        Ok(Box::new(if fraction > 0.0 {
+                            ShardedEngine::with_canary(group, fraction)?
+                        } else {
+                            ShardedEngine::new(group)?
+                        }) as Box<dyn Engine>)
                     }) as BackendFactory);
                 }
                 Ok(out)
@@ -1595,6 +1692,19 @@ impl EngineSpec {
                     .collect())
             }
         }
+    }
+
+    /// The canary slot's factory: the same array design and network as
+    /// the ideal primaries, served at parasitic fidelity (so mirrored
+    /// samples walk the corner-circuit model the primaries idealize
+    /// away).
+    fn canary_factory(&self) -> Result<BackendFactory, EngineError> {
+        let mut c = self.clone();
+        c.kind = BackendKind::Parasitic;
+        c.sharding = ShardSpec::default();
+        c.autoscale = None;
+        c.remote = RemoteSpec::default();
+        Ok(c.build_many(1)?.pop().expect("one factory"))
     }
 
     /// One [`BackendFactory`] per configured remote shard host — each
@@ -1705,6 +1815,7 @@ impl EngineSpec {
             let mut inner = self.clone();
             inner.kind = self.sharding.inner;
             inner.workers = self.sharding.shards;
+            inner.sharding.canary = 0.0;
             inner.remote = RemoteSpec::default();
             let mut factories = if self.sharding.shards == 0 {
                 Vec::new()
@@ -1712,6 +1823,10 @@ impl EngineSpec {
                 inner.build_factories()?
             };
             factories.extend(self.remote_factories()?);
+            if self.sharding.canary > 0.0 {
+                factories.push(self.canary_factory()?);
+                return ShardedEngine::with_canary(factories, self.sharding.canary);
+            }
             ShardedEngine::new(factories)
         }
     }
@@ -1889,7 +2004,8 @@ mod tests {
             spec.sharding,
             ShardSpec {
                 shards: 4,
-                inner: BackendKind::Fabric
+                inner: BackendKind::Fabric,
+                canary: 0.0,
             }
         );
         assert_eq!(spec.effective_kind(), BackendKind::Fabric);
@@ -2209,6 +2325,50 @@ mod tests {
                 && err.to_string().contains("exceeds"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn canary_flag_rides_a_sharded_fleet() {
+        let spec = EngineSpec::from_args(&args("serve --shards 2 --canary 0.25")).unwrap();
+        assert_eq!(spec.kind, BackendKind::Sharded);
+        assert_eq!(spec.sharding.canary, 0.25);
+        assert_eq!(spec.sharding.inner, BackendKind::Ideal);
+        assert!(
+            spec.describe().contains("parasitic canary sampling 25%"),
+            "{}",
+            spec.describe()
+        );
+        // the canary section survives the JSON roundtrip
+        let parsed = EngineSpec::from_json(&spec.to_json()).expect("roundtrip");
+        assert_eq!(parsed.sharding.canary, 0.25);
+        // a canary needs a sharded fleet to ride
+        let err = EngineSpec::from_args(&args("serve --canary 0.25")).unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
+        // mutually exclusive with autoscale (the canary slot is pinned)
+        let err =
+            EngineSpec::from_args(&args("serve --autoscale 1,4 --canary 0.5")).unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::Conflict {
+                first: "--canary",
+                second: "--autoscale",
+            }
+        );
+        // sampling fraction is a probability
+        let err = EngineSpec::from_args(&args("serve --shards 2 --canary 1.5")).unwrap_err();
+        assert!(err.to_string().contains("(0, 1]"), "{err}");
+        let err = EngineSpec::from_args(&args("serve --shards 2 --canary lots")).unwrap_err();
+        assert!(err.to_string().contains("sampling fraction"), "{err}");
+        // the divergence compare needs ideal primaries
+        let err = EngineSpec::from_args(&args("serve --fabric --shards 2 --canary 0.5"))
+            .unwrap_err();
+        assert!(err.to_string().contains("must be ideal"), "{err}");
+        // JSON path hits the same validation
+        let err = EngineSpec::from_json(
+            r#"{"backend":"sharded","sharding":{"shards":2,"canary":2.0}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("(0, 1]"), "{err}");
     }
 
     #[test]

@@ -25,9 +25,12 @@
 
 use super::event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 use super::link::{LinkFabric, LinkTraffic};
-use super::node::{tile_step_packed, vdd_for_theta, SubarrayNode, TileStep};
-use super::placement::{place_layers, FabricConfig, Placement};
+use super::node::{
+    tile_step_packed, tile_step_parasitic, vdd_for_theta, SubarrayNode, TileStep,
+};
+use super::placement::{place_layers, FabricConfig, Fidelity, Placement};
 use super::reprogram::{simulate_reprogram, target_slice, ReprogramRun};
+use crate::analysis::{ladder_thevenin, noise_margin, LadderThevenin};
 use crate::engine::EngineError;
 use crate::nn::packed::{BitMatrix, BitVec};
 use crate::nn::BinaryLayer;
@@ -74,6 +77,14 @@ pub struct FabricRun {
     pub traffic: LinkTraffic,
     /// Per-image completion time \[s\].
     pub per_image_done: Vec<f64>,
+    /// Worst (smallest) per-tile corner-case noise margin across the
+    /// placed tiles, each evaluated at its own grid position and engaged
+    /// span ([`FabricConfig::tile_design`]). `+∞` at ideal fidelity —
+    /// no electrical window is modeled there.
+    pub margin_min: f64,
+    /// Rows whose attenuated parasitic current reached `I_RESET` during
+    /// this batch (always 0 at ideal fidelity).
+    pub reset_violations: u64,
 }
 
 impl FabricRun {
@@ -120,6 +131,14 @@ pub struct FabricExecutor {
     /// re-walking the tile's `Vec<Vec<bool>>` slice per step. Rebuilt on
     /// `reprogram`, the only thing that mutates placed weights.
     packed_tiles: Vec<BitMatrix>,
+    /// Parasitic fidelity only: each tile's per-row Thevenin ladder
+    /// (`tile_thevenin[tile][r]` = the equivalent seen by local row `r+1`
+    /// of the tile's subarray design), index-aligned with
+    /// `placement.tiles`. Geometry-only — survives `reprogram` untouched.
+    /// Empty at ideal fidelity.
+    tile_thevenin: Vec<Vec<LadderThevenin>>,
+    /// Worst per-tile static noise margin (see [`FabricRun::margin_min`]).
+    margin_min: f64,
 }
 
 impl FabricExecutor {
@@ -164,6 +183,29 @@ impl FabricExecutor {
             .map(|tile| BitMatrix::from_rows(&tile.weights))
             .collect();
 
+        // Parasitic fidelity: each tile's subarray gets its own Thevenin
+        // ladder (position-dependent driver resistance, engaged span) and
+        // a static corner-case margin. Computed once — the ladders depend
+        // only on geometry, never on the programmed weights, so they
+        // survive `reprogram` untouched.
+        let (tile_thevenin, margin_min) = match cfg.fidelity {
+            Fidelity::Ideal => (Vec::new(), f64::INFINITY),
+            Fidelity::Parasitic => {
+                let mut ladders = Vec::with_capacity(placement.tiles.len());
+                let mut worst = f64::INFINITY;
+                for tile in &placement.tiles {
+                    let design = cfg.tile_design(tile);
+                    ladders.push(
+                        (1..=tile.weights.len())
+                            .map(|row| ladder_thevenin(&design, row))
+                            .collect::<Vec<_>>(),
+                    );
+                    worst = worst.min(noise_margin(&design).noise_margin());
+                }
+                (ladders, worst)
+            }
+        };
+
         Ok(Self {
             cfg,
             layers,
@@ -174,6 +216,8 @@ impl FabricExecutor {
             group_width,
             init_pieces,
             packed_tiles,
+            tile_thevenin,
+            margin_min,
         })
     }
 
@@ -187,6 +231,12 @@ impl FabricExecutor {
 
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// Worst per-tile static corner-case noise margin of the placement
+    /// (`+∞` at ideal fidelity — see [`FabricRun::margin_min`]).
+    pub fn margin_min(&self) -> f64 {
+        self.margin_min
     }
 
     /// Check that `target` can be programmed into the current placement:
@@ -285,6 +335,7 @@ impl FabricExecutor {
         let layer_groups: Vec<usize> = placement.tilings.iter().map(|t| t.grid_rows()).collect();
         let mut groups_left: Vec<Vec<usize>> = vec![layer_groups; m];
         let mut done_at: Vec<Time> = vec![0; m];
+        let mut reset_violations = 0u64;
 
         // host injection: image i enters the fabric at i · t_inject
         let t_inject = secs_to_ticks(self.cfg.t_inject);
@@ -308,20 +359,37 @@ impl FabricExecutor {
                         continue;
                     }
                     let t = &placement.tiles[tile];
-                    // all input pieces arrived: run the tile's TMVM step
-                    // against the tile packed at placement time
+                    // all input pieces arrived: run the tile's TMVM step.
+                    // Ideal fidelity takes the packed popcount fast path
+                    // against the tile packed at placement time; parasitic
+                    // fidelity runs the per-cell electrical walk through
+                    // the tile's own Thevenin ladder (bit-exact with the
+                    // scalar oracle, so it must stay off the packed path).
                     let step = {
                         let x_full: &[bool] = if t.layer == 0 {
                             &images[image]
                         } else {
                             &outputs[image][t.layer - 1]
                         };
-                        tile_step_packed(
-                            &self.packed_tiles[tile],
-                            &BitVec::from_bools(&x_full[t.col_range.clone()]),
-                            self.v_dd[t.layer],
-                            &p,
-                        )
+                        match self.cfg.fidelity {
+                            Fidelity::Ideal => tile_step_packed(
+                                &self.packed_tiles[tile],
+                                &BitVec::from_bools(&x_full[t.col_range.clone()]),
+                                self.v_dd[t.layer],
+                                &p,
+                            ),
+                            Fidelity::Parasitic => {
+                                let ps = tile_step_parasitic(
+                                    &t.weights,
+                                    &x_full[t.col_range.clone()],
+                                    self.v_dd[t.layer],
+                                    &p,
+                                    &self.tile_thevenin[tile],
+                                );
+                                reset_violations += ps.reset_violations as u64;
+                                ps.into_tile_step()
+                            }
+                        }
                     };
                     let node = &mut nodes[t.node];
                     let (_start, end) = node.reserve_step(now, self.t_step);
@@ -440,6 +508,8 @@ impl FabricExecutor {
             utilization,
             traffic,
             per_image_done: done_at.iter().map(|&t| ticks_to_secs(t)).collect(),
+            margin_min: self.margin_min,
+            reset_violations,
         })
     }
 }

@@ -38,6 +38,9 @@ pub use crate::engine::FabricBackend;
 pub use event::{secs_to_ticks, ticks_to_secs, EventQueue, Time};
 pub use exec::{FabricExecutor, FabricRun};
 pub use link::{Interlink, LinkFabric, LinkTraffic};
-pub use node::{row_current, tile_step, tile_step_packed, vdd_for_theta, SubarrayNode, TileStep};
-pub use placement::{place_layers, FabricConfig, Placement, PlacementStrategy, TileSlice};
+pub use node::{
+    row_current, tile_step, tile_step_packed, tile_step_parasitic, vdd_for_theta, ParasiticStep,
+    SubarrayNode, TileStep,
+};
+pub use placement::{place_layers, FabricConfig, Fidelity, Placement, PlacementStrategy, TileSlice};
 pub use reprogram::{simulate_reprogram, ReprogramRun};

@@ -12,6 +12,7 @@
 //! against the cell-level engine.
 
 use super::event::Time;
+use crate::analysis::LadderThevenin;
 use crate::array::EnergyLedger;
 use crate::device::DeviceParams;
 use crate::nn::packed::{BitMatrix, BitVec};
@@ -84,6 +85,97 @@ pub fn tile_step_packed(weights: &BitMatrix, x: &BitVec, v_dd: f64, p: &DevicePa
         counts,
         active,
         current_sum,
+    }
+}
+
+/// Result of one parasitic-fidelity tile step: the functional partial
+/// counts (identical to the ideal step — thresholding stays count-exact
+/// at the row-group heads), plus the attenuated per-row electrical
+/// currents the Thevenin ladder actually delivers.
+#[derive(Clone, Debug)]
+pub struct ParasiticStep {
+    /// Partial dot-product counts, bit-identical to [`tile_step`].
+    pub counts: Vec<u32>,
+    /// Driven word lines in this tile's input slice.
+    pub active: u32,
+    /// Per-row attenuated output currents \[A\] — bit-exact with the
+    /// scalar parasitic oracle
+    /// ([`Subarray::tmvm_rows_scalar`](crate::array::Subarray::tmvm_rows_scalar)).
+    pub currents: Vec<f64>,
+    /// Summed output current (energy/link intensity).
+    pub current_sum: f64,
+    /// Rows whose attenuated current still reached `I_RESET` — an
+    /// operating-window violation the run report surfaces.
+    pub reset_violations: u32,
+}
+
+impl ParasiticStep {
+    /// The count/current view the executor's dataflow consumes.
+    pub fn into_tile_step(self) -> TileStep {
+        TileStep {
+            counts: self.counts,
+            active: self.active,
+            current_sum: self.current_sum,
+        }
+    }
+}
+
+/// [`tile_step`] at parasitic fidelity: counts stay exact, but every
+/// row's current flows through its own Appendix-A Thevenin equivalent
+/// (`thevenin[r]` = the ladder seen by local row `r+1` of the tile's
+/// subarray). The arithmetic — conductance sum in column order at the
+/// programmed endpoints, then `α·V / (R_th + 1/Σg + 1/G_C)`, accumulated
+/// in row order — replicates the scalar oracle exactly, so the result is
+/// bit-identical in f64 (pinned by `tests/prop_parasitic.rs`).
+pub fn tile_step_parasitic(
+    weights: &[Vec<bool>],
+    x: &[bool],
+    v_dd: f64,
+    p: &DeviceParams,
+    thevenin: &[LadderThevenin],
+) -> ParasiticStep {
+    debug_assert!(weights.len() <= thevenin.len(), "one ladder per tile row");
+    let active = x.iter().filter(|&&b| b).count() as u32;
+    let mut counts = Vec::with_capacity(weights.len());
+    let mut currents = Vec::with_capacity(weights.len());
+    let mut current_sum = 0.0;
+    let mut reset_violations = 0u32;
+    for (r, row) in weights.iter().enumerate() {
+        debug_assert_eq!(row.len(), x.len(), "input slice width");
+        let mut count = 0u32;
+        // driven-column conductance sum, in column order at the
+        // programmed endpoints — the same walk (and f64 accumulation
+        // order) as the oracle's `top_conductance` loop
+        let mut g_sum = 0.0;
+        for (&w, &xi) in row.iter().zip(x) {
+            if xi {
+                g_sum += if w { p.g_c } else { p.g_a };
+                if w {
+                    count += 1;
+                }
+            }
+        }
+        let i_t = if g_sum == 0.0 {
+            0.0
+        } else {
+            let th = thevenin[r];
+            // wire Thevenin drives input network + output cell
+            let r_path = th.r_th + 1.0 / g_sum + 1.0 / p.g_c;
+            th.alpha * v_dd / r_path
+        };
+        if i_t >= p.i_reset {
+            reset_violations += 1;
+        }
+        counts.push(count);
+        currents.push(i_t);
+        current_sum += i_t;
+    }
+    ParasiticStep {
+        counts,
+        active,
+        currents,
+        current_sum,
+        reset_violations,
     }
 }
 

@@ -11,11 +11,44 @@
 //! the node's occupancy serializes them (visible as utilization in the
 //! run report).
 
+use crate::analysis::ArrayDesign;
 use crate::device::DeviceParams;
 use crate::engine::EngineError;
+use crate::interconnect::LineConfig;
 use crate::nn::BinaryLayer;
 use crate::scaling::Tiling;
 use std::ops::Range;
+
+/// Electrical fidelity of a fabric tile step.
+///
+/// * [`Ideal`](Fidelity::Ideal) — Eq. 3 row currents, no wire parasitics;
+///   tile steps take the packed popcount fast path. The historical
+///   behavior and the default.
+/// * [`Parasitic`](Fidelity::Parasitic) — every tile step runs the
+///   per-cell electrical walk through the Appendix-A Thevenin ladder of
+///   its own subarray position (driver + interlink switch resistance,
+///   engaged column span), booking attenuated row currents and reporting
+///   per-tile noise-margin minima. Bit-exact with the
+///   `tmvm_rows_scalar` parasitic oracle (pinned by
+///   `tests/prop_parasitic.rs`); the packed fast path is refused behind
+///   the typed `EngineError::PackedFidelity` guard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Ideal Eq. 3 currents, packed fast path (the default).
+    #[default]
+    Ideal,
+    /// Per-cell parasitic walk: attenuated currents + margin telemetry.
+    Parasitic,
+}
+
+impl Fidelity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ideal => "ideal",
+            Self::Parasitic => "parasitic",
+        }
+    }
+}
 
 /// How tiles walk the node grid during placement.
 ///
@@ -104,6 +137,20 @@ pub struct FabricConfig {
     pub t_inject: f64,
     /// Node-order strategy used by [`place_layers`].
     pub strategy: PlacementStrategy,
+    /// Electrical fidelity of every tile step (default: ideal).
+    pub fidelity: Fidelity,
+    /// Metal-line configuration of each subarray's parasitic ladder
+    /// (Table I; default config 3, the paper's best).
+    pub line_config: LineConfig,
+    /// Cell length multiple of the configuration minimum (Table II
+    /// best-design default: 3).
+    pub l_scale: f64,
+    /// Cell width multiple of the configuration minimum (default: 1).
+    pub w_scale: f64,
+    /// Word-line driver resistance at the grid origin \[Ω\]; each
+    /// interlink hop from the origin adds one `r_switch` in series (the
+    /// switch fabric sits between the drivers and a far subarray).
+    pub r_driver: f64,
 }
 
 impl FabricConfig {
@@ -123,6 +170,11 @@ impl FabricConfig {
             r_switch: 50.0,
             t_inject: device.t_set,
             strategy: PlacementStrategy::RoundRobin,
+            fidelity: Fidelity::Ideal,
+            line_config: LineConfig::config3(),
+            l_scale: 3.0,
+            w_scale: 1.0,
+            r_driver: 100.0,
             device,
         }
     }
@@ -131,6 +183,34 @@ impl FabricConfig {
     pub fn with_strategy(mut self, strategy: PlacementStrategy) -> Self {
         self.strategy = strategy;
         self
+    }
+
+    /// Same config at a different [`Fidelity`].
+    pub fn with_fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = fidelity;
+        self
+    }
+
+    /// The [`ArrayDesign`] a placed tile's subarray realizes: the shared
+    /// tile geometry and electrical template, a driver resistance grown by
+    /// one interlink switch per hop from the grid origin, and the engaged
+    /// column span the tile actually drives. This is the design the
+    /// parasitic tile step's Thevenin ladder — and the scalar oracle it is
+    /// pinned against — are computed from.
+    pub fn tile_design(&self, tile: &TileSlice) -> ArrayDesign {
+        let (gr, gc) = self.node_coords(tile.node);
+        let hops = (gr + gc) as f64;
+        let mut design = ArrayDesign::new(
+            self.tile_rows,
+            self.tile_cols,
+            self.line_config.clone(),
+            self.l_scale,
+            self.w_scale,
+        )
+        .with_driver(self.r_driver + hops * self.r_switch)
+        .with_span(tile.col_range.len().clamp(1, self.tile_cols));
+        design.device = self.device;
+        design
     }
 
     /// Reject zero grid/tile dimensions with a typed error.

@@ -108,8 +108,12 @@
 //!   wire configurations of Table I.
 //! * [`analysis`] — the paper's core contribution: the recursive
 //!   `R_th`/`α_th` Thevenin model (Appendix A), the ideal voltage windows
-//!   (Eqs. 4–5), the noise margin (Eq. 7), acceptable-region geometry and
-//!   maximum-subarray-size search.
+//!   (Eqs. 4–5), the noise margin (Eq. 7), acceptable-region geometry,
+//!   maximum-subarray-size search, and the seeded Monte Carlo
+//!   variability engine ([`analysis::variability_sweep`]): lognormal
+//!   conductance/driver corners over the array-size ladder, reporting
+//!   noise-margin and digit-accuracy distributions per size (served as
+//!   the byte-deterministic `xpoint montecarlo` exhibit).
 //! * [`array`] — the 3D XPoint subarray state machine and the TMVM
 //!   (thresholded matrix–vector multiply) engine, in both ideal (Eq. 3) and
 //!   parasitic-aware modes, with energy/latency/area accounting and the two
@@ -121,7 +125,11 @@
 //!   networks tiled across the grid, with image-level pipelining,
 //!   per-subarray occupancy, interlink traffic/latency and energy; tile
 //!   placement is strategy-selectable ([`fabric::PlacementStrategy`]:
-//!   round-robin or the locality-aware serpentine), and
+//!   round-robin or the locality-aware serpentine), tile steps run at a
+//!   selectable electrical fidelity ([`fabric::Fidelity`]: ideal packed
+//!   popcounts, or the parasitic per-cell Thevenin walk with per-tile
+//!   noise-margin minima — pinned bit-exact against the scalar oracle by
+//!   `tests/prop_parasitic.rs`), and
 //!   [`fabric::FabricExecutor::reprogram`] rewrites the placed weights in
 //!   place (program traffic over the same spine and write drivers).
 //! * [`nn`] — the binary neural-network mapping (Figs. 4 and 8), the
@@ -150,7 +158,10 @@
 //!   out-of-order completion, rolling weight swaps through the
 //!   [`engine::ShardState`] lifecycle, elastic spawn/retire with
 //!   pulse-endurance wear budgets when built from an
-//!   [`engine::AutoscaleSpec`]) behind the
+//!   [`engine::AutoscaleSpec`], and a parasitic-fidelity **canary**
+//!   slot (`--shards N --canary F`) that mirrors a deterministic sample
+//!   of live traffic and reports ideal-vs-parasitic divergence through
+//!   [`engine::CanaryReport`]) behind the
 //!   [`engine::EngineSpec::build`] registry.
 //! * [`net`] — multi-host serving: a length-prefixed, versioned wire
 //!   protocol ([`net::Msg`]) for everything that drives a shard

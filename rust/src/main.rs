@@ -43,12 +43,19 @@ COMMANDS:
             elastic engine — scale-up/down decisions, spawn/retire events,
             wear budgets   --min N --max N --batch N --budget PULSES
             [--json] (machine-readable timeline via util::json)
+  montecarlo Monte Carlo variability sweep: device corners + resistance
+            variation over the array sizes — noise-margin distribution,
+            margin failure rate and digit-accuracy distribution per size
+            --seed N --trials N [--json] (seed-deterministic, byte-stable)
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
             [--shards N]          (N async engine shards per worker)
             [--autoscale MIN,MAX] (elastic shards: queue-driven
             spawn/retire between MIN and MAX, evaluated live)
+            [--canary FRACTION]   (one parasitic-fidelity shard mirrors
+            FRACTION of traffic behind the ideal fleet; divergence and
+            noise-margin telemetry land in the serve report)
             [--remote ADDR[,ADDR..]] (remote shard hosts, host:port or
             unix:/path — alone: the whole engine; with --shards or
             --autoscale: extra shards joining the local fleet)
@@ -232,6 +239,18 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
             }
             Ok(())
         }
+        Some("montecarlo") => {
+            let seed = args.get_usize("seed", report::MC_SEED as usize)? as u64;
+            let trials = args.get_usize("trials", report::MC_TRIALS)?;
+            let rows = report::montecarlo_rows(seed, trials)?;
+            if args.has_flag("json") {
+                println!("{}", report::montecarlo_json(seed, trials, &rows).pretty());
+            } else {
+                print!("{}", report::montecarlo_table(&rows).render());
+                println!("{}", report::montecarlo_summary_line(&rows));
+            }
+            Ok(())
+        }
         Some("serve") => serve(args),
         Some("shard-host") => shard_host(args),
         Some("help") | None => {
@@ -382,6 +401,18 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
             snap.retires,
             snap.scale_vetoes,
         );
+    }
+    if let Some(c) = snap.canary {
+        println!(
+            "canary:          {} images sampled, {} batches compared, {} divergent ({})",
+            c.sampled_images,
+            c.compared_batches,
+            c.divergent_images,
+            format_pct(c.divergence_rate()),
+        );
+        if c.margin_min.is_finite() {
+            println!("canary margin:   {:.4} V worst-case noise margin", c.margin_min);
+        }
     }
     // per-shard breakdown (one line per engine shard, across all workers)
     if snap.shards.len() > 1 {

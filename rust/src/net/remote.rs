@@ -346,6 +346,9 @@ impl Engine for RemoteBackend {
             program_energy: l.program_energy - b.program_energy,
             wear_pulses: l.wear_pulses.saturating_sub(b.wear_pulses),
             utilization: l.utilization.clone(),
+            // wire v2 does not carry margin telemetry — the decoder pins
+            // the no-margin state (+∞, the min-merge identity)
+            margin_min: l.margin_min,
         }
     }
 

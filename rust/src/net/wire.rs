@@ -422,6 +422,10 @@ impl<'a> Reader<'a> {
             program_energy: self.f64()?,
             wear_pulses: self.u64()?,
             utilization: Vec::new(),
+            // not carried by wire v2: a remote shard's margin telemetry
+            // stays host-side, so the decoder reports the no-margin state
+            // (the min-merge identity) rather than a fake closed margin
+            margin_min: f64::INFINITY,
         };
         let n = self.count(8)?;
         t.utilization = (0..n).map(|_| self.f64()).collect::<Result<_, _>>()?;

@@ -5,6 +5,7 @@
 pub mod autoscale;
 pub mod exhibits;
 pub mod fabric;
+pub mod montecarlo;
 pub mod reprogram;
 pub mod sharding;
 pub mod table2;
@@ -18,6 +19,10 @@ pub use exhibits::{
     Fig13Series,
 };
 pub use fabric::{fabric_scaling_rows, fabric_scaling_table, FabricScalingRow, FABRIC_GRIDS};
+pub use montecarlo::{
+    montecarlo_json, montecarlo_rows, montecarlo_summary_line, montecarlo_table, MC_SEED,
+    MC_TRIALS,
+};
 pub use reprogram::{
     perturbed_workload, reprogram_summary, reprogram_table, reprogram_timeline,
     ReprogramWaveRow, REPROGRAM_SHARDS, REPROGRAM_WAVES,

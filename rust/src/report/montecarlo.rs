@@ -1,0 +1,188 @@
+//! Monte Carlo variability exhibit (beyond the paper's nominal-corner
+//! tables): sweep device corners and resistance variation over the array
+//! sizes and show, per size, the noise-margin distribution, the margin
+//! failure rate, and the digit-accuracy distribution under variation.
+//!
+//! The sweep is fully deterministic for a given seed (paired PCG streams,
+//! see [`crate::analysis::montecarlo`]), so the `--json` form — which
+//! round-trips through [`crate::util::json`] — can be diffed byte-for-byte
+//! across runs and machines; CI pins it against a checked-in golden file.
+
+use crate::analysis::{variability_sweep, McConfig, McSizeResult};
+use crate::util::json::Json;
+use crate::util::si::format_pct;
+use crate::util::{Summary, Table};
+
+/// Default noise-margin trials per size of the exhibit.
+pub const MC_TRIALS: usize = 48;
+
+/// Default base seed of the exhibit (the corpus seed — the exhibit is an
+/// extension of the same workload story).
+pub const MC_SEED: u64 = 0x3d_c0ffee;
+
+/// Run the exhibit sweep with the template network.
+pub fn montecarlo_rows(seed: u64, trials: usize) -> crate::Result<Vec<McSizeResult>> {
+    let cfg = McConfig {
+        seed,
+        trials,
+        ..McConfig::default()
+    };
+    variability_sweep(&cfg, &super::table2::template_layer())
+}
+
+/// Render the per-size distribution table.
+pub fn montecarlo_table(rows: &[McSizeResult]) -> Table {
+    let mut t = Table::new("Monte Carlo — NM and accuracy under device variation")
+        .header(&[
+            "Subarray",
+            "NM (nom)",
+            "NM p50",
+            "NM p95..p99",
+            "NM min",
+            "Fail",
+            "Acc (mean)",
+            "Acc min",
+            "Reset",
+        ]);
+    for r in rows {
+        t.row(&[
+            format!("{}×{}", r.n_row, r.n_col),
+            format_pct(r.nm_nominal),
+            format_pct(r.nm.p50),
+            format!("{}..{}", format_pct(r.nm.p95), format_pct(r.nm.p99)),
+            format_pct(r.nm.min),
+            format_pct(r.failure_rate),
+            format_pct(r.accuracy.mean),
+            format_pct(r.accuracy.min),
+            format_pct(r.reset_rate),
+        ]);
+    }
+    t
+}
+
+/// One-line summary: the size axis against the failure axis.
+pub fn montecarlo_summary_line(rows: &[McSizeResult]) -> String {
+    let fails = rows
+        .iter()
+        .map(|r| format!("{}r:{}", r.n_row, format_pct(r.failure_rate)))
+        .collect::<Vec<_>>()
+        .join(" ");
+    format!(
+        "margin failure rate vs size: {} ({} corners/size, paired across sizes)",
+        fails,
+        rows.first().map_or(0, |r| r.nm.n),
+    )
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::Obj(vec![
+        ("n".into(), Json::Num(s.n as f64)),
+        ("mean".into(), Json::Num(s.mean)),
+        ("std".into(), Json::Num(s.std)),
+        ("min".into(), Json::Num(s.min)),
+        ("p50".into(), Json::Num(s.p50)),
+        ("p95".into(), Json::Num(s.p95)),
+        ("p99".into(), Json::Num(s.p99)),
+        ("max".into(), Json::Num(s.max)),
+    ])
+}
+
+/// The `--json` form: the whole sweep as a [`Json`] tree (stable key
+/// order; byte-deterministic for a given seed).
+pub fn montecarlo_json(seed: u64, trials: usize, rows: &[McSizeResult]) -> Json {
+    let sizes = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("n_row".into(), Json::Num(r.n_row as f64)),
+                ("n_col".into(), Json::Num(r.n_col as f64)),
+                ("nm_nominal".into(), Json::Num(r.nm_nominal)),
+                ("nm".into(), summary_json(&r.nm)),
+                ("nm_failures".into(), Json::Num(r.nm_failures as f64)),
+                ("failure_rate".into(), Json::Num(r.failure_rate)),
+                ("accuracy".into(), summary_json(&r.accuracy)),
+                ("reset_rate".into(), Json::Num(r.reset_rate)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("exhibit".into(), Json::Str("montecarlo".into())),
+        ("seed".into(), Json::Num(seed as f64)),
+        ("trials".into(), Json::Num(trials as f64)),
+        ("sizes".into(), Json::Arr(sizes)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_and_summary_render_every_size() {
+        let rows = montecarlo_rows(MC_SEED, 8).unwrap();
+        assert_eq!(rows.len(), McConfig::default().rows.len());
+        let t = montecarlo_table(&rows);
+        assert_eq!(t.n_rows(), rows.len());
+        let s = t.render();
+        assert!(s.contains("Fail"), "{s}");
+        let line = montecarlo_summary_line(&rows);
+        assert!(line.contains("failure rate") && line.contains("64r:"), "{line}");
+    }
+
+    /// Satellite pin: the `--json` exhibit output round-trips through
+    /// `util::json` bit-for-bit (parse ∘ render is the identity, and
+    /// rendering is a fixed point), its schema is stable, and a second
+    /// run with the same seed is byte-identical — the contract behind the
+    /// CI golden-file diff of `xpoint montecarlo --json`.
+    #[test]
+    fn json_snapshot_roundtrips_and_pins_the_schema() {
+        let rows = montecarlo_rows(MC_SEED, 8).unwrap();
+        let v = montecarlo_json(MC_SEED, 8, &rows);
+        let text = v.pretty();
+        let parsed = Json::parse(&text).expect("exhibit JSON parses");
+        assert_eq!(parsed, v, "parse ∘ pretty is the identity");
+        assert_eq!(
+            Json::parse(&parsed.render()).unwrap(),
+            v,
+            "compact form round-trips too"
+        );
+        // schema snapshot: exact top-level and per-size key order
+        match &v {
+            Json::Obj(entries) => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(keys, vec!["exhibit", "seed", "trials", "sizes"]);
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        let size0 = match v.get("sizes") {
+            Some(Json::Arr(sizes)) => &sizes[0],
+            other => panic!("expected sizes array, got {other:?}"),
+        };
+        match size0 {
+            Json::Obj(entries) => {
+                let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(
+                    keys,
+                    vec![
+                        "n_row",
+                        "n_col",
+                        "nm_nominal",
+                        "nm",
+                        "nm_failures",
+                        "failure_rate",
+                        "accuracy",
+                        "reset_rate"
+                    ]
+                );
+            }
+            other => panic!("expected size object, got {other:?}"),
+        }
+        // deterministic sweep: a second run produces the identical JSON
+        let rows2 = montecarlo_rows(MC_SEED, 8).unwrap();
+        assert_eq!(
+            montecarlo_json(MC_SEED, 8, &rows2).pretty(),
+            text,
+            "the sweep is bit-deterministic"
+        );
+    }
+}

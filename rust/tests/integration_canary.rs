@@ -1,0 +1,249 @@
+//! Integration: the parasitic canary shard. A mixed fleet — N ideal
+//! primaries plus one parasitic-fidelity canary — serves a seeded trace
+//! with exactly-once ticket semantics while the canary shadows a
+//! deterministic sample of the traffic. The divergence counter must
+//! match an offline ideal-vs-parasitic replay of the same sampled
+//! batches, shadow tickets must never surface to the caller, and a
+//! rolling swap must preserve the canary designation.
+
+use std::time::Duration;
+use xpoint_imc::engine::{
+    ArraySpec, BackendKind, Engine, EngineSpec, ShardedEngine,
+};
+use xpoint_imc::nn::{BinaryLayer, PackedBatch};
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, theta: usize) -> BinaryLayer {
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.45)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+fn random_images(rng: &mut Pcg32, m: usize, n_in: usize) -> Vec<Vec<bool>> {
+    (0..m)
+        .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+        .collect()
+}
+
+fn array() -> ArraySpec {
+    ArraySpec {
+        rows: 64,
+        cols: 32,
+        span: Some(20),
+        ..ArraySpec::default()
+    }
+}
+
+fn base_spec(kind: BackendKind, layers: &[BinaryLayer]) -> EngineSpec {
+    EngineSpec::new(kind)
+        .with_array(array())
+        .with_batching(32, 200)
+        .with_layers(layers.to_vec())
+}
+
+/// `primaries` ideal shards + one parasitic canary sampling `fraction`.
+fn canary_fleet(layers: &[BinaryLayer], primaries: usize, fraction: f64) -> ShardedEngine {
+    let mut factories = base_spec(BackendKind::Ideal, layers)
+        .with_workers(primaries)
+        .build_factories()
+        .expect("ideal primaries");
+    factories.push(
+        base_spec(BackendKind::Parasitic, layers)
+            .build()
+            .expect("parasitic canary"),
+    );
+    ShardedEngine::with_canary(factories, fraction).expect("canary fleet")
+}
+
+/// Pump events until `compared` mirrored batches have settled (bounded).
+fn settle_canary(e: &mut ShardedEngine, compared: u64) {
+    for _ in 0..10_000 {
+        if e.canary_report().expect("canary fleet").compared_batches >= compared {
+            return;
+        }
+        e.wait_event(Duration::from_millis(1));
+    }
+    panic!("canary comparisons never settled");
+}
+
+/// The submission indices the deterministic stride sampler fires on —
+/// the exact accumulator walk the engine performs at submit time, so an
+/// offline replay sees the same batches the canary mirrored.
+fn sampled_indices(n: usize, fraction: f64) -> Vec<usize> {
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for i in 0..n {
+        acc += fraction;
+        if acc >= 1.0 {
+            acc -= 1.0;
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// The tentpole contract: over a seeded trace on a 1-canary + 2-ideal
+/// fleet, (a) every caller ticket redeems exactly once and shadow
+/// tickets never surface, (b) the reported divergence equals an offline
+/// ideal-vs-parasitic replay of exactly the sampled batches, and (c) the
+/// canary's noise-margin telemetry reaches the engine aggregate.
+#[test]
+fn canary_divergence_matches_an_offline_replay() {
+    let mut rng = Pcg32::seeded(0xca4a51);
+    let layers = vec![random_layer(&mut rng, 10, 20, 3)];
+    let fraction = 0.4;
+    let mut fleet = canary_fleet(&layers, 2, fraction);
+    assert_eq!(fleet.canary_shard(), Some(2), "last slot is the canary");
+    assert_eq!(
+        fleet.capabilities().shards,
+        2,
+        "caps describe the primary pool only"
+    );
+
+    // seeded trace: 12 batches of varied size, submitted in order
+    let batches: Vec<Vec<Vec<bool>>> = (0..12)
+        .map(|i| random_images(&mut rng, 1 + (i % 5), 20))
+        .collect();
+    let tickets: Vec<_> = batches
+        .iter()
+        .map(|b| fleet.submit(b.clone()).expect("submit"))
+        .collect();
+
+    // exactly-once: each ticket redeems once, then is a typed error
+    for (k, &t) in tickets.iter().enumerate() {
+        let res = loop {
+            match fleet.poll(t).expect("poll") {
+                Some(res) => break res,
+                None => std::thread::yield_now(),
+            }
+        };
+        for (img, bits) in batches[k].iter().zip(&res.bits) {
+            assert_eq!(bits, &layers[0].forward(img), "batch {k} identity");
+        }
+        let err = fleet.poll(t).expect_err("redeemed tickets are gone");
+        assert!(
+            err.to_string().contains("never issued or already collected"),
+            "{err}"
+        );
+    }
+    // the canary settles its comparisons asynchronously
+    let sampled = sampled_indices(batches.len(), fraction);
+    settle_canary(&mut fleet, sampled.len() as u64);
+
+    // shadow tickets share the counter but must never be redeemable:
+    // once the mirrors settle, every id the caller was not handed is
+    // unknown to `poll` (while in flight they are invisible `Ok(None)`s)
+    let max_ticket = *tickets.iter().max().expect("tickets");
+    for t in 1..=max_ticket + 2 {
+        if tickets.contains(&t) {
+            continue;
+        }
+        let err = fleet.poll(t).expect_err("shadow tickets never surface");
+        assert!(
+            err.to_string().contains("never issued or already collected"),
+            "ticket {t}: {err}"
+        );
+    }
+    let report = fleet.canary_report().expect("canary fleet");
+    assert_eq!(report.compared_batches, sampled.len() as u64);
+    assert_eq!(
+        report.sampled_images,
+        sampled.iter().map(|&i| batches[i].len() as u64).sum::<u64>()
+    );
+
+    // offline replay: run exactly the sampled batches through a single
+    // ideal and a single parasitic engine and count differing images
+    let mut ideal = base_spec(BackendKind::Ideal, &layers)
+        .build_engine()
+        .expect("ideal replay");
+    let mut parasitic = base_spec(BackendKind::Parasitic, &layers)
+        .build_engine()
+        .expect("parasitic replay");
+    let mut divergent = 0u64;
+    for &i in &sampled {
+        let a = ideal.infer_batch(&batches[i]).expect("ideal batch");
+        let b = parasitic.infer_batch(&batches[i]).expect("parasitic batch");
+        divergent += a.bits.iter().zip(&b.bits).filter(|(x, y)| x != y).count() as u64;
+    }
+    assert_eq!(
+        report.divergent_images, divergent,
+        "live divergence counter must equal the offline replay"
+    );
+
+    // the canary's electrical window reaches the aggregate telemetry
+    assert!(report.margin_min.is_finite(), "canary served → margin known");
+    assert_eq!(fleet.telemetry().margin_min, report.margin_min);
+    // primaries took all 12 batches; the canary mirrored the sample
+    let per_shard = fleet.shard_telemetry();
+    assert_eq!(per_shard[0].batches + per_shard[1].batches, 12);
+    assert_eq!(per_shard[2].batches, sampled.len() as u64);
+}
+
+/// A rolling swap walks the canary like any serving shard but never
+/// steals its designation: after `swap_network` the same slot is still
+/// the canary, mirrors keep flowing, and primaries serve the new weights.
+#[test]
+fn rolling_swap_preserves_the_canary_designation() {
+    let mut rng = Pcg32::seeded(0x50ab);
+    let layers = vec![random_layer(&mut rng, 8, 20, 3)];
+    let mut fleet = canary_fleet(&layers, 2, 1.0);
+    let canary = fleet.canary_shard().expect("designated");
+
+    let warm = random_images(&mut rng, 4, 20);
+    let res = fleet.infer_batch(&warm).expect("pre-swap batch");
+    for (img, bits) in warm.iter().zip(&res.bits) {
+        assert_eq!(bits, &layers[0].forward(img), "pre-swap identity");
+    }
+    settle_canary(&mut fleet, 1);
+
+    // rolling swap to fresh weights of the same shape
+    let target = vec![random_layer(&mut rng, 8, 20, 2)];
+    let swap = fleet.swap_network(target.clone()).expect("rolling swap");
+    assert!(swap.set_pulses + swap.reset_pulses > 0, "weights changed");
+    assert_eq!(
+        fleet.canary_shard(),
+        Some(canary),
+        "swap must not reassign the canary slot"
+    );
+
+    // post-swap traffic serves the new network and still gets mirrored
+    let after = random_images(&mut rng, 3, 20);
+    let res = fleet.infer_batch(&after).expect("post-swap batch");
+    for (img, bits) in after.iter().zip(&res.bits) {
+        assert_eq!(bits, &target[0].forward(img), "post-swap identity");
+    }
+    settle_canary(&mut fleet, 2);
+    let report = fleet.canary_report().expect("canary fleet");
+    assert_eq!(report.compared_batches, 2);
+    assert_eq!(report.sampled_images, 4 + 3);
+}
+
+/// Packed submissions on a canary fleet: the primary rides the packed
+/// fast path, while the canary's mirror is unpacked to the scalar path
+/// (its parasitic fidelity refuses packed dispatch by typed error).
+#[test]
+fn packed_tickets_ride_the_scalar_mirror_path() {
+    let mut rng = Pcg32::seeded(0xbac4ed);
+    let layers = vec![random_layer(&mut rng, 6, 20, 2)];
+    let mut fleet = canary_fleet(&layers, 1, 1.0);
+
+    let images = random_images(&mut rng, 5, 20);
+    let packed = PackedBatch::from_images(&images).expect("packable");
+    let t = fleet.submit_packed(packed).expect("packed submit");
+    let res = loop {
+        match fleet.poll(t).expect("poll") {
+            Some(res) => break res,
+            None => std::thread::yield_now(),
+        }
+    };
+    for (img, bits) in images.iter().zip(&res.bits) {
+        assert_eq!(bits, &layers[0].forward(img), "packed identity");
+    }
+    settle_canary(&mut fleet, 1);
+    let report = fleet.canary_report().expect("canary fleet");
+    assert_eq!(report.sampled_images, 5);
+    assert_eq!(report.compared_batches, 1);
+}

@@ -1,0 +1,245 @@
+//! Property wall for the parasitic fabric fidelity: every placed tile's
+//! electrical step is **bit-exact** (f64 `to_bits`) with the cell-level
+//! scalar oracle [`Subarray::tmvm_rows_scalar`] evaluated on the same
+//! [`ArrayDesign`] — across arbitrary grids, tilings and
+//! non-lane-multiple widths — and the static noise-margin machinery the
+//! fidelity reports through is internally consistent
+//! ([`max_rows_for_nm`] really is the NM boundary, margins shrink
+//! monotonically with row count, the executor's `margin_min` is the min
+//! over its tile designs).
+
+use xpoint_imc::analysis::{ladder_thevenin, max_rows_for_nm, noise_margin, ArrayDesign};
+use xpoint_imc::array::{Level, Subarray, TmvmMode, TmvmOutcome};
+use xpoint_imc::fabric::{
+    place_layers, tile_step_parasitic, vdd_for_theta, FabricConfig, FabricExecutor, Fidelity,
+};
+use xpoint_imc::interconnect::LineConfig;
+use xpoint_imc::nn::BinaryLayer;
+use xpoint_imc::testing::{forall, Config};
+use xpoint_imc::util::Pcg32;
+
+fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize) -> BinaryLayer {
+    let theta = rng.range(1, 4);
+    BinaryLayer::new(
+        (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.bernoulli(0.5)).collect())
+            .collect(),
+        theta,
+    )
+}
+
+/// A random layer chain with matching inner dimensions.
+fn random_chain(rng: &mut Pcg32, l: usize, lo: usize, hi: usize) -> Vec<BinaryLayer> {
+    let dims: Vec<usize> = (0..=l).map(|_| rng.range(lo, hi)).collect();
+    (0..l)
+        .map(|k| random_layer(rng, dims[k + 1], dims[k]))
+        .collect()
+}
+
+/// Every parasitic tile step — for random grids, tile geometries and
+/// layer shapes (so tiles cover full, partial and non-lane-multiple
+/// row/column spans) — produces per-row currents, the current sum and
+/// the RESET-violation count bit-identical to the scalar oracle run on
+/// the tile's own [`ArrayDesign`] (position-dependent driver resistance,
+/// engaged span), with the tile padded to the full subarray the way the
+/// physical placement realizes it.
+#[test]
+fn parasitic_tile_steps_are_bit_exact_with_the_scalar_oracle() {
+    forall(
+        Config::default().cases(40),
+        "parasitic tile step vs scalar oracle",
+        |rng: &mut Pcg32| {
+            let gr = rng.range(1, 4);
+            let gc = rng.range(1, 4);
+            let tr = rng.range(3, 14);
+            let tc = rng.range(3, 14);
+            let l = rng.range(1, 4);
+            // dims up to ~2.3 tiles per axis: partial edge tiles abound
+            let layers = random_chain(rng, l, 2, 2 * tr.max(tc) + 4);
+            let cfg =
+                FabricConfig::new(gr, gc, tr, tc).with_fidelity(Fidelity::Parasitic);
+            let p = cfg.device;
+            let placement =
+                place_layers(&layers, &cfg).map_err(|e| format!("placement: {e:#}"))?;
+
+            // one random input vector per layer, sliced per tile
+            let x_full: Vec<Vec<bool>> = layers
+                .iter()
+                .map(|layer| (0..layer.n_in()).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+
+            for tile in &placement.tiles {
+                let v_dd = vdd_for_theta(layers[tile.layer].theta, &p);
+                let x_slice = &x_full[tile.layer][tile.col_range.clone()];
+                let design = cfg.tile_design(tile);
+
+                // the fabric path: the executor's per-tile ladder + step
+                let ladders: Vec<_> = (1..=tile.weights.len())
+                    .map(|row| ladder_thevenin(&design, row))
+                    .collect();
+                let step = tile_step_parasitic(&tile.weights, x_slice, v_dd, &p, &ladders);
+
+                // the oracle path: the tile padded onto its full subarray
+                // (absent rows floated, absent columns undriven)
+                let padded: Vec<Vec<bool>> = (0..design.n_row)
+                    .map(|r| {
+                        let mut row = vec![false; design.n_col];
+                        if let Some(w) = tile.weights.get(r) {
+                            row[..w.len()].copy_from_slice(w);
+                        }
+                        row
+                    })
+                    .collect();
+                let mut x_pad = vec![false; design.n_col];
+                x_pad[..x_slice.len()].copy_from_slice(x_slice);
+                let mut sa = Subarray::new(design.clone());
+                sa.program_level(Level::Top, &padded);
+                let rep = sa.tmvm_rows_scalar(
+                    &x_pad,
+                    0,
+                    v_dd,
+                    TmvmMode::Parasitic,
+                    tile.weights.len(),
+                );
+
+                let mut oracle_sum = 0.0;
+                let mut oracle_resets = 0u32;
+                for (r, w_row) in tile.weights.iter().enumerate() {
+                    if step.currents[r].to_bits() != rep.currents[r].to_bits() {
+                        return Err(format!(
+                            "layer {} tile ({},{}) row {r}: fabric {:e} vs oracle {:e}",
+                            tile.layer,
+                            tile.tile_row,
+                            tile.tile_col,
+                            step.currents[r],
+                            rep.currents[r]
+                        ));
+                    }
+                    oracle_sum += rep.currents[r];
+                    if rep.outcomes[r] == TmvmOutcome::ResetViolation {
+                        oracle_resets += 1;
+                    }
+                    // counts are the exact dot product, untouched by parasitics
+                    let count = w_row.iter().zip(x_slice).filter(|(&w, &x)| w && x).count();
+                    if step.counts[r] as usize != count {
+                        return Err(format!("row {r}: count {} != {count}", step.counts[r]));
+                    }
+                }
+                if step.current_sum.to_bits() != oracle_sum.to_bits() {
+                    return Err(format!(
+                        "current sum: fabric {:e} vs oracle {:e}",
+                        step.current_sum, oracle_sum
+                    ));
+                }
+                if step.reset_violations != oracle_resets {
+                    return Err(format!(
+                        "reset violations: fabric {} vs oracle {}",
+                        step.reset_violations, oracle_resets
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The executor's reported `margin_min` is exactly the minimum
+/// corner-case noise margin over its placed tiles' designs — and ideal
+/// fidelity reports no window at all (`+∞`).
+#[test]
+fn executor_margin_is_the_min_over_tile_designs() {
+    forall(
+        Config::default().cases(25),
+        "executor margin_min",
+        |rng: &mut Pcg32| {
+            let gr = rng.range(1, 4);
+            let gc = rng.range(1, 4);
+            let l = rng.range(1, 3);
+            let layers = random_chain(rng, l, 3, 21);
+            let cfg = FabricConfig::new(gr, gc, 8, 8).with_fidelity(Fidelity::Parasitic);
+            let exec = FabricExecutor::new(layers.clone(), cfg.clone())
+                .map_err(|e| format!("executor: {e:#}"))?;
+            let expected = exec
+                .placement()
+                .tiles
+                .iter()
+                .map(|t| noise_margin(&cfg.tile_design(t)).noise_margin())
+                .fold(f64::INFINITY, f64::min);
+            if exec.margin_min().to_bits() != expected.to_bits() {
+                return Err(format!(
+                    "executor margin {:e} != tile-design min {:e}",
+                    exec.margin_min(),
+                    expected
+                ));
+            }
+            // the run report carries the same number
+            let n_in = layers[0].n_in();
+            let images: Vec<Vec<bool>> =
+                vec![(0..n_in).map(|_| rng.bernoulli(0.5)).collect()];
+            let run = exec.run_batch(&images).map_err(|e| format!("run: {e:#}"))?;
+            if run.margin_min.to_bits() != expected.to_bits() {
+                return Err("run report margin diverges from executor".into());
+            }
+            // ideal fidelity models no electrical window
+            let ideal = FabricExecutor::new(
+                layers,
+                FabricConfig::new(gr, gc, 8, 8).with_fidelity(Fidelity::Ideal),
+            )
+            .map_err(|e| format!("ideal executor: {e:#}"))?;
+            if ideal.margin_min() != f64::INFINITY {
+                return Err("ideal fidelity should report +inf margin".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Noise margin shrinks monotonically as rows are added (more parasitic
+/// ladder to traverse), and [`max_rows_for_nm`] sits exactly on the
+/// boundary: the returned row count still meets the target, one more row
+/// does not (or the search reports 0 because even one row fails).
+#[test]
+fn margin_shrinks_with_rows_and_max_rows_is_the_boundary() {
+    forall(
+        Config::default().cases(60),
+        "NM row boundary",
+        |rng: &mut Pcg32| {
+            let cols = rng.range(16, 257);
+            let l_scale = 1.0 + rng.range(0, 5) as f64;
+            let template =
+                ArrayDesign::new(64, cols, LineConfig::config3(), l_scale, 1.0);
+            let nm_at = |n_row: usize| -> f64 {
+                let mut d = template.clone();
+                d.n_row = n_row;
+                noise_margin(&d).noise_margin()
+            };
+            // monotone non-increasing along a geometric row sweep
+            let mut prev = f64::INFINITY;
+            for n in [1usize, 2, 4, 16, 64, 256, 1024, 4096] {
+                let nm = nm_at(n);
+                if nm > prev {
+                    return Err(format!(
+                        "cols {cols} L{l_scale}: NM grew from {prev:e} to {nm:e} at {n} rows"
+                    ));
+                }
+                prev = nm;
+            }
+            // the search result brackets the target exactly
+            let target = 0.05 + 0.6 * rng.range(0, 1000) as f64 / 1000.0;
+            let n = max_rows_for_nm(&template, target);
+            if n == 0 {
+                if nm_at(1) >= target {
+                    return Err(format!("search gave 0 but one row meets NM {target}"));
+                }
+            } else if n < (1 << 24) {
+                if nm_at(n) < target {
+                    return Err(format!("{n} rows fails the target it was returned for"));
+                }
+                if nm_at(n + 1) >= target {
+                    return Err(format!("{} rows still meets NM {target}", n + 1));
+                }
+            }
+            Ok(())
+        },
+    );
+}
