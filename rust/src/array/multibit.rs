@@ -25,6 +25,24 @@ pub enum MultibitScheme {
     LowPower,
 }
 
+impl MultibitScheme {
+    /// Canonical spec-string token, as used in `--network multibit:B:SCHEME`.
+    pub fn name(self) -> &'static str {
+        match self {
+            MultibitScheme::AreaEfficient => "area",
+            MultibitScheme::LowPower => "lowpower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "area" => Some(MultibitScheme::AreaEfficient),
+            "lowpower" => Some(MultibitScheme::LowPower),
+            _ => None,
+        }
+    }
+}
+
 /// Cost estimate for one multi-bit TMVM dot product.
 #[derive(Clone, Copy, Debug)]
 pub struct MultibitCost {

@@ -53,6 +53,11 @@ pub struct MetricsSnapshot {
     /// per plain engine, one per shard of a sharded engine) — recorded at
     /// scheduler exit, so it is complete after `shutdown`.
     pub shards: Vec<Telemetry>,
+    /// Multibit N-ary resolution surcharge folded across the per-shard
+    /// telemetry \[J\]. Already included in each shard's `energy`; broken
+    /// out so operators can see what the resolution upgrade costs. Like
+    /// `shards`, complete only after `shutdown`. 0 on binary workloads.
+    pub multibit_energy: f64,
     /// Completed live weight swaps (one per worker engine per rolling
     /// update).
     pub swaps: u64,
@@ -183,6 +188,7 @@ impl Metrics {
                 None
             },
             shards: m.shards.clone(),
+            multibit_energy: m.shards.iter().map(|t| t.multibit_energy).sum(),
             swaps: m.swaps,
             set_pulses: m.set_pulses,
             reset_pulses: m.reset_pulses,
@@ -225,6 +231,7 @@ mod tests {
         assert_eq!(s.energy_per_image, 0.0);
         assert!(s.accuracy.is_none());
         assert!(s.shards.is_empty());
+        assert_eq!(s.multibit_energy, 0.0);
         assert_eq!(s.swaps, 0);
         assert_eq!(s.swap_energy, 0.0);
         assert_eq!((s.spawns, s.retires, s.scale_vetoes), (0, 0, 0));
@@ -335,11 +342,13 @@ mod tests {
             Telemetry {
                 images: 10,
                 energy: 1.0,
+                multibit_energy: 0.25,
                 ..Telemetry::default()
             },
             Telemetry {
                 images: 6,
                 energy: 0.5,
+                multibit_energy: 0.5,
                 ..Telemetry::default()
             },
         ]);
@@ -350,5 +359,6 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.shards.len(), 3);
         assert_eq!(s.shards.iter().map(|t| t.images).sum::<u64>(), 20);
+        assert!((s.multibit_energy - 0.75).abs() < 1e-12, "surcharge folds");
     }
 }

@@ -37,6 +37,7 @@ pub mod autoscale;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod trace;
 
 pub use crate::engine::{
     Engine as Backend, BackendFactory, InferenceResult, ShardedEngine, SimBackend, XlaBackend,
@@ -45,3 +46,4 @@ pub use autoscale::{AutoscalePolicy, ScaleDecision};
 pub use batcher::Batcher;
 pub use engine::{Coordinator, CoordinatorConfig, Prediction};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use trace::TrafficTrace;

@@ -1,0 +1,444 @@
+//! Seeded offered-load traces for trace-driven serving and exhibits.
+//!
+//! A [`TrafficTrace`] is the declarative form of "what arrives when":
+//! per-wave image counts for one or more tenants sharing a fleet. The
+//! serving shell (`xpoint serve --trace`) and the autoscale exhibit
+//! replay a trace wave by wave, so scheduling policies can be judged on
+//! *identical* offered load — change the policy, keep the trace, diff
+//! the timelines.
+//!
+//! Traces come from seeded generators (uniform / bursty / diurnal /
+//! multi-tenant) or from a JSON file, and record back to JSON
+//! ([`to_json_string`](TrafficTrace::to_json_string) /
+//! [`from_json`](TrafficTrace::from_json)) with the repo-wide config
+//! contract: unknown fields are rejected, parse ∘ pretty is the
+//! identity, and everything derived from the trace (digit streams
+//! included) is a pure function of its fields — replays are
+//! byte-deterministic across runs and machines.
+
+use crate::util::json::Json;
+use crate::util::Pcg32;
+
+/// The canonical burst: ramps, plateaus, decays to silence (in batches;
+/// generators scale it by the batch size). The trailing idle waves are
+/// what lets a low autoscale watermark retire shards.
+pub const BURST_SHAPE: [usize; 14] = [1, 1, 2, 5, 8, 8, 6, 4, 2, 1, 0, 0, 0, 0];
+
+/// Default wave count of the seeded diurnal / multi-tenant generators.
+pub const TRACE_WAVES: usize = 12;
+
+/// Multiplier folding a tenant index into its digit-stream seed (the
+/// 64-bit golden-ratio constant; tenant 0 keeps the trace seed exactly,
+/// so single-tenant traces reproduce the historical `DigitGen` stream).
+const TENANT_SEED_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// A deterministic offered-load trace: `waves[w][t]` images from tenant
+/// `t` in wave `w`. Every wave row spans all tenants (zeros for idle
+/// tenants), so the shape is rectangular and the total load per wave is
+/// a plain row sum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrafficTrace {
+    /// Generator name or file stem — lands in exhibit JSON so replays
+    /// are attributable.
+    pub name: String,
+    /// Seed for everything derived from the trace (wave jitter at
+    /// generation time, per-tenant digit streams at replay time).
+    pub seed: u64,
+    /// Tenant names, indexing the columns of `waves`.
+    pub tenants: Vec<String>,
+    /// Images per wave per tenant.
+    pub waves: Vec<Vec<usize>>,
+}
+
+impl TrafficTrace {
+    /// Steady load: one tenant offering `images` per wave for `waves`
+    /// waves.
+    pub fn uniform(seed: u64, waves: usize, images: usize) -> Self {
+        Self {
+            name: "uniform".into(),
+            seed,
+            tenants: vec!["default".into()],
+            waves: (0..waves.max(1)).map(|_| vec![images]).collect(),
+        }
+    }
+
+    /// The canonical burst ([`BURST_SHAPE`] × `batch` images per wave) —
+    /// exactly the offered load the autoscale exhibit has always
+    /// replayed, now in declarative form.
+    pub fn bursty(seed: u64, batch: usize) -> Self {
+        Self {
+            name: "bursty".into(),
+            seed,
+            tenants: vec!["default".into()],
+            waves: BURST_SHAPE.iter().map(|&b| vec![b * batch.max(1)]).collect(),
+        }
+    }
+
+    /// A quantized day: load follows one sinusoid period from trough to
+    /// peak (`peak` images) and back, with seeded per-wave jitter of up
+    /// to a quarter of the peak.
+    pub fn diurnal(seed: u64, waves: usize, peak: usize) -> Self {
+        let waves = waves.max(1);
+        let mut rng = Pcg32::seeded(seed ^ 0x00d1_0b17);
+        let rows = (0..waves)
+            .map(|w| {
+                let phase = w as f64 / waves as f64 * std::f64::consts::TAU;
+                let base = (peak as f64 * 0.5 * (1.0 - phase.cos())).round() as usize;
+                vec![base + rng.range(0, peak / 4 + 1)]
+            })
+            .collect();
+        Self {
+            name: "diurnal".into(),
+            seed,
+            tenants: vec!["default".into()],
+            waves: rows,
+        }
+    }
+
+    /// Three tenants sharing one fleet: phase-shifted diurnal curves
+    /// (peaks a third of a period apart) with independent seeded jitter —
+    /// the aggregate stays busy while each tenant's own load swings.
+    pub fn multi_tenant(seed: u64, waves: usize, peak: usize) -> Self {
+        let waves = waves.max(1);
+        let tenants: Vec<String> =
+            ["tenant-a", "tenant-b", "tenant-c"].iter().map(|s| s.to_string()).collect();
+        let mut rng = Pcg32::seeded(seed ^ 0x0031_7e4a);
+        let rows = (0..waves)
+            .map(|w| {
+                (0..tenants.len())
+                    .map(|t| {
+                        let phase = (w as f64 / waves as f64
+                            + t as f64 / tenants.len() as f64)
+                            * std::f64::consts::TAU;
+                        let base =
+                            (peak as f64 * 0.5 * (1.0 - phase.cos())).round() as usize;
+                        base + rng.range(0, peak / 4 + 1)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            name: "multitenant".into(),
+            seed,
+            tenants,
+            waves: rows,
+        }
+    }
+
+    /// Resolve a `--trace` argument: a generator name (`uniform` |
+    /// `bursty` | `diurnal` | `multitenant`, sized from the serving
+    /// batch) or a path to a recorded trace JSON file.
+    pub fn parse_arg(arg: &str, batch: usize, seed: u64) -> crate::Result<Self> {
+        let batch = batch.max(1);
+        match arg {
+            "uniform" => Ok(Self::uniform(seed, TRACE_WAVES, batch)),
+            "bursty" => Ok(Self::bursty(seed, batch)),
+            "diurnal" => Ok(Self::diurnal(seed, TRACE_WAVES, 4 * batch)),
+            "multitenant" => Ok(Self::multi_tenant(seed, TRACE_WAVES, 2 * batch)),
+            path if path.ends_with(".json") => {
+                let text = crate::util::io::read_text(std::path::Path::new(path))?;
+                Self::from_json(&text)
+                    .map_err(|e| anyhow::anyhow!("trace file {path}: {e}"))
+            }
+            other => anyhow::bail!(
+                "unknown trace '{other}' (expected uniform|bursty|diurnal|multitenant \
+                 or a recorded trace .json file)"
+            ),
+        }
+    }
+
+    /// Waves in the trace.
+    pub fn n_waves(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Tenants sharing the fleet.
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Total images offered in `wave`, across all tenants.
+    pub fn offered(&self, wave: usize) -> usize {
+        self.waves.get(wave).map(|row| row.iter().sum()).unwrap_or(0)
+    }
+
+    /// Total images across the whole trace.
+    pub fn total_images(&self) -> usize {
+        (0..self.n_waves()).map(|w| self.offered(w)).sum()
+    }
+
+    /// Seed of tenant `t`'s digit stream — a pure function of the trace
+    /// seed, so replays regenerate identical per-tenant request streams.
+    /// Tenant 0 keeps the trace seed itself (single-tenant traces
+    /// reproduce the historical serve stream bit for bit).
+    pub fn tenant_seed(&self, t: usize) -> u64 {
+        self.seed ^ (t as u64).wrapping_mul(TENANT_SEED_MIX)
+    }
+
+    /// Structural validation: rectangular waves over at least one named,
+    /// uniquely-named tenant.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("trace name is empty".into());
+        }
+        if self.tenants.is_empty() {
+            return Err("trace has no tenants".into());
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.is_empty() {
+                return Err(format!("tenant {i} has an empty name"));
+            }
+            if self.tenants[..i].contains(t) {
+                return Err(format!("duplicate tenant name '{t}'"));
+            }
+        }
+        if self.waves.is_empty() {
+            return Err("trace has no waves".into());
+        }
+        for (w, row) in self.waves.iter().enumerate() {
+            if row.len() != self.tenants.len() {
+                return Err(format!(
+                    "wave {w} has {} tenant column(s), expected {}",
+                    row.len(),
+                    self.tenants.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The JSON tree (stable key order; the seed renders as a hex string
+    /// because JSON numbers are f64 and would corrupt 64-bit seeds).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("seed".into(), Json::Str(format!("{:#x}", self.seed))),
+            (
+                "tenants".into(),
+                Json::Arr(self.tenants.iter().map(|t| Json::Str(t.clone())).collect()),
+            ),
+            (
+                "waves".into(),
+                Json::Arr(
+                    self.waves
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|&n| Json::Num(n as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Pretty-printed JSON document (what `--trace-out` records).
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse a recorded trace. Unknown fields are rejected (typo
+    /// protection, like every config surface in this repo); `seed`
+    /// accepts `0x…` hex or decimal.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let entries = match &v {
+            Json::Obj(entries) => entries,
+            _ => return Err("trace must be a JSON object".into()),
+        };
+        let mut name: Option<String> = None;
+        let mut seed: Option<u64> = None;
+        let mut tenants: Option<Vec<String>> = None;
+        let mut waves: Option<Vec<Vec<usize>>> = None;
+        for (key, val) in entries {
+            match key.as_str() {
+                "name" => {
+                    name = Some(
+                        val.as_str().ok_or("field 'name': expected a string")?.to_string(),
+                    )
+                }
+                "seed" => seed = Some(parse_seed(val)?),
+                "tenants" => {
+                    let items = match val {
+                        Json::Arr(items) => items,
+                        _ => return Err("field 'tenants': expected an array".into()),
+                    };
+                    tenants = Some(
+                        items
+                            .iter()
+                            .map(|t| {
+                                t.as_str()
+                                    .map(str::to_string)
+                                    .ok_or_else(|| "tenant names must be strings".to_string())
+                            })
+                            .collect::<Result<_, _>>()?,
+                    );
+                }
+                "waves" => {
+                    let rows = match val {
+                        Json::Arr(rows) => rows,
+                        _ => return Err("field 'waves': expected an array".into()),
+                    };
+                    waves = Some(
+                        rows.iter()
+                            .enumerate()
+                            .map(|(w, row)| match row {
+                                Json::Arr(cells) => cells
+                                    .iter()
+                                    .map(|c| {
+                                        c.as_usize().ok_or_else(|| {
+                                            format!(
+                                                "wave {w}: image counts must be \
+                                                 non-negative integers"
+                                            )
+                                        })
+                                    })
+                                    .collect::<Result<Vec<usize>, _>>(),
+                                _ => Err(format!("wave {w} must be an array")),
+                            })
+                            .collect::<Result<_, _>>()?,
+                    );
+                }
+                other => return Err(format!("unknown field '{other}'")),
+            }
+        }
+        let trace = Self {
+            name: name.ok_or("missing field 'name'")?,
+            seed: seed.unwrap_or(crate::nn::dataset::TEST_SEED),
+            tenants: tenants.ok_or("missing field 'tenants'")?,
+            waves: waves.ok_or("missing field 'waves'")?,
+        };
+        trace.validate()?;
+        Ok(trace)
+    }
+}
+
+fn parse_seed(v: &Json) -> Result<u64, String> {
+    let s = v.as_str().ok_or("field 'seed': expected a string (\"0x…\" or decimal)")?;
+    let parsed = match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse::<u64>(),
+    };
+    parsed.map_err(|_| format!("field 'seed': '{s}' is not a u64"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_reproduces_the_canonical_burst() {
+        let t = TrafficTrace::bursty(7, 16);
+        assert_eq!(t.n_waves(), BURST_SHAPE.len());
+        assert_eq!(t.n_tenants(), 1);
+        for (w, &b) in BURST_SHAPE.iter().enumerate() {
+            assert_eq!(t.offered(w), b * 16, "wave {w}");
+        }
+        assert_eq!(t.total_images(), BURST_SHAPE.iter().sum::<usize>() * 16);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        assert_eq!(
+            TrafficTrace::diurnal(42, 12, 64),
+            TrafficTrace::diurnal(42, 12, 64)
+        );
+        assert_ne!(
+            TrafficTrace::diurnal(42, 12, 64).waves,
+            TrafficTrace::diurnal(43, 12, 64).waves,
+            "seed moves the jitter"
+        );
+        let mt = TrafficTrace::multi_tenant(9, 12, 32);
+        assert_eq!(mt, TrafficTrace::multi_tenant(9, 12, 32));
+        assert_eq!(mt.n_tenants(), 3);
+        for row in &mt.waves {
+            assert_eq!(row.len(), 3);
+        }
+        // phase shift: the tenants do not peak in the same wave
+        let peaks: Vec<usize> = (0..3)
+            .map(|t| {
+                (0..mt.n_waves())
+                    .max_by_key(|&w| mt.waves[w][t])
+                    .unwrap()
+            })
+            .collect();
+        assert!(
+            peaks[0] != peaks[1] || peaks[1] != peaks[2],
+            "phase-shifted tenants should peak apart: {peaks:?}"
+        );
+    }
+
+    #[test]
+    fn tenant_seeds_are_distinct_and_anchor_tenant_zero() {
+        let t = TrafficTrace::multi_tenant(0x3d_c0ffee, 8, 16);
+        assert_eq!(t.tenant_seed(0), t.seed, "tenant 0 keeps the trace seed");
+        assert_ne!(t.tenant_seed(0), t.tenant_seed(1));
+        assert_ne!(t.tenant_seed(1), t.tenant_seed(2));
+    }
+
+    #[test]
+    fn json_roundtrip_is_the_identity() {
+        for t in [
+            TrafficTrace::uniform(1, 4, 8),
+            TrafficTrace::bursty(0xdead_beef_dead_beef, 32),
+            TrafficTrace::diurnal(5, 10, 40),
+            TrafficTrace::multi_tenant(6, 9, 24),
+        ] {
+            let text = t.to_json_string();
+            let parsed = TrafficTrace::from_json(&text).expect("parse");
+            assert_eq!(parsed, t, "value roundtrip");
+            assert_eq!(parsed.to_json_string(), text, "serialization is a fixed point");
+            // parse ∘ pretty at the JSON-tree level too
+            assert_eq!(Json::parse(&text).unwrap(), t.to_json());
+        }
+    }
+
+    #[test]
+    fn json_rejects_unknown_fields_and_bad_shapes() {
+        let err = TrafficTrace::from_json(
+            r#"{"name":"x","tenants":["a"],"waves":[[1]],"tennants":["b"]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field 'tennants'"), "{err}");
+        let err =
+            TrafficTrace::from_json(r#"{"name":"x","tenants":["a"],"waves":[[1,2]]}"#)
+                .unwrap_err();
+        assert!(err.contains("tenant column"), "{err}");
+        let err = TrafficTrace::from_json(r#"{"tenants":["a"],"waves":[[1]]}"#).unwrap_err();
+        assert!(err.contains("missing field 'name'"), "{err}");
+        let err = TrafficTrace::from_json(
+            r#"{"name":"x","tenants":["a","a"],"waves":[[1,1]]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("duplicate tenant"), "{err}");
+        let err = TrafficTrace::from_json(
+            r#"{"name":"x","seed":"zz","tenants":["a"],"waves":[[1]]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("not a u64"), "{err}");
+        // a 64-bit seed survives the hex encoding exactly
+        let t = TrafficTrace {
+            seed: u64::MAX,
+            ..TrafficTrace::uniform(0, 2, 1)
+        };
+        let parsed = TrafficTrace::from_json(&t.to_json_string()).unwrap();
+        assert_eq!(parsed.seed, u64::MAX);
+    }
+
+    #[test]
+    fn parse_arg_resolves_generators_and_rejects_nonsense() {
+        let t = TrafficTrace::parse_arg("bursty", 16, 3).unwrap();
+        assert_eq!((t.name.as_str(), t.seed), ("bursty", 3));
+        assert_eq!(t.offered(4), 8 * 16);
+        assert!(TrafficTrace::parse_arg("uniform", 8, 0).is_ok());
+        assert!(TrafficTrace::parse_arg("diurnal", 8, 0).is_ok());
+        let mt = TrafficTrace::parse_arg("multitenant", 8, 0).unwrap();
+        assert_eq!(mt.n_tenants(), 3);
+        let err = TrafficTrace::parse_arg("sawtooth", 16, 0).unwrap_err();
+        assert!(err.to_string().contains("unknown trace"), "{err}");
+        let err = TrafficTrace::parse_arg("/nonexistent/trace.json", 16, 0).unwrap_err();
+        assert!(err.to_string().contains("nonexistent"), "{err}");
+    }
+}

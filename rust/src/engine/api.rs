@@ -137,6 +137,13 @@ pub struct Telemetry {
     /// (swaps, plus spawn programming for elastic shards) — the endurance
     /// wear the autoscaler budgets against.
     pub wear_pulses: u64,
+    /// Energy premium of serving an N-ary multibit workload \[J\]: the
+    /// per-dot-product surcharge of the configured scheme (paper Table
+    /// III, [`multibit_tmvm_cost`](crate::array::multibit::multibit_tmvm_cost))
+    /// times the logical dot products served. Already included in
+    /// `energy`; broken out so operators can see what the resolution
+    /// upgrade costs. 0 on binary workloads.
+    pub multibit_energy: f64,
     /// Per-subarray busy fraction of the most recent batch.
     pub utilization: Vec<f64>,
     /// Worst (minimum) noise margin across the engine's arrays, for
@@ -166,6 +173,7 @@ impl Default for Telemetry {
             program_time: 0.0,
             program_energy: 0.0,
             wear_pulses: 0,
+            multibit_energy: 0.0,
             utilization: Vec::new(),
             margin_min: f64::INFINITY,
         }

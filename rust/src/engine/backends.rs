@@ -37,6 +37,11 @@ pub struct SimBackend {
     packed: PackedLayer,
     subarray: Subarray,
     mode: TmvmMode,
+    /// Per-image energy surcharge of an N-ary multibit workload (0 for
+    /// binary networks) — see [`EngineSpec::multibit_premium`].
+    ///
+    /// [`EngineSpec::multibit_premium`]: super::spec::EngineSpec::multibit_premium
+    multibit_premium: f64,
     telemetry: Telemetry,
     completions: Completions,
 }
@@ -78,9 +83,17 @@ impl SimBackend {
             layer,
             subarray: Subarray::new(design),
             mode,
+            multibit_premium: 0.0,
             telemetry,
             completions: Completions::default(),
         })
+    }
+
+    /// Price every served image with a multibit energy surcharge \[J\]
+    /// (booked into `energy` and broken out as `multibit_energy`).
+    pub fn with_multibit_premium(mut self, premium: f64) -> Self {
+        self.multibit_premium = premium;
+        self
     }
 
     pub fn layer(&self) -> &BinaryLayer {
@@ -95,14 +108,16 @@ impl Engine for SimBackend {
         // Table II accounting: compute (TMVM step) energy only — image
         // programming is the array's storage role, shared with memory use.
         let compute_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        let premium = self.multibit_premium * images.len() as f64;
         let res = InferenceResult {
             bits: run.outputs,
             classes,
             sim_time: run.time,
-            energy: compute_energy,
+            energy: compute_energy + premium,
             steps: self.layer.n_out() as u64,
         };
         self.telemetry.record(&res);
+        self.telemetry.multibit_energy += premium;
         Ok(res)
     }
 
@@ -155,14 +170,16 @@ impl Engine for SimBackend {
             .map(|i| self.packed.argmax_words(batch.row_words(i)))
             .collect();
         let compute_energy: f64 = run.steps.iter().map(|s| s.energy).sum();
+        let premium = self.multibit_premium * batch.len() as f64;
         let res = InferenceResult {
             bits: run.outputs,
             classes,
             sim_time: run.time,
-            energy: compute_energy,
+            energy: compute_energy + premium,
             steps: self.layer.n_out() as u64,
         };
         self.telemetry.record(&res);
+        self.telemetry.multibit_energy += premium;
         Ok(res)
     }
 
@@ -225,6 +242,8 @@ impl Engine for SimBackend {
 pub struct FabricBackend {
     exec: FabricExecutor,
     max_batch: usize,
+    /// Per-image multibit energy surcharge (0 for binary workloads).
+    multibit_premium: f64,
     telemetry: Telemetry,
     completions: Completions,
 }
@@ -252,9 +271,17 @@ impl FabricBackend {
         Ok(Self {
             exec,
             max_batch,
+            multibit_premium: 0.0,
             telemetry,
             completions: Completions::default(),
         })
+    }
+
+    /// Price every served image with a multibit energy surcharge \[J\]
+    /// (booked into `energy` and broken out as `multibit_energy`).
+    pub fn with_multibit_premium(mut self, premium: f64) -> Self {
+        self.multibit_premium = premium;
+        self
     }
 
     pub fn executor(&self) -> &FabricExecutor {
@@ -281,14 +308,16 @@ impl Engine for FabricBackend {
         );
         let run = self.exec.run_batch(images)?;
         let classes = Self::classes(&run);
+        let premium = self.multibit_premium * images.len() as f64;
         let res = InferenceResult {
             bits: run.outputs,
             classes,
             sim_time: run.makespan,
-            energy: run.energy,
+            energy: run.energy + premium,
             steps: run.steps,
         };
         self.telemetry.record(&res);
+        self.telemetry.multibit_energy += premium;
         self.telemetry.compute_energy += run.compute_energy;
         self.telemetry.link_energy += run.link_energy;
         self.telemetry.cycles += run.cycles;

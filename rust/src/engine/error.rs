@@ -135,7 +135,8 @@ impl fmt::Display for EngineError {
             ),
             Self::UnknownNetwork(s) => write!(
                 f,
-                "unknown network source '{s}' (expected auto|template|artifact)"
+                "unknown network source '{s}' (expected auto|template|artifact|\
+                 multibit:BITS[:SCHEME]|conv:FxKHxKW[:tN])"
             ),
             Self::UnknownPlacement(s) => write!(
                 f,

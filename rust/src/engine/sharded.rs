@@ -1285,6 +1285,7 @@ impl Engine for ShardedEngine {
             // host-tracked: includes the spawn programming a fresh slot's
             // inner engine never saw (it was constructed on the image)
             total.wear_pulses += s.pulses;
+            total.multibit_energy += t.multibit_energy;
             // min-merge: the fleet's margin is its worst shard's (the
             // no-report default is +∞, the identity of this fold)
             total.margin_min = total.margin_min.min(t.margin_min);

@@ -26,6 +26,7 @@ use super::backends::{FabricBackend, SimBackend, XlaBackend, XLA_GRAPH_BATCH};
 use super::error::EngineError;
 use super::sharded::{ShardBuilder, ShardedEngine};
 use crate::analysis::ArrayDesign;
+use crate::array::multibit::{multibit_tmvm_cost, MultibitCost, MultibitScheme, V_CEILING};
 use crate::array::TmvmMode;
 use crate::cli::Args;
 use crate::coordinator::autoscale::AutoscalePolicy;
@@ -362,24 +363,176 @@ pub enum NetworkSource {
     Template,
     /// Trained artifacts, required (`make artifacts`).
     Artifact,
+    /// N-ary multibit inference (`multibit:BITS[:SCHEME]`): the template
+    /// digit network quantized to `bits`-bit weights and lowered onto the
+    /// binary substrate the low-power way (Fig. 7(b) unary replication) —
+    /// `2^b − 1` columns per logical input. The per-dot-product energy
+    /// premium of the chosen scheme ([`multibit_tmvm_cost`]) lands in
+    /// [`Telemetry::multibit_energy`](super::api::Telemetry).
+    Multibit { bits: usize, scheme: MultibitScheme },
+    /// A binary conv bank (`conv:FxKHxKW[:tN]`): `filters` deterministic
+    /// Bernoulli(½) `kh×kw` filters over the 11×11 digit image, lowered
+    /// to ONE dense layer via the Toeplitz unroll
+    /// ([`BinaryConv2d::unrolled_layer`](crate::nn::BinaryConv2d::unrolled_layer))
+    /// so tiling, contention and reprogram pricing run unchanged.
+    Conv {
+        filters: usize,
+        kh: usize,
+        kw: usize,
+        theta: usize,
+    },
 }
 
+/// Word-line supply at the Table II operating point \[V\] — the voltage
+/// every multibit cost estimate and feasibility check prices against.
+pub const MULTIBIT_V_DD: f64 = 0.9;
+
 impl NetworkSource {
-    pub fn name(self) -> &'static str {
+    /// The source family (the first `:`-token of the spec string).
+    pub fn name(&self) -> &'static str {
         match self {
             Self::Auto => "auto",
             Self::Template => "template",
             Self::Artifact => "artifact",
+            Self::Multibit { .. } => "multibit",
+            Self::Conv { .. } => "conv",
+        }
+    }
+
+    /// Canonical spec string — parses back to `self`
+    /// (`parse(spec_str()) == self`), which is what `to_json` writes.
+    pub fn spec_str(&self) -> String {
+        match self {
+            Self::Multibit { bits, scheme } => format!("multibit:{bits}:{}", scheme.name()),
+            Self::Conv {
+                filters,
+                kh,
+                kw,
+                theta,
+            } => format!("conv:{filters}x{kh}x{kw}:t{theta}"),
+            other => other.name().to_string(),
         }
     }
 
     pub fn parse(s: &str) -> Result<Self, EngineError> {
-        match s.to_ascii_lowercase().as_str() {
-            "auto" => Ok(Self::Auto),
-            "template" => Ok(Self::Template),
-            "artifact" => Ok(Self::Artifact),
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let family = parts.next().unwrap_or("");
+        let payload: Vec<&str> = parts.collect();
+        let bad = |detail: String| EngineError::Spec {
+            field: "network",
+            detail,
+        };
+        match family {
+            "auto" if payload.is_empty() => Ok(Self::Auto),
+            "template" if payload.is_empty() => Ok(Self::Template),
+            "artifact" if payload.is_empty() => Ok(Self::Artifact),
+            "multibit" => {
+                if payload.is_empty() || payload.len() > 2 {
+                    return Err(bad(format!(
+                        "multibit takes BITS[:SCHEME] (e.g. multibit:2:lowpower), got '{s}'"
+                    )));
+                }
+                let bits = payload[0]
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|b| (1..=8).contains(b))
+                    .ok_or_else(|| {
+                        bad(format!(
+                            "multibit weight resolution must be 1..=8 bits, got '{}'",
+                            payload[0]
+                        ))
+                    })?;
+                let scheme = match payload.get(1) {
+                    None => MultibitScheme::LowPower,
+                    Some(tok) => MultibitScheme::parse(tok).ok_or_else(|| {
+                        bad(format!(
+                            "unknown multibit scheme '{tok}' (expected lowpower|area)"
+                        ))
+                    })?,
+                };
+                Ok(Self::Multibit { bits, scheme })
+            }
+            "conv" => {
+                if payload.is_empty() || payload.len() > 2 {
+                    return Err(bad(format!(
+                        "conv takes FxKHxKW[:tN] (e.g. conv:4x3x3:t5), got '{s}'"
+                    )));
+                }
+                let dims: Vec<Option<usize>> = payload[0]
+                    .split('x')
+                    .map(|d| d.parse::<usize>().ok().filter(|&v| v >= 1))
+                    .collect();
+                let (filters, kh, kw) = match dims.as_slice() {
+                    [Some(f), Some(kh), Some(kw)] => (*f, *kh, *kw),
+                    _ => {
+                        return Err(bad(format!(
+                            "conv shape must be FxKHxKW positive integers, got '{}'",
+                            payload[0]
+                        )))
+                    }
+                };
+                if kh > crate::nn::IMAGE_SIDE || kw > crate::nn::IMAGE_SIDE {
+                    return Err(bad(format!(
+                        "conv kernel {kh}x{kw} does not fit the {side}x{side} digit image",
+                        side = crate::nn::IMAGE_SIDE
+                    )));
+                }
+                let theta = match payload.get(1) {
+                    None => (kh * kw).div_ceil(2).max(1),
+                    Some(tok) => tok
+                        .strip_prefix('t')
+                        .and_then(|t| t.parse::<usize>().ok())
+                        .ok_or_else(|| {
+                            bad(format!("conv threshold must look like t5, got '{tok}'"))
+                        })?,
+                };
+                Ok(Self::Conv {
+                    filters,
+                    kh,
+                    kw,
+                    theta,
+                })
+            }
             _ => Err(EngineError::UnknownNetwork(s.to_string())),
         }
+    }
+
+    /// Shape `(n_in, n_out)` of the dense layer this source lowers to on
+    /// the substrate — what array autosizing and swap-compatibility
+    /// checks reason about. The classic sources all serve the 121→10
+    /// digit classifier.
+    pub fn dense_shape(&self) -> (usize, usize) {
+        use crate::nn::{IMAGE_PIXELS, IMAGE_SIDE, N_CLASSES};
+        match self {
+            Self::Auto | Self::Template | Self::Artifact => (IMAGE_PIXELS, N_CLASSES),
+            Self::Multibit { bits, .. } => {
+                let copies = (1usize << bits) - 1;
+                (IMAGE_PIXELS * copies, N_CLASSES)
+            }
+            Self::Conv {
+                filters, kh, kw, ..
+            } => {
+                let (oh, ow) = (IMAGE_SIDE - kh + 1, IMAGE_SIDE - kw + 1);
+                (IMAGE_PIXELS, filters * oh * ow)
+            }
+        }
+    }
+
+    /// How many substrate columns each logical input pixel occupies
+    /// (the unary replication factor; 1 for everything but multibit).
+    /// The serving shell expands every submitted image by this factor.
+    pub fn input_expansion(&self) -> usize {
+        match self {
+            Self::Multibit { bits, .. } => (1usize << bits) - 1,
+            _ => 1,
+        }
+    }
+
+    /// Does this source serve the 10-class digit classifier (so label
+    /// accuracy is meaningful)? Conv banks emit feature maps instead.
+    pub fn is_classifier(&self) -> bool {
+        !matches!(self, Self::Conv { .. })
     }
 }
 
@@ -1008,7 +1161,10 @@ impl EngineSpec {
                             .into(),
                     });
                 }
-                if self.network == NetworkSource::Template {
+                if !matches!(
+                    self.network,
+                    NetworkSource::Artifact | NetworkSource::Auto
+                ) {
                     return Err(EngineError::Spec {
                         field: "network",
                         detail: "the xla backend always loads its network from \
@@ -1044,6 +1200,52 @@ impl EngineSpec {
                     backend_max
                 ),
             });
+        }
+        // multibit feasibility: the area-efficient scheme's top word-line
+        // voltage (V_DD·2^(b−1)) breaches the subarray ceiling past 3 bits
+        // at the Table II operating point — reject instead of serving a
+        // physically impossible configuration (paper §VI-B)
+        for source in std::iter::once(&self.network).chain(self.swap_to.iter()) {
+            if let NetworkSource::Multibit { bits, scheme } = source {
+                let max_voltage = match scheme {
+                    MultibitScheme::AreaEfficient => {
+                        MULTIBIT_V_DD * (1u64 << (bits - 1)) as f64
+                    }
+                    MultibitScheme::LowPower => MULTIBIT_V_DD,
+                };
+                if max_voltage > V_CEILING {
+                    return Err(EngineError::Spec {
+                        field: "network",
+                        detail: format!(
+                            "multibit scheme '{}' at {bits} bits needs a {max_voltage:.1} V \
+                             word line — over the {V_CEILING:.0} V subarray ceiling \
+                             (use the lowpower scheme or at most 3 bits)",
+                            scheme.name()
+                        ),
+                    });
+                }
+            }
+        }
+        // a live swap reprograms cells in place, so both endpoints must
+        // lower to the same dense geometry (multibit changes the input
+        // expansion; conv changes the output plane)
+        if self.layers.is_none() {
+            if let Some(target) = &self.swap_to {
+                if target.dense_shape() != self.network.dense_shape() {
+                    let (ni, no) = self.network.dense_shape();
+                    let (ti, to) = target.dense_shape();
+                    return Err(EngineError::Spec {
+                        field: "swap_to",
+                        detail: format!(
+                            "cannot live-swap between networks of different substrate \
+                             geometry: '{}' lowers to {ni}→{no} but '{}' lowers to \
+                             {ti}→{to}",
+                            self.network.spec_str(),
+                            target.spec_str()
+                        ),
+                    });
+                }
+            }
         }
         if let Some(layers) = &self.layers {
             if layers.is_empty() {
@@ -1303,6 +1505,16 @@ impl EngineSpec {
             }
             self.fabric.placement = PlacementStrategy::parse(p)?;
         }
+        if let Some(s) = args.get("network") {
+            if xla {
+                // --xla pins the network to its AOT-compiled artifacts
+                return Err(EngineError::Conflict {
+                    first: "--network",
+                    second: "--xla",
+                });
+            }
+            self.network = NetworkSource::parse(s)?;
+        }
         if let Some(s) = args.get("swap-to") {
             if xla {
                 return Err(EngineError::Conflict {
@@ -1311,6 +1523,16 @@ impl EngineSpec {
                 });
             }
             self.swap_to = Some(NetworkSource::parse(s)?);
+        }
+        // CLI-path array autosizing: multibit/conv lower to layers wider
+        // than the 128-column default subarray, so grow the design to fit
+        // the workload (an explicit --engine spec owns its array and gets
+        // the typed LayerTooLarge at build time instead)
+        if !json_base {
+            for source in std::iter::once(&self.network).chain(self.swap_to.iter()) {
+                let (n_in, n_out) = source.dense_shape();
+                self.array.cols = self.array.cols.max(n_in).max(n_out);
+            }
         }
         Ok(())
     }
@@ -1324,11 +1546,11 @@ impl EngineSpec {
         let obj = Json::Obj(vec![
             ("backend".into(), Json::Str(self.kind.name().into())),
             ("workers".into(), Json::Num(self.workers as f64)),
-            ("network".into(), Json::Str(self.network.name().into())),
+            ("network".into(), Json::Str(self.network.spec_str())),
             (
                 "swap_to".into(),
-                match self.swap_to {
-                    Some(s) => Json::Str(s.name().into()),
+                match &self.swap_to {
+                    Some(s) => Json::Str(s.spec_str()),
                     None => Json::Null,
                 },
             ),
@@ -1479,7 +1701,7 @@ impl EngineSpec {
     // ----------------------------------------------------------- registry
 
     /// Resolve a [`NetworkSource`] to its layer stack.
-    fn layers_from_source(source: NetworkSource) -> Result<Vec<BinaryLayer>, EngineError> {
+    fn layers_from_source(source: &NetworkSource) -> Result<Vec<BinaryLayer>, EngineError> {
         fn from_store(store: &ArtifactStore) -> Result<Vec<BinaryLayer>, EngineError> {
             store
                 .single_layer()
@@ -1501,6 +1723,31 @@ impl EngineSpec {
                 Ok(store) => from_store(&store),
                 Err(_) => Ok(vec![crate::report::table2::template_layer()]),
             },
+            // full-scale quantization of the template classifier, lowered
+            // onto the binary substrate by unary replication — bit-exact
+            // against the scalar N-ary oracle (see nn::multibit tests)
+            NetworkSource::Multibit { bits, .. } => {
+                let template = crate::report::table2::template_layer();
+                let multibit = crate::nn::MultibitLayer::from_binary(&template, *bits);
+                Ok(vec![multibit.lower_unary()])
+            }
+            // one dense Toeplitz layer over the flat digit image —
+            // bit-exact against BinaryConv2d::forward_direct
+            NetworkSource::Conv {
+                filters,
+                kh,
+                kw,
+                theta,
+            } => {
+                let bank = crate::nn::conv_bank(*filters, *kh, *kw, *theta);
+                let layer = bank
+                    .unrolled_layer(crate::nn::IMAGE_SIDE, crate::nn::IMAGE_SIDE)
+                    .map_err(|e| EngineError::Spec {
+                        field: "network",
+                        detail: e.to_string(),
+                    })?;
+                Ok(vec![layer])
+            }
         }
     }
 
@@ -1510,17 +1757,50 @@ impl EngineSpec {
         if let Some(layers) = &self.layers {
             return Ok(layers.clone());
         }
-        Self::layers_from_source(self.network)
+        Self::layers_from_source(&self.network)
     }
 
     /// Resolve the reprogramming target (`swap_to`), if one is
     /// configured — the network the serving shell hands to
     /// [`Engine::swap_network`] mid-run.
     pub fn resolve_swap_layers(&self) -> Result<Option<Vec<BinaryLayer>>, EngineError> {
-        match self.swap_to {
+        match &self.swap_to {
             None => Ok(None),
             Some(source) => Self::layers_from_source(source).map(Some),
         }
+    }
+
+    /// The Table III cost estimate of this spec's multibit workload, or
+    /// `None` when the served network isn't multibit. Priced per logical
+    /// dot product (`n_inputs` = the digit image's 121 pixels) at the
+    /// Table II operating point.
+    pub fn multibit_cost(&self) -> Option<MultibitCost> {
+        match &self.network {
+            NetworkSource::Multibit { bits, scheme } => {
+                let design = self.array.design().ok()?;
+                Some(multibit_tmvm_cost(
+                    &design,
+                    *scheme,
+                    *bits,
+                    crate::nn::IMAGE_PIXELS,
+                    MULTIBIT_V_DD,
+                ))
+            }
+            _ => None,
+        }
+    }
+
+    /// Energy premium one served image adds on a multibit workload
+    /// (`N_CLASSES` logical dot products priced by
+    /// [`multibit_cost`](Self::multibit_cost)); 0 otherwise. Backends add
+    /// `n_images × premium` into [`Telemetry::multibit_energy`]
+    /// (and total energy) per inference call.
+    ///
+    /// [`Telemetry::multibit_energy`]: super::api::Telemetry::multibit_energy
+    pub fn multibit_premium(&self) -> f64 {
+        self.multibit_cost()
+            .map(|c| c.energy * crate::nn::N_CLASSES as f64)
+            .unwrap_or(0.0)
     }
 
     /// The registry: turn the spec into a [`BackendFactory`] for its
@@ -1558,13 +1838,16 @@ impl EngineSpec {
                     // workload-aware engaged span (what `serve` always used)
                     design = design.with_span(layer.n_in().clamp(1, design.n_col));
                 }
+                let premium = self.multibit_premium();
                 Ok((0..n)
                     .map(|_| {
                         let layer = layer.clone();
                         let design = design.clone();
                         Box::new(move || {
-                            Ok(Box::new(SimBackend::new(layer, design, mode)?)
-                                as Box<dyn Engine>)
+                            Ok(Box::new(
+                                SimBackend::new(layer, design, mode)?
+                                    .with_multibit_premium(premium),
+                            ) as Box<dyn Engine>)
                         }) as BackendFactory
                     })
                     .collect())
@@ -1576,13 +1859,16 @@ impl EngineSpec {
                 place_layers(&layers, &cfg)
                     .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
                 let max_batch = self.fabric.max_batch;
+                let premium = self.multibit_premium();
                 Ok((0..n)
                     .map(|_| {
                         let layers = layers.clone();
                         let cfg = cfg.clone();
                         Box::new(move || {
-                            Ok(Box::new(FabricBackend::new(layers, cfg, max_batch)?)
-                                as Box<dyn Engine>)
+                            Ok(Box::new(
+                                FabricBackend::new(layers, cfg, max_batch)?
+                                    .with_multibit_premium(premium),
+                            ) as Box<dyn Engine>)
                         }) as BackendFactory
                     })
                     .collect())
@@ -1755,12 +2041,15 @@ impl EngineSpec {
                 if self.array.span.is_none() {
                     design = design.with_span(layer.n_in().clamp(1, design.n_col));
                 }
+                let premium = self.multibit_premium();
                 let builder: ShardBuilder =
                     std::sync::Arc::new(move |layers: Vec<BinaryLayer>| {
                         anyhow::ensure!(layers.len() == 1, "sim shards serve one layer");
                         let layer = layers.into_iter().next().expect("one layer");
-                        Ok(Box::new(SimBackend::new(layer, design.clone(), mode)?)
-                            as Box<dyn Engine>)
+                        Ok(Box::new(
+                            SimBackend::new(layer, design.clone(), mode)?
+                                .with_multibit_premium(premium),
+                        ) as Box<dyn Engine>)
                     });
                 Ok(builder)
             }
@@ -1769,10 +2058,13 @@ impl EngineSpec {
                 place_layers(initial, &cfg)
                     .map_err(|e| EngineError::Placement(format!("{e:#}")))?;
                 let max_batch = self.fabric.max_batch;
+                let premium = self.multibit_premium();
                 let builder: ShardBuilder =
                     std::sync::Arc::new(move |layers: Vec<BinaryLayer>| {
-                        Ok(Box::new(FabricBackend::new(layers, cfg.clone(), max_batch)?)
-                            as Box<dyn Engine>)
+                        Ok(Box::new(
+                            FabricBackend::new(layers, cfg.clone(), max_batch)?
+                                .with_multibit_premium(premium),
+                        ) as Box<dyn Engine>)
                     });
                 Ok(builder)
             }
@@ -2621,5 +2913,68 @@ mod tests {
             .with_shards(4, BackendKind::Fabric)
             .describe();
         assert!(d.contains("4 shard(s)") && d.contains("fabric"), "{d}");
+    }
+
+    #[test]
+    fn network_grammar_roundtrips_and_autosizes_the_array() {
+        // parse(spec_str()) is the identity for every source family
+        let sources = "auto template artifact multibit:1:lowpower multibit:3:lowpower \
+                       multibit:2:area conv:4x3x3:t5 conv:2x5x5:t12";
+        for s in sources.split_whitespace() {
+            let parsed = NetworkSource::parse(s).expect(s);
+            assert_eq!(parsed.spec_str(), s, "canonical form is a fixed point");
+            assert_eq!(NetworkSource::parse(&parsed.spec_str()).unwrap(), parsed);
+        }
+        // defaults: lowpower scheme, majority-vote conv threshold
+        let mb = NetworkSource::parse("multibit:2").unwrap();
+        assert_eq!(mb.spec_str(), "multibit:2:lowpower");
+        let conv = NetworkSource::parse("conv:4x3x3").unwrap();
+        assert_eq!(conv.spec_str(), "conv:4x3x3:t5");
+
+        // the CLI path grows the subarray to fit the lowered layer
+        let spec = EngineSpec::from_args(&args("serve --network multibit:3")).unwrap();
+        assert_eq!(spec.network.input_expansion(), 7);
+        assert!(spec.array.cols >= 121 * 7, "cols {} too narrow", spec.array.cols);
+        let spec = EngineSpec::from_args(&args("serve --network conv:4x3x3")).unwrap();
+        assert!(!spec.network.is_classifier());
+        assert_eq!(spec.network.dense_shape(), (121, 4 * 9 * 9));
+        assert!(spec.array.cols >= 4 * 9 * 9);
+
+        // and the network survives the JSON spec roundtrip
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_network(NetworkSource::parse("multibit:2:area").unwrap());
+        let parsed = EngineSpec::from_json(&spec.to_json()).expect("roundtrip parse");
+        assert_eq!(parsed.network, spec.network);
+        let spec = EngineSpec::new(BackendKind::Ideal)
+            .with_network(NetworkSource::parse("conv:2x5x5:t12").unwrap());
+        let parsed = EngineSpec::from_json(&spec.to_json()).expect("roundtrip parse");
+        assert_eq!(parsed.network, spec.network);
+    }
+
+    #[test]
+    fn network_grammar_rejects_malformed_specs() {
+        let bad = "multibit multibit:0 multibit:9 multibit:2:fast conv conv:4x3 \
+                   conv:0x3x3 conv:4x12x3 conv:4x3x3:5 sawtooth";
+        for s in bad.split_whitespace() {
+            assert!(NetworkSource::parse(s).is_err(), "'{s}' should not parse");
+        }
+        // infeasible scheme/bits combinations die in validate(), at parse
+        // time for the CLI path — never in a worker
+        let err = EngineSpec::from_args(&args("serve --network multibit:4:area")).unwrap_err();
+        assert!(err.to_string().contains("5 V"), "{err}");
+        assert!(EngineSpec::from_args(&args("serve --network multibit:8")).is_ok());
+    }
+
+    #[test]
+    fn swap_targets_must_share_substrate_geometry() {
+        // same dense geometry: template -> template is fine
+        let spec = EngineSpec::from_args(&args("serve --shards 2 --swap-to template")).unwrap();
+        assert_eq!(spec.swap_to, Some(NetworkSource::Template));
+        // the unary expansion changes the column count under resident cells
+        let err = EngineSpec::from_args(&args("serve --network template --swap-to multibit:2"))
+            .unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
+        let err = EngineSpec::from_args(&args("serve --swap-to conv:2x3x3")).unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
     }
 }

@@ -177,16 +177,25 @@
 //!   [`engine::BackendFactory`]) without ever spinning a host core
 //!   (idle waits park on the engine's completion channel), with
 //!   per-shard telemetry in the metrics, rolling live weight updates
-//!   ([`coordinator::Coordinator::swap_network`]) and the
+//!   ([`coordinator::Coordinator::swap_network`]), the
 //!   [`coordinator::AutoscalePolicy`] evaluated live in the scheduler
 //!   loop — spawns, retires, vetoes and wear all land in the metrics
-//!   snapshot.
+//!   snapshot — and [`coordinator::TrafficTrace`]: seeded offered-load
+//!   traces (uniform / bursty / diurnal / multi-tenant, plus JSON
+//!   record/replay) that `serve --trace` and the autoscale exhibit
+//!   replay deterministically.
 //! * [`report`] — each paper exhibit (Fig. 10/11/13, Tables I–III, fabric
 //!   scaling, sharded serving, live reprogramming, shard autoscaling) as
 //!   a library function returning structured rows, shared by benches,
 //!   examples and the CLI.
 //!
-//! See `examples/quickstart.rs` for a runnable end-to-end tour.
+//! See `examples/quickstart.rs` for a runnable end-to-end tour. For the
+//! operator's view of the same machinery there are two manuals:
+//! `docs/WORKLOADS.md` (every `--network` workload with runnable
+//! commands, the im2col conv lowering and the multibit cost model) and
+//! `docs/OPERATIONS.md` (shards, remote fleets, rolling swaps,
+//! autoscaling watermarks, canary triage and the `TrafficTrace` JSON
+//! schema).
 
 pub mod util;
 pub mod testing;

@@ -6,11 +6,12 @@
 
 use xpoint_imc::analysis::{max_rows_for_nm, noise_margin, ArrayDesign};
 use xpoint_imc::cli::Args;
-use xpoint_imc::coordinator::Coordinator;
+use xpoint_imc::coordinator::{Coordinator, TrafficTrace};
 use xpoint_imc::engine::{BackendKind, EngineError, EngineSpec, NetworkSource};
 use xpoint_imc::interconnect::LineConfig;
 use xpoint_imc::net::{serve_factory, Listener, RemoteAddr};
 use xpoint_imc::nn::dataset::{DigitGen, TEST_SEED};
+use xpoint_imc::nn::expand_unary;
 use xpoint_imc::report;
 use xpoint_imc::runtime::artifact::artifacts_available;
 use xpoint_imc::runtime::ArtifactStore;
@@ -39,9 +40,13 @@ COMMANDS:
   reprogram live-reprogramming exhibit: rolling shard drain → reprogram →
             rejoin timeline, pulse counts, energy, throughput dip
             --shards N (default 2) --waves N (default 6) --batch N
-  autoscale shard-autoscaling exhibit: replay a bursty trace against an
-            elastic engine — scale-up/down decisions, spawn/retire events,
-            wear budgets   --min N --max N --batch N --budget PULSES
+  autoscale shard-autoscaling exhibit: replay an offered-load trace
+            against an elastic engine — scale-up/down decisions,
+            spawn/retire events, wear budgets
+            --min N --max N --batch N --budget PULSES
+            [--trace uniform|bursty|diurnal|multitenant|FILE.json]
+            (offered load; default: the canonical burst)
+            [--trace-seed N] (trace + digit-stream seed)
             [--json] (machine-readable timeline via util::json)
   montecarlo Monte Carlo variability sweep: device corners + resistance
             variation over the array sizes — noise-margin distribution,
@@ -49,6 +54,16 @@ COMMANDS:
             --seed N --trials N [--json] (seed-deterministic, byte-stable)
   serve     run the coordinator on synthetic digits
             --images N --workers N --batch N [--xla] [--parasitic]
+            [--network auto|template|artifact|multibit:BITS[:SCHEME]|
+             conv:FxKHxKW[:tN]]  (what the fabric serves: multibit N-ary
+            inputs via unary lowering + Table III energy premium, or a
+            binary conv bank via im2col lowering; SCHEME is
+            lowpower|area, tN the conv vote threshold)
+            [--trace uniform|bursty|diurnal|multitenant|FILE.json]
+            (replay a seeded offered-load trace wave by wave instead of
+            a flat --images stream; per-tenant accounting in the report)
+            [--trace-seed N]     (trace + digit-stream seed)
+            [--trace-out PATH]   (record the resolved trace as JSON)
             [--fabric] [--grid N] (fabric backend on an N×N subarray grid)
             [--shards N]          (N async engine shards per worker)
             [--autoscale MIN,MAX] (elastic shards: queue-driven
@@ -60,8 +75,9 @@ COMMANDS:
             unix:/path — alone: the whole engine; with --shards or
             --autoscale: extra shards joining the local fleet)
             [--placement roundrobin|locality] (fabric tile placement)
-            [--swap-to template|artifact|auto] (live-swap the network
-            mid-run: shards drain + reprogram one at a time)
+            [--swap-to SPEC] (live-swap the network mid-run, same
+            grammar as --network; shards drain + reprogram one at a
+            time; both endpoints must share substrate geometry)
             [--engine spec.json]  (declarative EngineSpec; flags override)
   shard-host serve one shard's worth of fabric behind a socket
             --listen host:port|unix:/path (required; TCP port 0 picks a
@@ -228,11 +244,20 @@ fn run(args: &Args) -> xpoint_imc::Result<()> {
         Some("autoscale") => {
             let min = args.get_usize("min", report::AUTOSCALE_MIN)?;
             let max = args.get_usize("max", report::AUTOSCALE_MAX)?;
-            let batch = args.get_usize("batch", 32)?;
+            let batch = args.get_usize("batch", 32)?.clamp(1, 64);
             let budget = args.get_usize("budget", 0)? as u64;
-            let (rows, summary) = report::autoscale_timeline(min, max, batch, budget)?;
+            let seed = args.get_usize("trace-seed", TEST_SEED as usize)? as u64;
+            let trace = match args.get("trace") {
+                Some(arg) => TrafficTrace::parse_arg(arg, batch, seed)?,
+                None => TrafficTrace::bursty(seed, batch),
+            };
+            let (rows, summary) =
+                report::autoscale_timeline_trace(&trace, min, max, batch, budget)?;
             if args.has_flag("json") {
-                println!("{}", report::autoscale_json(&rows, &summary).pretty());
+                println!(
+                    "{}",
+                    report::autoscale_json(&trace.name, &rows, &summary).pretty()
+                );
             } else {
                 print!("{}", report::autoscale_table(&rows).render());
                 println!("{}", report::autoscale_summary_line(&summary));
@@ -314,8 +339,6 @@ fn shard_host(args: &Args) -> xpoint_imc::Result<()> {
 }
 
 fn serve(args: &Args) -> xpoint_imc::Result<()> {
-    let n_images = args.get_usize("images", 1000)?;
-
     // one declarative spec unifies backend kind, array design, fabric
     // geometry and batching policy; flags overlay an optional --engine
     // spec.json and conflicting combinations fail with typed errors
@@ -329,35 +352,81 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
         eprintln!("(artifacts missing — using template weights)");
     }
     println!("backend: {}", spec.describe());
+    if let NetworkSource::Multibit { bits, scheme } = spec.network {
+        println!(
+            "multibit:        {bits}-bit {} inputs, +{} resolution premium per image",
+            scheme.name(),
+            format_si(spec.multibit_premium(), "J"),
+        );
+    }
 
     // resolve the live-swap target up front: a bad --swap-to must fail
     // before any traffic is served
     let swap_target = spec.resolve_swap_layers()?;
 
+    // the resolved offered-load trace, when serving is trace-driven
+    let trace = match args.get("trace") {
+        Some(arg) => {
+            anyhow::ensure!(
+                args.get("images").is_none(),
+                "--images conflicts with --trace (the trace decides the offered load)"
+            );
+            let seed = args.get_usize("trace-seed", TEST_SEED as usize)? as u64;
+            Some(TrafficTrace::parse_arg(arg, spec.batching.capacity, seed)?)
+        }
+        None => None,
+    };
+    if let Some(path) = args.get("trace-out") {
+        let t = trace
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--trace-out needs --trace"))?;
+        std::fs::write(path, t.to_json_string())?;
+        eprintln!("(trace recorded to {path})");
+    }
+
+    // multibit N-ary inputs are unary-lowered client-side to match the
+    // lowered weight stack; conv outputs are feature maps, not classes,
+    // so no labels ride along there
+    let expansion = spec.network.input_expansion();
+    let classifier = spec.network.is_classifier();
+
     let backends = spec.build_factories()?;
     let mut coord = Coordinator::spawn(backends, spec.coordinator_config());
 
-    let mut gen = DigitGen::new(TEST_SEED);
     let started = std::time::Instant::now();
-    let mut receivers = Vec::with_capacity(n_images);
-    // with a swap target, the rolling update kicks in halfway through the
-    // stream — shards drain and reprogram one at a time under load
-    let swap_after = swap_target.as_ref().map(|_| n_images / 2);
-    for i in 0..n_images {
-        if Some(i) == swap_after {
-            let target = swap_target.clone().expect("target resolved");
-            eprintln!("(rolling swap to the --swap-to network at image {i})");
-            coord.swap_network(target)?;
+    let (n_images, dropped) = match &trace {
+        Some(t) => serve_trace(&mut coord, t, &swap_target, expansion, classifier)?,
+        None => {
+            let n_images = args.get_usize("images", 1000)?;
+            let mut gen = DigitGen::new(TEST_SEED);
+            let mut receivers = Vec::with_capacity(n_images);
+            // with a swap target, the rolling update kicks in halfway
+            // through the stream — shards drain and reprogram one at a
+            // time under load
+            let swap_after = swap_target.as_ref().map(|_| n_images / 2);
+            for i in 0..n_images {
+                if Some(i) == swap_after {
+                    let target = swap_target.clone().expect("target resolved");
+                    eprintln!("(rolling swap to the --swap-to network at image {i})");
+                    coord.swap_network(target)?;
+                }
+                let s = gen.next_sample();
+                let pixels = if expansion > 1 {
+                    expand_unary(&s.pixels, expansion)
+                } else {
+                    s.pixels
+                };
+                receivers.push(coord.submit(pixels, classifier.then_some(s.label))?);
+            }
+            let mut dropped = 0usize;
+            for rx in receivers {
+                if rx.recv().is_err() {
+                    dropped += 1;
+                }
+            }
+            (n_images, dropped)
         }
-        let s = gen.next_sample();
-        receivers.push(coord.submit(s.pixels, Some(s.label))?);
-    }
-    let mut dropped = 0usize;
-    for rx in receivers {
-        if rx.recv().is_err() {
-            dropped += 1;
-        }
-    }
+    };
     let wall = started.elapsed().as_secs_f64();
     let snap = coord.shutdown();
     anyhow::ensure!(
@@ -377,6 +446,12 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
     println!("simulated time:  {}", format_duration(snap.sim_time));
     println!("sim energy:      {}", format_si(snap.energy, "J"));
     println!("energy/image:    {}", format_si(snap.energy_per_image, "J"));
+    if snap.multibit_energy > 0.0 {
+        println!(
+            "multibit energy: {} (N-ary resolution premium, included above)",
+            format_si(snap.multibit_energy, "J")
+        );
+    }
     if let Some(acc) = snap.accuracy {
         println!("accuracy:        {}", format_pct(acc));
     }
@@ -427,4 +502,80 @@ fn serve(args: &Args) -> xpoint_imc::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Trace-driven serving: replay the [`TrafficTrace`] wave by wave, each
+/// tenant drawing from its own seeded digit stream, and report
+/// per-tenant image counts (and accuracy, for classifier workloads).
+/// Returns (total images offered, requests that got no prediction).
+fn serve_trace(
+    coord: &mut Coordinator,
+    trace: &TrafficTrace,
+    swap_target: &Option<Vec<xpoint_imc::nn::BinaryLayer>>,
+    expansion: usize,
+    classifier: bool,
+) -> xpoint_imc::Result<(usize, usize)> {
+    trace.validate().map_err(|e| anyhow::anyhow!("trace: {e}"))?;
+    let mut gens: Vec<DigitGen> = (0..trace.n_tenants())
+        .map(|t| DigitGen::new(trace.tenant_seed(t)))
+        .collect();
+    let mut images = vec![0usize; trace.n_tenants()];
+    let mut correct = vec![0usize; trace.n_tenants()];
+    let mut dropped = 0usize;
+    // with a swap target, the rolling update kicks in at the trace's
+    // halfway wave
+    let swap_wave = swap_target.as_ref().map(|_| trace.n_waves() / 2);
+    for wave in 0..trace.n_waves() {
+        if Some(wave) == swap_wave {
+            let target = swap_target.clone().expect("target resolved");
+            eprintln!("(rolling swap to the --swap-to network at wave {wave})");
+            coord.swap_network(target)?;
+        }
+        // submit the whole wave, then drain it — waves don't overlap, so
+        // the replay is deterministic
+        let mut wave_rx = Vec::with_capacity(trace.offered(wave));
+        for (t, gen) in gens.iter_mut().enumerate() {
+            for _ in 0..trace.waves[wave][t] {
+                let s = gen.next_sample();
+                let pixels = if expansion > 1 {
+                    expand_unary(&s.pixels, expansion)
+                } else {
+                    s.pixels
+                };
+                let rx = coord.submit(pixels, classifier.then_some(s.label))?;
+                wave_rx.push((t, s.label, rx));
+            }
+        }
+        for (t, label, rx) in wave_rx {
+            match rx.recv() {
+                Ok(p) => {
+                    images[t] += 1;
+                    if classifier && p.class == label {
+                        correct[t] += 1;
+                    }
+                }
+                Err(_) => dropped += 1,
+            }
+        }
+    }
+    println!(
+        "trace:           {} ({} waves, {} tenants, {} images, seed {:#x})",
+        trace.name,
+        trace.n_waves(),
+        trace.n_tenants(),
+        trace.total_images(),
+        trace.seed,
+    );
+    for (t, name) in trace.tenants.iter().enumerate() {
+        if classifier && images[t] > 0 {
+            println!(
+                "tenant {name}: {} images, accuracy {}",
+                images[t],
+                format_pct(correct[t] as f64 / images[t] as f64),
+            );
+        } else {
+            println!("tenant {name}: {} images", images[t]);
+        }
+    }
+    Ok((trace.total_images(), dropped))
 }

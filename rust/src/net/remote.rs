@@ -345,6 +345,8 @@ impl Engine for RemoteBackend {
             program_time: l.program_time - b.program_time,
             program_energy: l.program_energy - b.program_energy,
             wear_pulses: l.wear_pulses.saturating_sub(b.wear_pulses),
+            // v1/v2 hosts never send the field; the decoder pins it to 0
+            multibit_energy: l.multibit_energy - b.multibit_energy,
             utilization: l.utilization.clone(),
             // wire v2 does not carry margin telemetry — the decoder pins
             // the no-margin state (+∞, the min-merge identity)

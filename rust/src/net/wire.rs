@@ -33,7 +33,11 @@ use crate::engine::{BackendKind, Capabilities, InferenceResult, SwapReport, Tele
 use crate::nn::BinaryLayer;
 
 /// Protocol version carried in every frame we encode.
-pub const PROTOCOL_VERSION: u8 = 2;
+///
+/// **Version 3** appends `multibit_energy` to every telemetry payload
+/// (the Table III N-ary workload surcharge); v1/v2 telemetry decodes
+/// with the field defaulted to 0.
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Oldest protocol version this decoder still accepts (v1 frames differ
 /// only by not carrying [`TAG_INFER_PACKED`]).
@@ -231,6 +235,7 @@ fn put_telemetry(out: &mut Vec<u8>, t: &Telemetry) {
     put_f64(out, t.program_time);
     put_f64(out, t.program_energy);
     put_u64(out, t.wear_pulses);
+    put_f64(out, t.multibit_energy);
     put_usize(out, t.utilization.len());
     for &u in &t.utilization {
         put_f64(out, u);
@@ -405,7 +410,7 @@ impl<'a> Reader<'a> {
             .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
     }
 
-    fn telemetry(&mut self) -> Result<Telemetry, WireError> {
+    fn telemetry(&mut self, version: u8) -> Result<Telemetry, WireError> {
         let mut t = Telemetry {
             batches: self.u64()?,
             images: self.u64()?,
@@ -421,6 +426,8 @@ impl<'a> Reader<'a> {
             program_time: self.f64()?,
             program_energy: self.f64()?,
             wear_pulses: self.u64()?,
+            // appended by protocol v3 — older peers never booked it
+            multibit_energy: if version >= 3 { self.f64()? } else { 0.0 },
             utilization: Vec::new(),
             // not carried by wire v2: a remote shard's margin telemetry
             // stays host-side, so the decoder reports the no-margin state
@@ -626,7 +633,7 @@ impl Msg {
             TAG_HELLO => Msg::Hello { magic: r.u32()? },
             TAG_HELLO_OK => Msg::HelloOk {
                 caps: r.caps()?,
-                telemetry: r.telemetry()?,
+                telemetry: r.telemetry(version)?,
             },
             TAG_INFER => Msg::Infer {
                 id: r.u64()?,
@@ -660,16 +667,16 @@ impl Msg {
             TAG_INFER_OK => Msg::InferOk {
                 id: r.u64()?,
                 result: r.result()?,
-                telemetry: r.telemetry()?,
+                telemetry: r.telemetry(version)?,
             },
             TAG_SWAP => Msg::Swap { target: r.layers()? },
             TAG_SWAP_OK => Msg::SwapOk {
                 report: r.swap_report()?,
-                telemetry: r.telemetry()?,
+                telemetry: r.telemetry(version)?,
             },
             TAG_TELEMETRY => Msg::Telemetry,
             TAG_TELEMETRY_OK => Msg::TelemetryOk {
-                telemetry: r.telemetry()?,
+                telemetry: r.telemetry(version)?,
             },
             TAG_ERR => Msg::Err { detail: r.str_()? },
             TAG_SHUTDOWN => Msg::Shutdown,

@@ -1,9 +1,38 @@
 //! 2-D convolution lowered to TMVM (the paper's conclusion lists 2D
 //! convolution among the implemented kernels): an im2col unroll turns each
 //! output position's receptive field into a TMVM input vector, and each
-//! binary filter into a stored weight row.
+//! binary filter into a stored weight row. For serving, the whole conv
+//! fires as ONE stored layer over the flat image via the Toeplitz unroll
+//! ([`BinaryConv2d::unrolled_layer`]), which the fabric places and tiles
+//! like any dense layer.
+
+use std::fmt;
 
 use super::layer::BinaryLayer;
+use crate::util::Pcg32;
+
+/// A convolution was asked to run over an image smaller than its kernel —
+/// valid padding leaves no output positions, so this is a typed error
+/// rather than a panic or a silently empty result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShapeError {
+    pub kh: usize,
+    pub kw: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl fmt::Display for ConvShapeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "conv kernel {}x{} does not fit a {}x{} image (valid padding needs kh <= h and kw <= w)",
+            self.kh, self.kw, self.h, self.w
+        )
+    }
+}
+
+impl std::error::Error for ConvShapeError {}
 
 /// A binary 2-D convolution layer (single input channel, valid padding,
 /// stride 1).
@@ -20,6 +49,7 @@ pub struct BinaryConv2d {
 impl BinaryConv2d {
     pub fn new(filters: Vec<Vec<bool>>, kh: usize, kw: usize, theta: usize) -> Self {
         assert!(!filters.is_empty());
+        assert!(kh >= 1 && kw >= 1);
         assert!(filters.iter().all(|f| f.len() == kh * kw));
         Self {
             filters,
@@ -29,17 +59,25 @@ impl BinaryConv2d {
         }
     }
 
-    /// Output spatial dimensions for an `h×w` input.
-    pub fn out_shape(&self, h: usize, w: usize) -> (usize, usize) {
-        assert!(h >= self.kh && w >= self.kw);
-        (h - self.kh + 1, w - self.kw + 1)
+    /// Output spatial dimensions for an `h×w` input, or a typed error when
+    /// the kernel doesn't fit.
+    pub fn out_shape(&self, h: usize, w: usize) -> Result<(usize, usize), ConvShapeError> {
+        if h < self.kh || w < self.kw {
+            return Err(ConvShapeError {
+                kh: self.kh,
+                kw: self.kw,
+                h,
+                w,
+            });
+        }
+        Ok((h - self.kh + 1, w - self.kw + 1))
     }
 
     /// im2col: unroll each output position's receptive field into a row of
     /// the patch matrix (`patches[pos][kidx]`).
-    pub fn im2col(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
+    pub fn im2col(&self, image: &[bool], h: usize, w: usize) -> Result<Vec<Vec<bool>>, ConvShapeError> {
         assert_eq!(image.len(), h * w);
-        let (oh, ow) = self.out_shape(h, w);
+        let (oh, ow) = self.out_shape(h, w)?;
         let mut patches = Vec::with_capacity(oh * ow);
         for oy in 0..oh {
             for ox in 0..ow {
@@ -52,7 +90,7 @@ impl BinaryConv2d {
                 patches.push(patch);
             }
         }
-        patches
+        Ok(patches)
     }
 
     /// As a [`BinaryLayer`] over patch vectors — this is exactly what gets
@@ -62,10 +100,41 @@ impl BinaryConv2d {
         BinaryLayer::new(self.filters.clone(), self.theta)
     }
 
+    /// The whole convolution as ONE dense layer over the flat `h×w` image:
+    /// output neuron `(f, oy, ox)` stores filter `f` shifted to position
+    /// `(oy, ox)` (a Toeplitz/doubly-blocked-circulant block). Popcount of
+    /// that row against the raw image equals the receptive-field dot
+    /// product, so the unrolled layer is bit-exact with
+    /// [`forward_direct`](Self::forward_direct) — this is what serving
+    /// places on the fabric (`n_in = h·w`, `n_out = filters·oh·ow`).
+    pub fn unrolled_layer(&self, h: usize, w: usize) -> Result<BinaryLayer, ConvShapeError> {
+        let (oh, ow) = self.out_shape(h, w)?;
+        let mut rows = Vec::with_capacity(self.filters.len() * oh * ow);
+        for filt in &self.filters {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut row = vec![false; h * w];
+                    for ky in 0..self.kh {
+                        for kx in 0..self.kw {
+                            row[(oy + ky) * w + (ox + kx)] = filt[ky * self.kw + kx];
+                        }
+                    }
+                    rows.push(row);
+                }
+            }
+        }
+        Ok(BinaryLayer::new(rows, self.theta))
+    }
+
     /// Direct (reference) convolution: thresholded popcount per filter and
     /// output position. `out[f][pos]`.
-    pub fn forward_direct(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
-        let (oh, ow) = self.out_shape(h, w);
+    pub fn forward_direct(
+        &self,
+        image: &[bool],
+        h: usize,
+        w: usize,
+    ) -> Result<Vec<Vec<bool>>, ConvShapeError> {
+        let (oh, ow) = self.out_shape(h, w)?;
         let mut out = vec![vec![false; oh * ow]; self.filters.len()];
         for (f, filt) in self.filters.iter().enumerate() {
             for oy in 0..oh {
@@ -82,12 +151,17 @@ impl BinaryConv2d {
                 }
             }
         }
-        out
+        Ok(out)
     }
 
     /// Convolution through the im2col + TMVM path (functional).
-    pub fn forward_im2col(&self, image: &[bool], h: usize, w: usize) -> Vec<Vec<bool>> {
-        let patches = self.im2col(image, h, w);
+    pub fn forward_im2col(
+        &self,
+        image: &[bool],
+        h: usize,
+        w: usize,
+    ) -> Result<Vec<Vec<bool>>, ConvShapeError> {
+        let patches = self.im2col(image, h, w)?;
         let layer = self.as_layer();
         let mut out = vec![vec![false; patches.len()]; self.filters.len()];
         for (pos, patch) in patches.iter().enumerate() {
@@ -95,17 +169,30 @@ impl BinaryConv2d {
                 out[f][pos] = bit;
             }
         }
-        out
+        Ok(out)
     }
+}
+
+/// Deterministic filter bank for the `conv:FxKHxKW` network source: `n_f`
+/// Bernoulli(½) binary filters drawn from a PCG stream seeded purely by
+/// the shape, so every process (and every doc example) builds the same
+/// network.
+pub fn conv_bank(n_f: usize, kh: usize, kw: usize, theta: usize) -> BinaryConv2d {
+    assert!(n_f >= 1 && kh >= 1 && kw >= 1);
+    let seed = 0xc0de_2d00 ^ ((n_f as u64) << 32) ^ ((kh as u64) << 16) ^ kw as u64;
+    let mut rng = Pcg32::seeded(seed);
+    let filters = (0..n_f)
+        .map(|_| (0..kh * kw).map(|_| rng.bernoulli(0.5)).collect())
+        .collect();
+    BinaryConv2d::new(filters, kh, kw, theta)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::Pcg32;
 
     #[test]
-    fn im2col_matches_direct_convolution() {
+    fn im2col_and_unroll_match_direct_convolution() {
         let mut rng = Pcg32::seeded(31);
         for _ in 0..25 {
             let h = rng.range(3, 12);
@@ -119,11 +206,46 @@ mod tests {
                 .collect();
             let conv = BinaryConv2d::new(filters, kh, kw, theta);
             let image: Vec<bool> = (0..h * w).map(|_| rng.bernoulli(0.5)).collect();
+            let direct = conv.forward_direct(&image, h, w).unwrap();
             assert_eq!(
-                conv.forward_direct(&image, h, w),
-                conv.forward_im2col(&image, h, w),
+                direct,
+                conv.forward_im2col(&image, h, w).unwrap(),
                 "h={h} w={w} kh={kh} kw={kw} theta={theta}"
             );
+            // the single-layer Toeplitz unroll agrees bit-for-bit too:
+            // output neuron (f, pos) == direct[f][pos]
+            let unrolled = conv.unrolled_layer(h, w).unwrap();
+            let flat = unrolled.forward(&image);
+            let (oh, ow) = conv.out_shape(h, w).unwrap();
+            for (f, plane) in direct.iter().enumerate() {
+                assert_eq!(&flat[f * oh * ow..(f + 1) * oh * ow], &plane[..]);
+            }
+        }
+    }
+
+    /// Kernels larger than the image are a typed error on every path —
+    /// never a panic, never a silently empty output.
+    #[test]
+    fn oversized_kernels_are_a_typed_error() {
+        let mut rng = Pcg32::seeded(32);
+        for _ in 0..10 {
+            let h = rng.range(1, 5);
+            let w = rng.range(1, 5);
+            // force at least one kernel dim past its image dim
+            let kh = if rng.bernoulli(0.5) { h + rng.range(1, 4) } else { rng.range(1, h + 1) };
+            let kw = if kh <= h { w + rng.range(1, 4) } else { rng.range(1, w + 5) };
+            let conv = BinaryConv2d::new(vec![vec![true; kh * kw]], kh, kw, 1);
+            if kh <= h && kw <= w {
+                continue;
+            }
+            let err = ConvShapeError { kh, kw, h, w };
+            let image = vec![true; h * w];
+            assert_eq!(conv.out_shape(h, w), Err(err));
+            assert_eq!(conv.im2col(&image, h, w).unwrap_err(), err);
+            assert_eq!(conv.forward_direct(&image, h, w).unwrap_err(), err);
+            assert_eq!(conv.forward_im2col(&image, h, w).unwrap_err(), err);
+            assert_eq!(conv.unrolled_layer(h, w).unwrap_err(), err);
+            assert!(err.to_string().contains("does not fit"));
         }
     }
 
@@ -136,8 +258,8 @@ mod tests {
         for y in 0..h {
             image[y * w + 2] = true; // stripe at x = 2
         }
-        let out = conv.forward_direct(&image, h, w);
-        let (oh, ow) = conv.out_shape(h, w);
+        let out = conv.forward_direct(&image, h, w).unwrap();
+        let (oh, ow) = conv.out_shape(h, w).unwrap();
         assert_eq!((oh, ow), (3, 4));
         for oy in 0..oh {
             for ox in 0..ow {
@@ -150,8 +272,19 @@ mod tests {
     fn patch_count_matches_output_shape() {
         let conv = BinaryConv2d::new(vec![vec![true; 9]], 3, 3, 1);
         let image = vec![true; 11 * 11];
-        let patches = conv.im2col(&image, 11, 11);
+        let patches = conv.im2col(&image, 11, 11).unwrap();
         assert_eq!(patches.len(), 9 * 9);
         assert!(patches.iter().all(|p| p.len() == 9));
+    }
+
+    #[test]
+    fn conv_bank_is_deterministic_across_calls() {
+        let a = conv_bank(4, 3, 3, 5);
+        let b = conv_bank(4, 3, 3, 5);
+        assert_eq!(a.filters, b.filters);
+        assert_eq!(a.theta, 5);
+        // different shapes draw from different streams
+        let c = conv_bank(3, 3, 3, 5);
+        assert_ne!(a.filters[0..3], c.filters[0..3]);
     }
 }

@@ -5,9 +5,12 @@ pub mod dataset;
 pub mod layer;
 pub mod mlp;
 pub mod conv;
+pub mod multibit;
 pub mod packed;
 
+pub use conv::{conv_bank, BinaryConv2d, ConvShapeError};
 pub use dataset::{Dataset, DigitGen, IMAGE_PIXELS, IMAGE_SIDE, N_CLASSES};
 pub use layer::{argmax_counts, BinaryLayer};
+pub use multibit::{expand_unary, MultibitLayer};
 pub use mlp::{BinaryMlp, MlpOnSubarrays};
 pub use packed::{BitMatrix, BitVec, PackedBatch, PackedLayer, PackedMlp};

@@ -1,0 +1,248 @@
+//! N-ary (multi-bit) inference as a functional model plus its exact
+//! lowering onto the binary TMVM substrate.
+//!
+//! A [`MultibitLayer`] holds integer weights `w ∈ 0..=2^b−1` and fires
+//! neuron `i` when `Σ_j w_ij·x_j ≥ θ`. The serving substrate only knows
+//! binary cells, so the layer lowers the low-power way (paper Fig. 7(b)):
+//! each logical input is replicated into `2^b − 1` adjacent columns and a
+//! weight of `w` stores `w` crystalline cells in that column group — the
+//! binary popcount of the lowered row then *equals* the integer dot
+//! product, making the lowering bit-exact against the scalar oracle
+//! ([`MultibitLayer::forward`]), which `tests` pin property-style.
+//!
+//! The energy/area price of running N-ary dot products on the array is a
+//! separate concern, modeled by
+//! [`multibit_tmvm_cost`](crate::array::multibit::multibit_tmvm_cost) and
+//! folded into serving telemetry by the engine layer.
+
+use super::layer::BinaryLayer;
+
+/// A single N-ary layer: integer weights, thresholded integer dot product.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MultibitLayer {
+    /// `weights[i][j] ∈ 0..=max_weight(bits)`.
+    pub weights: Vec<Vec<u32>>,
+    /// Firing threshold on the integer dot product.
+    pub theta: usize,
+    /// Weight resolution in bits (`b ≥ 1`).
+    pub bits: usize,
+}
+
+impl MultibitLayer {
+    /// Largest representable weight at `bits` resolution: `2^b − 1`.
+    pub fn max_weight(bits: usize) -> u32 {
+        assert!((1..=16).contains(&bits), "weight resolution out of range");
+        (1u32 << bits) - 1
+    }
+
+    pub fn new(weights: Vec<Vec<u32>>, theta: usize, bits: usize) -> Self {
+        let max = Self::max_weight(bits);
+        assert!(!weights.is_empty() && !weights[0].is_empty());
+        assert!(weights.iter().all(|row| row.len() == weights[0].len()));
+        assert!(
+            weights.iter().flatten().all(|&w| w <= max),
+            "weight exceeds {bits}-bit range"
+        );
+        Self {
+            weights,
+            theta,
+            bits,
+        }
+    }
+
+    /// Full-scale quantization of a binary layer: every stored bit becomes
+    /// the largest `bits`-bit weight and the threshold scales to match, so
+    /// the thresholded outputs (and the count-space argmax) are identical
+    /// to the source layer's by construction.
+    pub fn from_binary(layer: &BinaryLayer, bits: usize) -> Self {
+        let m = Self::max_weight(bits);
+        Self {
+            weights: layer
+                .weights
+                .iter()
+                .map(|row| row.iter().map(|&b| if b { m } else { 0 }).collect())
+                .collect(),
+            theta: layer.theta * m as usize,
+            bits,
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.weights[0].len()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Cells each logical weight occupies in the low-power lowering
+    /// (`2^b − 1` unary copies).
+    pub fn copies(&self) -> usize {
+        Self::max_weight(self.bits) as usize
+    }
+
+    /// Scalar oracle: `out[i] = Σ_j w_ij·x_j ≥ θ`.
+    pub fn forward(&self, x: &[bool]) -> Vec<bool> {
+        assert_eq!(x.len(), self.n_in());
+        self.weights
+            .iter()
+            .map(|row| {
+                let acc: usize = row
+                    .iter()
+                    .zip(x)
+                    .map(|(&w, &b)| if b { w as usize } else { 0 })
+                    .sum();
+                acc >= self.theta
+            })
+            .collect()
+    }
+
+    /// Integer count-space argmax (first-max-wins, matching
+    /// [`BinaryLayer::argmax`] tie-breaking).
+    pub fn argmax(&self, x: &[bool]) -> usize {
+        assert_eq!(x.len(), self.n_in());
+        let counts: Vec<usize> = self
+            .weights
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(x)
+                    .map(|(&w, &b)| if b { w as usize } else { 0 })
+                    .sum()
+            })
+            .collect();
+        super::layer::argmax_counts(&counts)
+    }
+
+    /// The input a lowered layer consumes: each logical pixel replicated
+    /// into its `2^b − 1` unary copies, in column-group order.
+    pub fn expand_input(&self, x: &[bool]) -> Vec<bool> {
+        assert_eq!(x.len(), self.n_in());
+        expand_unary(x, self.copies())
+    }
+
+    /// Lower onto the binary substrate (Fig. 7(b) replication): over the
+    /// expanded input of `n_in · (2^b − 1)` columns, row `i` stores `w_ij`
+    /// crystalline cells in input `j`'s column group. The popcount of the
+    /// lowered row against [`expand_input`](Self::expand_input) equals the
+    /// integer dot product exactly, so thresholds (and θ) carry unchanged.
+    pub fn lower_unary(&self) -> BinaryLayer {
+        let copies = self.copies();
+        let rows = self
+            .weights
+            .iter()
+            .map(|row| {
+                let mut bits = Vec::with_capacity(row.len() * copies);
+                for &w in row {
+                    for c in 0..copies {
+                        bits.push((c as u32) < w);
+                    }
+                }
+                bits
+            })
+            .collect();
+        BinaryLayer::new(rows, self.theta)
+    }
+}
+
+/// Replicate each element of `x` into `copies` adjacent positions — the
+/// input-side half of the unary lowering (the serving shell applies this
+/// to every submitted image when a multibit network is resident).
+pub fn expand_unary(x: &[bool], copies: usize) -> Vec<bool> {
+    assert!(copies >= 1);
+    let mut out = Vec::with_capacity(x.len() * copies);
+    for &b in x {
+        for _ in 0..copies {
+            out.push(b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_layer(rng: &mut Pcg32, n_out: usize, n_in: usize, bits: usize) -> MultibitLayer {
+        let max = MultibitLayer::max_weight(bits) as usize;
+        let weights: Vec<Vec<u32>> = (0..n_out)
+            .map(|_| (0..n_in).map(|_| rng.range(0, max + 1) as u32).collect())
+            .collect();
+        // a threshold somewhere inside the reachable dot-product range
+        let theta = rng.range(1, n_in * max / 2 + 2);
+        MultibitLayer::new(weights, theta, bits)
+    }
+
+    /// The tentpole contract: the unary lowering is bit-exact against the
+    /// scalar N-ary oracle for arbitrary weights, inputs and resolutions.
+    #[test]
+    fn unary_lowering_matches_the_scalar_oracle() {
+        let mut rng = Pcg32::seeded(0x0b17);
+        for _ in 0..60 {
+            let bits = rng.range(1, 7);
+            let n_in = rng.range(1, 24);
+            let n_out = rng.range(1, 8);
+            let layer = random_layer(&mut rng, n_out, n_in, bits);
+            let lowered = layer.lower_unary();
+            assert_eq!(lowered.n_in(), n_in * layer.copies());
+            assert_eq!(lowered.n_out(), n_out);
+            for _ in 0..8 {
+                let x: Vec<bool> = (0..n_in).map(|_| rng.bernoulli(0.5)).collect();
+                let expanded = layer.expand_input(&x);
+                assert_eq!(
+                    lowered.forward(&expanded),
+                    layer.forward(&x),
+                    "bits={bits} n_in={n_in} n_out={n_out}"
+                );
+                assert_eq!(lowered.argmax(&expanded), layer.argmax(&x));
+            }
+        }
+    }
+
+    /// Full-scale quantization preserves every decision of the source
+    /// binary layer: `M·count ≥ M·θ ⇔ count ≥ θ`, and count-space argmax
+    /// is scale-invariant.
+    #[test]
+    fn full_scale_quantization_is_decision_equivalent() {
+        let mut rng = Pcg32::seeded(0x0b18);
+        for bits in 1..=4 {
+            let weights: Vec<Vec<bool>> = (0..6)
+                .map(|_| (0..17).map(|_| rng.bernoulli(0.5)).collect())
+                .collect();
+            let binary = BinaryLayer::new(weights, 4);
+            let multibit = MultibitLayer::from_binary(&binary, bits);
+            for _ in 0..12 {
+                let x: Vec<bool> = (0..17).map(|_| rng.bernoulli(0.4)).collect();
+                assert_eq!(multibit.forward(&x), binary.forward(&x), "bits={bits}");
+                assert_eq!(multibit.argmax(&x), binary.argmax(&x), "bits={bits}");
+                // and the lowered form agrees end to end over expanded input
+                let lowered = multibit.lower_unary();
+                assert_eq!(
+                    lowered.forward(&multibit.expand_input(&x)),
+                    binary.forward(&x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn expand_unary_replicates_in_group_order() {
+        assert_eq!(
+            expand_unary(&[true, false], 3),
+            vec![true, true, true, false, false, false]
+        );
+        assert_eq!(expand_unary(&[true], 1), vec![true]);
+    }
+
+    #[test]
+    fn one_bit_lowering_is_the_identity() {
+        let mut rng = Pcg32::seeded(0x0b19);
+        let layer = random_layer(&mut rng, 4, 9, 1);
+        let lowered = layer.lower_unary();
+        assert_eq!(lowered.n_in(), 9);
+        let x: Vec<bool> = (0..9).map(|_| rng.bernoulli(0.5)).collect();
+        assert_eq!(layer.expand_input(&x), x);
+        assert_eq!(lowered.forward(&x), layer.forward(&x));
+    }
+}

@@ -5,13 +5,18 @@
 //! lifecycle event (spawn / retire / budget veto) with its programming
 //! cost.
 //!
-//! The replay is fully deterministic: offered load follows a fixed
-//! trace, every wave drains completely, and in-flight lifecycle walks
-//! are settled before the wave is recorded — so the timeline (and its
-//! `--json` form, which round-trips through [`crate::util::json`]) can
-//! be diffed across runs and machines in CI.
+//! The replay is fully deterministic: offered load follows a
+//! [`TrafficTrace`] (the default is the canonical burst; `--trace`
+//! swaps in uniform / diurnal / multi-tenant generators or a recorded
+//! JSON trace), every wave drains completely, and in-flight lifecycle
+//! walks are settled before the wave is recorded — so the timeline (and
+//! its `--json` form, which round-trips through [`crate::util::json`])
+//! can be diffed across runs and machines in CI. Replaying *identical*
+//! traces against different watermark policies is how policies are
+//! judged.
 
 use crate::coordinator::autoscale::{AutoscalePolicy, ScaleDecision};
+use crate::coordinator::trace::TrafficTrace;
 use crate::engine::{
     AutoscaleSpec, BackendKind, Engine, EngineSpec, ScaleEvent, ScaleEventKind, ShardState,
     ShardedEngine,
@@ -30,7 +35,10 @@ pub const AUTOSCALE_MAX: usize = 4;
 /// Offered load per wave, in batches — a burst that ramps, plateaus and
 /// decays to silence, so the timeline crosses both watermarks (the
 /// trailing idle waves are what lets the low watermark retire shards).
-pub const AUTOSCALE_TRACE: [usize; 14] = [1, 1, 2, 5, 8, 8, 6, 4, 2, 1, 0, 0, 0, 0];
+/// The canonical shape now lives in
+/// [`trace::BURST_SHAPE`](crate::coordinator::trace::BURST_SHAPE); this
+/// alias keeps the exhibit's historical name.
+pub const AUTOSCALE_TRACE: [usize; 14] = crate::coordinator::trace::BURST_SHAPE;
 
 /// One wave of the autoscale timeline.
 #[derive(Clone, Debug)]
@@ -90,19 +98,46 @@ fn settle(engine: &mut ShardedEngine) -> crate::Result<()> {
     anyhow::bail!("autoscale exhibit: lifecycle walk never settled")
 }
 
-/// Run the exhibit: replay [`AUTOSCALE_TRACE`] (scaled by `batch` images
-/// per offered batch) against an elastic engine bounded to
-/// `[min, max]` serving shards, evaluating the policy once per wave.
+/// Run the exhibit against the canonical burst: replay
+/// [`AUTOSCALE_TRACE`] (scaled by `batch` images per offered batch)
+/// against an elastic engine bounded to `[min, max]` serving shards.
 /// `pulse_budget` is the per-slot endurance budget (0 = unlimited).
+/// Thin wrapper over [`autoscale_timeline_trace`] with
+/// [`TrafficTrace::bursty`] — offered counts and digit streams are
+/// byte-identical to what this exhibit has always replayed.
 pub fn autoscale_timeline(
     min: usize,
     max: usize,
     batch: usize,
     pulse_budget: u64,
 ) -> crate::Result<(Vec<AutoscaleWaveRow>, AutoscaleSummary)> {
-    anyhow::ensure!(min >= 1 && min <= max, "need 1 <= min <= max shards");
     // the exhibit's Ideal shards store one batch per subarray row set
     // (64 rows) — clamp like `serve --batch` does
+    let batch = batch.clamp(1, 64);
+    autoscale_timeline_trace(
+        &TrafficTrace::bursty(TEST_SEED, batch),
+        min,
+        max,
+        batch,
+        pulse_budget,
+    )
+}
+
+/// Run the exhibit on an arbitrary [`TrafficTrace`]: replay the trace's
+/// offered load (each tenant's images drawn from its own seeded digit
+/// stream, submitted in `batch`-sized chunks) against an elastic engine
+/// bounded to `[min, max]` serving shards, evaluating the policy once
+/// per wave. `pulse_budget` is the per-slot endurance budget (0 =
+/// unlimited).
+pub fn autoscale_timeline_trace(
+    trace: &TrafficTrace,
+    min: usize,
+    max: usize,
+    batch: usize,
+    pulse_budget: u64,
+) -> crate::Result<(Vec<AutoscaleWaveRow>, AutoscaleSummary)> {
+    anyhow::ensure!(min >= 1 && min <= max, "need 1 <= min <= max shards");
+    trace.validate().map_err(|e| anyhow::anyhow!("trace: {e}"))?;
     let batch = batch.clamp(1, 64);
     // the same watermark policy `serve --autoscale` derives, with a
     // 1-wave cooldown so the short trace shows both directions
@@ -118,16 +153,24 @@ pub fn autoscale_timeline(
     let mut engine = spec.build_sharded()?;
     let mut policy = AutoscalePolicy::from_spec(&auto);
 
-    let mut gen = DigitGen::new(TEST_SEED);
-    let mut rows = Vec::with_capacity(AUTOSCALE_TRACE.len());
+    // one seeded digit stream per tenant — replays regenerate identical
+    // per-tenant request streams from the trace alone
+    let mut gens: Vec<DigitGen> = (0..trace.n_tenants())
+        .map(|t| DigitGen::new(trace.tenant_seed(t)))
+        .collect();
+    let mut rows = Vec::with_capacity(trace.n_waves());
     let mut summary = AutoscaleSummary::default();
-    for (wave, &offered_batches) in AUTOSCALE_TRACE.iter().enumerate() {
-        // offer the wave's burst
-        let mut tickets = Vec::with_capacity(offered_batches);
-        for _ in 0..offered_batches {
-            let images: Vec<Vec<bool>> =
-                (0..batch).map(|_| gen.next_sample().pixels).collect();
-            tickets.push(engine.submit(images)?);
+    for wave in 0..trace.n_waves() {
+        // offer the wave's load, tenant by tenant in batch-sized chunks
+        let mut tickets = Vec::new();
+        for (t, gen) in gens.iter_mut().enumerate() {
+            let mut remaining = trace.waves[wave][t];
+            while remaining > 0 {
+                let n = remaining.min(batch);
+                let images: Vec<Vec<bool>> = (0..n).map(|_| gen.next_sample().pixels).collect();
+                tickets.push(engine.submit(images)?);
+                remaining -= n;
+            }
         }
         // evaluate the policy against the live backlog
         let load = engine.scale_load();
@@ -172,7 +215,7 @@ pub fn autoscale_timeline(
         }
         rows.push(AutoscaleWaveRow {
             wave,
-            offered: offered_batches * batch,
+            offered: trace.offered(wave),
             backlog,
             serving_before,
             decision: decision_name(decision),
@@ -243,8 +286,10 @@ pub fn autoscale_summary_line(s: &AutoscaleSummary) -> String {
 }
 
 /// The `--json` form: the whole timeline as a [`Json`] tree (stable key
-/// order, so CI can diff scale-event timelines across runs).
-pub fn autoscale_json(rows: &[AutoscaleWaveRow], summary: &AutoscaleSummary) -> Json {
+/// order, so CI can diff scale-event timelines across runs). `trace` is
+/// the name of the replayed [`TrafficTrace`], recorded so diffs across
+/// policies are anchored to the workload they replayed.
+pub fn autoscale_json(trace: &str, rows: &[AutoscaleWaveRow], summary: &AutoscaleSummary) -> Json {
     let waves = rows
         .iter()
         .map(|r| {
@@ -289,6 +334,7 @@ pub fn autoscale_json(rows: &[AutoscaleWaveRow], summary: &AutoscaleSummary) -> 
         .collect();
     Json::Obj(vec![
         ("exhibit".into(), Json::Str("autoscale".into())),
+        ("trace".into(), Json::Str(trace.into())),
         ("waves".into(), Json::Arr(waves)),
         (
             "summary".into(),
@@ -355,7 +401,7 @@ mod tests {
     #[test]
     fn json_snapshot_roundtrips_and_pins_the_schema() {
         let (rows, summary) = autoscale_timeline(1, 3, 16, 0).unwrap();
-        let v = autoscale_json(&rows, &summary);
+        let v = autoscale_json("bursty", &rows, &summary);
         let text = v.pretty();
         let parsed = Json::parse(&text).expect("exhibit JSON parses");
         assert_eq!(parsed, v, "parse ∘ pretty is the identity");
@@ -368,7 +414,7 @@ mod tests {
         match &v {
             Json::Obj(entries) => {
                 let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
-                assert_eq!(keys, vec!["exhibit", "waves", "summary"]);
+                assert_eq!(keys, vec!["exhibit", "trace", "waves", "summary"]);
             }
             other => panic!("expected object, got {other:?}"),
         }
@@ -399,9 +445,52 @@ mod tests {
         // deterministic replay: a second run produces the identical JSON
         let (rows2, summary2) = autoscale_timeline(1, 3, 16, 0).unwrap();
         assert_eq!(
-            autoscale_json(&rows2, &summary2).pretty(),
+            autoscale_json("bursty", &rows2, &summary2).pretty(),
             text,
             "the replay is bit-deterministic"
         );
+    }
+
+    /// The legacy entry point is now a wrapper over the trace replay —
+    /// pin that the bursty trace reproduces it exactly, offered counts
+    /// and all.
+    #[test]
+    fn bursty_trace_reproduces_the_legacy_exhibit() {
+        let (legacy_rows, legacy_summary) = autoscale_timeline(1, 3, 16, 0).unwrap();
+        let trace = TrafficTrace::bursty(TEST_SEED, 16);
+        let (rows, summary) = autoscale_timeline_trace(&trace, 1, 3, 16, 0).unwrap();
+        assert_eq!(
+            autoscale_json("bursty", &rows, &summary).pretty(),
+            autoscale_json("bursty", &legacy_rows, &legacy_summary).pretty(),
+        );
+        for (r, &batches) in rows.iter().zip(AUTOSCALE_TRACE.iter()) {
+            assert_eq!(r.offered, batches * 16);
+        }
+    }
+
+    /// A multi-tenant trace replays deterministically too: every wave
+    /// drains its full offered load and two runs agree byte-for-byte.
+    #[test]
+    fn multi_tenant_trace_replays_deterministically() {
+        let trace = TrafficTrace::multi_tenant(TEST_SEED, 6, 24);
+        let (rows, summary) = autoscale_timeline_trace(&trace, 1, 3, 8, 0).unwrap();
+        assert_eq!(rows.len(), trace.n_waves());
+        for r in &rows {
+            assert_eq!(r.images_done, r.offered, "every wave drains fully");
+            assert_eq!(r.offered, trace.offered(r.wave));
+        }
+        let (rows2, summary2) = autoscale_timeline_trace(&trace, 1, 3, 8, 0).unwrap();
+        assert_eq!(
+            autoscale_json(&trace.name, &rows2, &summary2).pretty(),
+            autoscale_json(&trace.name, &rows, &summary).pretty(),
+        );
+    }
+
+    #[test]
+    fn invalid_traces_are_rejected() {
+        let mut ragged = TrafficTrace::multi_tenant(TEST_SEED, 4, 8);
+        ragged.waves[1].pop();
+        let err = autoscale_timeline_trace(&ragged, 1, 2, 8, 0).unwrap_err();
+        assert!(err.to_string().contains("trace"), "{err}");
     }
 }

@@ -12,7 +12,8 @@ pub mod table2;
 
 pub use autoscale::{
     autoscale_json, autoscale_summary_line, autoscale_table, autoscale_timeline,
-    AutoscaleSummary, AutoscaleWaveRow, AUTOSCALE_MAX, AUTOSCALE_MIN, AUTOSCALE_TRACE,
+    autoscale_timeline_trace, AutoscaleSummary, AutoscaleWaveRow, AUTOSCALE_MAX, AUTOSCALE_MIN,
+    AUTOSCALE_TRACE,
 };
 pub use exhibits::{
     fig10_series, fig11_regions, fig13_sweeps, table1_rows, table3_rows, Fig10Row, Fig11Data,

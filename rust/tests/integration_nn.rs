@@ -77,9 +77,9 @@ fn conv_as_tmvm_runs_on_subarray() {
         vec![true, false, false, true, false, false, true, false, false], // left bar
     ];
     let conv = BinaryConv2d::new(filters, 3, 3, 2);
-    let direct = conv.forward_direct(&img, IMAGE_SIDE, IMAGE_SIDE);
+    let direct = conv.forward_direct(&img, IMAGE_SIDE, IMAGE_SIDE).unwrap();
 
-    let patches = conv.im2col(&img, IMAGE_SIDE, IMAGE_SIDE);
+    let patches = conv.im2col(&img, IMAGE_SIDE, IMAGE_SIDE).unwrap();
     let layer = conv.as_layer();
     let design = ArrayDesign::new(128, 16, LineConfig::config3(), 3.0, 1.0);
     let mut sa = Subarray::new(design);

@@ -1,0 +1,126 @@
+//! Integration: trace-driven serving determinism at the process level.
+//! Runs the real `xpoint` binary (the same artifact CI ships) and pins
+//! that identical seed + trace spec produce identical output across
+//! runs — the property that makes policy comparisons on replayed
+//! traffic meaningful — plus the `--trace-out` record → `--trace`
+//! replay loop.
+
+use std::process::Command;
+
+use xpoint_imc::coordinator::TrafficTrace;
+
+/// Run `xpoint` with a whitespace-separated argument string (no
+/// argument in these tests contains spaces).
+fn xpoint(cmdline: &str) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_xpoint"))
+        .args(cmdline.split_whitespace())
+        .output()
+        .expect("xpoint binary runs");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    (out.status.success(), stdout, stderr)
+}
+
+/// The serve report mixes deterministic lines (trace shape, per-tenant
+/// tallies, image counts, accuracy — pure functions of seed + spec)
+/// with host-timing lines (wall clock, latency, batch boundaries whose
+/// energy association follows linger timing). Keep only the former for
+/// cross-run comparison.
+fn deterministic_lines(stdout: &str) -> Vec<String> {
+    let prefixes = ["backend:", "trace:", "tenant ", "images:", "accuracy:"];
+    stdout
+        .lines()
+        .filter(|l| prefixes.iter().any(|p| l.starts_with(p)))
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn autoscale_json_replay_is_byte_identical_across_processes() {
+    let cmd = "autoscale --min 1 --max 2 --batch 4 --trace multitenant --json";
+    let (ok1, out1, err1) = xpoint(cmd);
+    assert!(ok1, "first run failed: {err1}");
+    let (ok2, out2, _) = xpoint(cmd);
+    assert!(ok2);
+    assert_eq!(out1, out2, "autoscale --json must replay byte-identically");
+    assert!(
+        out1.contains("\"trace\": \"multitenant\""),
+        "the exhibit records which trace it replayed:\n{out1}"
+    );
+}
+
+#[test]
+fn serve_trace_report_is_deterministic_across_runs() {
+    let cmd = "serve --trace bursty --batch 8 --workers 1";
+    let (ok1, out1, err1) = xpoint(cmd);
+    assert!(ok1, "first run failed: {err1}");
+    let (ok2, out2, _) = xpoint(cmd);
+    assert!(ok2);
+    let lines1 = deterministic_lines(&out1);
+    assert_eq!(lines1, deterministic_lines(&out2));
+    // the bursty trace at batch 8 offers a known image count
+    let total = TrafficTrace::bursty(0, 8).total_images();
+    let has_count = |l: &String| l.starts_with("images:") && l.ends_with(&total.to_string());
+    assert!(lines1.iter().any(has_count), "expected {total} images in:\n{out1}");
+    assert!(lines1.iter().any(|l| l.starts_with("trace:")), "{out1}");
+    assert!(lines1.iter().any(|l| l.starts_with("tenant ")), "{out1}");
+}
+
+#[test]
+fn multitenant_serve_reports_every_tenant() {
+    let (ok, out, err) = xpoint("serve --trace multitenant --batch 4 --workers 1");
+    assert!(ok, "{err}");
+    for tenant in ["tenant-a", "tenant-b", "tenant-c"] {
+        assert!(
+            out.lines().any(|l| l.starts_with(&format!("tenant {tenant}:"))),
+            "missing per-tenant line for {tenant}:\n{out}"
+        );
+    }
+}
+
+#[test]
+fn trace_out_records_a_replayable_trace() {
+    let path = std::env::temp_dir().join(format!(
+        "xpoint-trace-{}-{:?}.json",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let path_str = path.to_str().unwrap();
+    let generate = "serve --trace diurnal --trace-seed 7 --batch 4 --workers 1";
+    let (ok, _, err) = xpoint(&format!("{generate} --trace-out {path_str}"));
+    assert!(ok, "{err}");
+
+    // the recorded file is the canonical JSON form of the generator
+    let text = std::fs::read_to_string(&path).expect("trace recorded");
+    let parsed = TrafficTrace::from_json(&text).expect("recorded trace parses");
+    assert_eq!(parsed, TrafficTrace::diurnal(7, 12, 16));
+    assert_eq!(parsed.to_json_string(), text, "record is the canonical form");
+
+    // and replaying the file reproduces the generator's deterministic report
+    let replay = format!("serve --trace {path_str} --batch 4 --workers 1");
+    let (ok_file, out_file, err_file) = xpoint(&replay);
+    assert!(ok_file, "{err_file}");
+    let (ok_gen, out_gen, _) = xpoint(generate);
+    assert!(ok_gen);
+    assert_eq!(
+        deterministic_lines(&out_file),
+        deterministic_lines(&out_gen),
+        "a recorded trace replays exactly like its generator"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bad_trace_arguments_fail_with_typed_errors() {
+    let (ok, _, err) = xpoint("serve --trace sawtooth");
+    assert!(!ok);
+    assert!(err.contains("unknown trace"), "{err}");
+
+    let (ok, _, err) = xpoint("serve --trace bursty --images 10");
+    assert!(!ok);
+    assert!(err.contains("--images conflicts with --trace"), "{err}");
+
+    let (ok, _, err) = xpoint("serve --trace-out /tmp/nope.json");
+    assert!(!ok);
+    assert!(err.contains("--trace-out needs --trace"), "{err}");
+}

@@ -1,0 +1,213 @@
+//! Integration: multibit and conv workloads as first-class
+//! `NetworkSource`s through the serving stack. Pins the tentpole
+//! contracts: the conv Toeplitz lowering served by an engine is
+//! bit-exact with the direct convolution oracle, the multibit unary
+//! lowering is decision-equivalent with its source layer end to end,
+//! the Table III resolution premium lands in telemetry and survives the
+//! sharded aggregate, and both workloads run through the coordinator
+//! exactly as `xpoint serve --network …` drives them.
+
+use xpoint_imc::cli::Args;
+use xpoint_imc::coordinator::{Coordinator, MetricsSnapshot};
+use xpoint_imc::engine::{BackendKind, Engine, EngineSpec, NetworkSource};
+use xpoint_imc::nn::dataset::{DigitGen, IMAGE_SIDE, TEST_SEED};
+use xpoint_imc::nn::{conv_bank, expand_unary, MultibitLayer};
+use xpoint_imc::report::table2::template_layer;
+
+fn spec_from(args: &[&str]) -> EngineSpec {
+    let args = Args::parse(args.iter().map(|s| s.to_string()));
+    EngineSpec::from_args(&args).expect("spec parses")
+}
+
+#[test]
+fn conv_engine_is_bit_exact_with_the_direct_convolution() {
+    let spec = spec_from(&["serve", "--network", "conv:4x3x3"]);
+    let (filters, kh, kw, theta) = match spec.network {
+        NetworkSource::Conv {
+            filters,
+            kh,
+            kw,
+            theta,
+        } => (filters, kh, kw, theta),
+        other => panic!("expected conv source, got {other:?}"),
+    };
+    let conv = conv_bank(filters, kh, kw, theta);
+    let (oh, ow) = conv.out_shape(IMAGE_SIDE, IMAGE_SIDE).unwrap();
+
+    let mut engine = spec.build_engine().unwrap();
+    let caps = engine.capabilities();
+    assert_eq!(caps.n_in, IMAGE_SIDE * IMAGE_SIDE);
+    assert_eq!(caps.n_out, filters * oh * ow);
+
+    let mut gen = DigitGen::new(TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..12).map(|_| gen.next_sample().pixels).collect();
+    let res = engine.infer_batch(&images).unwrap();
+    for (img, served) in images.iter().zip(&res.bits) {
+        let direct = conv.forward_direct(img, IMAGE_SIDE, IMAGE_SIDE).unwrap();
+        for (f, plane) in direct.iter().enumerate() {
+            assert_eq!(
+                &served[f * oh * ow..(f + 1) * oh * ow],
+                &plane[..],
+                "feature map {f} diverges from the direct convolution"
+            );
+        }
+    }
+    // feature maps are not class predictions
+    assert!(!spec.network.is_classifier());
+    // binary conv carries no multibit premium
+    assert_eq!(engine.telemetry().multibit_energy, 0.0);
+}
+
+#[test]
+fn multibit_engine_is_decision_equivalent_with_the_binary_template() {
+    for spec_str in ["multibit:2", "multibit:2:area", "multibit:1:lowpower"] {
+        let spec = spec_from(&["serve", "--network", spec_str]);
+        let bits = match spec.network {
+            NetworkSource::Multibit { bits, .. } => bits,
+            other => panic!("expected multibit source, got {other:?}"),
+        };
+        let template = template_layer();
+        let lowered = MultibitLayer::from_binary(&template, bits);
+        let mut engine = spec.build_engine().unwrap();
+        let expansion = spec.network.input_expansion();
+        assert_eq!(engine.capabilities().n_in, template.n_in() * expansion);
+
+        let mut gen = DigitGen::new(TEST_SEED);
+        let samples: Vec<_> = (0..10).map(|_| gen.next_sample()).collect();
+        let expanded: Vec<Vec<bool>> = samples
+            .iter()
+            .map(|s| expand_unary(&s.pixels, expansion))
+            .collect();
+        let res = engine.infer_batch(&expanded).unwrap();
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(
+                res.bits[i],
+                template.forward(&s.pixels),
+                "{spec_str}: thresholded bits diverge from the binary source"
+            );
+            assert_eq!(res.classes[i], lowered.argmax(&s.pixels), "{spec_str}");
+            assert_eq!(res.classes[i], template.argmax(&s.pixels), "{spec_str}");
+        }
+    }
+}
+
+#[test]
+fn multibit_premium_lands_in_telemetry_and_totals() {
+    let spec = spec_from(&["serve", "--network", "multibit:3"]);
+    let premium = spec.multibit_premium();
+    assert!(premium > 0.0, "a multibit workload must carry a premium");
+
+    let mut engine = spec.build_engine().unwrap();
+    let expansion = spec.network.input_expansion();
+    let mut gen = DigitGen::new(TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..8)
+        .map(|_| expand_unary(&gen.next_sample().pixels, expansion))
+        .collect();
+    let res = engine.infer_batch(&images).unwrap();
+    let t = engine.telemetry();
+    let expected = premium * images.len() as f64;
+    assert!(
+        (t.multibit_energy - expected).abs() <= 1e-12 * expected.max(1.0),
+        "telemetry premium {} != {} (8 images × {premium})",
+        t.multibit_energy,
+        expected
+    );
+    assert!(
+        t.energy >= t.multibit_energy,
+        "the premium is included in total energy, not extra"
+    );
+    assert!(res.energy >= premium * images.len() as f64);
+
+    // the binary baseline carries none
+    let binary = spec_from(&["serve", "--network", "template"]);
+    let mut engine = binary.build_engine().unwrap();
+    let mut gen = DigitGen::new(TEST_SEED);
+    let images: Vec<Vec<bool>> = (0..8).map(|_| gen.next_sample().pixels).collect();
+    engine.infer_batch(&images).unwrap();
+    assert_eq!(engine.telemetry().multibit_energy, 0.0);
+}
+
+/// Drive a workload through the coordinator exactly as `xpoint serve`
+/// does (expansion client-side, labels only for classifiers) and return
+/// the metrics snapshot plus every prediction's output bits.
+fn serve_workload(
+    spec: &EngineSpec,
+    n_images: usize,
+) -> (MetricsSnapshot, Vec<Vec<bool>>, Vec<Vec<bool>>) {
+    let expansion = spec.network.input_expansion();
+    let classifier = spec.network.is_classifier();
+    let backends = spec.build_factories().unwrap();
+    let mut coord = Coordinator::spawn(backends, spec.coordinator_config());
+    let mut gen = DigitGen::new(TEST_SEED);
+    let mut raw = Vec::with_capacity(n_images);
+    let mut receivers = Vec::with_capacity(n_images);
+    for _ in 0..n_images {
+        let s = gen.next_sample();
+        let pixels = if expansion > 1 {
+            expand_unary(&s.pixels, expansion)
+        } else {
+            s.pixels.clone()
+        };
+        raw.push(s.pixels);
+        receivers.push(coord.submit(pixels, classifier.then_some(s.label)).unwrap());
+    }
+    let bits: Vec<Vec<bool>> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().expect("prediction arrives").bits)
+        .collect();
+    (coord.shutdown(), raw, bits)
+}
+
+#[test]
+fn sharded_conv_serving_stays_bit_exact_end_to_end() {
+    let spec = spec_from(&["serve", "--network", "conv:2x3x3", "--shards", "2"]);
+    assert_eq!(spec.kind, BackendKind::Sharded);
+    let conv = conv_bank(2, 3, 3, 5);
+    let (oh, ow) = conv.out_shape(IMAGE_SIDE, IMAGE_SIDE).unwrap();
+    let (snap, raw, bits) = serve_workload(&spec, 48);
+    assert_eq!(snap.images, 48);
+    assert_eq!(snap.multibit_energy, 0.0);
+    assert!(snap.accuracy.is_none(), "feature maps carry no labels");
+    for (img, served) in raw.iter().zip(&bits) {
+        let direct = conv.forward_direct(img, IMAGE_SIDE, IMAGE_SIDE).unwrap();
+        for (f, plane) in direct.iter().enumerate() {
+            assert_eq!(&served[f * oh * ow..(f + 1) * oh * ow], &plane[..]);
+        }
+    }
+}
+
+#[test]
+fn sharded_multibit_serving_accrues_the_premium_across_shards() {
+    let spec = spec_from(&["serve", "--network", "multibit:2", "--shards", "2"]);
+    let template = template_layer();
+    let (snap, raw, bits) = serve_workload(&spec, 40);
+    assert_eq!(snap.images, 40);
+    for (img, served) in raw.iter().zip(&bits) {
+        assert_eq!(served, &template.forward(img));
+    }
+    let expected = spec.multibit_premium() * 40.0;
+    assert!(
+        (snap.multibit_energy - expected).abs() <= 1e-12 * expected.max(1.0),
+        "sharded aggregate premium {} != {expected}",
+        snap.multibit_energy
+    );
+    assert!(snap.energy >= snap.multibit_energy);
+    // both shards saw traffic, and the per-shard breakout sums to the total
+    assert_eq!(snap.shards.len(), 2);
+    let shard_sum: f64 = snap.shards.iter().map(|t| t.multibit_energy).sum();
+    assert!((shard_sum - snap.multibit_energy).abs() < 1e-15 * expected.max(1.0));
+}
+
+#[test]
+fn infeasible_multibit_schemes_fail_the_spec_not_the_worker() {
+    // area-efficient at >= 4 bits needs V_DD·2^(b−1) > the 5 V ceiling at
+    // the Table II operating point — validate() must reject it eagerly,
+    // before any worker thread exists
+    let argv = ["serve", "--network", "multibit:4:area"];
+    let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    let err = EngineSpec::from_args(&args).unwrap_err();
+    assert!(
+        err.to_string().contains("multibit"),
+        "expected a multibit feasibility error, got: {err}"
+    );
+}

@@ -59,6 +59,7 @@ fn arbitrary_telemetry(rng: &mut Pcg32) -> Telemetry {
         program_time: rng.range_f64(0.0, 1e3),
         program_energy: rng.range_f64(0.0, 1e3),
         wear_pulses: rng.next_u64() >> 40,
+        multibit_energy: rng.range_f64(0.0, 1e3),
         utilization: (0..rng.range(0, 6)).map(|_| rng.range_f64(0.0, 1.0)).collect(),
         // wire v2 does not carry margin telemetry; the decoder always
         // reports the no-margin state, so the roundtrip pins +∞ here
